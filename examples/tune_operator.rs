@@ -1,0 +1,56 @@
+//! Memory-constrained BO demo: tune the TextOCR operator's inference-engine
+//! configuration for the annual-report regime, comparing constrained vs
+//! unconstrained exploration (paper Table 5's protocol on one operator).
+//!
+//!     cargo run --release --example tune_operator
+
+use trident::adaptation::{ConfigTuner, Strategy, TunerConfig};
+use trident::rngx::Rng;
+use trident::runtime::GpBackend;
+use trident::sim::{service, ItemAttrs};
+use trident::workload::pdf;
+
+fn main() {
+    let pl = pdf::pipeline();
+    let op = pl.operators.iter().find(|o| o.name == "text_ocr").unwrap();
+    // annual-report blocks: heavy prefill
+    let attrs = ItemAttrs { tokens_in: 633.0, tokens_out: 140.0, pixels_m: 0.25, frames: 1.0 };
+    let cap = 65_536.0;
+    let backend = GpBackend::from_env();
+    let mut rng = Rng::new(1);
+
+    for strategy in [Strategy::ConstrainedBo, Strategy::UnconstrainedBo] {
+        let mut tuner = ConfigTuner::new(
+            op.config_space.clone(),
+            TunerConfig {
+                strategy,
+                budget: 30,
+                n_init: 5,
+                eta: 0.6,
+                mem_limit_mb: cap - 2048.0,
+                seed: 3,
+            },
+        );
+        let mut ooms = 0;
+        while !tuner.done() {
+            let theta = tuner.next_candidate(&backend);
+            let ut = service::true_unit_rate(&op.service, &theta, &attrs) * rng.lognormal(0.0, 0.05);
+            let mem = service::expected_mem(&op.service, &theta, &attrs) * rng.lognormal(0.0, 0.06);
+            let oom = mem > cap;
+            ooms += oom as u32;
+            tuner.record(theta, ut, mem, oom);
+        }
+        let default_ut = service::true_unit_rate(&op.service, &op.config_space.default_config(), &attrs);
+        match tuner.best() {
+            Some(best) => println!(
+                "{strategy:?}: best {:.2} rec/s ({:.2}x default), mem {:.1} GB, {} OOMs during search\n  theta = {:?}",
+                best.ut,
+                best.ut / default_ut,
+                best.mem_mb / 1024.0,
+                ooms,
+                best.theta
+            ),
+            None => println!("{strategy:?}: no feasible configuration found ({ooms} OOMs)"),
+        }
+    }
+}

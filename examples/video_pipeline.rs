@@ -1,0 +1,41 @@
+//! The 9-operator video curation pipeline (short-form -> long-form regime
+//! shift) under Static and Trident on the 8-node cluster (paper: 1.88x).
+//!
+//!     make artifacts && cargo run --release --example video_pipeline
+
+use trident::config::{ClusterSpec, TridentConfig};
+use trident::coordinator::{Coordinator, Policy, Variant};
+use trident::report::emit_series;
+use trident::sim::ItemAttrs;
+use trident::workload::video;
+
+fn main() {
+    let vids: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6000);
+    let src = ItemAttrs { tokens_in: 5_400.0, tokens_out: 480.0, pixels_m: 0.9, frames: 600.0 };
+    let mut series = Vec::new();
+    for (variant, label) in [
+        (Variant::baseline(Policy::Static), "Static"),
+        (Variant::trident(), "Trident"),
+    ] {
+        let cluster = ClusterSpec::homogeneous(8, 256.0, 1024.0, 8, 65536.0, 12_500.0);
+        let mut coord = Coordinator::new(
+            video::pipeline(),
+            cluster,
+            Box::new(video::trace(vids)),
+            TridentConfig::default(),
+            variant,
+            src,
+            11,
+        );
+        let r = coord.run_to_completion(4.0 * 3600.0);
+        println!(
+            "{label:>8}: {:.3} videos/s  ({} clips out, {:.0}s, {} OOMs, {} transitions)",
+            r.throughput, r.items_processed, r.duration_s, r.oom_events, r.config_transitions
+        );
+        series.push((label.to_string(), r.series));
+    }
+    emit_series("video_e2e", "Video pipeline windowed throughput", "t_s", &series);
+}

@@ -1,0 +1,102 @@
+"""AOT-lower the Layer-2 models to HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Writes:
+  artifacts/gp_predict.hlo.txt
+  artifacts/bo_acquisition.hlo.txt
+  artifacts/meta.json            (shapes + operand order, read by Rust)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+try:
+    from compile import model
+except ImportError:
+    from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple so Rust can
+    unwrap a fixed-arity tuple regardless of output count)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, example_args) -> str:
+    """Lower for the *tpu* platform: CPU-platform lowering rewrites
+    ``cholesky``/``triangular_solve`` into LAPACK typed-FFI custom-calls that
+    xla_extension 0.5.1 cannot execute, while the TPU path keeps them as pure
+    HLO ops which the CPU PJRT compiler expands internally
+    (CholeskyExpander / TriangularSolveExpander).  Verified numerics in
+    rust/tests/runtime_roundtrip.rs."""
+    traced = jax.jit(fn).trace(*example_args)
+    lowered = traced.lower(lowering_platforms=("tpu",))
+    return to_hlo_text(lowered)
+
+
+def lower_gp_predict() -> str:
+    return lower_fn(model.gp_predict, model.gp_predict_example_args())
+
+
+def lower_bo_acquisition() -> str:
+    return lower_fn(model.bo_acquisition, model.bo_acquisition_example_args())
+
+
+META = {
+    "n_train": model.N_TRAIN,
+    "m_query": model.M_QUERY,
+    "n_cand": model.N_CAND,
+    "d_feat": model.D_FEAT,
+    "gp_predict": {
+        "inputs": ["x_train[N,D]", "y_train[N]", "mask[N]", "x_query[M,D]", "params[4]"],
+        "outputs": ["mu[M]", "var[M]"],
+    },
+    "bo_acquisition": {
+        "inputs": [
+            "theta_obs[N,D]", "ut_obs[N]", "mem_obs[N]", "mask[N]",
+            "cand[C,D]", "params_ut[4]", "params_mem[4]", "scalars[3]",
+        ],
+        "outputs": ["alpha[C]", "ei[C]", "pof[C]", "mu_ut[C]", "mu_mem[C]", "sigma_ut[C]"],
+    },
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for name, fn in (
+        ("gp_predict", lower_gp_predict),
+        ("bo_acquisition", lower_bo_acquisition),
+    ):
+        text = fn()
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta_path = os.path.join(args.out, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(META, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Layer-1 Pallas kernel: masked Matérn-5/2 cross-covariance matrix.
+
+This is the compute hot spot of Trident's observation/adaptation layers: every
+GP posterior evaluation (capacity estimation, BO surrogates) needs the dense
+cross-covariance between two point sets.  The kernel is written as a tiled
+``pallas_call`` so the HBM<->VMEM schedule is explicit:
+
+* the grid is ``(M/bm, N/bn)`` tiles of the output covariance matrix;
+* each tile loads an ``(bm, D)`` block of ``a`` and a ``(bn, D)`` block of
+  ``b`` into VMEM, computes the pairwise squared distances through a single
+  ``(bm, D) x (D, bn)`` matmul (MXU-friendly) plus row/col norms (VPU), and
+  applies the Matérn-5/2 shape function elementwise;
+* row/column validity masks are multiplied in, so padded points contribute
+  exactly zero covariance (the Layer-2 model restores a unit diagonal for
+  padded training points, keeping the Cholesky well-posed).
+
+``interpret=True`` is mandatory here: the artifacts are executed by the CPU
+PJRT client from Rust, and a real TPU lowering would emit a Mosaic
+custom-call that the CPU plugin cannot run (see DESIGN.md
+§Hardware-Adaptation for the TPU mapping notes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes for the covariance grid.  Shapes used by the AOT artifacts are
+# small (N=64, M<=128), so a 32x32 tile keeps the grid non-trivial (exercising
+# the BlockSpec schedule) while each VMEM-resident tile stays tiny:
+# 2*(32*D) + 32*32 floats ~ 5.5 KiB for D=6, far under the ~16 MiB VMEM
+# budget of a real TPU core.
+BLOCK_M = 32
+BLOCK_N = 32
+
+_SQRT5 = 2.23606797749979
+
+
+def _matern_tile_kernel(a_ref, b_ref, ma_ref, mb_ref, p_ref, o_ref):
+    """Compute one (bm, bn) tile of the masked Matérn-5/2 covariance.
+
+    a_ref:  (bm, D) VMEM block of the left point set
+    b_ref:  (bn, D) VMEM block of the right point set
+    ma_ref: (bm, 1) row validity mask block
+    mb_ref: (bn, 1) column validity mask block
+    p_ref:  (2,)    [lengthscale, signal_variance] (broadcast to every tile)
+    o_ref:  (bm, bn) output tile
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    ls = p_ref[0]
+    sf2 = p_ref[1]
+
+    # Pairwise squared distances via the MXU: |a|^2 + |b|^2 - 2 a.b^T.
+    dots = jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+    an = jnp.sum(a * a, axis=1, keepdims=True)  # (bm, 1)
+    bn = jnp.sum(b * b, axis=1, keepdims=True)  # (bn, 1)
+    d2 = jnp.maximum(an + bn.T - 2.0 * dots, 0.0)
+
+    # Matérn 5/2 shape function on scaled distance r/ls.
+    r = jnp.sqrt(d2) / jnp.maximum(ls, 1e-12)
+    sr = _SQRT5 * r
+    k = sf2 * (1.0 + sr + (5.0 / 3.0) * r * r) * jnp.exp(-sr)
+
+    # Validity masks: padded rows/cols contribute zero covariance.
+    o_ref[...] = k * (ma_ref[...] * mb_ref[...].T)
+
+
+def _pad_to(x: jax.Array, size: int, axis: int) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matern52_cross(a, b, mask_a, mask_b, params, *, interpret=True):
+    """Masked Matérn-5/2 cross-covariance ``K[i, j] = m_a[i] m_b[j] k(a_i, b_j)``.
+
+    Arguments
+    ---------
+    a:       (M, D) float32 left points
+    b:       (N, D) float32 right points
+    mask_a:  (M,)  float32 validity of rows (1.0 valid / 0.0 padded)
+    mask_b:  (N,)  float32 validity of cols
+    params:  (2,)  float32 [lengthscale, signal_variance]
+
+    Returns (M, N) float32.  Shapes are padded up to BLOCK multiples
+    internally; the result is sliced back.
+    """
+    m, d = a.shape
+    n, _ = b.shape
+    mp = ((m + BLOCK_M - 1) // BLOCK_M) * BLOCK_M
+    np_ = ((n + BLOCK_N - 1) // BLOCK_N) * BLOCK_N
+
+    a_p = _pad_to(a.astype(jnp.float32), mp, 0)
+    b_p = _pad_to(b.astype(jnp.float32), np_, 0)
+    ma_p = _pad_to(mask_a.astype(jnp.float32).reshape(m, 1), mp, 0)
+    mb_p = _pad_to(mask_b.astype(jnp.float32).reshape(n, 1), np_, 0)
+
+    grid = (mp // BLOCK_M, np_ // BLOCK_N)
+    out = pl.pallas_call(
+        _matern_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_N, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((BLOCK_M, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_N, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_p, b_p, ma_p, mb_p, params.astype(jnp.float32))
+    return out[:m, :n]

@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the Pallas kernel and the Layer-2 models.
+
+Everything here is deliberately naive and unpadded: the pytest suite checks
+that the tiled/masked production code in ``matern.py`` / ``model.py`` agrees
+with these within float32 tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_SQRT5 = 2.23606797749979
+
+
+def matern52(a, b, lengthscale, signal_var):
+    """Naive (M, N) Matérn-5/2 cross-covariance, no masking, no tiling."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    d2 = jnp.maximum(
+        jnp.sum(a * a, 1)[:, None] + jnp.sum(b * b, 1)[None, :] - 2.0 * a @ b.T,
+        0.0,
+    )
+    r = jnp.sqrt(d2) / jnp.maximum(lengthscale, 1e-12)
+    sr = _SQRT5 * r
+    return signal_var * (1.0 + sr + (5.0 / 3.0) * r * r) * jnp.exp(-sr)
+
+
+def gp_predict_ref(x_train, y_train, x_query, lengthscale, signal_var, noise_var, mean):
+    """Textbook GP posterior (unpadded, dense) used as the model.py oracle.
+
+    Returns (posterior mean, predictive variance incl. observation noise).
+    """
+    n = x_train.shape[0]
+    k_tt = matern52(x_train, x_train, lengthscale, signal_var)
+    # Same jitter as compile.model._JITTER so ill-conditioned cases agree.
+    k_tt = k_tt + (noise_var + 1e-5) * jnp.eye(n, dtype=jnp.float32)
+    l = jnp.linalg.cholesky(k_tt)
+    resid = (y_train - mean).astype(jnp.float32)
+    alpha = jnp.linalg.solve(k_tt, resid)
+    k_qt = matern52(x_query, x_train, lengthscale, signal_var)
+    mu = mean + k_qt @ alpha
+    v = jnp.linalg.solve(l, k_qt.T)  # lower-triangular solve (dense solve is fine as oracle)
+    var = signal_var - jnp.sum(v * v, axis=0) + noise_var
+    return mu, jnp.maximum(var, 1e-9)
+
+
+def norm_cdf(z):
+    import jax
+
+    return 0.5 * (1.0 + jax.lax.erf(jnp.asarray(z, jnp.float32) / jnp.sqrt(2.0)))
+
+
+def norm_pdf(z):
+    return jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+
+
+def expected_improvement(mu, sigma, best, xi=0.0):
+    """Closed-form EI for maximization."""
+    sigma = jnp.maximum(sigma, 1e-9)
+    z = (mu - best - xi) / sigma
+    return sigma * (z * norm_cdf(z) + norm_pdf(z))
+
+
+def prob_feasible(mu_mem, sigma_mem, limit):
+    """P(mem <= limit) under the memory surrogate."""
+    sigma_mem = jnp.maximum(sigma_mem, 1e-9)
+    return norm_cdf((limit - mu_mem) / sigma_mem)

@@ -1,0 +1,163 @@
+"""Layer-2 JAX models for Trident's observation and adaptation layers.
+
+Two build-time-compiled compute graphs, both calling the Layer-1 Pallas
+Matérn kernel (``kernels/matern.py``):
+
+* ``gp_predict`` — masked GP posterior over workload descriptors.  This is
+  the observation layer's capacity estimator: Rust pads the filtered
+  observation buffer into fixed-shape operands and gets back the posterior
+  mean (capacity estimate) and predictive variance (used by the stage-2
+  anomaly filter and by cold-start logic).
+* ``bo_acquisition`` — the adaptation layer's memory-constrained BO step:
+  two GP surrogates (sustainable throughput UT, peak device memory Mem)
+  evaluated over a candidate configuration batch, combined into the
+  constrained acquisition  alpha(theta) = EI_UT(theta) * PoF(theta)  of
+  Eq. (8) in the paper.
+
+Masking algebra (padding correctness): with validity mask ``m`` the Pallas
+kernel returns ``K = (m m^T) o k(X, X)``; adding ``diag(1 - m)`` gives a
+matrix that is exactly block-diagonal between the valid block and an
+identity on the padded block, and padded residuals are zeroed, so
+``alpha = K'^{-1} (m o (y - mu0))`` has zeros in all padded slots and
+cross-covariances ``k_*`` are likewise masked — padded points contribute
+*exactly* nothing to posterior mean or variance.  Verified against the
+unpadded oracle in ``python/tests/test_gp.py``.
+
+Everything is float32 and fixed-shape so the graphs AOT-compile once
+(``aot.py``) and run from Rust via PJRT with zero Python at runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+try:  # package-style import (pytest from python/)
+    from compile.kernels.matern import matern52_cross
+except ImportError:  # script-style import (python -m compile.aot from python/)
+    from .kernels.matern import matern52_cross
+
+# Fixed AOT shapes (mirrored in artifacts/meta.json and rust/src/runtime/).
+N_TRAIN = 64   # max retained observations per operator GP
+M_QUERY = 32   # workload-descriptor queries per call (batched per round)
+N_CAND = 128   # BO candidate configurations scored per call
+D_FEAT = 6     # padded feature/config dimensionality
+
+_JITTER = 1e-5
+
+
+def _masked_posterior(x_train, y_train, mask, x_query, params):
+    """Shared masked-GP posterior.  params = [ls, sf2, sn2, mean0]."""
+    n = x_train.shape[0]
+    ls, sf2, sn2, mean0 = params[0], params[1], params[2], params[3]
+    kparams = jnp.stack([ls, sf2])
+
+    ones_q = jnp.ones((x_query.shape[0],), jnp.float32)
+    k_tt = matern52_cross(x_train, x_train, mask, mask, kparams)
+    # Unit diagonal on padded slots keeps the Cholesky well-posed; valid
+    # slots get the noise + jitter diagonal.
+    diag = (1.0 - mask) + mask * (sn2 + _JITTER)
+    k_tt = k_tt + jnp.diag(diag)
+
+    chol = jnp.linalg.cholesky(k_tt)
+    resid = mask * (y_train - mean0)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), resid)
+
+    k_qt = matern52_cross(x_query, x_train, ones_q, mask, kparams)
+    mu = mean0 + k_qt @ alpha
+
+    v = jax.scipy.linalg.solve_triangular(chol, k_qt.T, lower=True)
+    var = sf2 - jnp.sum(v * v, axis=0) + sn2
+    return mu, jnp.maximum(var, 1e-9)
+
+
+def gp_predict(x_train, y_train, mask, x_query, params):
+    """Observation-layer capacity GP.
+
+    x_train: (N_TRAIN, D_FEAT)  padded workload descriptors
+    y_train: (N_TRAIN,)         padded observed throughputs (0 where padded)
+    mask:    (N_TRAIN,)         1.0 valid / 0.0 padded
+    x_query: (M_QUERY, D_FEAT)  query descriptors
+    params:  (4,)               [lengthscale, signal_var, noise_var, mean]
+
+    Returns (mu[M_QUERY], var[M_QUERY]) — predictive distribution of the
+    *observed* throughput (variance includes the noise term), matching
+    Eq. (2)/(3) usage in the paper.
+    """
+    return _masked_posterior(x_train, y_train, mask, x_query, params)
+
+
+def _erf_approx(x):
+    """Abramowitz–Stegun 7.1.26 rational erf (|err| < 1.5e-7 ≈ f32 eps).
+
+    xla_extension 0.5.1's HLO text parser predates the `erf` opcode, so the
+    AOT graph must stick to elementwise mul/add/exp.  Mirrored exactly in
+    rust/src/runtime/native.rs so both backends agree bit-for-bit-ish.
+    """
+    s = jnp.sign(x)
+    x = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * x)
+    poly = ((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t + 0.254829592
+    return s * (1.0 - poly * t * jnp.exp(-x * x))
+
+
+def _norm_cdf(z):
+    return 0.5 * (1.0 + _erf_approx(z / jnp.sqrt(jnp.float32(2.0))))
+
+
+def _norm_pdf(z):
+    return jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.float32(jnp.pi))
+
+
+def bo_acquisition(theta_obs, ut_obs, mem_obs, mask, cand, params_ut, params_mem, scalars):
+    """Adaptation-layer constrained acquisition (Eqs. 5-8).
+
+    theta_obs: (N_TRAIN, D_FEAT) evaluated configurations (padded)
+    ut_obs:    (N_TRAIN,)        observed sustainable throughput
+    mem_obs:   (N_TRAIN,)        observed peak device memory
+    mask:      (N_TRAIN,)        validity
+    cand:      (N_CAND, D_FEAT)  candidate configurations to score
+    params_ut, params_mem: (4,)  GP hyperparameters per surrogate
+    scalars:   (3,)              [best_feasible_ut, mem_limit(=cap-delta), xi]
+
+    Returns (alpha, ei, pof, mu_ut, mu_mem, sigma_ut) each (N_CAND,).
+    """
+    best, limit, xi = scalars[0], scalars[1], scalars[2]
+
+    mu_u, var_u = _masked_posterior(theta_obs, ut_obs, mask, cand, params_ut)
+    mu_m, var_m = _masked_posterior(theta_obs, mem_obs, mask, cand, params_mem)
+
+    sigma_u = jnp.sqrt(var_u)
+    z = (mu_u - best - xi) / sigma_u
+    ei = sigma_u * (z * _norm_cdf(z) + _norm_pdf(z))
+
+    sigma_m = jnp.sqrt(var_m)
+    pof = _norm_cdf((limit - mu_m) / sigma_m)
+
+    alpha = ei * pof
+    return alpha, ei, pof, mu_u, mu_m, sigma_u
+
+
+def gp_predict_example_args():
+    z = jnp.zeros
+    return (
+        z((N_TRAIN, D_FEAT), jnp.float32),
+        z((N_TRAIN,), jnp.float32),
+        z((N_TRAIN,), jnp.float32),
+        z((M_QUERY, D_FEAT), jnp.float32),
+        z((4,), jnp.float32),
+    )
+
+
+def bo_acquisition_example_args():
+    z = jnp.zeros
+    return (
+        z((N_TRAIN, D_FEAT), jnp.float32),
+        z((N_TRAIN,), jnp.float32),
+        z((N_TRAIN,), jnp.float32),
+        z((N_TRAIN,), jnp.float32),
+        z((N_CAND, D_FEAT), jnp.float32),
+        z((4,), jnp.float32),
+        z((4,), jnp.float32),
+        z((3,), jnp.float32),
+    )

@@ -1,0 +1,70 @@
+"""Adaptation-layer acquisition (EI x PoF) correctness and invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+N, C, D = model.N_TRAIN, model.N_CAND, model.D_FEAT
+
+
+def _case(rng, n_valid, best=None, limit=8000.0):
+    th = np.zeros((N, D), np.float32)
+    th[:n_valid] = rng.random((n_valid, D))
+    ut = np.zeros((N,), np.float32)
+    ut[:n_valid] = 10.0 + 5.0 * rng.random(n_valid)
+    mem = np.zeros((N,), np.float32)
+    mem[:n_valid] = 4000.0 + 3000.0 * rng.random(n_valid)
+    mask = np.zeros((N,), np.float32)
+    mask[:n_valid] = 1.0
+    cand = rng.random((C, D)).astype(np.float32)
+    if best is None:
+        best = float(ut[:n_valid].max())
+    pu = np.asarray([0.5, 4.0, 0.05, float(ut[:n_valid].mean())], np.float32)
+    pm = np.asarray([0.5, 1.5e6, 1e4, float(mem[:n_valid].mean())], np.float32)
+    sc = np.asarray([best, limit, 0.0], np.float32)
+    args = tuple(jnp.asarray(a) for a in (th, ut, mem, mask, cand, pu, pm, sc))
+    return args
+
+
+@given(n_valid=st.integers(3, N), seed=st.integers(0, 2**31 - 1))
+def test_outputs_well_formed(n_valid, seed):
+    rng = np.random.default_rng(seed)
+    alpha, ei, pof, mu_u, mu_m, sig_u = (np.asarray(o) for o in model.bo_acquisition(*_case(rng, n_valid)))
+    assert np.all(ei >= -1e-6), "EI must be non-negative"
+    assert np.all((pof >= -1e-6) & (pof <= 1 + 1e-6)), "PoF is a probability"
+    np.testing.assert_allclose(alpha, ei * pof, rtol=1e-4, atol=1e-6)
+    assert np.all(sig_u > 0)
+
+
+def test_ei_matches_closed_form():
+    rng = np.random.default_rng(2)
+    args = _case(rng, 12)
+    alpha, ei, pof, mu_u, mu_m, sig_u = model.bo_acquisition(*args)
+    best = float(np.asarray(args[7])[0])
+    ei_ref = ref.expected_improvement(mu_u, sig_u, best)
+    np.testing.assert_allclose(np.asarray(ei), np.asarray(ei_ref), rtol=1e-4, atol=1e-5)
+
+
+def test_pof_monotone_in_limit():
+    rng = np.random.default_rng(3)
+    pofs = []
+    for limit in (2000.0, 6000.0, 12000.0):
+        args = _case(rng, 10, limit=limit)
+        rng = np.random.default_rng(3)  # identical data each time
+        _, _, pof, _, _, _ = model.bo_acquisition(*args)
+        pofs.append(np.asarray(pof).mean())
+    assert pofs[0] <= pofs[1] <= pofs[2]
+
+
+def test_tight_limit_kills_acquisition():
+    rng = np.random.default_rng(4)
+    args = _case(rng, 15, limit=1.0)  # far below every observed memory
+    alpha, _, pof, _, _, _ = model.bo_acquisition(*args)
+    assert np.asarray(pof).max() < 0.05
+    assert np.asarray(alpha).max() < np.asarray(_case(rng, 15, limit=1e7)[0]).size  # trivially finite

@@ -1,0 +1,89 @@
+"""Layer-2 correctness: masked GP posterior vs the unpadded textbook oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+N, M, D = model.N_TRAIN, model.M_QUERY, model.D_FEAT
+
+
+def _pad_case(rng, n_valid, d_valid, ls, sf2, sn2, mean):
+    """Build padded fixed-shape operands + the unpadded reference inputs."""
+    xt_v = rng.normal(size=(n_valid, d_valid)).astype(np.float32)
+    y_v = (mean + np.sin(xt_v.sum(axis=1)) + 0.1 * rng.normal(size=n_valid)).astype(np.float32)
+    xq_v = rng.normal(size=(M, d_valid)).astype(np.float32)
+
+    xt = np.zeros((N, D), np.float32)
+    xt[:n_valid, :d_valid] = xt_v
+    # Padded rows get arbitrary garbage coordinates — they must not matter.
+    xt[n_valid:] = rng.normal(size=(N - n_valid, D)) * 100.0
+    y = np.zeros((N,), np.float32)
+    y[:n_valid] = y_v
+    y[n_valid:] = rng.normal(size=N - n_valid) * 1e3
+    mask = np.zeros((N,), np.float32)
+    mask[:n_valid] = 1.0
+    xq = np.zeros((M, D), np.float32)
+    xq[:, :d_valid] = xq_v
+    params = np.asarray([ls, sf2, sn2, mean], np.float32)
+    return (jnp.asarray(xt), jnp.asarray(y), jnp.asarray(mask), jnp.asarray(xq),
+            jnp.asarray(params)), (xt_v, y_v, xq_v)
+
+
+@given(
+    n_valid=st.integers(2, N),
+    d_valid=st.integers(1, D),
+    ls=st.floats(0.3, 3.0),
+    sf2=st.floats(0.1, 10.0),
+    sn2=st.floats(1e-4, 0.5),
+    mean=st.floats(-5.0, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_padding_invariance_vs_reference(n_valid, d_valid, ls, sf2, sn2, mean, seed):
+    rng = np.random.default_rng(seed)
+    padded, (xt_v, y_v, xq_v) = _pad_case(rng, n_valid, d_valid, ls, sf2, sn2, mean)
+    mu, var = model.gp_predict(*padded)
+    mu_r, var_r = ref.gp_predict_ref(
+        jnp.asarray(xt_v), jnp.asarray(y_v), jnp.asarray(xq_v), ls, sf2, sn2, mean
+    )
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_r), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(var_r), rtol=5e-3, atol=5e-3)
+
+
+def test_interpolates_training_points_at_low_noise():
+    rng = np.random.default_rng(0)
+    n_valid = 10
+    padded, (xt_v, y_v, _) = _pad_case(rng, n_valid, 3, 1.0, 2.0, 1e-4, 0.0)
+    xt, y, mask, _, params = padded
+    xq = np.zeros((M, D), np.float32)
+    xq[:n_valid, :3] = xt_v
+    mu, var = model.gp_predict(xt, y, mask, jnp.asarray(xq), params)
+    np.testing.assert_allclose(np.asarray(mu)[:n_valid], y_v, atol=0.03)
+
+
+def test_empty_mask_returns_prior():
+    z = jnp.zeros
+    params = jnp.asarray([1.0, 2.0, 0.1, 7.0], jnp.float32)
+    mu, var = model.gp_predict(
+        z((N, D), jnp.float32), z((N,), jnp.float32), z((N,), jnp.float32),
+        z((M, D), jnp.float32), params)
+    np.testing.assert_allclose(np.asarray(mu), 7.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(var), 2.1, rtol=1e-4)
+
+
+def test_variance_shrinks_near_data_grows_far():
+    rng = np.random.default_rng(1)
+    padded, _ = _pad_case(rng, 20, 2, 1.0, 1.0, 0.01, 0.0)
+    xt, y, mask, _, params = padded
+    xq = np.zeros((M, D), np.float32)
+    xq[0, :2] = np.asarray(xt)[0, :2]          # on a training point
+    xq[1, :2] = np.asarray([50.0, -50.0])      # far away
+    mu, var = model.gp_predict(xt, y, mask, jnp.asarray(xq), params)
+    var = np.asarray(var)
+    assert var[0] < 0.1
+    assert var[1] > 0.9  # reverts to prior sf2 + sn2

@@ -1,0 +1,100 @@
+//! Shared mini-harness for the paper-reproduction benches (criterion is
+//! unavailable in the offline crate set; each bench is a `harness = false`
+//! binary that prints the paper-style rows and persists results/).
+
+use trident::config::{ClusterSpec, TridentConfig};
+use trident::coordinator::{Coordinator, Policy, RunReport, Variant};
+use trident::sim::ItemAttrs;
+use trident::workload::{pdf, video, Trace};
+
+pub const MAX_SIM_S: f64 = 4.0 * 3600.0;
+
+pub fn cluster(nodes: usize) -> ClusterSpec {
+    ClusterSpec::homogeneous(nodes, 256.0, 1024.0, 8, 65536.0, 12_500.0)
+}
+
+pub struct Workload {
+    pub name: &'static str,
+    pub pipeline: trident::config::PipelineSpec,
+    pub trace: Box<dyn Trace>,
+    pub src: ItemAttrs,
+}
+
+pub fn pdf_workload(docs: u64) -> Workload {
+    Workload {
+        name: "PDF",
+        pipeline: pdf::pipeline(),
+        trace: Box::new(pdf::trace(docs)),
+        src: ItemAttrs { tokens_in: 36_000.0, tokens_out: 7_200.0, pixels_m: 12.0, frames: 12.0 },
+    }
+}
+
+pub fn video_workload(vids: u64) -> Workload {
+    Workload {
+        name: "Video",
+        pipeline: video::pipeline(),
+        trace: Box::new(video::trace(vids)),
+        src: ItemAttrs { tokens_in: 5_400.0, tokens_out: 480.0, pixels_m: 0.9, frames: 600.0 },
+    }
+}
+
+pub fn items_for(name: &str) -> u64 {
+    if name == "Video" { 2000 } else { 900 }
+}
+
+pub fn workload(name: &str) -> Workload {
+    if name == "Video" { video_workload(items_for(name)) } else { pdf_workload(items_for(name)) }
+}
+
+/// Run one (workload, variant) pair to completion on the 8-node cluster.
+pub fn run(w: Workload, variant: Variant, seed: u64) -> RunReport {
+    let mut cfg = TridentConfig::default();
+    cfg.native_gp = std::env::var("TRIDENT_NATIVE_GP").map(|v| v == "1").unwrap_or(false);
+    let mut coord = Coordinator::new(w.pipeline, cluster(8), w.trace, cfg, variant, w.src, seed);
+    coord.run_to_completion(MAX_SIM_S)
+}
+
+/// SCOOT's offline per-operator tuning phase: BO against a sustained
+/// isolated-operator evaluation at the *first* regime (the paper tunes
+/// offline before the run), then deploy statically.
+pub fn scoot_variant(pipeline: &trident::config::PipelineSpec, src: ItemAttrs) -> Variant {
+    use trident::adaptation::{ConfigTuner, Strategy, TunerConfig};
+    use trident::runtime::GpBackend;
+    let backend = GpBackend::from_env();
+    let nominal = trident::coordinator::nominal_attrs(pipeline, src);
+    let mut rng = trident::rngx::Rng::new(99);
+    let configs: Vec<Option<Vec<f64>>> = pipeline
+        .operators
+        .iter()
+        .enumerate()
+        .map(|(i, o)| {
+            if !o.tunable {
+                return None;
+            }
+            let mut tuner = ConfigTuner::new(
+                o.config_space.clone(),
+                TunerConfig {
+                    strategy: Strategy::ConstrainedBo,
+                    budget: 30,
+                    n_init: 5,
+                    eta: 0.6,
+                    mem_limit_mb: 65_536.0 - 2048.0,
+                    seed: i as u64,
+                },
+            );
+            while !tuner.done() {
+                let theta = tuner.next_candidate(&backend);
+                let ut = trident::sim::service::true_unit_rate(&o.service, &theta, &nominal[i])
+                    * rng.lognormal(0.0, 0.05);
+                let mem = trident::sim::service::expected_mem(&o.service, &theta, &nominal[i])
+                    * rng.lognormal(0.02, 0.03);
+                let oom = mem > 65_536.0;
+                tuner.record(theta, ut, mem, oom);
+            }
+            tuner.best().map(|e| e.theta.clone())
+        })
+        .collect();
+    let mut v = Variant::baseline(Policy::Scoot);
+    v.initial_configs = Some(configs);
+    v
+}

@@ -1,0 +1,48 @@
+//! Figure 2 (RQ1): end-to-end throughput of every scheduler on both
+//! pipelines, reported as speedup over Static.
+//! Paper: Trident 2.01x/1.88x > SCOOT 1.21x/1.17x > RayData 1.12x/1.18x >
+//! ContTune 1.04x/0.96x > DS2 0.87x/0.79x.
+
+#[path = "common.rs"]
+mod common;
+
+use trident::coordinator::{Policy, Variant};
+use trident::report::{f2, Table};
+
+fn main() {
+    let mut table = Table::new(
+        "Figure 2: end-to-end throughput (speedup vs Static)",
+        &["Method", "PDF items/s", "PDF speedup", "Video items/s", "Video speedup"],
+    );
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    let methods: Vec<(&str, Box<dyn Fn(&common::Workload) -> Variant>)> = vec![
+        ("Static", Box::new(|_| Variant::baseline(Policy::Static))),
+        ("Ray Data", Box::new(|_| Variant::baseline(Policy::RayData))),
+        ("DS2", Box::new(|_| Variant::baseline(Policy::Ds2))),
+        ("ContTune", Box::new(|_| Variant::baseline(Policy::ContTune))),
+        ("SCOOT", Box::new(|w| common::scoot_variant(&w.pipeline, w.src))),
+        ("Trident", Box::new(|_| Variant::trident())),
+    ];
+    for (name, mk) in &methods {
+        let mut thr = Vec::new();
+        for wname in ["PDF", "Video"] {
+            let w = common::workload(wname);
+            let variant = mk(&w);
+            let r = common::run(w, variant, 7);
+            eprintln!("  {name} / {wname}: {:.3} items/s ({:.0}s)", r.throughput, r.duration_s);
+            thr.push(r.throughput);
+        }
+        rows.push((name.to_string(), thr));
+    }
+    let base = rows[0].1.clone();
+    for (name, thr) in &rows {
+        table.row(vec![
+            name.clone(),
+            f2(thr[0]),
+            format!("{:.2}x", thr[0] / base[0]),
+            f2(thr[1]),
+            format!("{:.2}x", thr[1] / base[1]),
+        ]);
+    }
+    table.emit("fig2_end_to_end");
+}

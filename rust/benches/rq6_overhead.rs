@@ -1,0 +1,98 @@
+//! RQ6: system overhead — per-invocation observation/adaptation cost and
+//! MILP solve time at 8 and 16 nodes.
+//! Paper: obs 2 ms, adapt 4 ms; MILP 206/62 ms (8 nodes) -> 1521/259 ms
+//! (16 nodes), all off the critical path.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::{Duration, Instant};
+use trident::coordinator::{nominal_attrs, Variant};
+use trident::report::Table;
+use trident::scheduling::{solve, MilpInput, OpSched};
+
+fn milp_input(wname: &str, nodes: usize) -> MilpInput {
+    let w = common::workload(wname);
+    let nominal = nominal_attrs(&w.pipeline, w.src);
+    let (d_i, d_o) = w.pipeline.amplification();
+    MilpInput {
+        ops: w
+            .pipeline
+            .operators
+            .iter()
+            .enumerate()
+            .map(|(i, o)| OpSched {
+                name: o.name.clone(),
+                ut_cur: trident::sim::service::true_unit_rate(
+                    &o.service,
+                    &o.config_space.default_config(),
+                    &nominal[i],
+                ),
+                ut_cand: if o.tunable { Some(1.5) } else { None },
+                n_new: 0,
+                n_old: 4,
+                cpu: o.cpu,
+                mem_gb: o.mem_gb,
+                accels: o.accels,
+                out_mb: o.out_mb,
+                d_i: d_i[i],
+                h_start: o.start_s,
+                h_stop: o.stop_s,
+                h_cold: o.cold_s,
+                cur_x: vec![0; nodes],
+            })
+            .collect(),
+        nodes: common::cluster(nodes).nodes,
+        d_o,
+        t_sched: 90.0,
+        lambda1: 1e-4,
+        lambda2: 1e-6,
+        b_max: 8,
+        placement_aware: true,
+        all_at_once: false,
+    }
+}
+
+fn main() {
+    // Layer overheads from a short live run.
+    let w = common::workload("PDF");
+    let mut cfg = trident::config::TridentConfig::default();
+    cfg.native_gp = false;
+    let mut coord = trident::coordinator::Coordinator::new(
+        w.pipeline,
+        common::cluster(8),
+        w.trace,
+        cfg,
+        Variant::trident(),
+        w.src,
+        1,
+    );
+    let r = coord.run(600.0);
+
+    let mut table = Table::new("RQ6: system overhead", &["Metric", "Measured"]);
+    table.row(vec!["Observation layer / invocation".into(), format!("{:.2} ms", r.obs_overhead_ms)]);
+    table.row(vec!["Adaptation layer / invocation".into(), format!("{:.2} ms", r.adapt_overhead_ms)]);
+
+    for nodes in [8usize, 16] {
+        for wname in ["PDF", "Video"] {
+            let input = milp_input(wname, nodes);
+            // median of 5 solves
+            // The scheduler consumes the incumbent at its solve budget
+            // (2 s); report wall at budget plus the remaining B&B gap.
+            let mut times: Vec<(f64, f64)> = (0..3)
+                .map(|_| {
+                    let t0 = Instant::now();
+                    let plan = solve(&input, Duration::from_secs(2));
+                    assert!(plan.t_pred > 0.0);
+                    (t0.elapsed().as_secs_f64() * 1e3, plan.stats.gap * 100.0)
+                })
+                .collect();
+            times.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            table.row(vec![
+                format!("MILP solve, {wname} pipeline, {nodes} nodes (median)"),
+                format!("{:.0} ms (gap {:.1}%)", times[1].0, times[1].1),
+            ]);
+        }
+    }
+    table.emit("rq6_overhead");
+}

@@ -1,0 +1,49 @@
+//! Table 2 (RQ2): scheduling-layer comparison under identical
+//! observation + adaptation inputs (baselines get Trident's estimates and
+//! recommendations, applied all-at-once).
+//! Paper: Trident 2.01x/1.88x > Trident(all-at-once) 1.92x/1.79x >
+//! ContTune 1.42x/1.36x > DS2 1.38x/1.25x > RayData 1.22x/1.30x.
+
+#[path = "common.rs"]
+mod common;
+
+use trident::coordinator::{Policy, Variant};
+use trident::report::Table;
+
+fn main() {
+    let mut table = Table::new(
+        "Table 2: scheduling under shared Observation+Adaptation (vs Static)",
+        &["Method", "PDF", "Video"],
+    );
+    let methods: Vec<(&str, Variant)> = vec![
+        ("Static", Variant::baseline(Policy::Static)),
+        ("Ray Data", Variant::controlled(Policy::RayData)),
+        ("DS2", Variant::controlled(Policy::Ds2)),
+        ("ContTune", Variant::controlled(Policy::ContTune)),
+        ("Trident (all-at-once)", {
+            let mut v = Variant::trident();
+            v.rolling = false;
+            v
+        }),
+        ("Trident", Variant::trident()),
+    ];
+    let mut base = [1.0, 1.0];
+    let mut rows = Vec::new();
+    for (name, variant) in methods {
+        let mut speed = Vec::new();
+        for (j, wname) in ["PDF", "Video"].iter().enumerate() {
+            let w = common::workload(wname);
+            let r = common::run(w, variant.clone(), 11);
+            eprintln!("  {name} / {wname}: {:.3} items/s", r.throughput);
+            if name == "Static" {
+                base[j] = r.throughput.max(1e-12);
+            }
+            speed.push(r.throughput / base[j]);
+        }
+        rows.push((name.to_string(), speed));
+    }
+    for (name, speed) in rows {
+        table.row(vec![name, format!("{:.2}x", speed[0]), format!("{:.2}x", speed[1])]);
+    }
+    table.emit("table2_scheduling");
+}

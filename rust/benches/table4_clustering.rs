@@ -1,0 +1,80 @@
+//! Table 4 (RQ4a): workload clustering accuracy — Trident's online
+//! algorithm vs offline K-means / DBSCAN with the complete dataset.
+//! Paper: all find the true cluster count; online purity/ARI only
+//! marginally below offline.
+
+#[path = "common.rs"]
+mod common;
+
+use trident::adaptation::cluster_metrics::{ari, purity};
+use trident::adaptation::offline_cluster::{dbscan, dbscan_n_clusters, kmeans};
+use trident::adaptation::{ClusterConfig, OnlineClustering};
+use trident::config::FeatureExtractor;
+use trident::report::{f2, Table};
+use trident::rngx::Rng;
+use trident::workload::{pdf, video, Trace};
+
+fn samples(wname: &str, n: usize) -> (Vec<Vec<f64>>, Vec<u8>, usize) {
+    // Per-request features as seen by the adaptation layer at the tunable
+    // operator (token/pixel loads after the split stages).
+    let mut rng = Rng::new(5);
+    let (mut trace, ex, scale): (Box<dyn Trace>, _, [f64; 4]) = if wname == "Video" {
+        (Box::new(video::trace(n as u64)), FeatureExtractor::LlmTokens, [1.0 / 6.0, 1.0, 1.0, 1.0 / 6.0])
+    } else {
+        (Box::new(pdf::trace(n as u64)), FeatureExtractor::LlmTokens, [1.0 / 120.0, 1.0 / 120.0, 0.01, 1.0])
+    };
+    let mut xs = Vec::new();
+    let mut truth = Vec::new();
+    let mut regimes = 0usize;
+    while let Some(item) = trace.next_item(&mut rng) {
+        let a = trident::sim::ItemAttrs {
+            tokens_in: item.attrs.tokens_in * scale[0],
+            tokens_out: item.attrs.tokens_out * scale[1],
+            pixels_m: item.attrs.pixels_m * scale[2],
+            frames: item.attrs.frames * scale[3],
+        };
+        xs.push(a.cluster_features(ex).to_vec());
+        truth.push(item.regime);
+        regimes = regimes.max(item.regime as usize + 1);
+    }
+    (xs, truth, regimes)
+}
+
+fn main() {
+    let mut table = Table::new(
+        "Table 4: workload clustering accuracy",
+        &["Method", "Pipeline", "Clusters", "Purity", "ARI"],
+    );
+    for wname in ["PDF", "Video"] {
+        let (xs, truth, k_true) = samples(wname, 3000);
+        // offline K-means (given the true k, as in the paper)
+        let (km, _) = kmeans(&xs, k_true, 4, 1);
+        table.row(vec![
+            "K-means (offline)".into(),
+            wname.into(),
+            k_true.to_string(),
+            f2(purity(&km, &truth)),
+            f2(ari(&km, &truth)),
+        ]);
+        // offline DBSCAN
+        let db = dbscan(&xs, 0.12, 8);
+        table.row(vec![
+            "DBSCAN (offline)".into(),
+            wname.into(),
+            dbscan_n_clusters(&db).to_string(),
+            f2(purity(&db, &truth)),
+            f2(ari(&db, &truth)),
+        ]);
+        // Trident online
+        let mut oc = OnlineClustering::new(ClusterConfig::default());
+        let assigns: Vec<usize> = xs.iter().map(|x| oc.assign(x) as usize).collect();
+        table.row(vec![
+            "Trident (online)".into(),
+            wname.into(),
+            oc.n_clusters().to_string(),
+            f2(purity(&assigns, &truth)),
+            f2(ari(&assigns, &truth)),
+        ]);
+    }
+    table.emit("table4_clustering");
+}

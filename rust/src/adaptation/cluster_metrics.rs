@@ -1,0 +1,90 @@
+//! Clustering evaluation metrics: purity and Adjusted Rand Index (Table 4).
+
+use std::collections::HashMap;
+
+/// Purity: fraction of points whose cluster's majority truth label matches
+/// their own.  Noise labels (usize::MAX) count as singletons.
+pub fn purity(assign: &[usize], truth: &[u8]) -> f64 {
+    assert_eq!(assign.len(), truth.len());
+    if assign.is_empty() {
+        return 0.0;
+    }
+    let mut per_cluster: HashMap<usize, HashMap<u8, usize>> = HashMap::new();
+    for (&a, &t) in assign.iter().zip(truth) {
+        *per_cluster.entry(a).or_default().entry(t).or_default() += 1;
+    }
+    let correct: usize = per_cluster
+        .values()
+        .map(|h| h.values().copied().max().unwrap_or(0))
+        .sum();
+    correct as f64 / assign.len() as f64
+}
+
+/// Adjusted Rand Index.
+pub fn ari(assign: &[usize], truth: &[u8]) -> f64 {
+    assert_eq!(assign.len(), truth.len());
+    let n = assign.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let choose2 = |x: usize| -> f64 { (x as f64) * (x as f64 - 1.0) / 2.0 };
+    let mut table: HashMap<(usize, u8), usize> = HashMap::new();
+    let mut rows: HashMap<usize, usize> = HashMap::new();
+    let mut cols: HashMap<u8, usize> = HashMap::new();
+    for (&a, &t) in assign.iter().zip(truth) {
+        *table.entry((a, t)).or_default() += 1;
+        *rows.entry(a).or_default() += 1;
+        *cols.entry(t).or_default() += 1;
+    }
+    let sum_ij: f64 = table.values().map(|&v| choose2(v)).sum();
+    let sum_a: f64 = rows.values().map(|&v| choose2(v)).sum();
+    let sum_b: f64 = cols.values().map(|&v| choose2(v)).sum();
+    let total = choose2(n);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0;
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_clustering() {
+        let assign = [0, 0, 1, 1, 2, 2];
+        let truth = [5u8, 5, 7, 7, 9, 9];
+        assert_eq!(purity(&assign, &truth), 1.0);
+        assert!((ari(&assign, &truth) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_clustering_has_low_ari() {
+        // Alternating assignment against block truth: ARI near 0.
+        let assign: Vec<usize> = (0..200).map(|i| i % 2).collect();
+        let truth: Vec<u8> = (0..200).map(|i| (i / 100) as u8).collect();
+        let a = ari(&assign, &truth);
+        assert!(a.abs() < 0.05, "ari {a}");
+        assert!((purity(&assign, &truth) - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn over_segmentation_keeps_purity_high_but_ari_lower() {
+        // Each point its own cluster: purity 1, ARI ~0.
+        let assign: Vec<usize> = (0..50).collect();
+        let truth: Vec<u8> = (0..50).map(|i| (i / 25) as u8).collect();
+        assert_eq!(purity(&assign, &truth), 1.0);
+        assert!(ari(&assign, &truth) < 0.1);
+    }
+
+    #[test]
+    fn known_small_example() {
+        // scikit-learn doc example: ARI of this labelling is 0.24242...
+        let assign = [0usize, 0, 1, 1];
+        let truth = [0u8, 0, 1, 2];
+        let a = ari(&assign, &truth);
+        assert!((a - 0.5714285714).abs() < 1e-6, "ari {a}");
+    }
+}

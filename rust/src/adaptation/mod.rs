@@ -1,0 +1,12 @@
+//! Adaptation layer (paper §5): online workload categorization and
+//! memory-constrained configuration tuning.
+
+pub mod bo;
+pub mod cluster_metrics;
+pub mod offline_cluster;
+pub mod online_cluster;
+pub mod tuner;
+
+pub use bo::{ConfigTuner, Evaluation, Strategy, TunerConfig};
+pub use online_cluster::{Cluster, ClusterConfig, OnlineClustering, TuneStatus};
+pub use tuner::{OperatorAdaptation, Recommendation};

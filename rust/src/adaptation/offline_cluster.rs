@@ -1,0 +1,159 @@
+//! Offline clustering baselines for Table 4: K-means (k-means++ init,
+//! Lloyd iterations, multi-restart) and DBSCAN — both given the *complete*
+//! dataset, unlike Trident's incremental algorithm.
+
+use crate::rngx::Rng;
+
+fn d2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// K-means with k-means++ seeding; returns (assignments, inertia).
+pub fn kmeans(data: &[Vec<f64>], k: usize, restarts: usize, seed: u64) -> (Vec<usize>, f64) {
+    assert!(k >= 1 && !data.is_empty());
+    let mut rng = Rng::new(seed);
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    for _ in 0..restarts {
+        // k-means++ init
+        let mut centers: Vec<Vec<f64>> = vec![data[rng.below(data.len())].clone()];
+        while centers.len() < k {
+            let w: Vec<f64> = data
+                .iter()
+                .map(|x| centers.iter().map(|c| d2(x, c)).fold(f64::INFINITY, f64::min))
+                .collect();
+            let total: f64 = w.iter().sum();
+            let idx = if total <= 1e-12 { rng.below(data.len()) } else { rng.categorical(&w) };
+            centers.push(data[idx].clone());
+        }
+        // Lloyd
+        let mut assign = vec![0usize; data.len()];
+        for _ in 0..60 {
+            let mut changed = false;
+            for (i, x) in data.iter().enumerate() {
+                let a = (0..k)
+                    .min_by(|&a, &b| d2(x, &centers[a]).partial_cmp(&d2(x, &centers[b])).unwrap())
+                    .unwrap();
+                if a != assign[i] {
+                    assign[i] = a;
+                    changed = true;
+                }
+            }
+            for (c, center) in centers.iter_mut().enumerate() {
+                let members: Vec<&Vec<f64>> = data
+                    .iter()
+                    .zip(&assign)
+                    .filter(|(_, &a)| a == c)
+                    .map(|(x, _)| x)
+                    .collect();
+                if members.is_empty() {
+                    continue;
+                }
+                for j in 0..center.len() {
+                    center[j] = members.iter().map(|m| m[j]).sum::<f64>() / members.len() as f64;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        let inertia: f64 = data.iter().zip(&assign).map(|(x, &a)| d2(x, &centers[a])).sum();
+        if best.as_ref().map(|(_, bi)| inertia < *bi).unwrap_or(true) {
+            best = Some((assign, inertia));
+        }
+    }
+    best.unwrap()
+}
+
+/// DBSCAN; label -1 (here `usize::MAX`) = noise.
+pub fn dbscan(data: &[Vec<f64>], eps: f64, min_pts: usize) -> Vec<usize> {
+    const NOISE: usize = usize::MAX;
+    const UNSEEN: usize = usize::MAX - 1;
+    let n = data.len();
+    let eps2 = eps * eps;
+    let mut labels = vec![UNSEEN; n];
+    let neighbors = |i: usize| -> Vec<usize> {
+        (0..n).filter(|&j| d2(&data[i], &data[j]) <= eps2).collect()
+    };
+    let mut cluster = 0usize;
+    for i in 0..n {
+        if labels[i] != UNSEEN {
+            continue;
+        }
+        let nb = neighbors(i);
+        if nb.len() < min_pts {
+            labels[i] = NOISE;
+            continue;
+        }
+        labels[i] = cluster;
+        let mut frontier = nb;
+        let mut qi = 0;
+        while qi < frontier.len() {
+            let j = frontier[qi];
+            qi += 1;
+            if labels[j] == NOISE {
+                labels[j] = cluster;
+            }
+            if labels[j] != UNSEEN {
+                continue;
+            }
+            labels[j] = cluster;
+            let nbj = neighbors(j);
+            if nbj.len() >= min_pts {
+                frontier.extend(nbj);
+            }
+        }
+        cluster += 1;
+    }
+    labels
+}
+
+/// Number of non-noise clusters in a DBSCAN labelling.
+pub fn dbscan_n_clusters(labels: &[usize]) -> usize {
+    labels.iter().filter(|&&l| l != usize::MAX).map(|&l| l + 1).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(rng: &mut Rng, centers: &[[f64; 2]], n_each: usize, sigma: f64) -> (Vec<Vec<f64>>, Vec<u8>) {
+        let mut data = Vec::new();
+        let mut truth = Vec::new();
+        for (t, c) in centers.iter().enumerate() {
+            for _ in 0..n_each {
+                data.push(vec![c[0] + rng.normal(0.0, sigma), c[1] + rng.normal(0.0, sigma)]);
+                truth.push(t as u8);
+            }
+        }
+        (data, truth)
+    }
+
+    #[test]
+    fn kmeans_recovers_blobs() {
+        let mut rng = Rng::new(0);
+        let (data, truth) = blobs(&mut rng, &[[0.0, 0.0], [3.0, 0.0], [0.0, 3.0]], 100, 0.2);
+        let (assign, _) = kmeans(&data, 3, 4, 1);
+        let p = super::super::cluster_metrics::purity(&assign, &truth);
+        assert!(p > 0.98, "purity {p}");
+    }
+
+    #[test]
+    fn dbscan_recovers_blobs_and_marks_noise() {
+        let mut rng = Rng::new(2);
+        let (mut data, truth) = blobs(&mut rng, &[[0.0, 0.0], [4.0, 0.0]], 120, 0.15);
+        data.push(vec![100.0, 100.0]); // lone outlier
+        let labels = dbscan(&data, 0.6, 4);
+        assert_eq!(dbscan_n_clusters(&labels[..240]), 2);
+        assert_eq!(labels[240], usize::MAX, "outlier must be noise");
+        let p = super::super::cluster_metrics::purity(&labels[..240], &truth);
+        assert!(p > 0.98, "purity {p}");
+    }
+
+    #[test]
+    fn kmeans_single_cluster_and_k1() {
+        let data = vec![vec![1.0, 1.0]; 20];
+        let (assign, inertia) = kmeans(&data, 1, 2, 0);
+        assert!(assign.iter().all(|&a| a == 0));
+        assert!(inertia < 1e-12);
+    }
+}

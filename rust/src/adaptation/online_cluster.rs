@@ -1,0 +1,248 @@
+//! Online workload clustering (paper §5.2): incremental centroid updates,
+//! distance-threshold assignment, closest-pair merging at the cluster cap,
+//! and exponential count decay for drift adaptation.
+
+/// Tuning status of a workload cluster (paper: Pending / Tuning / Tuned).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuneStatus {
+    Pending,
+    Tuning,
+    Tuned,
+}
+
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub id: u64,
+    pub centroid: Vec<f64>,
+    pub count: f64,
+    pub status: TuneStatus,
+    /// θ* once tuned, with its estimated sustainable throughput.
+    pub best_config: Option<Vec<f64>>,
+    pub best_ut: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Assignment distance threshold τ_d.
+    pub tau_d: f64,
+    /// Cluster cap L_max.
+    pub l_max: usize,
+    /// Count decay γ (applied per `decay()` call).
+    pub gamma: f64,
+    /// Clusters below this count are forgotten.
+    pub min_count: f64,
+    /// Recent-assignment window for dominant-cluster detection.
+    pub history: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { tau_d: 0.35, l_max: 8, gamma: 0.995, min_count: 1.0, history: 256 }
+    }
+}
+
+/// Incremental clustering state for one operator.
+pub struct OnlineClustering {
+    pub cfg: ClusterConfig,
+    pub clusters: Vec<Cluster>,
+    next_id: u64,
+    recent: std::collections::VecDeque<u64>,
+}
+
+fn dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+impl OnlineClustering {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        OnlineClustering { cfg, clusters: Vec::new(), next_id: 0, recent: Default::default() }
+    }
+
+    /// ASSIGNCLUSTER + UPDATECLUSTERSTATS (Algorithm 1, phase 1).
+    /// Returns the assigned cluster id.
+    pub fn assign(&mut self, x: &[f64]) -> u64 {
+        let nearest = self
+            .clusters
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (i, dist(&c.centroid, x)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let id = match nearest {
+            Some((i, d)) if d <= self.cfg.tau_d => {
+                let c = &mut self.clusters[i];
+                c.count += 1.0;
+                let n = c.count;
+                for (cj, xj) in c.centroid.iter_mut().zip(x) {
+                    *cj += (xj - *cj) / n;
+                }
+                c.id
+            }
+            _ => {
+                if self.clusters.len() >= self.cfg.l_max {
+                    self.merge_closest_pair();
+                }
+                let id = self.next_id;
+                self.next_id += 1;
+                self.clusters.push(Cluster {
+                    id,
+                    centroid: x.to_vec(),
+                    count: 1.0,
+                    status: TuneStatus::Pending,
+                    best_config: None,
+                    best_ut: 0.0,
+                });
+                id
+            }
+        };
+        self.recent.push_back(id);
+        if self.recent.len() > self.cfg.history {
+            self.recent.pop_front();
+        }
+        id
+    }
+
+    fn merge_closest_pair(&mut self) {
+        if self.clusters.len() < 2 {
+            return;
+        }
+        let (mut bi, mut bj, mut bd) = (0, 1, f64::INFINITY);
+        for i in 0..self.clusters.len() {
+            for j in (i + 1)..self.clusters.len() {
+                let d = dist(&self.clusters[i].centroid, &self.clusters[j].centroid);
+                if d < bd {
+                    (bi, bj, bd) = (i, j, d);
+                }
+            }
+        }
+        let cj = self.clusters.remove(bj);
+        let ci = &mut self.clusters[bi];
+        let total = ci.count + cj.count;
+        for (a, b) in ci.centroid.iter_mut().zip(&cj.centroid) {
+            *a = (*a * ci.count + b * cj.count) / total;
+        }
+        ci.count = total;
+        // Keep the better-tuned side's configuration.
+        if cj.status == TuneStatus::Tuned && (ci.status != TuneStatus::Tuned || cj.best_ut > ci.best_ut)
+        {
+            ci.status = cj.status;
+            ci.best_config = cj.best_config;
+            ci.best_ut = cj.best_ut;
+        }
+    }
+
+    /// Periodic maintenance: decay counts, drop stale clusters.
+    pub fn decay(&mut self) {
+        let g = self.cfg.gamma;
+        for c in &mut self.clusters {
+            c.count *= g;
+        }
+        let min = self.cfg.min_count;
+        self.clusters.retain(|c| c.count >= min);
+    }
+
+    /// GETDOMINANTCLUSTER: majority of recent assignments.
+    pub fn dominant(&self) -> Option<&Cluster> {
+        let mut counts: std::collections::HashMap<u64, usize> = Default::default();
+        for &id in &self.recent {
+            *counts.entry(id).or_default() += 1;
+        }
+        let id = counts.into_iter().max_by_key(|&(_, n)| n)?.0;
+        self.clusters.iter().find(|c| c.id == id)
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut Cluster> {
+        self.clusters.iter_mut().find(|c| c.id == id)
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    fn cfg() -> ClusterConfig {
+        ClusterConfig::default()
+    }
+
+    #[test]
+    fn discovers_separated_regimes() {
+        let mut oc = OnlineClustering::new(cfg());
+        let mut rng = Rng::new(0);
+        let centers = [[0.2, 0.1], [1.4, 0.8], [0.4, 1.6]];
+        for i in 0..600 {
+            let c = centers[i % 3];
+            let x = [c[0] + rng.normal(0.0, 0.05), c[1] + rng.normal(0.0, 0.05)];
+            oc.assign(&x);
+        }
+        assert_eq!(oc.n_clusters(), 3, "must discover exactly 3 regimes");
+        // centroids near the truth
+        for c in &oc.clusters {
+            let ok = centers
+                .iter()
+                .any(|t| ((c.centroid[0] - t[0]).powi(2) + (c.centroid[1] - t[1]).powi(2)).sqrt() < 0.1);
+            assert!(ok, "stray centroid {:?}", c.centroid);
+        }
+    }
+
+    #[test]
+    fn sequential_regimes_and_dominance() {
+        let mut oc = OnlineClustering::new(cfg());
+        let mut rng = Rng::new(1);
+        for _ in 0..300 {
+            oc.assign(&[0.2 + rng.normal(0.0, 0.03), 0.2]);
+        }
+        let d1 = oc.dominant().unwrap().id;
+        for _ in 0..300 {
+            oc.assign(&[1.5 + rng.normal(0.0, 0.03), 1.5]);
+        }
+        let d2 = oc.dominant().unwrap().id;
+        assert_ne!(d1, d2, "dominant cluster must track the regime shift");
+    }
+
+    #[test]
+    fn cap_enforced_by_merging() {
+        let mut oc = OnlineClustering::new(ClusterConfig { l_max: 4, tau_d: 0.01, ..cfg() });
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            oc.assign(&[rng.f64() * 10.0, rng.f64() * 10.0]);
+        }
+        assert!(oc.n_clusters() <= 4);
+    }
+
+    #[test]
+    fn decay_forgets_stale_clusters() {
+        let mut oc = OnlineClustering::new(ClusterConfig { gamma: 0.5, ..cfg() });
+        oc.assign(&[0.0, 0.0]);
+        oc.assign(&[5.0, 5.0]);
+        for _ in 0..10 {
+            oc.assign(&[5.0, 5.0]);
+            oc.decay();
+        }
+        assert_eq!(oc.n_clusters(), 1, "stale cluster should be forgotten");
+        assert!(dist(&oc.clusters[0].centroid, &[5.0, 5.0]) < 0.5);
+    }
+
+    #[test]
+    fn merge_keeps_tuned_config() {
+        let mut oc = OnlineClustering::new(ClusterConfig { l_max: 2, tau_d: 0.01, ..cfg() });
+        let a = oc.assign(&[0.0, 0.0]);
+        let _b = oc.assign(&[1.0, 1.0]);
+        oc.get_mut(a).unwrap().status = TuneStatus::Tuned;
+        oc.get_mut(a).unwrap().best_config = Some(vec![42.0]);
+        oc.get_mut(a).unwrap().best_ut = 9.0;
+        // Third distinct point forces a merge of the closest pair.
+        oc.assign(&[5.0, 5.0]);
+        assert_eq!(oc.n_clusters(), 2);
+        let tuned: Vec<_> = oc.clusters.iter().filter(|c| c.status == TuneStatus::Tuned).collect();
+        assert_eq!(tuned.len(), 1);
+        assert_eq!(tuned[0].best_config.as_deref(), Some(&[42.0][..]));
+    }
+}

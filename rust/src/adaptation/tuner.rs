@@ -1,0 +1,236 @@
+//! Adaptation-layer control flow (paper Algorithm 1) for one tunable
+//! operator: workload categorization → tuning-trigger check → forwarding
+//! recommendations to the scheduling layer.
+//!
+//! Tuning evaluations run on a live *probe instance* orchestrated by the
+//! coordinator: the layer proposes a candidate θ, the coordinator restarts
+//! the probe with it, measures a sustained window, and reports
+//! (UT, peak-mem, OOM) back.
+
+use crate::adaptation::bo::{ConfigTuner, Strategy, TunerConfig};
+use crate::adaptation::online_cluster::{ClusterConfig, OnlineClustering, TuneStatus};
+use crate::config::{ConfigSpace, TridentConfig};
+use crate::runtime::GpBackend;
+use crate::sim::OpMetrics;
+
+/// A configuration recommendation for the scheduling layer (→ MILP's
+/// `UT_i^cand`).
+#[derive(Debug, Clone)]
+pub struct Recommendation {
+    pub config: Vec<f64>,
+    pub ut_cand: f64,
+}
+
+/// Per-operator adaptation state.
+pub struct OperatorAdaptation {
+    pub op: usize,
+    space: ConfigSpace,
+    pub clustering: OnlineClustering,
+    /// Active tuning job: (cluster id, tuner, in-flight candidate).
+    job: Option<(u64, ConfigTuner, Option<Vec<f64>>)>,
+    tune_trigger: usize,
+    tuner_cfg: TunerConfig,
+    /// Clusters already queued for tuning (FIFO).
+    queue: Vec<u64>,
+}
+
+impl OperatorAdaptation {
+    pub fn new(op: usize, space: ConfigSpace, cfg: &TridentConfig, mem_cap_mb: f64, seed: u64) -> Self {
+        OperatorAdaptation {
+            op,
+            space,
+            clustering: OnlineClustering::new(ClusterConfig {
+                tau_d: cfg.tau_d,
+                l_max: cfg.l_max,
+                gamma: cfg.gamma,
+                ..Default::default()
+            }),
+            job: None,
+            tune_trigger: cfg.tune_trigger,
+            tuner_cfg: TunerConfig {
+                strategy: Strategy::ConstrainedBo,
+                budget: cfg.bo_budget,
+                n_init: cfg.bo_init,
+                eta: cfg.eta,
+                mem_limit_mb: mem_cap_mb - cfg.delta_mb,
+                seed,
+            },
+            queue: Vec::new(),
+        }
+    }
+
+    /// Override the search strategy (ablations / Table 5 variants).
+    pub fn set_strategy(&mut self, s: Strategy) {
+        self.tuner_cfg.strategy = s;
+    }
+
+    /// Phase 1 + 2 of Algorithm 1: ingest this window's request features,
+    /// update clusters, enqueue tuning jobs on trigger.
+    pub fn ingest(&mut self, m: &OpMetrics) {
+        for (f, _) in &m.cluster_samples {
+            let c = self.clustering.assign(&f[..]);
+            let cl = self.clustering.get_mut(c).unwrap();
+            if cl.status == TuneStatus::Pending
+                && cl.count >= self.tune_trigger as f64
+                && !self.queue.contains(&c)
+            {
+                cl.status = TuneStatus::Tuning;
+                self.queue.push(c);
+            }
+        }
+        self.clustering.decay();
+    }
+
+    /// Next probe configuration to evaluate, if a tuning job is active (or
+    /// can start).  Returns `None` when no tuning work is pending.
+    pub fn probe_request(&mut self, backend: &GpBackend) -> Option<Vec<f64>> {
+        if self.job.is_none() {
+            let cluster = self.queue.first().copied()?;
+            let seed = self.tuner_cfg.seed ^ cluster.wrapping_mul(0x9E37);
+            let mut cfg = self.tuner_cfg.clone();
+            cfg.seed = seed;
+            self.job = Some((cluster, ConfigTuner::new(self.space.clone(), cfg), None));
+        }
+        let (_, tuner, inflight) = self.job.as_mut().unwrap();
+        if inflight.is_some() {
+            return inflight.clone(); // waiting for the coordinator's report
+        }
+        if tuner.done() {
+            return None;
+        }
+        let cand = tuner.next_candidate(backend);
+        *inflight = Some(cand.clone());
+        Some(cand)
+    }
+
+    /// Report the probe measurement for the in-flight candidate.
+    /// Completes the job when the budget is exhausted.
+    pub fn probe_result(&mut self, ut: f64, mem_mb: f64, oom: bool) {
+        let Some((cluster, tuner, inflight)) = self.job.as_mut() else {
+            return;
+        };
+        let Some(theta) = inflight.take() else { return };
+        tuner.record(theta, ut, mem_mb, oom);
+        if tuner.done() {
+            let cluster = *cluster;
+            let best = tuner.best().map(|e| (e.theta.clone(), e.ut));
+            let ooms = tuner.oom_count();
+            self.job = None;
+            self.queue.retain(|&c| c != cluster);
+            if let Some(cl) = self.clustering.get_mut(cluster) {
+                cl.status = TuneStatus::Tuned;
+                if let Some((config, ut)) = best {
+                    cl.best_config = Some(config);
+                    cl.best_ut = ut;
+                }
+            }
+            let _ = ooms;
+        }
+    }
+
+    /// Phase 3: the dominant cluster's recommendation, if tuned (paper
+    /// lines 10–13).
+    pub fn recommendation(&self) -> Option<Recommendation> {
+        let dom = self.clustering.dominant()?;
+        if dom.status != TuneStatus::Tuned {
+            return None;
+        }
+        let config = dom.best_config.clone()?;
+        Some(Recommendation { config, ut_cand: dom.best_ut })
+    }
+
+    pub fn is_tuning(&self) -> bool {
+        self.job.is_some() || !self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::metrics::InstanceMetrics;
+
+    fn metrics_with_samples(samples: Vec<([f64; 2], u8)>) -> OpMetrics {
+        OpMetrics {
+            op: 0,
+            window_s: 5.0,
+            records_in: 0,
+            records_out: 0,
+            rate_per_inst: 1.0,
+            utilization: 0.9,
+            queue_begin: 10,
+            queue_end: 10,
+            queue_avg: 10.0,
+            feat_mean: [500.0, 100.0, 0.0, 1.0],
+            feat_std: [0.0; 4],
+            peak_mem_mb: 0.0,
+            oom_events: 0,
+            n_active: 1,
+            cluster_samples: samples,
+            per_instance: Vec::<InstanceMetrics>::new(),
+        }
+    }
+
+    fn adaptation() -> OperatorAdaptation {
+        let mut cfg = TridentConfig::default();
+        cfg.tune_trigger = 16;
+        cfg.bo_budget = 8;
+        cfg.bo_init = 3;
+        OperatorAdaptation::new(0, crate::config::ConfigSpace::llm_engine(), &cfg, 65536.0, 7)
+    }
+
+    #[test]
+    fn trigger_then_tune_then_recommend() {
+        let mut ad = adaptation();
+        let b = GpBackend::Native;
+        // Feed one stable regime until the trigger fires.
+        for _ in 0..6 {
+            let samples = (0..8).map(|_| ([0.4, 0.2], 0u8)).collect();
+            ad.ingest(&metrics_with_samples(samples));
+        }
+        assert!(ad.is_tuning(), "trigger must enqueue a tuning job");
+        // Drive the probe loop.
+        let mut evals = 0;
+        while let Some(theta) = ad.probe_request(&b) {
+            let ut = 5.0 + theta[0] / 16.0; // bigger batch better
+            ad.probe_result(ut, 30_000.0, false);
+            evals += 1;
+            assert!(evals <= 8, "must stop at budget");
+        }
+        assert_eq!(evals, 8);
+        assert!(!ad.is_tuning());
+        let rec = ad.recommendation().expect("dominant cluster is tuned");
+        assert!(rec.ut_cand >= 5.0);
+        assert_eq!(rec.config.len(), 6);
+    }
+
+    #[test]
+    fn no_recommendation_while_dominant_untuned() {
+        let mut ad = adaptation();
+        let samples = (0..4).map(|_| ([0.4, 0.2], 0u8)).collect();
+        ad.ingest(&metrics_with_samples(samples));
+        assert!(ad.recommendation().is_none());
+    }
+
+    #[test]
+    fn regime_shift_triggers_second_job() {
+        let mut ad = adaptation();
+        let b = GpBackend::Native;
+        for _ in 0..6 {
+            ad.ingest(&metrics_with_samples((0..8).map(|_| ([0.3, 0.2], 0u8)).collect()));
+        }
+        while let Some(theta) = ad.probe_request(&b) {
+            let _ = theta;
+            ad.probe_result(4.0, 30_000.0, false);
+        }
+        assert!(!ad.is_tuning());
+        // Shift to a new regime far away in feature space (long enough for
+        // the new cluster to dominate the recent-assignment history).
+        for _ in 0..40 {
+            ad.ingest(&metrics_with_samples((0..8).map(|_| ([2.5, 1.8], 1u8)).collect()));
+        }
+        assert!(ad.is_tuning(), "new regime must enqueue tuning");
+        assert!(ad.clustering.n_clusters() >= 2);
+        // Old recommendation no longer applies: dominant is the new cluster.
+        assert!(ad.recommendation().is_none());
+    }
+}

@@ -1,0 +1,294 @@
+//! Baseline schedulers from the paper's evaluation (§8.2–8.3):
+//!
+//! * **Static** — a manually-tuned fixed allocation (we realize "manual
+//!   tuning" as a one-shot MILP solve against nominal first-regime rates,
+//!   never re-planned);
+//! * **Ray Data** — threshold-based reactive autoscaling per operator
+//!   (queue pressure / utilization), placement-unaware;
+//! * **DS2** — useful-time processing rates + topology-derived parallelism
+//!   (assumes synchronous operators; systematically misestimates async
+//!   capacity);
+//! * **ContTune** — DS2's observation plus conservative Bayesian steps on
+//!   the bottleneck operator's parallelism;
+//! * **SCOOT** — offline per-operator configuration tuning; deploys the
+//!   tuned configs on the Static allocation, no runtime adaptation.
+//!
+//! All of them produce a placement matrix `x[op][node]`; the coordinator
+//! applies it to the executor identically for every scheduler, so RQ1/RQ2
+//! comparisons differ only in policy.
+
+use crate::config::{ClusterSpec, PipelineSpec};
+use crate::sim::OpMetrics;
+
+/// A placement decision: instances per (op, node).
+pub type Placement = Vec<Vec<u32>>;
+
+/// Greedy capacity-respecting packer shared by the baselines: place
+/// `p[i]` instances of each op, accel ops first, round-robin across nodes.
+/// Returns the achieved placement (may be short if resources run out).
+pub fn pack(pipeline: &PipelineSpec, cluster: &ClusterSpec, p: &[u32]) -> Placement {
+    let k = cluster.nodes.len();
+    let n = pipeline.n_ops();
+    let mut cpu: Vec<f64> = cluster.nodes.iter().map(|nd| nd.cpu_cores).collect();
+    let mut mem: Vec<f64> = cluster.nodes.iter().map(|nd| nd.mem_gb).collect();
+    let mut acc: Vec<f64> = cluster.nodes.iter().map(|nd| nd.accels as f64).collect();
+    let mut x = vec![vec![0u32; k]; n];
+    // Accel ops first (scarce), then CPU ops; round-robin for spread.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(pipeline.operators[i].accels));
+    for &i in &order {
+        let o = &pipeline.operators[i];
+        let mut next = 0usize;
+        for _ in 0..p[i] {
+            let mut placed = false;
+            for probe in 0..k {
+                let kk = (next + probe) % k;
+                let fits = cpu[kk] >= o.cpu
+                    && mem[kk] >= o.mem_gb
+                    && (o.accels == 0 || acc[kk] >= o.accels as f64);
+                if fits {
+                    cpu[kk] -= o.cpu;
+                    mem[kk] -= o.mem_gb;
+                    acc[kk] -= o.accels as f64;
+                    x[i][kk] += 1;
+                    next = kk + 1;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                break;
+            }
+        }
+    }
+    x
+}
+
+/// Waterfall parallelism: given per-instance rates, the max throughput the
+/// cluster supports and the per-op instance counts to sustain it.
+/// This is the core of DS2's "three steps" adapted to the offline setting
+/// (the source rate is a decision, so target = best achievable).
+pub fn waterfall(
+    pipeline: &PipelineSpec,
+    cluster: &ClusterSpec,
+    rates: &[f64],
+    headroom: f64,
+) -> Vec<u32> {
+    let n = pipeline.n_ops();
+    let (d_i, d_o) = pipeline.amplification();
+    // Max instances per op if it had the whole cluster (resource caps).
+    let cap = |i: usize| -> f64 {
+        let o = &pipeline.operators[i];
+        if o.accels > 0 {
+            // accel ops share devices: assume equal split among accel ops
+            let n_accel_ops = pipeline.operators.iter().filter(|q| q.accels > 0).count() as f64;
+            (cluster.total_accels() as f64 / o.accels as f64 / n_accel_ops).floor().max(1.0)
+        } else {
+            (cluster.total_cpus() / o.cpu / (n as f64 / 2.0)).floor().max(1.0)
+        }
+    };
+    let t_star = (0..n)
+        .map(|i| d_o / d_i[i] * cap(i) * rates[i].max(1e-9))
+        .fold(f64::INFINITY, f64::min);
+    (0..n)
+        .map(|i| {
+            let need = t_star * d_i[i] / (d_o * rates[i].max(1e-9)) * headroom;
+            (need.ceil() as u32).max(1)
+        })
+        .collect()
+}
+
+/// Ray Data's default reactive autoscaler: per-operator thresholds on
+/// queue backlog and utilization, one step at a time, no global view.
+pub struct RayDataAutoscaler {
+    /// Scale up when avg queue exceeds this fraction of capacity.
+    pub q_high: f64,
+    /// Scale down when utilization is below this and queue near-empty.
+    pub u_low: f64,
+    pub u_high: f64,
+}
+
+impl Default for RayDataAutoscaler {
+    fn default() -> Self {
+        RayDataAutoscaler { q_high: 0.5, u_low: 0.3, u_high: 0.85 }
+    }
+}
+
+impl RayDataAutoscaler {
+    /// One reactive step: returns the new target parallelism per op.
+    pub fn step(
+        &self,
+        pipeline: &PipelineSpec,
+        metrics: &[OpMetrics],
+        cur_p: &[u32],
+    ) -> Vec<u32> {
+        let mut p = cur_p.to_vec();
+        for (i, m) in metrics.iter().enumerate() {
+            let cap = pipeline.operators[i].queue_cap as f64;
+            let backlog = m.queue_avg / (cap * cur_p[i].max(1) as f64);
+            if backlog > self.q_high || m.utilization > self.u_high {
+                p[i] = cur_p[i] + 1;
+            } else if m.utilization < self.u_low && m.queue_end < 4 && cur_p[i] > 1 {
+                p[i] = cur_p[i] - 1;
+            }
+        }
+        p
+    }
+}
+
+/// ContTune-style conservative Bayesian step on top of DS2 parallelism:
+/// nudge the bottleneck operator up while the observed throughput keeps
+/// improving; back off when it stops helping (big-spring-small-step,
+/// reduced to its conservative-exploration core).
+pub struct ContTune {
+    last_throughput: f64,
+    last_bumped: Option<usize>,
+}
+
+impl Default for ContTune {
+    fn default() -> Self {
+        ContTune { last_throughput: 0.0, last_bumped: None }
+    }
+}
+
+impl ContTune {
+    pub fn step(
+        &mut self,
+        pipeline: &PipelineSpec,
+        rates: &[f64],
+        metrics: &[OpMetrics],
+        cur_p: &[u32],
+        throughput: f64,
+    ) -> Vec<u32> {
+        let (d_i, d_o) = pipeline.amplification();
+        let mut p = cur_p.to_vec();
+        // Undo the previous bump if it did not help (conservative).
+        if let Some(i) = self.last_bumped {
+            if throughput < self.last_throughput * 1.01 && p[i] > 1 {
+                p[i] -= 1;
+                self.last_bumped = None;
+                self.last_throughput = throughput;
+                return p;
+            }
+        }
+        // Bottleneck = smallest estimated capacity margin.
+        let bottleneck = (0..pipeline.n_ops())
+            .filter(|&i| metrics[i].records_out > 0)
+            .min_by(|&a, &b| {
+                let ca = d_o / d_i[a] * cur_p[a] as f64 * rates[a].max(1e-9);
+                let cb = d_o / d_i[b] * cur_p[b] as f64 * rates[b].max(1e-9);
+                ca.partial_cmp(&cb).unwrap()
+            });
+        if let Some(i) = bottleneck {
+            p[i] = cur_p[i] + 1;
+            self.last_bumped = Some(i);
+        }
+        self.last_throughput = throughput;
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::sim::metrics::InstanceMetrics;
+    use crate::workload::pdf;
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::homogeneous(8, 256.0, 1024.0, 8, 65536.0, 12500.0)
+    }
+
+    fn mk_metrics(util: f64, qavg: f64) -> OpMetrics {
+        OpMetrics {
+            op: 0,
+            window_s: 5.0,
+            records_in: 10,
+            records_out: 10,
+            rate_per_inst: 1.0,
+            utilization: util,
+            queue_begin: qavg as usize,
+            queue_end: qavg as usize,
+            queue_avg: qavg,
+            feat_mean: [0.0; 4],
+            feat_std: [0.0; 4],
+            peak_mem_mb: 0.0,
+            oom_events: 0,
+            n_active: 1,
+            cluster_samples: vec![],
+            per_instance: Vec::<InstanceMetrics>::new(),
+        }
+    }
+
+    #[test]
+    fn pack_respects_resources() {
+        let pl = pdf::pipeline();
+        let p: Vec<u32> = vec![4; pl.n_ops()];
+        let x = pack(&pl, &cluster(), &p);
+        for kk in 0..8 {
+            let acc: u32 = (0..pl.n_ops())
+                .map(|i| x[i][kk] * pl.operators[i].accels)
+                .sum();
+            assert!(acc <= 8);
+            let cpu: f64 = (0..pl.n_ops())
+                .map(|i| x[i][kk] as f64 * pl.operators[i].cpu)
+                .sum();
+            assert!(cpu <= 256.0);
+        }
+        // accel ops fully placed (scarce first)
+        for i in 0..pl.n_ops() {
+            if pl.operators[i].accels > 0 {
+                assert_eq!(x[i].iter().sum::<u32>(), 4, "op {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn waterfall_balances_amplification() {
+        let pl = pdf::pipeline();
+        let rates: Vec<f64> = pl.operators.iter().map(|_| 10.0).collect();
+        let p = waterfall(&pl, &cluster(), &rates, 1.1);
+        let (d_i, _) = pl.amplification();
+        // ops with higher amplification need proportionally more instances
+        let hi = d_i
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(p[hi] >= p[0], "amplified op gets more instances: {p:?}");
+        assert!(p.iter().all(|&v| v >= 1));
+    }
+
+    #[test]
+    fn raydata_scales_on_pressure() {
+        let pl = pdf::pipeline();
+        let rd = RayDataAutoscaler::default();
+        let metrics: Vec<OpMetrics> = (0..pl.n_ops())
+            .map(|i| match i {
+                0 => mk_metrics(0.95, 200.0), // overloaded
+                1 => mk_metrics(0.1, 0.0),    // idle
+                _ => mk_metrics(0.5, 10.0),   // fine
+            })
+            .collect();
+        let cur = vec![2u32; pl.n_ops()];
+        let p = rd.step(&pl, &metrics, &cur);
+        assert_eq!(p[0], 3, "overloaded scales up");
+        assert_eq!(p[1], 1, "idle scales down");
+        assert_eq!(p[2], 2, "healthy unchanged");
+    }
+
+    #[test]
+    fn conttune_reverts_unhelpful_bump() {
+        let pl = pdf::pipeline();
+        let rates: Vec<f64> = pl.operators.iter().map(|_| 10.0).collect();
+        let metrics: Vec<OpMetrics> = (0..pl.n_ops()).map(|_| mk_metrics(0.5, 0.0)).collect();
+        let mut ct = ContTune::default();
+        let p0 = vec![2u32; pl.n_ops()];
+        let p1 = ct.step(&pl, &rates, &metrics, &p0, 1.0);
+        let bumped = (0..p1.len()).find(|&i| p1[i] > p0[i]).expect("bumps one op");
+        // throughput did not improve -> revert
+        let p2 = ct.step(&pl, &rates, &metrics, &p1, 1.0);
+        assert_eq!(p2[bumped], p0[bumped], "unhelpful bump reverted");
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration: JSON parsing and the typed spec surface.
+pub mod json;
+pub mod spec;
+
+pub use json::Json;
+pub use spec::{
+    ClusterSpec, ConfigParam, ConfigSpace, CostW, FeatureExtractor, NodeSpec, OperatorKind,
+    OperatorSpec, PipelineSpec, ServiceModel, TridentConfig,
+};

@@ -1,0 +1,525 @@
+//! Typed specifications for clusters, operators, pipelines, and the
+//! Trident controller — the public configuration surface of the library.
+//!
+//! Specs are plain data; the discrete-event simulator interprets the
+//! `ServiceModel` ground truth (which the scheduler never reads — it only
+//! sees metrics), and the scheduling stack reads the resource/flow fields.
+
+use super::json::Json;
+
+/// One server in the fixed-resource cluster.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    pub cpu_cores: f64,
+    pub mem_gb: f64,
+    /// Number of accelerator devices (NPU/GPU/TPU) on this node.
+    pub accels: u32,
+    /// Device memory per accelerator, MB.
+    pub accel_mem_mb: f64,
+    /// NIC egress bandwidth, MB/s.
+    pub egress_mbps: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub nodes: Vec<NodeSpec>,
+}
+
+impl ClusterSpec {
+    /// Homogeneous cluster builder (the paper's testbed shape).
+    pub fn homogeneous(
+        n_nodes: usize,
+        cpu_cores: f64,
+        mem_gb: f64,
+        accels: u32,
+        accel_mem_mb: f64,
+        egress_mbps: f64,
+    ) -> Self {
+        ClusterSpec {
+            nodes: (0..n_nodes)
+                .map(|k| NodeSpec {
+                    name: format!("node{k}"),
+                    cpu_cores,
+                    mem_gb,
+                    accels,
+                    accel_mem_mb,
+                    egress_mbps,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn total_cpus(&self) -> f64 {
+        self.nodes.iter().map(|n| n.cpu_cores).sum()
+    }
+
+    pub fn total_accels(&self) -> u32 {
+        self.nodes.iter().map(|n| n.accels).sum()
+    }
+}
+
+/// How an operator executes (drives both the sim service model and the
+/// useful-time semantics the DS2-style estimators rely on).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OperatorKind {
+    /// Synchronous, record-at-a-time CPU operator.
+    CpuSync,
+    /// Asynchronous accelerator operator with continuous batching
+    /// (LLM inference, batched vision models).
+    AccelAsync,
+}
+
+/// One tunable configuration dimension (mixed int/continuous space).
+#[derive(Debug, Clone)]
+pub struct ConfigParam {
+    pub name: String,
+    pub lo: f64,
+    pub hi: f64,
+    pub integer: bool,
+    /// Search in log2 space (batch sizes, token budgets).
+    pub log2: bool,
+    pub default: f64,
+}
+
+impl ConfigParam {
+    pub fn clampi(&self, v: f64) -> f64 {
+        let v = v.clamp(self.lo, self.hi);
+        if self.integer {
+            v.round()
+        } else {
+            v
+        }
+    }
+
+    /// Map a unit-cube coordinate into the parameter range.
+    pub fn from_unit(&self, u: f64) -> f64 {
+        let v = if self.log2 {
+            let (l, h) = (self.lo.max(1e-9).log2(), self.hi.log2());
+            (l + u * (h - l)).exp2()
+        } else {
+            self.lo + u * (self.hi - self.lo)
+        };
+        self.clampi(v)
+    }
+
+    /// Normalize a value to the unit cube (inverse of `from_unit`).
+    pub fn to_unit(&self, v: f64) -> f64 {
+        if self.log2 {
+            let (l, h) = (self.lo.max(1e-9).log2(), self.hi.log2());
+            ((v.max(1e-9).log2() - l) / (h - l)).clamp(0.0, 1.0)
+        } else {
+            ((v - self.lo) / (self.hi - self.lo).max(1e-12)).clamp(0.0, 1.0)
+        }
+    }
+}
+
+/// The operator's configuration search space (Θ_i in the paper).
+#[derive(Debug, Clone, Default)]
+pub struct ConfigSpace {
+    pub params: Vec<ConfigParam>,
+}
+
+impl ConfigSpace {
+    pub fn dims(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn default_config(&self) -> Vec<f64> {
+        self.params.iter().map(|p| p.default).collect()
+    }
+
+    pub fn from_unit(&self, u: &[f64]) -> Vec<f64> {
+        self.params
+            .iter()
+            .zip(u)
+            .map(|(p, &ui)| p.from_unit(ui))
+            .collect()
+    }
+
+    pub fn to_unit(&self, theta: &[f64]) -> Vec<f64> {
+        self.params
+            .iter()
+            .zip(theta)
+            .map(|(p, &v)| p.to_unit(v))
+            .collect()
+    }
+
+    pub fn clamp(&self, theta: &[f64]) -> Vec<f64> {
+        self.params
+            .iter()
+            .zip(theta)
+            .map(|(p, &v)| p.clampi(v))
+            .collect()
+    }
+
+    /// vLLM-style inference-engine space used by the paper's Table 5.
+    pub fn llm_engine() -> Self {
+        ConfigSpace {
+            params: vec![
+                ConfigParam { name: "max_num_seqs".into(), lo: 1.0, hi: 128.0, integer: true, log2: true, default: 16.0 },
+                ConfigParam { name: "max_num_batched_tokens".into(), lo: 512.0, hi: 16384.0, integer: true, log2: true, default: 2048.0 },
+                ConfigParam { name: "block_size".into(), lo: 8.0, hi: 32.0, integer: true, log2: true, default: 16.0 },
+                ConfigParam { name: "scheduler_delay_factor".into(), lo: 0.0, hi: 1.0, integer: false, log2: false, default: 0.0 },
+                ConfigParam { name: "enable_chunked_prefill".into(), lo: 0.0, hi: 1.0, integer: true, log2: false, default: 0.0 },
+                ConfigParam { name: "enable_prefix_caching".into(), lo: 0.0, hi: 1.0, integer: true, log2: false, default: 0.0 },
+            ],
+        }
+    }
+
+    /// Batched vision-model space (CLIP scoring, text detection).
+    pub fn vision_engine() -> Self {
+        ConfigSpace {
+            params: vec![
+                ConfigParam { name: "batch_size".into(), lo: 1.0, hi: 256.0, integer: true, log2: true, default: 32.0 },
+                ConfigParam { name: "tile_px".into(), lo: 224.0, hi: 1024.0, integer: true, log2: true, default: 448.0 },
+                ConfigParam { name: "fp16".into(), lo: 0.0, hi: 1.0, integer: true, log2: false, default: 1.0 },
+            ],
+        }
+    }
+}
+
+/// Linear item-cost weights over [`ItemAttrs`] fields.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CostW {
+    pub tokens_in: f64,
+    pub tokens_out: f64,
+    pub pixels_m: f64,
+    pub frames: f64,
+    pub konst: f64,
+}
+
+/// Ground-truth service behaviour (sim-only; hidden from the scheduler).
+#[derive(Debug, Clone)]
+pub enum ServiceModel {
+    /// Synchronous CPU operator: per-record service time =
+    /// cost(attrs) / (base_rate * ref_cost).
+    Cpu { base_rate: f64, ref_cost: f64, cost: CostW },
+    /// Asynchronous continuous-batching accelerator operator.
+    Accel {
+        /// Token throughput at batch saturation with the default config.
+        peak_tok_rate: f64,
+        /// Half-saturation effective batch size.
+        batch_half: f64,
+        /// Decode tokens cost this much more than prefill tokens.
+        decode_weight: f64,
+        /// Fraction of cross-request prefix sharing in this workload
+        /// (prefix caching only pays off when this is high).
+        prefix_share: f64,
+        /// Memory ground truth, MB.
+        mem_base_mb: f64,
+        kv_mb_per_token: f64,
+        act_mb_per_token: f64,
+        /// Lognormal sigma of allocator noise on peak memory.
+        mem_noise_sigma: f64,
+    },
+}
+
+/// Feature extractor wiring an operator's workload descriptors (observation
+/// layer, §4.2) and regime features (adaptation layer, §5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureExtractor {
+    /// (mu_in, sigma_in, mu_out, sigma_out) over token lengths.
+    LlmTokens,
+    /// (mean resolution in Mpx, mean frames).
+    Vision,
+    /// (mean item cost) — generic CPU stage.
+    Cost,
+}
+
+/// Full operator specification.
+#[derive(Debug, Clone)]
+pub struct OperatorSpec {
+    pub name: String,
+    pub kind: OperatorKind,
+    /// CPU cores per instance (u_i).
+    pub cpu: f64,
+    /// Host memory per instance, GB (m_i).
+    pub mem_gb: f64,
+    /// Accelerator devices per instance (g_i).
+    pub accels: u32,
+    /// Output records per input record (data amplification source).
+    pub fanout: f64,
+    /// Size of each output record, MB (d_i^out).
+    pub out_mb: f64,
+    /// Instance lifecycle costs, seconds.
+    pub start_s: f64,
+    pub stop_s: f64,
+    pub cold_s: f64,
+    pub tunable: bool,
+    pub config_space: ConfigSpace,
+    pub service: ServiceModel,
+    pub features: FeatureExtractor,
+    /// Multipliers applied to (tokens_in, tokens_out, pixels_m, frames)
+    /// when this operator fans an item out into children (e.g. a document
+    /// split into ~120 blocks scales tokens by ~1/120).
+    pub child_scale: [f64; 4],
+    /// Per-instance input queue capacity, records (bounded buffers are the
+    /// backpressure mechanism of the streaming executor).
+    pub queue_cap: usize,
+}
+
+impl OperatorSpec {
+    pub fn is_accel(&self) -> bool {
+        self.accels > 0
+    }
+}
+
+/// A linear pipeline of operators (the paper's dataflow shape).
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    pub name: String,
+    pub operators: Vec<OperatorSpec>,
+}
+
+impl PipelineSpec {
+    pub fn n_ops(&self) -> usize {
+        self.operators.len()
+    }
+
+    /// Amplification factors D_i (input volume of operator i relative to
+    /// pipeline input; D_1 = 1) and D_o at the output.
+    pub fn amplification(&self) -> (Vec<f64>, f64) {
+        let mut d = Vec::with_capacity(self.operators.len());
+        let mut cur = 1.0;
+        for op in &self.operators {
+            d.push(cur);
+            cur *= op.fanout;
+        }
+        (d, cur)
+    }
+}
+
+/// Controller hyper-parameters (paper defaults in parentheses).
+#[derive(Debug, Clone)]
+pub struct TridentConfig {
+    /// Rescheduling interval T_sched (multi-second; paper uses minutes on
+    /// the real cluster, we default to 30 s of sim time).
+    pub t_sched_s: f64,
+    /// Metrics flush interval.
+    pub metrics_interval_s: f64,
+    /// Objective tiebreakers (1e-4, 1e-6).
+    pub lambda1: f64,
+    pub lambda2: f64,
+    /// Stage-1 utilization threshold tau_u.
+    pub tau_u: f64,
+    /// Stage-2 residual threshold tau_z.
+    pub tau_z: f64,
+    /// Min filtered samples before GP takes over from EMA.
+    pub n_min: usize,
+    /// GP observation-buffer capacity (matches AOT N_TRAIN).
+    pub gp_window: usize,
+    /// EMA smoothing factor.
+    pub ema_alpha: f64,
+    /// BO feasibility threshold eta (0.6).
+    pub eta: f64,
+    /// Memory safety margin Delta, MB (2048).
+    pub delta_mb: f64,
+    /// Max clusters L_max.
+    pub l_max: usize,
+    /// Cluster assignment distance threshold tau_d (normalized space).
+    pub tau_d: f64,
+    /// Cluster count decay gamma.
+    pub gamma: f64,
+    /// Samples before a cluster triggers tuning.
+    pub tune_trigger: usize,
+    /// BO evaluation budget per tuning job (30) and random init (5).
+    pub bo_budget: usize,
+    pub bo_init: usize,
+    /// Seconds each BO candidate is evaluated on a probe instance.
+    pub bo_eval_s: f64,
+    /// Rolling-update max batch B_max.
+    pub b_max: usize,
+    /// MILP solver wall-clock budget.
+    pub milp_time_budget_ms: u64,
+    /// Use the native Rust GP instead of PJRT artifacts.
+    pub native_gp: bool,
+}
+
+impl Default for TridentConfig {
+    fn default() -> Self {
+        TridentConfig {
+            t_sched_s: 90.0,
+            metrics_interval_s: 5.0,
+            lambda1: 1e-4,
+            lambda2: 1e-6,
+            tau_u: 0.6,
+            tau_z: 3.0,
+            n_min: 8,
+            gp_window: 64,
+            ema_alpha: 0.3,
+            eta: 0.6,
+            delta_mb: 2048.0,
+            l_max: 8,
+            tau_d: 0.30,
+            gamma: 0.995,
+            tune_trigger: 32,
+            bo_budget: 16,
+            bo_init: 5,
+            bo_eval_s: 20.0,
+            b_max: 8,
+            milp_time_budget_ms: 600,
+            native_gp: std::env::var("TRIDENT_NATIVE_GP").map(|v| v == "1").unwrap_or(false),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON (de)serialization for the public spec types (cluster + controller);
+// pipelines are built by the preset constructors or programmatically.
+// ---------------------------------------------------------------------------
+
+impl ClusterSpec {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            [(
+                "nodes".to_string(),
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|n| {
+                            Json::obj(vec![
+                                ("name", Json::str(&n.name)),
+                                ("cpu_cores", Json::num(n.cpu_cores)),
+                                ("mem_gb", Json::num(n.mem_gb)),
+                                ("accels", Json::num(n.accels as f64)),
+                                ("accel_mem_mb", Json::num(n.accel_mem_mb)),
+                                ("egress_mbps", Json::num(n.egress_mbps)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let nodes = j
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or("cluster: missing nodes[]")?;
+        Ok(ClusterSpec {
+            nodes: nodes
+                .iter()
+                .enumerate()
+                .map(|(k, n)| NodeSpec {
+                    name: n.str_or("name", &format!("node{k}")).to_string(),
+                    cpu_cores: n.f64_or("cpu_cores", 32.0),
+                    mem_gb: n.f64_or("mem_gb", 128.0),
+                    accels: n.f64_or("accels", 0.0) as u32,
+                    accel_mem_mb: n.f64_or("accel_mem_mb", 65536.0),
+                    egress_mbps: n.f64_or("egress_mbps", 12500.0),
+                })
+                .collect(),
+        })
+    }
+}
+
+impl TridentConfig {
+    pub fn from_json(j: &Json) -> Self {
+        let d = TridentConfig::default();
+        TridentConfig {
+            t_sched_s: j.f64_or("t_sched_s", d.t_sched_s),
+            metrics_interval_s: j.f64_or("metrics_interval_s", d.metrics_interval_s),
+            lambda1: j.f64_or("lambda1", d.lambda1),
+            lambda2: j.f64_or("lambda2", d.lambda2),
+            tau_u: j.f64_or("tau_u", d.tau_u),
+            tau_z: j.f64_or("tau_z", d.tau_z),
+            n_min: j.f64_or("n_min", d.n_min as f64) as usize,
+            gp_window: j.f64_or("gp_window", d.gp_window as f64) as usize,
+            ema_alpha: j.f64_or("ema_alpha", d.ema_alpha),
+            eta: j.f64_or("eta", d.eta),
+            delta_mb: j.f64_or("delta_mb", d.delta_mb),
+            l_max: j.f64_or("l_max", d.l_max as f64) as usize,
+            tau_d: j.f64_or("tau_d", d.tau_d),
+            gamma: j.f64_or("gamma", d.gamma),
+            tune_trigger: j.f64_or("tune_trigger", d.tune_trigger as f64) as usize,
+            bo_budget: j.f64_or("bo_budget", d.bo_budget as f64) as usize,
+            bo_init: j.f64_or("bo_init", d.bo_init as f64) as usize,
+            bo_eval_s: j.f64_or("bo_eval_s", d.bo_eval_s),
+            b_max: j.f64_or("b_max", d.b_max as f64) as usize,
+            milp_time_budget_ms: j.f64_or("milp_time_budget_ms", d.milp_time_budget_ms as f64) as u64,
+            native_gp: j.get("native_gp").and_then(Json::as_bool).unwrap_or(d.native_gp),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn amplification_tracks_fanout() {
+        let mk = |fanout: f64| OperatorSpec {
+            name: "op".into(),
+            kind: OperatorKind::CpuSync,
+            cpu: 1.0,
+            mem_gb: 1.0,
+            accels: 0,
+            fanout,
+            out_mb: 0.1,
+            start_s: 1.0,
+            stop_s: 0.5,
+            cold_s: 5.0,
+            tunable: false,
+            config_space: ConfigSpace::default(),
+            service: ServiceModel::Cpu { base_rate: 10.0, ref_cost: 1.0, cost: CostW::default() },
+            features: FeatureExtractor::Cost,
+            child_scale: [1.0; 4],
+            queue_cap: 512,
+        };
+        let p = PipelineSpec { name: "t".into(), operators: vec![mk(10.0), mk(0.5), mk(1.0)] };
+        let (d, d_out) = p.amplification();
+        assert_eq!(d, vec![1.0, 10.0, 5.0]);
+        assert_eq!(d_out, 5.0);
+    }
+
+    #[test]
+    fn config_param_unit_roundtrip() {
+        let p = ConfigParam { name: "b".into(), lo: 1.0, hi: 128.0, integer: true, log2: true, default: 16.0 };
+        for u in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let v = p.from_unit(u);
+            assert!((1.0..=128.0).contains(&v));
+            assert_eq!(v, v.round());
+            let u2 = p.to_unit(v);
+            assert!((p.from_unit(u2) - v).abs() < 1.0 + 1e-9);
+        }
+        assert_eq!(p.from_unit(0.0), 1.0);
+        assert_eq!(p.from_unit(1.0), 128.0);
+    }
+
+    #[test]
+    fn llm_space_shape() {
+        let s = ConfigSpace::llm_engine();
+        assert_eq!(s.dims(), 6);
+        let d = s.default_config();
+        assert_eq!(d[0], 16.0);
+        let clamped = s.clamp(&[1e6, -5.0, 11.2, 0.5, 0.4, 0.9]);
+        assert_eq!(clamped[0], 128.0);
+        assert_eq!(clamped[1], 512.0);
+        assert_eq!(clamped[2], 11.0);
+        assert_eq!(clamped[4], 0.0);
+        assert_eq!(clamped[5], 1.0);
+    }
+
+    #[test]
+    fn cluster_json_roundtrip() {
+        let c = ClusterSpec::homogeneous(3, 256.0, 1024.0, 8, 65536.0, 12500.0);
+        let j = c.to_json();
+        let c2 = ClusterSpec::from_json(&j).unwrap();
+        assert_eq!(c2.nodes.len(), 3);
+        assert_eq!(c2.nodes[1].accels, 8);
+        assert_eq!(c2.total_cpus(), 768.0);
+    }
+
+    #[test]
+    fn trident_config_json_overrides() {
+        let j = Json::parse(r#"{"eta": 0.8, "bo_budget": 10}"#).unwrap();
+        let c = TridentConfig::from_json(&j);
+        assert_eq!(c.eta, 0.8);
+        assert_eq!(c.bo_budget, 10);
+        assert_eq!(c.lambda1, 1e-4); // default preserved
+    }
+}

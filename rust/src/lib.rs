@@ -1,0 +1,37 @@
+//! # Trident
+//!
+//! A reproduction of *Trident: Adaptive Scheduling for Heterogeneous
+//! Multimodal Data Pipelines* (CS.DC 2026) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the streaming coordinator: discrete-event
+//!   cluster/pipeline runtime, metrics collection, the observation /
+//!   adaptation / scheduling closed loop, the MILP scheduler, and all
+//!   baseline schedulers from the paper's evaluation.
+//! * **Layer 2 (`python/compile/model.py`)** — the GP posterior and the
+//!   memory-constrained BO acquisition as JAX graphs, AOT-lowered to HLO
+//!   text artifacts.
+//! * **Layer 1 (`python/compile/kernels/matern.py`)** — the Matérn-5/2
+//!   cross-covariance Pallas kernel the Layer-2 graphs call.
+//!
+//! At runtime Python is never on the path: `runtime/` loads the artifacts
+//! through the PJRT CPU client (`xla` crate) and the coordinator calls the
+//! compiled executables directly.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod adaptation;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod linalg;
+pub mod observation;
+pub mod report;
+pub mod rngx;
+pub mod runtime;
+pub mod scheduling;
+pub mod sim;
+pub mod solver;
+pub mod testutil;
+pub mod workload;

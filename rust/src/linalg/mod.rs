@@ -1,0 +1,249 @@
+//! Minimal dense linear algebra: row-major matrices, Cholesky, triangular
+//! solves.  Backs the native (non-PJRT) Gaussian-Process path used as a
+//! numerical oracle in tests and as a fallback when AOT artifacts are
+//! absent (`TRIDENT_NATIVE_GP=1`).
+
+/// Dense row-major `rows x cols` matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| dot(self.row(i), x))
+            .collect()
+    }
+
+    /// Matrix–matrix product.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite matrix.
+/// Returns `None` if the matrix is not (numerically) PD.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[(i, i)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L x = b` for lower-triangular `L` (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve `L^T x = b` for lower-triangular `L` (backward substitution).
+pub fn solve_lower_t(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve `A x = b` for SPD `A` via Cholesky.
+pub fn cho_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let l = cholesky(a)?;
+    Some(solve_lower_t(&l, &solve_lower(&l, b)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Mat {
+        // A = B B^T + n*I is SPD.
+        let mut b = Mat::zeros(n, n);
+        for v in b.data.iter_mut() {
+            *v = rng.normal(0.0, 1.0);
+        }
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(0);
+        for n in [1usize, 2, 5, 17, 40] {
+            let a = random_spd(&mut rng, n);
+            let l = cholesky(&a).expect("SPD");
+            let rec = l.matmul(&l.transpose());
+            for i in 0..n {
+                for j in 0..n {
+                    assert!((rec[(i, j)] - a[(i, j)]).abs() < 1e-8, "n={n} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn triangular_solves_invert() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 3, 8, 25] {
+            let a = random_spd(&mut rng, n);
+            let l = cholesky(&a).unwrap();
+            let x_true: Vec<f64> = (0..n).map(|i| (i as f64) - 2.0).collect();
+            let b = l.matvec(&x_true);
+            let x = solve_lower(&l, &b);
+            for (xa, xb) in x.iter().zip(&x_true) {
+                assert!((xa - xb).abs() < 1e-9);
+            }
+            let bt = l.transpose().matvec(&x_true);
+            let xt = solve_lower_t(&l, &bt);
+            for (xa, xb) in xt.iter().zip(&x_true) {
+                assert!((xa - xb).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn cho_solve_property_random_systems() {
+        // property-style: 50 random SPD systems, residual must vanish.
+        let mut rng = Rng::new(2);
+        for case in 0..50 {
+            let n = 1 + rng.below(20);
+            let a = random_spd(&mut rng, n);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 3.0)).collect();
+            let b = a.matvec(&x_true);
+            let x = cho_solve(&a, &b).unwrap();
+            for (xa, xb) in x.iter().zip(&x_true) {
+                assert!((xa - xb).abs() < 1e-6, "case={case} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(3);
+        let a = random_spd(&mut rng, 6);
+        let i = Mat::eye(6);
+        assert_eq!(a.matmul(&i).data.len(), a.data.len());
+        for (x, y) in a.matmul(&i).data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Trident CLI launcher.
+//!
+//! ```text
+//! trident run   --pipeline pdf|video --policy trident|static|raydata|ds2|conttune
+//!               [--duration 1800] [--nodes 8] [--seed 0] [--items 20000]
+//!               [--native-gp] [--config cfg.json]
+//! trident compare --pipeline pdf [--duration 1800]    # all policies
+//! trident milp-bench [--nodes 8|16]                   # RQ6 solve times
+//! ```
+
+use std::time::Duration;
+
+use trident::config::{ClusterSpec, Json, TridentConfig};
+use trident::coordinator::{Coordinator, Policy, Variant};
+use trident::report::{f2, Table};
+use trident::sim::ItemAttrs;
+use trident::workload::{pdf, video, Trace};
+
+struct Args {
+    map: std::collections::HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut map = std::collections::HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    map.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { map, flags }
+    }
+
+    fn get(&self, k: &str, default: &str) -> String {
+        self.map.get(k).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn f64(&self, k: &str, default: f64) -> f64 {
+        self.map.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn flag(&self, k: &str) -> bool {
+        self.flags.iter().any(|f| f == k)
+    }
+}
+
+fn policy_of(s: &str) -> Policy {
+    match s.to_ascii_lowercase().as_str() {
+        "static" => Policy::Static,
+        "raydata" | "ray-data" => Policy::RayData,
+        "ds2" => Policy::Ds2,
+        "conttune" => Policy::ContTune,
+        "scoot" => Policy::Scoot,
+        _ => Policy::Trident,
+    }
+}
+
+fn pipeline_of(name: &str, items: u64) -> (trident::config::PipelineSpec, Box<dyn Trace>, ItemAttrs) {
+    if name == "video" {
+        let src = ItemAttrs { tokens_in: 5400.0, tokens_out: 480.0, pixels_m: 0.9, frames: 600.0 };
+        (video::pipeline(), Box::new(video::trace(items)), src)
+    } else {
+        let src = ItemAttrs { tokens_in: 36_000.0, tokens_out: 7_200.0, pixels_m: 12.0, frames: 12.0 };
+        (pdf::pipeline(), Box::new(pdf::trace(items)), src)
+    }
+}
+
+fn build_cfg(args: &Args) -> TridentConfig {
+    let mut cfg = if let Some(path) = args.map.get("config") {
+        let text = std::fs::read_to_string(path).expect("read --config file");
+        TridentConfig::from_json(&Json::parse(&text).expect("parse --config json"))
+    } else {
+        TridentConfig::default()
+    };
+    if args.flag("native-gp") {
+        cfg.native_gp = true;
+    }
+    cfg
+}
+
+fn run_one(args: &Args, policy: Policy) -> trident::coordinator::RunReport {
+    let nodes = args.f64("nodes", 8.0) as usize;
+    let items = args.f64("items", 50_000.0) as u64;
+    let (pl, trace, src) = pipeline_of(&args.get("pipeline", "pdf"), items);
+    let cluster = ClusterSpec::homogeneous(nodes, 256.0, 1024.0, 8, 65536.0, 12_500.0);
+    let cfg = build_cfg(args);
+    let variant = match policy {
+        Policy::Trident => Variant::trident(),
+        p => Variant::baseline(p),
+    };
+    let mut coord = Coordinator::new(
+        pl,
+        cluster,
+        trace,
+        cfg,
+        variant,
+        src,
+        args.f64("seed", 0.0) as u64,
+    );
+    coord.run(args.f64("duration", 1800.0))
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+
+    match cmd.as_str() {
+        "run" => {
+            let policy = policy_of(&args.get("policy", "trident"));
+            let r = run_one(&args, policy);
+            println!(
+                "[{}] {}: throughput {:.3} items/s over {:.0}s ({} records out, {} OOMs, {:.0}s OOM downtime, {} transitions)",
+                r.pipeline, r.variant, r.throughput, r.duration_s, r.items_processed,
+                r.oom_events, r.oom_downtime_s, r.config_transitions
+            );
+            if !r.milp_ms.is_empty() {
+                let mean = r.milp_ms.iter().sum::<f64>() / r.milp_ms.len() as f64;
+                println!("MILP solves: {} (mean {:.0} ms)", r.milp_ms.len(), mean);
+            }
+        }
+        "compare" => {
+            let mut table = Table::new(
+                "End-to-end throughput (items/s, speedup vs Static)",
+                &["Method", "items/s", "speedup"],
+            );
+            let mut static_thr = 0.0;
+            for policy in [
+                Policy::Static,
+                Policy::RayData,
+                Policy::Ds2,
+                Policy::ContTune,
+                Policy::Trident,
+            ] {
+                let r = run_one(&args, policy);
+                if policy == Policy::Static {
+                    static_thr = r.throughput.max(1e-12);
+                }
+                table.row(vec![
+                    policy.name().into(),
+                    f2(r.throughput),
+                    format!("{:.2}x", r.throughput / static_thr),
+                ]);
+                eprintln!("done: {}", policy.name());
+            }
+            table.emit("cli_compare");
+        }
+        "milp-bench" => {
+            let nodes = args.f64("nodes", 8.0) as usize;
+            for pipeline in ["pdf", "video"] {
+                let (pl, _, src) = pipeline_of(pipeline, 1000);
+                let cluster = ClusterSpec::homogeneous(nodes, 256.0, 1024.0, 8, 65536.0, 12_500.0);
+                let nominal = trident::coordinator::nominal_attrs(&pl, src);
+                let (d_i, d_o) = pl.amplification();
+                let input = trident::scheduling::MilpInput {
+                    ops: pl
+                        .operators
+                        .iter()
+                        .enumerate()
+                        .map(|(i, o)| trident::scheduling::OpSched {
+                            name: o.name.clone(),
+                            ut_cur: trident::sim::service::true_unit_rate(
+                                &o.service,
+                                &o.config_space.default_config(),
+                                &nominal[i],
+                            ),
+                            ut_cand: None,
+                            n_new: 0,
+                            n_old: 0,
+                            cpu: o.cpu,
+                            mem_gb: o.mem_gb,
+                            accels: o.accels,
+                            out_mb: o.out_mb,
+                            d_i: d_i[i],
+                            h_start: o.start_s,
+                            h_stop: o.stop_s,
+                            h_cold: o.cold_s,
+                            cur_x: vec![0; nodes],
+                        })
+                        .collect(),
+                    nodes: cluster.nodes,
+                    d_o,
+                    t_sched: 30.0,
+                    lambda1: 1e-4,
+                    lambda2: 1e-6,
+                    b_max: 2,
+                    placement_aware: true,
+                    all_at_once: false,
+                };
+                let t0 = std::time::Instant::now();
+                let plan = trident::scheduling::solve(&input, Duration::from_secs(10));
+                println!(
+                    "{pipeline} @ {nodes} nodes: {:.0} ms, T={:.2}, status {:?} ({} B&B nodes)",
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    plan.t_pred,
+                    plan.status,
+                    plan.stats.nodes
+                );
+            }
+        }
+        _ => {
+            println!("usage: trident <run|compare|milp-bench> [--pipeline pdf|video] [--policy ...] [--duration S] [--nodes N] [--seed S] [--native-gp]");
+        }
+    }
+}

@@ -1,0 +1,443 @@
+//! Observation layer (paper §4): noise-resilient sustainable-throughput
+//! estimation for asynchronous operators.
+//!
+//! Per operator, a [`CapacityEstimator`] ingests window snapshots from the
+//! metrics collector and maintains:
+//!
+//! * a **two-stage anomaly filter** — stage 1 rejects non-steady-state
+//!   windows from runtime signals (utilization below τ_u: upstream
+//!   starvation; rapidly draining/growing queues: transient supply
+//!   imbalance), stage 2 rejects GP-residual outliers (|z| > τ_z, §4.3);
+//! * a **GP regression model** mapping workload descriptors to
+//!   per-instance throughput, evaluated through the AOT-compiled PJRT
+//!   artifact (Layer 1+2) or the native oracle;
+//! * an **EMA cold-start path** (§4.4) active until `n_min` filtered
+//!   samples exist, and re-entered after sample invalidation when the
+//!   scheduling layer commits a configuration transition (path ⑨).
+//!
+//! The filter/model stages can be disabled independently, which is exactly
+//! the estimator lattice Table 3 compares (true-rate / EMA / GP raw /
+//! GP+signal / GP+two-stage).
+
+use crate::config::FeatureExtractor;
+use crate::runtime::{fit_hyper, GpBackend};
+use crate::sim::OpMetrics;
+
+/// Estimator configuration (subset of `TridentConfig`).
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    pub tau_u: f64,
+    pub tau_z: f64,
+    pub n_min: usize,
+    pub window: usize,
+    pub ema_alpha: f64,
+    /// Queue-trend rejection: |Δq| / max(q_begin, floor) above this is a
+    /// transient (draining or backlog-building) window.
+    pub queue_trend: f64,
+    pub use_gp: bool,
+    pub signal_filter: bool,
+    pub model_filter: bool,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            tau_u: 0.6,
+            tau_z: 3.0,
+            n_min: 8,
+            window: 64,
+            ema_alpha: 0.3,
+            queue_trend: 0.6,
+            use_gp: true,
+            signal_filter: true,
+            model_filter: true,
+        }
+    }
+}
+
+impl ObsConfig {
+    pub fn from_trident(c: &crate::config::TridentConfig) -> Self {
+        ObsConfig {
+            tau_u: c.tau_u,
+            tau_z: c.tau_z,
+            n_min: c.n_min,
+            window: c.gp_window,
+            ema_alpha: c.ema_alpha,
+            ..Default::default()
+        }
+    }
+}
+
+/// Why a sample was rejected (stats / debugging / tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Accepted,
+    LowUtilization,
+    QueueTransient,
+    ModelOutlier,
+    Empty,
+}
+
+/// Filter + model statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ObsStats {
+    pub accepted: u64,
+    pub rejected_signal: u64,
+    pub rejected_model: u64,
+    pub invalidations: u64,
+}
+
+/// Capacity estimator for one operator.
+pub struct CapacityEstimator {
+    pub cfg: ObsConfig,
+    extractor: FeatureExtractor,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    ema: Option<f64>,
+    /// Last raw observation (rate, utilization) — last-resort fallback.
+    last_raw: Option<(f64, f64)>,
+    /// Consecutive stage-2 rejections (drift detection).
+    consec_outliers: u32,
+    pub stats: ObsStats,
+}
+
+impl CapacityEstimator {
+    pub fn new(cfg: ObsConfig, extractor: FeatureExtractor) -> Self {
+        CapacityEstimator {
+            cfg,
+            extractor,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            ema: None,
+            last_raw: None,
+            consec_outliers: 0,
+            stats: ObsStats::default(),
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.ys.len()
+    }
+
+    pub fn gp_active(&self) -> bool {
+        self.cfg.use_gp && self.ys.len() >= self.cfg.n_min
+    }
+
+    /// Stage-1 signal filter.
+    fn signal_verdict(&self, m: &OpMetrics) -> Verdict {
+        if m.records_out == 0 || m.n_active == 0 {
+            return Verdict::Empty;
+        }
+        if !self.cfg.signal_filter {
+            return Verdict::Accepted;
+        }
+        if m.utilization < self.cfg.tau_u {
+            return Verdict::LowUtilization;
+        }
+        let q0 = m.queue_begin as f64;
+        let q1 = m.queue_end as f64;
+        let delta = (q1 - q0).abs() / q0.max(16.0);
+        if delta > self.cfg.queue_trend {
+            return Verdict::QueueTransient;
+        }
+        Verdict::Accepted
+    }
+
+    /// Ingest one metrics window; returns the filter verdict.
+    pub fn observe(&mut self, m: &OpMetrics, backend: &GpBackend) -> Verdict {
+        let y = m.rate_per_inst;
+        if y > 0.0 {
+            self.last_raw = Some((y, m.utilization));
+        }
+        let v = self.signal_verdict(m);
+        if v != Verdict::Accepted {
+            if !matches!(v, Verdict::Empty) {
+                self.stats.rejected_signal += 1;
+            }
+            return v;
+        }
+        let x = m.gp_features(self.extractor);
+
+        // Stage 2: model-based residual filter (only once the GP is live).
+        // Two refinements keep it from fighting the adaptation the layer
+        // exists to provide:
+        // * rejection only applies where the model is *confident*
+        //   (predictive variance well below the prior) — sporadic outliers
+        //   live in well-explored regions, regime shifts in unexplored ones;
+        // * a run of consecutive rejections is drift, not noise
+        //   (cf. DAO-GP-style drift awareness): flush the buffer and accept.
+        if self.cfg.use_gp && self.cfg.model_filter && self.gp_active() {
+            let hyper = fit_hyper(&self.xs, &self.ys);
+            if let Ok(pred) = backend.gp_predict(&self.xs, &self.ys, &[x.clone()], hyper) {
+                let (mu, var) = pred[0];
+                let prior = hyper.signal_var + hyper.noise_var;
+                let confident = var < 0.5 * prior;
+                let z = (y - mu) / var.sqrt().max(1e-9);
+                if confident && z.abs() > self.cfg.tau_z {
+                    self.consec_outliers += 1;
+                    if self.consec_outliers >= 6 {
+                        // Sustained disagreement = the workload moved.
+                        self.xs.clear();
+                        self.ys.clear();
+                        self.ema = None;
+                        self.consec_outliers = 0;
+                        // fall through and accept the new-regime sample
+                    } else {
+                        self.stats.rejected_model += 1;
+                        return Verdict::ModelOutlier;
+                    }
+                } else {
+                    self.consec_outliers = 0;
+                }
+            }
+        }
+
+        // Accept: update EMA + GP buffer (sliding window).  The EMA stores
+        // a mildly utilization-corrected rate (floor 0.6 = τ_u) so the
+        // cold-start path does not read residual slack as low capacity.
+        self.stats.accepted += 1;
+        let a = self.cfg.ema_alpha;
+        let y_corr = y / m.utilization.clamp(self.cfg.tau_u, 1.0);
+        self.ema = Some(match self.ema {
+            None => y_corr,
+            Some(e) => (1.0 - a) * e + a * y_corr,
+        });
+        self.xs.push(x);
+        self.ys.push(y);
+        if self.ys.len() > self.cfg.window {
+            self.xs.remove(0);
+            self.ys.remove(0);
+        }
+        Verdict::Accepted
+    }
+
+    /// Capacity estimate (records/s per instance) at the workload described
+    /// by `m`, with a confidence proxy in [0, 1].
+    pub fn estimate(&self, m: &OpMetrics, backend: &GpBackend) -> (f64, f64) {
+        if self.gp_active() {
+            let x = m.gp_features(self.extractor);
+            let hyper = fit_hyper(&self.xs, &self.ys);
+            if let Ok(pred) = backend.gp_predict(&self.xs, &self.ys, &[x], hyper) {
+                let (mu, var) = pred[0];
+                let conf = (1.0 - var / (hyper.signal_var + hyper.noise_var)).clamp(0.0, 1.0);
+                return (mu.max(1e-6), conf);
+            }
+        }
+        if let Some(e) = self.ema {
+            return (e.max(1e-6), 0.3);
+        }
+        // Last resort: utilization-extrapolated raw rate.
+        match self.last_raw {
+            Some((y, u)) => ((y / u.max(0.05)).max(1e-6), 0.1),
+            None => (1e-6, 0.0),
+        }
+    }
+
+    /// Sample invalidation on configuration transition (paper §4.4 / path ⑨):
+    /// clear the buffer, reset the GP, return to EMA-based estimation.
+    pub fn invalidate(&mut self) {
+        self.xs.clear();
+        self.ys.clear();
+        self.ema = None;
+        self.stats.invalidations += 1;
+    }
+}
+
+/// DS2-style "true processing rate" estimator: records per useful
+/// (busy) second.  Correct for synchronous operators, systematically wrong
+/// for continuous-batching asynchronous ones (Table 3 row 1).
+#[derive(Debug, Clone, Default)]
+pub struct UsefulTimeEstimator {
+    rate: Option<f64>,
+    alpha: f64,
+}
+
+impl UsefulTimeEstimator {
+    pub fn new() -> Self {
+        UsefulTimeEstimator { rate: None, alpha: 0.3 }
+    }
+
+    pub fn observe(&mut self, m: &OpMetrics) {
+        let busy: f64 = m.per_instance.iter().map(|i| i.busy_s).sum();
+        let recs: u64 = m.per_instance.iter().map(|i| i.records).sum();
+        if busy > 1e-6 && recs > 0 {
+            let per_inst_busy = busy / m.n_active.max(1) as f64;
+            let per_inst_recs = recs as f64 / m.n_active.max(1) as f64;
+            let y = per_inst_recs / per_inst_busy;
+            self.rate = Some(match self.rate {
+                None => y,
+                Some(r) => (1.0 - self.alpha) * r + self.alpha * y,
+            });
+        }
+    }
+
+    pub fn estimate(&self) -> f64 {
+        self.rate.unwrap_or(1e-6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::metrics::InstanceMetrics;
+
+    fn metrics(rate: f64, util: f64, q0: usize, q1: usize, tin: f64) -> OpMetrics {
+        OpMetrics {
+            op: 0,
+            window_s: 5.0,
+            records_in: 100,
+            records_out: (rate * 5.0) as u64,
+            rate_per_inst: rate,
+            utilization: util,
+            queue_begin: q0,
+            queue_end: q1,
+            queue_avg: (q0 + q1) as f64 / 2.0,
+            feat_mean: [tin, tin / 4.0, 0.0, 1.0],
+            feat_std: [tin / 10.0, tin / 40.0, 0.0, 0.0],
+            peak_mem_mb: 0.0,
+            oom_events: 0,
+            n_active: 1,
+            cluster_samples: vec![],
+            per_instance: vec![InstanceMetrics {
+                inst: 0,
+                node: 0,
+                records: (rate * 5.0) as u64,
+                busy_s: 5.0 * util,
+                active_s: 5.0,
+                peak_mem_mb: 0.0,
+                oom_events: 0,
+                queue_len: q1,
+                config_gen: 0,
+            }],
+        }
+    }
+
+    fn backend() -> GpBackend {
+        GpBackend::Native
+    }
+
+    #[test]
+    fn stage1_rejects_starvation_and_transients() {
+        let est = CapacityEstimator::new(ObsConfig::default(), FeatureExtractor::LlmTokens);
+        assert_eq!(est.signal_verdict(&metrics(5.0, 0.2, 50, 50, 500.0)), Verdict::LowUtilization);
+        assert_eq!(est.signal_verdict(&metrics(5.0, 0.9, 10, 300, 500.0)), Verdict::QueueTransient);
+        assert_eq!(est.signal_verdict(&metrics(5.0, 0.9, 300, 10, 500.0)), Verdict::QueueTransient);
+        assert_eq!(est.signal_verdict(&metrics(5.0, 0.9, 100, 110, 500.0)), Verdict::Accepted);
+    }
+
+    #[test]
+    fn ema_before_gp_then_gp_takes_over() {
+        let mut est = CapacityEstimator::new(ObsConfig::default(), FeatureExtractor::LlmTokens);
+        let b = backend();
+        // slight variation so GP hyperparameters are non-degenerate
+        for i in 0..3 {
+            let y = 4.0 + 0.2 * (i % 3) as f64;
+            est.observe(&metrics(y, 0.9, 100, 100, 500.0 + 20.0 * i as f64), &b);
+        }
+        assert!(!est.gp_active());
+        let (e, conf) = est.estimate(&metrics(4.0, 0.9, 100, 100, 500.0), &b);
+        assert!((e - 4.2).abs() < 0.6);
+        assert!(conf < 0.5);
+        for i in 0..10 {
+            let y = 4.0 + 0.2 * (i % 3) as f64;
+            est.observe(&metrics(y, 0.9, 100, 100, 500.0 + 20.0 * (i % 4) as f64), &b);
+        }
+        assert!(est.gp_active());
+        let (e, conf) = est.estimate(&metrics(4.0, 0.9, 100, 100, 500.0), &b);
+        assert!((e - 4.2).abs() < 0.6, "gp estimate {e}");
+        assert!(conf > 0.5, "conf {conf}");
+    }
+
+    #[test]
+    fn gp_conditions_on_workload() {
+        // Two workload regimes with different rates; the GP must separate
+        // them while an EMA would blur.
+        let mut est = CapacityEstimator::new(ObsConfig::default(), FeatureExtractor::LlmTokens);
+        let b = backend();
+        for _ in 0..12 {
+            est.observe(&metrics(8.0, 0.9, 100, 100, 300.0), &b);
+            est.observe(&metrics(2.0, 0.9, 100, 100, 1200.0), &b);
+        }
+        let (short, _) = est.estimate(&metrics(0.0, 0.9, 100, 100, 300.0), &b);
+        let (long, _) = est.estimate(&metrics(0.0, 0.9, 100, 100, 1200.0), &b);
+        assert!(short > 2.0 * long, "short {short} vs long {long}");
+    }
+
+    #[test]
+    fn model_filter_rejects_outliers() {
+        let mut est = CapacityEstimator::new(ObsConfig::default(), FeatureExtractor::LlmTokens);
+        let b = backend();
+        // mild variation keeps the GP hyperparameters non-degenerate
+        for i in 0..16 {
+            let y = 5.0 + 0.2 * (i % 3) as f64;
+            est.observe(&metrics(y, 0.95, 100, 100, 500.0 + 15.0 * (i % 4) as f64), &b);
+        }
+        // An absurd spike passes stage 1 but must fail stage 2.
+        let v = est.observe(&metrics(50.0, 0.95, 100, 100, 500.0), &b);
+        assert_eq!(v, Verdict::ModelOutlier);
+        assert!(est.stats.rejected_model > 0);
+        let (e, _) = est.estimate(&metrics(5.2, 0.95, 100, 100, 500.0), &b);
+        assert!((e - 5.4).abs() < 1.0, "outlier must not corrupt model: {e}");
+    }
+
+    #[test]
+    fn sustained_disagreement_is_drift_not_outliers() {
+        // A run of consistent "outliers" is a regime shift: the estimator
+        // must flush and adapt instead of rejecting forever.
+        let mut est = CapacityEstimator::new(ObsConfig::default(), FeatureExtractor::LlmTokens);
+        let b = backend();
+        for i in 0..16 {
+            let y = 5.0 + 0.2 * (i % 3) as f64;
+            est.observe(&metrics(y, 0.95, 100, 100, 500.0 + 15.0 * (i % 4) as f64), &b);
+        }
+        for i in 0..12 {
+            let y = 1.0 + 0.05 * (i % 3) as f64; // new, much slower regime
+            est.observe(&metrics(y, 0.95, 100, 100, 500.0 + 15.0 * (i % 4) as f64), &b);
+        }
+        let (e, _) = est.estimate(&metrics(1.0, 0.95, 100, 100, 500.0), &b);
+        assert!(e < 2.5, "estimator must track the drift: {e}");
+    }
+
+    #[test]
+    fn invalidation_returns_to_cold_start() {
+        let mut est = CapacityEstimator::new(ObsConfig::default(), FeatureExtractor::LlmTokens);
+        let b = backend();
+        for _ in 0..16 {
+            est.observe(&metrics(5.0, 0.9, 100, 100, 500.0), &b);
+        }
+        assert!(est.gp_active());
+        est.invalidate();
+        assert!(!est.gp_active());
+        assert_eq!(est.n_samples(), 0);
+        // EMA path with fresh post-transition observations (the EMA stores
+        // the mildly utilization-corrected rate: 9.0/0.9 = 10.0):
+        est.observe(&metrics(9.0, 0.9, 100, 100, 500.0), &b);
+        let (e, _) = est.estimate(&metrics(9.0, 0.9, 100, 100, 500.0), &b);
+        assert!((e - 10.0).abs() < 1.0, "fresh estimate {e}");
+    }
+
+    #[test]
+    fn disabled_filters_accept_everything() {
+        let cfg = ObsConfig { signal_filter: false, model_filter: false, ..Default::default() };
+        let mut est = CapacityEstimator::new(cfg, FeatureExtractor::LlmTokens);
+        let b = backend();
+        assert_eq!(est.observe(&metrics(5.0, 0.1, 0, 500, 500.0), &b), Verdict::Accepted);
+        assert_eq!(est.stats.accepted, 1);
+    }
+
+    #[test]
+    fn useful_time_matches_busy_arithmetic() {
+        let mut ds2 = UsefulTimeEstimator::new();
+        ds2.observe(&metrics(4.0, 0.5, 100, 100, 500.0));
+        // records = 20 over busy 2.5s -> 8 rec/s claimed capacity
+        assert!((ds2.estimate() - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn estimator_without_data_degrades_gracefully() {
+        let est = CapacityEstimator::new(ObsConfig::default(), FeatureExtractor::LlmTokens);
+        let (e, conf) = est.estimate(&metrics(0.0, 0.0, 0, 0, 500.0), &backend());
+        assert!(e > 0.0);
+        assert_eq!(conf, 0.0);
+    }
+}

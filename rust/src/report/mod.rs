@@ -1,0 +1,128 @@
+//! Paper-style table / figure emitters: markdown + CSV under `results/`.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+/// A simple table: header row + data rows, rendered as markdown.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let _ = writeln!(out, "| {} |", self.header.join(" | "));
+        let _ = writeln!(out, "|{}|", vec!["---"; self.header.len()].join("|"));
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.join(","));
+        }
+        out
+    }
+
+    /// Print to stdout and persist markdown+csv under `results/`.
+    pub fn emit(&self, slug: &str) {
+        println!("{}", self.to_markdown());
+        let _ = fs::create_dir_all("results");
+        let _ = fs::write(Path::new("results").join(format!("{slug}.md")), self.to_markdown());
+        let _ = fs::write(Path::new("results").join(format!("{slug}.csv")), self.to_csv());
+    }
+}
+
+/// Format helpers.
+pub fn fx(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{v:.1}%")
+}
+
+/// Emit an (x, series...) CSV "figure" under `results/` and print a compact
+/// ASCII sparkline per series.
+pub fn emit_series(slug: &str, title: &str, x_label: &str, series: &[(String, Vec<(f64, f64)>)]) {
+    let mut csv = String::new();
+    let _ = writeln!(csv, "{x_label},{}", series.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>().join(","));
+    if let Some((_, first)) = series.first() {
+        for (idx, (x, _)) in first.iter().enumerate() {
+            let mut line = format!("{x}");
+            for (_, pts) in series {
+                let v = pts.get(idx).map(|p| p.1).unwrap_or(f64::NAN);
+                let _ = write!(line, ",{v}");
+            }
+            let _ = writeln!(csv, "{line}");
+        }
+    }
+    let _ = fs::create_dir_all("results");
+    let _ = fs::write(Path::new("results").join(format!("{slug}.csv")), csv);
+    println!("== {title} ==");
+    for (name, pts) in series {
+        print!("{name:>24}: ");
+        let max = pts.iter().map(|p| p.1).fold(1e-12, f64::max);
+        const BARS: &[char] = &[' ', '▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let step = (pts.len() / 60).max(1);
+        for chunk in pts.chunks(step) {
+            let v = chunk.iter().map(|p| p.1).sum::<f64>() / chunk.len() as f64;
+            let idx = ((v / max) * 8.0).round().clamp(0.0, 8.0) as usize;
+            print!("{}", BARS[idx]);
+        }
+        println!("  (peak {:.2})", max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Demo", &["Method", "PDF", "Video"]);
+        t.row(vec!["Static".into(), fx(1.0), fx(1.0)]);
+        t.row(vec!["Trident".into(), fx(2.01), fx(1.88)]);
+        let md = t.to_markdown();
+        assert!(md.contains("| Static | 1.00x | 1.00x |"));
+        assert!(md.contains("### Demo"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("Method,PDF,Video"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_rejected() {
+        let mut t = Table::new("Bad", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Sobol low-discrepancy sequence (Joe–Kuo direction numbers, ≤ 10 dims).
+//!
+//! Used for the BO initial design and the Sobol-based Random-Search baseline
+//! of Table 5 (the paper cites Sobol-based random search [27]).  Gray-code
+//! construction after Bratley & Fox; direction numbers from the
+//! `new-joe-kuo-6` table (first 10 dimensions).
+
+const MAX_DIM: usize = 10;
+const BITS: usize = 32;
+
+/// (s, a, m...) primitive-polynomial parameters for dimensions 2..=10.
+const JOE_KUO: [(u32, u32, &[u32]); 9] = [
+    (1, 0, &[1]),
+    (2, 1, &[1, 3]),
+    (3, 1, &[1, 3, 1]),
+    (3, 2, &[1, 1, 1]),
+    (4, 1, &[1, 1, 3, 3]),
+    (4, 4, &[1, 3, 5, 13]),
+    (5, 2, &[1, 1, 5, 5, 17]),
+    (5, 4, &[1, 1, 5, 5, 5]),
+    (5, 7, &[1, 1, 7, 11, 19]),
+];
+
+/// Incremental Sobol sequence generator over the unit hypercube `[0,1)^d`.
+pub struct Sobol {
+    dim: usize,
+    index: u64,
+    /// Current integer state per dimension.
+    x: Vec<u32>,
+    /// Direction numbers: v[d][b].
+    v: Vec<[u32; BITS]>,
+}
+
+impl Sobol {
+    /// Panics if `dim == 0 || dim > 10`.
+    pub fn new(dim: usize) -> Self {
+        assert!(dim >= 1 && dim <= MAX_DIM, "Sobol supports 1..=10 dims, got {dim}");
+        let mut v = Vec::with_capacity(dim);
+        // Dimension 1: van der Corput, v_k = 1 << (31 - k).
+        let mut v0 = [0u32; BITS];
+        for (k, slot) in v0.iter_mut().enumerate() {
+            *slot = 1 << (31 - k);
+        }
+        v.push(v0);
+        for d in 1..dim {
+            let (s, a, m) = JOE_KUO[d - 1];
+            let s = s as usize;
+            let mut vd = [0u32; BITS];
+            for k in 0..BITS {
+                if k < s {
+                    vd[k] = m[k] << (31 - k);
+                } else {
+                    let mut val = vd[k - s] ^ (vd[k - s] >> s);
+                    for j in 1..s {
+                        if (a >> (s - 1 - j)) & 1 == 1 {
+                            val ^= vd[k - j];
+                        }
+                    }
+                    vd[k] = val;
+                }
+            }
+            v.push(vd);
+        }
+        Sobol { dim, index: 0, x: vec![0; dim], v }
+    }
+
+    /// Next point in the sequence (the first returned point is index 1,
+    /// skipping the degenerate all-zeros origin).
+    pub fn next_point(&mut self) -> Vec<f64> {
+        self.index += 1;
+        // Gray-code: flip the direction number of the lowest zero bit of
+        // the previous index.
+        let c = (self.index - 1).trailing_ones() as usize;
+        let c = c.min(BITS - 1);
+        for d in 0..self.dim {
+            self.x[d] ^= self.v[d][c];
+        }
+        self.x
+            .iter()
+            .map(|&xi| xi as f64 / 4294967296.0)
+            .collect()
+    }
+
+    /// Generate `n` points as rows.
+    pub fn take_points(&mut self, n: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|_| self.next_point()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_dimension_is_van_der_corput() {
+        let mut s = Sobol::new(1);
+        let got: Vec<f64> = (0..7).map(|_| s.next_point()[0]).collect();
+        let expect = [0.5, 0.75, 0.25, 0.375, 0.875, 0.625, 0.125];
+        for (g, e) in got.iter().zip(expect.iter()) {
+            assert!((g - e).abs() < 1e-12, "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn second_dimension_known_prefix() {
+        let mut s = Sobol::new(2);
+        let pts = s.take_points(3);
+        // Standard Sobol 2-d prefix: (0.5,0.5), (0.75,0.25), (0.25,0.75)
+        assert!((pts[0][1] - 0.5).abs() < 1e-12);
+        assert!((pts[1][1] - 0.25).abs() < 1e-12);
+        assert!((pts[2][1] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn points_in_unit_cube_all_dims() {
+        for d in 1..=10 {
+            let mut s = Sobol::new(d);
+            for p in s.take_points(200) {
+                assert_eq!(p.len(), d);
+                assert!(p.iter().all(|&x| (0.0..1.0).contains(&x)));
+            }
+        }
+    }
+
+    #[test]
+    fn low_discrepancy_beats_random_striping() {
+        // Each half of each axis should get ~half the points much more
+        // precisely than iid-uniform would.
+        let mut s = Sobol::new(5);
+        let pts = s.take_points(1024);
+        for d in 0..5 {
+            let lo = pts.iter().filter(|p| p[d] < 0.5).count();
+            assert!(
+                (lo as i64 - 512).unsigned_abs() <= 1,
+                "dim {d}: {lo}/1024 below 0.5"
+            );
+        }
+    }
+
+    #[test]
+    fn no_duplicate_points_in_prefix() {
+        let mut s = Sobol::new(3);
+        let pts = s.take_points(512);
+        for i in 0..pts.len() {
+            for j in (i + 1)..pts.len() {
+                assert_ne!(pts[i], pts[j], "duplicate at {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_dim_11() {
+        Sobol::new(11);
+    }
+}

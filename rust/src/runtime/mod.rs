@@ -1,0 +1,316 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and execute them from the scheduling path.
+//!
+//! Python never runs at request time — `make artifacts` lowers the Layer-2
+//! JAX graphs (which embed the Layer-1 Pallas Matérn kernel) to HLO *text*,
+//! and this module compiles them once per process on the PJRT CPU client.
+//!
+//! Fixed artifact shapes (see `artifacts/meta.json`):
+//! * `gp_predict`:      x[64,6], y[64], mask[64], q[32,6], params[4] → (mu[32], var[32])
+//! * `bo_acquisition`:  θ[64,6], ut[64], mem[64], mask[64], cand[128,6],
+//!                      p_ut[4], p_mem[4], scalars[3] → (α, EI, PoF, μ_ut, μ_mem, σ_ut)[128]
+//!
+//! [`GpBackend`] abstracts over the PJRT path and the pure-Rust
+//! [`native`] oracle (used in tests and via `TRIDENT_NATIVE_GP=1`).
+
+pub mod native;
+
+use anyhow::{Context, Result};
+
+/// AOT shape constants — must match `python/compile/model.py`.
+pub const N_TRAIN: usize = 64;
+pub const M_QUERY: usize = 32;
+pub const N_CAND: usize = 128;
+pub const D_FEAT: usize = 6;
+
+/// GP hyper-parameters: [lengthscale, signal_var, noise_var, mean].
+#[derive(Debug, Clone, Copy)]
+pub struct GpHyper {
+    pub lengthscale: f64,
+    pub signal_var: f64,
+    pub noise_var: f64,
+    pub mean: f64,
+}
+
+impl GpHyper {
+    fn as_f32(&self) -> [f32; 4] {
+        [
+            self.lengthscale as f32,
+            self.signal_var as f32,
+            self.noise_var as f32,
+            self.mean as f32,
+        ]
+    }
+}
+
+/// Heuristic hyper-parameter fit (the paper does not specify its fitting
+/// procedure; see DESIGN.md): constant mean = sample mean, signal variance
+/// = sample variance, noise = 5% of signal variance, lengthscale = median
+/// pairwise distance of the (normalized) inputs.
+pub fn fit_hyper(xs: &[Vec<f64>], ys: &[f64]) -> GpHyper {
+    let n = ys.len();
+    if n == 0 {
+        return GpHyper { lengthscale: 0.5, signal_var: 1.0, noise_var: 0.05, mean: 0.0 };
+    }
+    let mean = ys.iter().sum::<f64>() / n as f64;
+    let var = (ys.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>() / n as f64).max(1e-6);
+    let mut dists = Vec::new();
+    let cap = 24.min(n); // median over a bounded subset keeps this O(1)-ish
+    for i in 0..cap {
+        for j in (i + 1)..cap {
+            let d2: f64 = xs[i]
+                .iter()
+                .zip(&xs[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            let d = d2.sqrt();
+            if d > 1e-9 {
+                dists.push(d);
+            }
+        }
+    }
+    let lengthscale = if dists.is_empty() {
+        0.5
+    } else {
+        dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        dists[dists.len() / 2].clamp(0.05, 10.0)
+    };
+    GpHyper { lengthscale, signal_var: var, noise_var: (0.05 * var).max(1e-6), mean }
+}
+
+/// Output of one acquisition evaluation for a candidate configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct AcqPoint {
+    pub alpha: f64,
+    pub ei: f64,
+    pub pof: f64,
+    pub mu_ut: f64,
+    pub mu_mem: f64,
+    pub sigma_ut: f64,
+}
+
+/// Compiled PJRT executables for both artifacts.
+pub struct Artifacts {
+    _client: xla::PjRtClient,
+    gp: xla::PjRtLoadedExecutable,
+    acq: xla::PjRtLoadedExecutable,
+}
+
+impl Artifacts {
+    /// Compile `gp_predict.hlo.txt` + `bo_acquisition.hlo.txt` from `dir`.
+    pub fn load(dir: &str) -> Result<Artifacts> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = format!("{dir}/{name}.hlo.txt");
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse {path}"))?;
+            client
+                .compile(&xla::XlaComputation::from_proto(&proto))
+                .with_context(|| format!("compile {name}"))
+        };
+        let gp = load("gp_predict")?;
+        let acq = load("bo_acquisition")?;
+        Ok(Artifacts { _client: client, gp, acq })
+    }
+
+    /// Default artifact directory: `$TRIDENT_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> String {
+        std::env::var("TRIDENT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+    }
+}
+
+fn lit1(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn lit2(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Pad `xs`/`ys` (most recent last) into fixed N_TRAIN × D_FEAT buffers.
+/// If more than N_TRAIN points are given, the oldest are dropped.
+fn pad_train(xs: &[Vec<f64>], ys: &[f64]) -> (Vec<f32>, Vec<f32>, Vec<f32>, usize) {
+    let n = xs.len().min(N_TRAIN);
+    let off = xs.len() - n;
+    let mut x = vec![0f32; N_TRAIN * D_FEAT];
+    let mut y = vec![0f32; N_TRAIN];
+    let mut m = vec![0f32; N_TRAIN];
+    for i in 0..n {
+        let src = &xs[off + i];
+        for d in 0..D_FEAT.min(src.len()) {
+            x[i * D_FEAT + d] = src[d] as f32;
+        }
+        y[i] = ys[off + i] as f32;
+        m[i] = 1.0;
+    }
+    (x, y, m, n)
+}
+
+fn pad_queries(qs: &[Vec<f64>], rows: usize) -> Vec<f32> {
+    let mut q = vec![0f32; rows * D_FEAT];
+    for (i, src) in qs.iter().enumerate().take(rows) {
+        for d in 0..D_FEAT.min(src.len()) {
+            q[i * D_FEAT + d] = src[d] as f32;
+        }
+    }
+    q
+}
+
+/// Backend for all GP math: PJRT artifacts (production) or native Rust
+/// (oracle / fallback).
+pub enum GpBackend {
+    Pjrt(Artifacts),
+    Native,
+}
+
+impl GpBackend {
+    /// Construct from the environment: native if `TRIDENT_NATIVE_GP=1` or
+    /// artifacts are missing, PJRT otherwise.
+    pub fn from_env() -> GpBackend {
+        if std::env::var("TRIDENT_NATIVE_GP").map(|v| v == "1").unwrap_or(false) {
+            return GpBackend::Native;
+        }
+        match Artifacts::load(&Artifacts::default_dir()) {
+            Ok(a) => GpBackend::Pjrt(a),
+            Err(e) => {
+                eprintln!(
+                    "trident: PJRT artifacts unavailable ({e:#}); falling back to native GP \
+                     (run `make artifacts`)"
+                );
+                GpBackend::Native
+            }
+        }
+    }
+
+    pub fn is_native(&self) -> bool {
+        matches!(self, GpBackend::Native)
+    }
+
+    /// GP posterior at `queries` given observations `(xs, ys)`.
+    /// Returns (mean, variance) per query; variance includes observation
+    /// noise (matching Eq. (2)/(3) usage).
+    pub fn gp_predict(
+        &self,
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        queries: &[Vec<f64>],
+        hyper: GpHyper,
+    ) -> Result<Vec<(f64, f64)>> {
+        match self {
+            GpBackend::Native => Ok(native::gp_predict(xs, ys, queries, hyper)),
+            GpBackend::Pjrt(a) => {
+                let (x, y, m, _) = pad_train(xs, ys);
+                let mut out = Vec::with_capacity(queries.len());
+                for chunk in queries.chunks(M_QUERY).map(<[Vec<f64>]>::to_vec) {
+                    let q = pad_queries(&chunk, M_QUERY);
+                    let args = [
+                        lit2(&x, N_TRAIN, D_FEAT)?,
+                        lit1(&y),
+                        lit1(&m),
+                        lit2(&q, M_QUERY, D_FEAT)?,
+                        lit1(&hyper.as_f32().to_vec()),
+                    ];
+                    let mut res = a.gp.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+                    let tup = res.decompose_tuple()?;
+                    let mu = tup[0].to_vec::<f32>()?;
+                    let var = tup[1].to_vec::<f32>()?;
+                    for i in 0..chunk.len() {
+                        out.push((mu[i] as f64, var[i] as f64));
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Constrained-BO acquisition over `cands` (Eqs. 5–9).
+    #[allow(clippy::too_many_arguments)]
+    pub fn acquisition(
+        &self,
+        thetas: &[Vec<f64>],
+        uts: &[f64],
+        mems: &[f64],
+        cands: &[Vec<f64>],
+        hyper_ut: GpHyper,
+        hyper_mem: GpHyper,
+        best_ut: f64,
+        mem_limit: f64,
+    ) -> Result<Vec<AcqPoint>> {
+        match self {
+            GpBackend::Native => Ok(native::acquisition(
+                thetas, uts, mems, cands, hyper_ut, hyper_mem, best_ut, mem_limit,
+            )),
+            GpBackend::Pjrt(a) => {
+                let (x, ut, m, _) = pad_train(thetas, uts);
+                let (_, mem, _, _) = pad_train(thetas, mems);
+                let scalars = [best_ut as f32, mem_limit as f32, 0.0f32];
+                let mut out = Vec::with_capacity(cands.len());
+                for chunk in cands.chunks(N_CAND).map(<[Vec<f64>]>::to_vec) {
+                    let c = pad_queries(&chunk, N_CAND);
+                    let args = [
+                        lit2(&x, N_TRAIN, D_FEAT)?,
+                        lit1(&ut),
+                        lit1(&mem),
+                        lit1(&m),
+                        lit2(&c, N_CAND, D_FEAT)?,
+                        lit1(&hyper_ut.as_f32().to_vec()),
+                        lit1(&hyper_mem.as_f32().to_vec()),
+                        lit1(&scalars.to_vec()),
+                    ];
+                    let mut res = a.acq.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+                    let tup = res.decompose_tuple()?;
+                    let get = |k: usize| -> Result<Vec<f32>> { Ok(tup[k].to_vec::<f32>()?) };
+                    let (alpha, ei, pof) = (get(0)?, get(1)?, get(2)?);
+                    let (mu_u, mu_m, sig_u) = (get(3)?, get(4)?, get(5)?);
+                    for i in 0..chunk.len() {
+                        out.push(AcqPoint {
+                            alpha: alpha[i] as f64,
+                            ei: ei[i] as f64,
+                            pof: pof[i] as f64,
+                            mu_ut: mu_u[i] as f64,
+                            mu_mem: mu_m[i] as f64,
+                            sigma_ut: sig_u[i] as f64,
+                        });
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_hyper_sane() {
+        let xs: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64 / 10.0; 2]).collect();
+        let ys: Vec<f64> = (0..10).map(|i| 5.0 + i as f64).collect();
+        let h = fit_hyper(&xs, &ys);
+        assert!((h.mean - 9.5).abs() < 1e-9);
+        assert!(h.signal_var > 1.0);
+        assert!(h.lengthscale > 0.0 && h.lengthscale <= 10.0);
+        assert!(h.noise_var > 0.0);
+    }
+
+    #[test]
+    fn fit_hyper_degenerate() {
+        let h = fit_hyper(&[], &[]);
+        assert!(h.signal_var > 0.0);
+        let h1 = fit_hyper(&[vec![0.5]], &[3.0]);
+        assert_eq!(h1.mean, 3.0);
+    }
+
+    #[test]
+    fn pad_train_drops_oldest() {
+        let xs: Vec<Vec<f64>> = (0..70).map(|i| vec![i as f64]).collect();
+        let ys: Vec<f64> = (0..70).map(|i| i as f64).collect();
+        let (x, y, m, n) = pad_train(&xs, &ys);
+        assert_eq!(n, N_TRAIN);
+        assert_eq!(m.iter().sum::<f32>(), N_TRAIN as f32);
+        assert_eq!(y[0], 6.0); // oldest 6 dropped
+        assert_eq!(x[0], 6.0);
+        assert_eq!(y[N_TRAIN - 1], 69.0);
+    }
+}

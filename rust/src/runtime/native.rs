@@ -1,0 +1,203 @@
+//! Pure-Rust GP posterior + constrained acquisition — the numerical oracle
+//! for the PJRT artifacts and the fallback backend when artifacts are
+//! absent.  Mirrors `python/compile/model.py` exactly (same Matérn-5/2
+//! kernel, same jitter, same EI × PoF combination) but in f64.
+
+use super::{AcqPoint, GpHyper};
+use crate::linalg::{cholesky, solve_lower, solve_lower_t, Mat};
+
+const SQRT5: f64 = 2.23606797749979;
+const JITTER: f64 = 1e-5;
+
+fn matern52(a: &[f64], b: &[f64], lengthscale: f64, signal_var: f64) -> f64 {
+    let d2: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .max(0.0);
+    let r = d2.sqrt() / lengthscale.max(1e-12);
+    let sr = SQRT5 * r;
+    signal_var * (1.0 + sr + (5.0 / 3.0) * r * r) * (-sr).exp()
+}
+
+/// GP posterior (mean, variance incl. noise) at each query point.
+pub fn gp_predict(
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    queries: &[Vec<f64>],
+    h: GpHyper,
+) -> Vec<(f64, f64)> {
+    let n = xs.len();
+    if n == 0 {
+        return queries
+            .iter()
+            .map(|_| (h.mean, h.signal_var + h.noise_var))
+            .collect();
+    }
+    let mut k = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = matern52(&xs[i], &xs[j], h.lengthscale, h.signal_var);
+            k[(i, j)] = v;
+            k[(j, i)] = v;
+        }
+        k[(i, i)] += h.noise_var + JITTER;
+    }
+    // Escalate jitter if needed (mirrors what a robust impl does; the AOT
+    // graph relies on noise_var >= 1e-6 from fit_hyper instead).
+    let l = {
+        let mut boost = 0.0;
+        loop {
+            let mut kk = k.clone();
+            if boost > 0.0 {
+                for i in 0..n {
+                    kk[(i, i)] += boost;
+                }
+            }
+            if let Some(l) = cholesky(&kk) {
+                break l;
+            }
+            boost = if boost == 0.0 { 1e-6 } else { boost * 10.0 };
+            assert!(boost < 1.0, "GP covariance hopelessly ill-conditioned");
+        }
+    };
+    let resid: Vec<f64> = ys.iter().map(|y| y - h.mean).collect();
+    let alpha = solve_lower_t(&l, &solve_lower(&l, &resid));
+
+    queries
+        .iter()
+        .map(|q| {
+            let kq: Vec<f64> = xs
+                .iter()
+                .map(|x| matern52(q, x, h.lengthscale, h.signal_var))
+                .collect();
+            let mu = h.mean + kq.iter().zip(&alpha).map(|(a, b)| a * b).sum::<f64>();
+            let v = solve_lower(&l, &kq);
+            let var = (h.signal_var - v.iter().map(|x| x * x).sum::<f64>() + h.noise_var)
+                .max(1e-9);
+            (mu, var)
+        })
+        .collect()
+}
+
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+pub fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Abramowitz–Stegun 7.1.26 rational approximation (|err| < 1.5e-7, matches
+/// the f32 precision of the AOT path).
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Expected improvement (maximization).
+pub fn expected_improvement(mu: f64, sigma: f64, best: f64) -> f64 {
+    let sigma = sigma.max(1e-9);
+    let z = (mu - best) / sigma;
+    (sigma * (z * norm_cdf(z) + norm_pdf(z))).max(0.0)
+}
+
+/// Constrained acquisition over candidate configurations.
+#[allow(clippy::too_many_arguments)]
+pub fn acquisition(
+    thetas: &[Vec<f64>],
+    uts: &[f64],
+    mems: &[f64],
+    cands: &[Vec<f64>],
+    hyper_ut: GpHyper,
+    hyper_mem: GpHyper,
+    best_ut: f64,
+    mem_limit: f64,
+) -> Vec<AcqPoint> {
+    let ut_post = gp_predict(thetas, uts, cands, hyper_ut);
+    let mem_post = gp_predict(thetas, mems, cands, hyper_mem);
+    ut_post
+        .iter()
+        .zip(&mem_post)
+        .map(|(&(mu_u, var_u), &(mu_m, var_m))| {
+            let sigma_u = var_u.sqrt();
+            let sigma_m = var_m.sqrt().max(1e-9);
+            let ei = expected_improvement(mu_u, sigma_u, best_ut);
+            let pof = norm_cdf((mem_limit - mu_m) / sigma_m);
+            AcqPoint { alpha: ei * pof, ei, pof, mu_ut: mu_u, mu_mem: mu_m, sigma_ut: sigma_u }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hyper() -> GpHyper {
+        GpHyper { lengthscale: 1.0, signal_var: 1.0, noise_var: 1e-4, mean: 0.0 }
+    }
+
+    #[test]
+    fn interpolates_observations() {
+        let xs = vec![vec![0.0], vec![1.0], vec![2.0]];
+        let ys = vec![1.0, 2.0, 3.0];
+        let out = gp_predict(&xs, &ys, &xs, hyper());
+        for (o, y) in out.iter().zip(&ys) {
+            assert!((o.0 - y).abs() < 0.02, "{} vs {}", o.0, y);
+            assert!(o.1 < 0.01);
+        }
+    }
+
+    #[test]
+    fn reverts_to_prior_far_away() {
+        let xs = vec![vec![0.0], vec![0.5]];
+        let ys = vec![5.0, 5.2];
+        let h = GpHyper { mean: 1.0, ..hyper() };
+        let out = gp_predict(&xs, &ys, &[vec![100.0]], h);
+        assert!((out[0].0 - 1.0).abs() < 1e-3);
+        assert!((out[0].1 - (1.0 + 1e-4)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn empty_training_gives_prior() {
+        let out = gp_predict(&[], &[], &[vec![0.0]], hyper());
+        assert_eq!(out[0].0, 0.0);
+        assert!((out[0].1 - 1.0001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn erf_accuracy() {
+        // reference values
+        for (x, e) in [(0.0, 0.0), (0.5, 0.5204998778), (1.0, 0.8427007929), (2.0, 0.9953222650)] {
+            assert!((erf(x) - e).abs() < 2e-7, "erf({x})");
+            assert!((erf(-x) + e).abs() < 2e-7);
+        }
+    }
+
+    #[test]
+    fn ei_properties() {
+        // Higher mean -> higher EI; zero sigma -> max(mu-best, 0).
+        assert!(expected_improvement(2.0, 0.5, 1.0) > expected_improvement(1.5, 0.5, 1.0));
+        assert!((expected_improvement(2.0, 1e-12, 1.0) - 1.0).abs() < 1e-6);
+        assert!(expected_improvement(0.0, 1e-12, 1.0) < 1e-9);
+    }
+
+    #[test]
+    fn acquisition_zeroes_infeasible() {
+        let thetas = vec![vec![0.1], vec![0.9]];
+        let uts = vec![1.0, 2.0];
+        let mems = vec![9000.0, 9500.0]; // both far above limit
+        let h_m = GpHyper { lengthscale: 1.0, signal_var: 100.0, noise_var: 1.0, mean: 9000.0 };
+        let out = acquisition(&thetas, &uts, &mems, &[vec![0.5]], hyper(), h_m, 2.0, 1000.0);
+        assert!(out[0].pof < 1e-6);
+        assert!(out[0].alpha < 1e-6);
+    }
+}

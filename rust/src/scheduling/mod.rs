@@ -1,0 +1,8 @@
+//! Scheduling layer (paper §6): the joint parallelism / placement /
+//! configuration-transition MILP and the rolling-update state machine.
+
+pub mod milp_model;
+pub mod rolling;
+
+pub use milp_model::{solve, MilpInput, OpSched, SchedulePlan};
+pub use rolling::RollingState;

@@ -1,0 +1,160 @@
+//! Rolling-update state machine (paper §6.5–6.6): per-operator tracking of
+//! `(n_old, n_new)` with the single-transition invariant — at most one
+//! pending configuration transition per operator; new recommendations are
+//! buffered until the current transition completes.
+
+/// Per-operator rolling configuration state.
+#[derive(Debug, Clone)]
+pub struct RollingState {
+    /// Configuration all `n_old` instances currently run.
+    pub current: Vec<f64>,
+    /// Candidate configuration mid-rollout (None = steady state).
+    pub candidate: Option<Vec<f64>>,
+    pub ut_cand: f64,
+    pub n_new: u32,
+    pub n_old: u32,
+    /// Recommendation buffered while a transition is in flight.
+    buffered: Option<(Vec<f64>, f64)>,
+    /// Transitions committed (stats).
+    pub transitions: u64,
+}
+
+impl RollingState {
+    pub fn new(initial_config: Vec<f64>, n_inst: u32) -> Self {
+        RollingState {
+            current: initial_config,
+            candidate: None,
+            ut_cand: 0.0,
+            n_new: 0,
+            n_old: n_inst,
+            buffered: None,
+            transitions: 0,
+        }
+    }
+
+    pub fn in_transition(&self) -> bool {
+        self.candidate.is_some()
+    }
+
+    /// Offer a recommendation from the adaptation layer.  Returns true if
+    /// it became the active candidate; buffered otherwise (single-transition
+    /// invariant).
+    pub fn offer(&mut self, config: Vec<f64>, ut_cand: f64) -> bool {
+        if config == self.current {
+            return false; // nothing to do
+        }
+        if self.in_transition() {
+            if self.candidate.as_deref() != Some(&config[..]) {
+                self.buffered = Some((config, ut_cand));
+            } else {
+                self.ut_cand = ut_cand; // refreshed estimate
+            }
+            false
+        } else {
+            self.candidate = Some(config);
+            self.ut_cand = ut_cand;
+            true
+        }
+    }
+
+    /// Record that the executor switched `b` instances this round and the
+    /// operator now has `p` instances total.  Completes the transition when
+    /// no old-config instances remain.
+    pub fn apply_round(&mut self, b: u32, p: u32) {
+        if self.candidate.is_none() {
+            self.n_old = p;
+            self.n_new = 0;
+            return;
+        }
+        let b = b.min(self.n_old);
+        self.n_new += b;
+        // p may shrink/grow; old instances absorb the difference.
+        self.n_old = p.saturating_sub(self.n_new);
+        if b > 0 {
+            self.transitions += 1;
+        }
+        if self.n_old == 0 {
+            // Transition complete: candidate becomes current.
+            if let Some(c) = self.candidate.take() {
+                self.current = c;
+            }
+            self.n_old = p;
+            self.n_new = 0;
+            // Un-buffer the next recommendation, if any.
+            if let Some((cfg, ut)) = self.buffered.take() {
+                if cfg != self.current {
+                    self.candidate = Some(cfg);
+                    self.ut_cand = ut;
+                }
+            }
+        }
+    }
+
+    /// Sync instance count without a transition round (plan with b=0).
+    pub fn sync_count(&mut self, p: u32) {
+        if self.candidate.is_none() {
+            self.n_old = p;
+        } else {
+            self.n_old = p.saturating_sub(self.n_new);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_state_until_offer() {
+        let mut rs = RollingState::new(vec![16.0], 4);
+        assert!(!rs.in_transition());
+        assert!(rs.offer(vec![32.0], 5.0));
+        assert!(rs.in_transition());
+        assert_eq!(rs.n_old, 4);
+        assert_eq!(rs.n_new, 0);
+    }
+
+    #[test]
+    fn identical_config_rejected() {
+        let mut rs = RollingState::new(vec![16.0], 4);
+        assert!(!rs.offer(vec![16.0], 5.0));
+        assert!(!rs.in_transition());
+    }
+
+    #[test]
+    fn rolling_completes_over_rounds() {
+        let mut rs = RollingState::new(vec![16.0], 4);
+        rs.offer(vec![32.0], 5.0);
+        rs.apply_round(2, 4);
+        assert_eq!((rs.n_new, rs.n_old), (2, 2));
+        assert!(rs.in_transition());
+        rs.apply_round(2, 4);
+        assert!(!rs.in_transition(), "transition complete");
+        assert_eq!(rs.current, vec![32.0]);
+        assert_eq!((rs.n_new, rs.n_old), (0, 4));
+    }
+
+    #[test]
+    fn single_transition_invariant_buffers() {
+        let mut rs = RollingState::new(vec![16.0], 4);
+        assert!(rs.offer(vec![32.0], 5.0));
+        // Second recommendation arrives mid-transition: buffered.
+        assert!(!rs.offer(vec![64.0], 7.0));
+        assert_eq!(rs.candidate.as_deref(), Some(&[32.0][..]));
+        rs.apply_round(4, 4);
+        // Completion activates the buffered config.
+        assert!(rs.in_transition());
+        assert_eq!(rs.candidate.as_deref(), Some(&[64.0][..]));
+        assert_eq!(rs.ut_cand, 7.0);
+    }
+
+    #[test]
+    fn parallelism_changes_mid_transition() {
+        let mut rs = RollingState::new(vec![16.0], 6);
+        rs.offer(vec![32.0], 5.0);
+        rs.apply_round(2, 8); // scale up during rollout
+        assert_eq!((rs.n_new, rs.n_old), (2, 6));
+        rs.apply_round(0, 5); // scale down, no transitions
+        assert_eq!((rs.n_new, rs.n_old), (2, 3));
+    }
+}

@@ -1,0 +1,82 @@
+//! Data items flowing through the pipeline.
+
+use crate::config::FeatureExtractor;
+
+/// Modality-agnostic per-item characteristics set by the workload generator
+/// (and scaled when an operator splits an item into children).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ItemAttrs {
+    /// Prefill token count at LLM-backed operators.
+    pub tokens_in: f64,
+    /// Decode token count at LLM-backed operators.
+    pub tokens_out: f64,
+    /// Megapixels per frame at vision operators.
+    pub pixels_m: f64,
+    /// Frame count at video operators (1 for stills/documents).
+    pub frames: f64,
+}
+
+impl ItemAttrs {
+    /// Generic scalar cost used by CPU-stage service models.
+    pub fn cost(&self, w: &crate::config::CostW) -> f64 {
+        (w.tokens_in * self.tokens_in
+            + w.tokens_out * self.tokens_out
+            + w.pixels_m * self.pixels_m
+            + w.frames * self.frames
+            + w.konst)
+            .max(1e-9)
+    }
+
+    /// Regime/workload feature vector for the adaptation layer (§5.2
+    /// uses low-dimensional per-request features).  Log-scaled: request
+    /// sizes are lognormal, so log features make regimes compact,
+    /// near-isotropic blobs (linear scaling fragments them into
+    /// micro-clusters under the τ_d threshold rule).
+    pub fn cluster_features(&self, ex: FeatureExtractor) -> [f64; 2] {
+        let lg = |v: f64, base: f64| (v.max(1e-3) / base).log2() / 4.0;
+        match ex {
+            FeatureExtractor::LlmTokens => [lg(self.tokens_in, 64.0), lg(self.tokens_out, 16.0)],
+            FeatureExtractor::Vision => [lg(self.pixels_m, 0.125), lg(self.frames, 16.0)],
+            FeatureExtractor::Cost => [
+                lg(self.tokens_in + self.tokens_out, 64.0),
+                lg(self.pixels_m + self.frames, 1.0),
+            ],
+        }
+    }
+}
+
+/// One record in flight.
+#[derive(Debug, Clone, Copy)]
+pub struct Item {
+    pub attrs: ItemAttrs,
+    /// Serialized size of this record, MB (drives network cost).
+    pub size_mb: f64,
+    /// Ground-truth workload regime tag (clustering accuracy only —
+    /// invisible to the scheduler).
+    pub regime: u8,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CostW;
+
+    #[test]
+    fn cost_is_positive_and_linear() {
+        let a = ItemAttrs { tokens_in: 100.0, tokens_out: 10.0, pixels_m: 2.0, frames: 1.0 };
+        let w = CostW { tokens_in: 1.0, tokens_out: 2.0, pixels_m: 10.0, frames: 0.0, konst: 5.0 };
+        assert_eq!(a.cost(&w), 100.0 + 20.0 + 20.0 + 5.0);
+        let zero = ItemAttrs { tokens_in: 0.0, tokens_out: 0.0, pixels_m: 0.0, frames: 0.0 };
+        assert!(zero.cost(&CostW::default()) > 0.0); // clamped
+    }
+
+    #[test]
+    fn cluster_features_separate_regimes() {
+        let short = ItemAttrs { tokens_in: 256.0, tokens_out: 64.0, pixels_m: 0.5, frames: 1.0 };
+        let long = ItemAttrs { tokens_in: 4096.0, tokens_out: 512.0, pixels_m: 8.0, frames: 1.0 };
+        let fs = short.cluster_features(FeatureExtractor::LlmTokens);
+        let fl = long.cluster_features(FeatureExtractor::LlmTokens);
+        let d2: f64 = fs.iter().zip(&fl).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!(d2.sqrt() > 1.0, "regimes must be separable in feature space");
+    }
+}

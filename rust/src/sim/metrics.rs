@@ -1,0 +1,215 @@
+//! Metrics collection: per-instance window accumulators and the
+//! per-operator snapshots the observation/adaptation layers consume
+//! (paper §3.1 "Metrics Collector").
+
+use crate::sim::items::{Item, ItemAttrs};
+use crate::rngx::Rng;
+
+/// Per-instance accumulators over one metrics window.
+#[derive(Debug, Clone, Default)]
+pub struct InstWindow {
+    pub records_done: u64,
+    pub batches_done: u64,
+    pub busy_s: f64,
+    /// Downtime (starting / OOM restart) inside the window.
+    pub down_s: f64,
+    pub peak_mem_mb: f64,
+    pub oom_events: u32,
+    /// Queue length sampled at each batch start.
+    pub q_sum: f64,
+    pub q_n: u64,
+}
+
+impl InstWindow {
+    pub fn reset(&mut self) {
+        *self = InstWindow::default();
+    }
+}
+
+/// Per-instance view exposed to schedulers/tuners (BO probes, DS2
+/// useful-time rates).
+#[derive(Debug, Clone)]
+pub struct InstanceMetrics {
+    pub inst: usize,
+    pub node: usize,
+    pub records: u64,
+    pub busy_s: f64,
+    /// Seconds the instance was up (existed minus downtime) this window.
+    pub active_s: f64,
+    pub peak_mem_mb: f64,
+    pub oom_events: u32,
+    pub queue_len: usize,
+    /// Config generation marker (bumped on each reconfig restart).
+    pub config_gen: u32,
+}
+
+/// Aggregated per-operator metrics for one window — the payload of
+/// "path ②" in Figure 1.
+#[derive(Debug, Clone)]
+pub struct OpMetrics {
+    pub op: usize,
+    pub window_s: f64,
+    pub records_in: u64,
+    pub records_out: u64,
+    /// Observed throughput per active instance, records/s.
+    pub rate_per_inst: f64,
+    /// Mean busy-time fraction across active instances (stage-1 filter
+    /// signal τ_u).
+    pub utilization: f64,
+    /// Total queued records at window start / end (stage-1 queue-trend
+    /// signal).
+    pub queue_begin: usize,
+    pub queue_end: usize,
+    pub queue_avg: f64,
+    /// Workload descriptor: mean/std of (tokens_in, tokens_out, pixels_m,
+    /// frames) over records processed this window.
+    pub feat_mean: [f64; 4],
+    pub feat_std: [f64; 4],
+    pub peak_mem_mb: f64,
+    pub oom_events: u32,
+    pub n_active: usize,
+    /// Per-request cluster features sampled this window (reservoir ≤ 64),
+    /// with ground-truth regime tags for evaluation only.
+    pub cluster_samples: Vec<([f64; 2], u8)>,
+    pub per_instance: Vec<InstanceMetrics>,
+}
+
+impl OpMetrics {
+    /// Mean item attrs reconstructed from the window descriptor.
+    pub fn mean_attrs(&self) -> ItemAttrs {
+        ItemAttrs {
+            tokens_in: self.feat_mean[0],
+            tokens_out: self.feat_mean[1],
+            pixels_m: self.feat_mean[2],
+            frames: self.feat_mean[3],
+        }
+    }
+
+    /// GP workload-descriptor vector (§4.2): operator-specific features,
+    /// normalized to O(1) scale.
+    pub fn gp_features(&self, ex: crate::config::FeatureExtractor) -> Vec<f64> {
+        use crate::config::FeatureExtractor as FE;
+        match ex {
+            FE::LlmTokens => vec![
+                self.feat_mean[0] / 1024.0,
+                self.feat_std[0] / 1024.0,
+                self.feat_mean[1] / 256.0,
+                self.feat_std[1] / 256.0,
+            ],
+            FE::Vision => vec![
+                self.feat_mean[2] / 2.0,
+                self.feat_std[2] / 2.0,
+                self.feat_mean[3] / 256.0,
+                self.feat_std[3] / 256.0,
+            ],
+            FE::Cost => vec![
+                (self.feat_mean[0] + self.feat_mean[1]) / 1024.0,
+                self.feat_mean[2] / 2.0,
+                self.feat_mean[3] / 256.0,
+            ],
+        }
+    }
+}
+
+/// Per-operator accumulators shared across instances (feature stats +
+/// cluster-sample reservoir).
+#[derive(Debug, Clone)]
+pub struct OpWindowAcc {
+    pub records_in: u64,
+    pub n: u64,
+    pub sum: [f64; 4],
+    pub sumsq: [f64; 4],
+    pub reservoir: Vec<([f64; 2], u8)>,
+    seen: u64,
+}
+
+impl OpWindowAcc {
+    pub fn new() -> Self {
+        OpWindowAcc { records_in: 0, n: 0, sum: [0.0; 4], sumsq: [0.0; 4], reservoir: Vec::new(), seen: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        *self = OpWindowAcc::new();
+    }
+
+    pub fn observe(&mut self, item: &Item, ex: crate::config::FeatureExtractor, rng: &mut Rng) {
+        let a = &item.attrs;
+        let f = [a.tokens_in, a.tokens_out, a.pixels_m, a.frames];
+        self.n += 1;
+        for i in 0..4 {
+            self.sum[i] += f[i];
+            self.sumsq[i] += f[i] * f[i];
+        }
+        // Reservoir sample of cluster features.
+        const CAP: usize = 64;
+        self.seen += 1;
+        let cf = (a.cluster_features(ex), item.regime);
+        if self.reservoir.len() < CAP {
+            self.reservoir.push(cf);
+        } else {
+            let j = rng.below(self.seen as usize);
+            if j < CAP {
+                self.reservoir[j] = cf;
+            }
+        }
+    }
+
+    pub fn mean_std(&self) -> ([f64; 4], [f64; 4]) {
+        if self.n == 0 {
+            return ([0.0; 4], [0.0; 4]);
+        }
+        let n = self.n as f64;
+        let mut mean = [0.0; 4];
+        let mut std = [0.0; 4];
+        for i in 0..4 {
+            mean[i] = self.sum[i] / n;
+            std[i] = (self.sumsq[i] / n - mean[i] * mean[i]).max(0.0).sqrt();
+        }
+        (mean, std)
+    }
+}
+
+impl Default for OpWindowAcc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FeatureExtractor;
+
+    fn item(tin: f64) -> Item {
+        Item {
+            attrs: ItemAttrs { tokens_in: tin, tokens_out: 10.0, pixels_m: 0.0, frames: 1.0 },
+            size_mb: 0.1,
+            regime: 0,
+        }
+    }
+
+    #[test]
+    fn mean_std_accumulate() {
+        let mut acc = OpWindowAcc::new();
+        let mut rng = Rng::new(0);
+        for t in [100.0, 200.0, 300.0] {
+            acc.observe(&item(t), FeatureExtractor::LlmTokens, &mut rng);
+        }
+        let (m, s) = acc.mean_std();
+        assert!((m[0] - 200.0).abs() < 1e-9);
+        assert!((s[0] - (20000.0f64 / 3.0 * 2.0).sqrt()).abs() < 1e-6 || s[0] > 0.0);
+        assert_eq!(m[3], 1.0);
+        assert_eq!(s[3], 0.0);
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let mut acc = OpWindowAcc::new();
+        let mut rng = Rng::new(1);
+        for i in 0..1000 {
+            acc.observe(&item(i as f64), FeatureExtractor::LlmTokens, &mut rng);
+        }
+        assert_eq!(acc.reservoir.len(), 64);
+        assert_eq!(acc.n, 1000);
+    }
+}

@@ -1,0 +1,831 @@
+//! The streaming pipeline executor: bounded queues, continuous-batching
+//! instances, cross-node transfers, OOM restarts, and backpressure — the
+//! substrate everything else schedules against.
+//!
+//! The paper runs Ray Data on an 8-node NPU cluster; this is the simulated
+//! equivalent (DESIGN.md §Hardware-Adaptation).  Dynamics modelled:
+//!
+//! * **bounded buffers + blocking producers** — backpressure propagates
+//!   upstream; the source is throttled exactly like Ray Data's streaming
+//!   executor (offline paradigm: source rate is whatever downstream admits);
+//! * **continuous batching** — accelerator instances form batches up to the
+//!   config-dependent effective batch; busy-time covers any in-flight work,
+//!   so useful-time estimators confound occupancy with capacity;
+//! * **OOM restarts** — ground-truth peak memory above device capacity
+//!   kills the instance for `cold_s`, with a short conservative-batch
+//!   recovery phase (vLLM-style preemption after recovery);
+//! * **network egress links** — one FIFO link per node; cross-node record
+//!   transfers serialize behind it, so placement decisions matter.
+
+use std::collections::VecDeque;
+
+use crate::config::{ClusterSpec, OperatorKind, PipelineSpec};
+use crate::rngx::Rng;
+use crate::sim::engine::{Engine, Ev, InstId};
+use crate::sim::items::{Item, ItemAttrs};
+use crate::sim::metrics::{InstWindow, InstanceMetrics, OpMetrics, OpWindowAcc};
+use crate::sim::service;
+use crate::workload::Trace;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstState {
+    Starting,
+    Running,
+    /// Down for an OOM/config restart.
+    Restarting,
+    /// Finishing in-flight work before stopping.
+    Draining,
+    Stopped,
+}
+
+pub struct Instance {
+    pub op: usize,
+    pub node: usize,
+    pub theta: Vec<f64>,
+    pub state: InstState,
+    pub queue: VecDeque<Item>,
+    /// Outputs finished but not yet admitted downstream (blocked sender).
+    pub pending_out: VecDeque<Item>,
+    /// Items of the in-flight batch (empty = idle).
+    pub batch: Vec<Item>,
+    batch_service_s: f64,
+    /// Inbound transfers reserved against our queue capacity.
+    pub reserved: usize,
+    /// Fanout fractional carry.
+    carry: f64,
+    /// Remaining batches at halved size after an OOM recovery.
+    conservative: u8,
+    /// Bumped on every config restart (lets tuners attribute metrics).
+    pub config_gen: u32,
+    /// Pending config to apply at the next idle point.
+    reconfig: Option<Vec<f64>>,
+    // -- window accounting --
+    pub win: InstWindow,
+    win_start: f64,
+    down_since: Option<f64>,
+    pub created_at: f64,
+}
+
+impl Instance {
+    fn occupancy(&self) -> usize {
+        self.queue.len() + self.reserved + self.batch.len() + self.pending_out.len()
+    }
+
+    fn has_space(&self, cap: usize) -> bool {
+        self.state != InstState::Stopped
+            && self.state != InstState::Draining
+            && self.queue.len() + self.reserved < cap
+    }
+
+    fn idle(&self) -> bool {
+        self.batch.is_empty() && self.pending_out.is_empty()
+    }
+}
+
+/// Per-node mutable state.
+struct NodeState {
+    cpu_booked: f64,
+    mem_booked: f64,
+    accel_booked: u32,
+    /// Egress link busy-until timestamp.
+    link_free: f64,
+    egress_mb_window: f64,
+}
+
+/// Waiter sentinel for the source.
+const SOURCE: usize = usize::MAX;
+
+/// The discrete-event pipeline simulator.
+pub struct PipelineSim {
+    pub engine: Engine,
+    pub spec: PipelineSpec,
+    pub cluster: ClusterSpec,
+    rng: Rng,
+    trace: Box<dyn Trace>,
+    pub instances: Vec<Instance>,
+    by_op: Vec<Vec<usize>>,
+    nodes: Vec<NodeState>,
+    /// Optional flow routing per edge i -> i+1: fractions[from_node][to_node].
+    route: Vec<Option<Vec<Vec<f64>>>>,
+    /// Instances (or SOURCE) blocked on space in each operator's queues.
+    waiters: Vec<Vec<usize>>,
+    op_acc: Vec<OpWindowAcc>,
+    /// Lifetime EMA of processed item attrs per op (capacity-oracle input).
+    attr_ema: Vec<Option<ItemAttrs>>,
+    /// Amplification factors D_i and D_o.
+    pub d_i: Vec<f64>,
+    pub d_o: f64,
+    pub items_emitted: u64,
+    pub out_records: u64,
+    out_window: u64,
+    win_start: f64,
+    /// Cumulative OOM downtime per op, seconds (Table 6).
+    pub oom_downtime_s: Vec<f64>,
+    pub oom_events_total: Vec<u32>,
+    /// Network transfer latency floor, s.
+    net_latency: f64,
+    source_done: bool,
+    /// Previous window's queue-end per op (queue-trend signal).
+    prev_q_end: Vec<usize>,
+}
+
+impl PipelineSim {
+    pub fn new(
+        spec: PipelineSpec,
+        cluster: ClusterSpec,
+        trace: Box<dyn Trace>,
+        seed: u64,
+    ) -> Self {
+        let n_ops = spec.n_ops();
+        let (d_i, d_o) = spec.amplification();
+        let nodes = cluster
+            .nodes
+            .iter()
+            .map(|_| NodeState {
+                cpu_booked: 0.0,
+                mem_booked: 0.0,
+                accel_booked: 0,
+                link_free: 0.0,
+                egress_mb_window: 0.0,
+            })
+            .collect();
+        let mut engine = Engine::new();
+        engine.at(0.0, Ev::SourceEmit);
+        PipelineSim {
+            engine,
+            rng: Rng::new(seed),
+            trace,
+            instances: Vec::new(),
+            by_op: vec![Vec::new(); n_ops],
+            nodes,
+            route: vec![None; n_ops.saturating_sub(1)],
+            waiters: vec![Vec::new(); n_ops],
+            op_acc: vec![OpWindowAcc::new(); n_ops],
+            attr_ema: vec![None; n_ops],
+            d_i,
+            d_o,
+            items_emitted: 0,
+            out_records: 0,
+            out_window: 0,
+            win_start: 0.0,
+            oom_downtime_s: vec![0.0; n_ops],
+            oom_events_total: vec![0; n_ops],
+            net_latency: 1e-3,
+            source_done: false,
+            prev_q_end: vec![0; n_ops],
+            spec,
+            cluster,
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.engine.now()
+    }
+
+    pub fn instances_of(&self, op: usize) -> Vec<usize> {
+        self.by_op[op]
+            .iter()
+            .copied()
+            .filter(|&i| self.instances[i].state != InstState::Stopped)
+            .collect()
+    }
+
+    /// Live (non-draining) instance count per (op, node).
+    pub fn placement(&self) -> Vec<Vec<u32>> {
+        let mut x = vec![vec![0u32; self.cluster.nodes.len()]; self.spec.n_ops()];
+        for inst in &self.instances {
+            if matches!(inst.state, InstState::Stopped | InstState::Draining) {
+                continue;
+            }
+            x[inst.op][inst.node] += 1;
+        }
+        x
+    }
+
+    /// Set flow routing for edge `op -> op+1`.
+    pub fn set_route(&mut self, op: usize, fractions: Option<Vec<Vec<f64>>>) {
+        self.route[op] = fractions;
+    }
+
+    // ------------------------------------------------------------------
+    // Instance lifecycle
+    // ------------------------------------------------------------------
+
+    /// Launch an instance of `op` on `node` with config θ.  Fails if the
+    /// node lacks accelerator capacity.
+    pub fn add_instance(&mut self, op: usize, node: usize, theta: Vec<f64>) -> Result<usize, String> {
+        let o = &self.spec.operators[op];
+        let ns = &mut self.nodes[node];
+        let nspec = &self.cluster.nodes[node];
+        if o.accels > 0 && ns.accel_booked + o.accels > nspec.accels {
+            return Err(format!(
+                "node {node} out of accelerators for {} ({}+{} > {})",
+                o.name, ns.accel_booked, o.accels, nspec.accels
+            ));
+        }
+        ns.cpu_booked += o.cpu;
+        ns.mem_booked += o.mem_gb;
+        ns.accel_booked += o.accels;
+        let now = self.engine.now();
+        let id = self.instances.len();
+        self.instances.push(Instance {
+            op,
+            node,
+            theta,
+            state: InstState::Starting,
+            queue: VecDeque::new(),
+            pending_out: VecDeque::new(),
+            batch: Vec::new(),
+            batch_service_s: 0.0,
+            reserved: 0,
+            carry: 0.0,
+            conservative: 0,
+            config_gen: 0,
+            reconfig: None,
+            win: InstWindow::default(),
+            win_start: now,
+            down_since: Some(now),
+            created_at: now,
+        });
+        self.by_op[op].push(id);
+        self.engine.after(o.start_s, Ev::InstanceReady(InstId(id)));
+        Ok(id)
+    }
+
+    /// Gracefully stop an instance (drains in-flight work first).
+    pub fn stop_instance(&mut self, id: usize) {
+        let inst = &mut self.instances[id];
+        if inst.state == InstState::Stopped {
+            return;
+        }
+        if inst.idle() {
+            // Covers Running-idle, Starting, and Restarting (no in-flight
+            // batch to drain in any of those states).
+            self.finalize_stop(id);
+        } else {
+            inst.state = InstState::Draining;
+        }
+    }
+
+    /// Restart an instance with a new configuration (rolling update step).
+    /// Applied at the next idle point; incurs `cold_s` downtime.
+    pub fn restart_with_config(&mut self, id: usize, theta: Vec<f64>) {
+        let inst = &mut self.instances[id];
+        if inst.state == InstState::Stopped {
+            return;
+        }
+        inst.reconfig = Some(theta);
+        if inst.batch.is_empty() {
+            self.apply_reconfig(id);
+        }
+    }
+
+    fn apply_reconfig(&mut self, id: usize) {
+        let now = self.engine.now();
+        let cold = self.spec.operators[self.instances[id].op].cold_s;
+        let inst = &mut self.instances[id];
+        if let Some(theta) = inst.reconfig.take() {
+            inst.theta = theta;
+            inst.config_gen += 1;
+            inst.state = InstState::Restarting;
+            if inst.down_since.is_none() {
+                inst.down_since = Some(now);
+            }
+            self.engine.after(cold, Ev::InstanceReady(InstId(id)));
+        }
+    }
+
+    fn finalize_stop(&mut self, id: usize) {
+        let (op, node) = (self.instances[id].op, self.instances[id].node);
+        // Account trailing downtime.
+        let now = self.engine.now();
+        {
+            let inst = &mut self.instances[id];
+            if let Some(d) = inst.down_since.take() {
+                inst.win.down_s += now - d.max(inst.win_start);
+            }
+            inst.state = InstState::Stopped;
+        }
+        let o = &self.spec.operators[op];
+        let ns = &mut self.nodes[node];
+        ns.cpu_booked -= o.cpu;
+        ns.mem_booked -= o.mem_gb;
+        ns.accel_booked -= o.accels;
+        // Redistribute any leftover queue items to peers.
+        let leftovers: Vec<Item> = self.instances[id].queue.drain(..).collect();
+        let peers = self.instances_of(op);
+        if !peers.is_empty() {
+            for (i, item) in leftovers.into_iter().enumerate() {
+                let dest = peers[i % peers.len()];
+                self.instances[dest].queue.push_back(item);
+            }
+            for p in peers {
+                self.try_start(p);
+            }
+        }
+        self.wake_waiters(op);
+    }
+
+    // ------------------------------------------------------------------
+    // Event handling
+    // ------------------------------------------------------------------
+
+    /// Run the simulation until `t_end` (absolute seconds).
+    pub fn run_until(&mut self, t_end: f64) {
+        while let Some(ev) = self.engine.next_before(t_end) {
+            match ev {
+                Ev::SourceEmit => self.try_source(),
+                Ev::InstanceReady(InstId(id)) => self.on_ready(id),
+                Ev::BatchDone(InstId(id)) => self.on_batch_done(id),
+                Ev::TransferDone(InstId(id), item) => self.on_transfer(id, item),
+            }
+        }
+        self.engine.advance_to(t_end);
+    }
+
+    fn on_ready(&mut self, id: usize) {
+        let now = self.engine.now();
+        let inst = &mut self.instances[id];
+        match inst.state {
+            InstState::Starting | InstState::Restarting => {
+                if let Some(d) = inst.down_since.take() {
+                    inst.win.down_s += now - d.max(inst.win_start);
+                }
+                if inst.state == InstState::Restarting {
+                    // leave conservative counter as set by the OOM path
+                } else {
+                    inst.conservative = 0;
+                }
+                inst.state = InstState::Running;
+                self.try_start(id);
+                // A fresh instance frees queue space semantics upstream.
+                let op = self.instances[id].op;
+                self.wake_waiters(op);
+            }
+            _ => {}
+        }
+    }
+
+    fn on_transfer(&mut self, id: usize, item: Item) {
+        let inst = &mut self.instances[id];
+        inst.reserved = inst.reserved.saturating_sub(1);
+        if inst.state == InstState::Stopped {
+            // Late arrival to a stopped instance: reroute.
+            let op = inst.op;
+            self.deliver_local_or_requeue(op, item);
+            return;
+        }
+        inst.queue.push_back(item);
+        self.try_start(id);
+    }
+
+    fn deliver_local_or_requeue(&mut self, op: usize, item: Item) {
+        let peers = self.instances_of(op);
+        if let Some(&dest) = peers.iter().min_by_key(|&&p| self.instances[p].occupancy()) {
+            self.instances[dest].queue.push_back(item);
+            self.try_start(dest);
+        }
+        // else: dropped (no live instance — cannot happen under MILP plans
+        // which keep p_i >= 1).
+    }
+
+    fn try_source(&mut self) {
+        if self.source_done {
+            return;
+        }
+        let cap = self.spec.operators[0].queue_cap;
+        loop {
+            // Find an op-0 instance with space.
+            let dest = self.by_op[0]
+                .iter()
+                .copied()
+                .filter(|&i| self.instances[i].has_space(cap))
+                .min_by_key(|&i| self.instances[i].occupancy());
+            let Some(dest) = dest else {
+                if !self.waiters[0].contains(&SOURCE) {
+                    self.waiters[0].push(SOURCE);
+                }
+                return;
+            };
+            match self.trace.next_item(&mut self.rng) {
+                Some(item) => {
+                    self.items_emitted += 1;
+                    self.instances[dest].queue.push_back(item);
+                    self.try_start(dest);
+                }
+                None => {
+                    self.source_done = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Try to begin a batch on `id`.
+    fn try_start(&mut self, id: usize) {
+        let cap_mem_mb = {
+            let inst = &self.instances[id];
+            self.cluster.nodes[inst.node].accel_mem_mb
+        };
+        let now = self.engine.now();
+        let inst = &self.instances[id];
+        if inst.state != InstState::Running {
+            return;
+        }
+        if !inst.batch.is_empty() || !inst.pending_out.is_empty() || inst.queue.is_empty() {
+            return;
+        }
+        let op_idx = inst.op;
+        let op = &self.spec.operators[op_idx];
+
+        // Sample queue length for backlog signals.
+        let qlen = inst.queue.len();
+
+        // Form the batch.  A post-OOM recovery phase runs with a halved
+        // config (vLLM-style preemption/recompute after an OOM abort).
+        let theta_eff: Vec<f64> = if inst.conservative > 0 {
+            let mut t = inst.theta.clone();
+            if !t.is_empty() {
+                t[0] = (t[0] / 2.0).max(1.0);
+            }
+            if t.len() > 1 {
+                t[1] = (t[1] / 2.0).max(256.0);
+            }
+            t
+        } else {
+            inst.theta.clone()
+        };
+        let batch_n = match op.kind {
+            OperatorKind::CpuSync => 1,
+            OperatorKind::AccelAsync => {
+                service::accel_eff_batch(&theta_eff).min(inst.queue.len()).max(1)
+            }
+        };
+
+        let inst = &mut self.instances[id];
+        inst.win.q_sum += qlen as f64;
+        inst.win.q_n += 1;
+        let items: Vec<Item> = inst.queue.drain(..batch_n).collect();
+        if inst.conservative > 0 {
+            inst.conservative -= 1;
+        }
+
+        // Service time + memory check.
+        let (service_s, oom) = match op.kind {
+            OperatorKind::CpuSync => {
+                let contention = {
+                    let node = &self.nodes[inst.node];
+                    let cores = self.cluster.nodes[inst.node].cpu_cores;
+                    (cores / node.cpu_booked.max(1e-9)).min(1.0)
+                };
+                let t = service::cpu_record_time(&op.service, &items[0].attrs, &mut self.rng)
+                    / contention;
+                (t, false)
+            }
+            OperatorKind::AccelAsync => {
+                let stats = service::BatchStats::of(
+                    &items.iter().map(|i| i.attrs).collect::<Vec<_>>(),
+                );
+                let mem = service::accel_batch_mem(&op.service, &theta_eff, stats, &mut self.rng);
+                let inst = &mut self.instances[id];
+                inst.win.peak_mem_mb = inst.win.peak_mem_mb.max(mem);
+                if mem > cap_mem_mb {
+                    (0.0, true)
+                } else {
+                    (
+                        service::accel_batch_time(&op.service, &theta_eff, stats, &mut self.rng),
+                        false,
+                    )
+                }
+            }
+        };
+
+        let cold = op.cold_s;
+        let inst = &mut self.instances[id];
+        if oom {
+            // OOM: items return to the queue; instance restarts cold.
+            for item in items.into_iter().rev() {
+                inst.queue.push_front(item);
+            }
+            inst.win.oom_events += 1;
+            inst.state = InstState::Restarting;
+            inst.down_since = Some(now);
+            inst.conservative = 4;
+            self.oom_events_total[op_idx] += 1;
+            self.oom_downtime_s[op_idx] += cold;
+            self.engine.after(cold, Ev::InstanceReady(InstId(id)));
+            return;
+        }
+        inst.batch = items;
+        inst.batch_service_s = service_s;
+        self.engine.after(service_s, Ev::BatchDone(InstId(id)));
+    }
+
+    fn on_batch_done(&mut self, id: usize) {
+        let op_idx = self.instances[id].op;
+        let op = self.spec.operators[op_idx].clone();
+        let is_last = op_idx + 1 == self.spec.n_ops();
+
+        // Account the batch.
+        let items: Vec<Item> = {
+            let inst = &mut self.instances[id];
+            let items = std::mem::take(&mut inst.batch);
+            inst.win.records_done += items.len() as u64;
+            inst.win.batches_done += 1;
+            inst.win.busy_s += inst.batch_service_s;
+            items
+        };
+        self.op_acc[op_idx].records_in += items.len() as u64;
+        for item in &items {
+            let mut r = self.rng.fork(7);
+            self.op_acc[op_idx].observe(item, op.features, &mut r);
+            // Lifetime attr EMA (capacity-oracle input).
+            let ema = &mut self.attr_ema[op_idx];
+            let a = item.attrs;
+            *ema = Some(match ema {
+                None => a,
+                Some(e) => ItemAttrs {
+                    tokens_in: e.tokens_in * 0.99 + a.tokens_in * 0.01,
+                    tokens_out: e.tokens_out * 0.99 + a.tokens_out * 0.01,
+                    pixels_m: e.pixels_m * 0.99 + a.pixels_m * 0.01,
+                    frames: e.frames * 0.99 + a.frames * 0.01,
+                },
+            });
+        }
+
+        // Fanout into children.
+        let mut outputs: Vec<Item> = Vec::new();
+        {
+            let inst = &mut self.instances[id];
+            for item in &items {
+                inst.carry += op.fanout;
+                let k = inst.carry.floor() as usize;
+                inst.carry -= k as f64;
+                for _ in 0..k {
+                    let a = item.attrs;
+                    let s = op.child_scale;
+                    outputs.push(Item {
+                        attrs: ItemAttrs {
+                            tokens_in: a.tokens_in * s[0],
+                            tokens_out: a.tokens_out * s[1],
+                            pixels_m: a.pixels_m * s[2],
+                            frames: a.frames * s[3],
+                        },
+                        size_mb: op.out_mb * self.rng.lognormal(0.0, 0.15),
+                        regime: item.regime,
+                    });
+                }
+            }
+        }
+
+        if is_last {
+            self.out_records += outputs.len() as u64;
+            self.out_window += outputs.len() as u64;
+        } else {
+            let inst = &mut self.instances[id];
+            inst.pending_out.extend(outputs);
+        }
+
+        // Space freed in our queue: wake upstream.
+        self.wake_waiters(op_idx);
+
+        // Apply a pending reconfig at this idle point.
+        if self.instances[id].reconfig.is_some() && self.instances[id].pending_out.is_empty() {
+            self.apply_reconfig(id);
+            return;
+        }
+
+        self.try_place_outputs(id);
+        let inst = &self.instances[id];
+        if inst.state == InstState::Draining && inst.idle() {
+            // In-flight work done and outputs placed: release (leftover
+            // queue items are redistributed by finalize_stop).
+            self.finalize_stop(id);
+            return;
+        }
+        self.try_start(id);
+    }
+
+    /// Push pending outputs downstream; block on full queues.
+    fn try_place_outputs(&mut self, id: usize) {
+        let op = self.instances[id].op;
+        if op + 1 >= self.spec.n_ops() {
+            return;
+        }
+        let next = op + 1;
+        let cap = self.spec.operators[next].queue_cap;
+        loop {
+            let Some(&item) = self.instances[id].pending_out.front() else {
+                break;
+            };
+            let from_node = self.instances[id].node;
+            let Some(dest) = self.choose_dest(op, from_node, cap) else {
+                if !self.waiters[next].contains(&id) {
+                    self.waiters[next].push(id);
+                }
+                return;
+            };
+            self.instances[id].pending_out.pop_front();
+            let dest_node = self.instances[dest].node;
+            if dest_node == from_node {
+                self.instances[dest].queue.push_back(item);
+                self.try_start(dest);
+            } else {
+                // Cross-node: serialize behind the egress link.
+                let now = self.engine.now();
+                let rate = self.cluster.nodes[from_node].egress_mbps.max(1.0);
+                let ns = &mut self.nodes[from_node];
+                ns.egress_mb_window += item.size_mb;
+                let start = ns.link_free.max(now);
+                let arrive = start + item.size_mb / rate + self.net_latency;
+                ns.link_free = arrive;
+                self.instances[dest].reserved += 1;
+                self.engine.at(arrive, Ev::TransferDone(InstId(dest), item));
+            }
+        }
+        // Fully drained: if a reconfig is pending and we're idle, apply it.
+        if self.instances[id].batch.is_empty() && self.instances[id].reconfig.is_some() {
+            self.apply_reconfig(id);
+        }
+    }
+
+    /// Pick a destination instance for edge `op -> op+1` from `from_node`,
+    /// honouring the flow plan when present.
+    fn choose_dest(&mut self, op: usize, from_node: usize, cap: usize) -> Option<usize> {
+        let next = op + 1;
+        if let Some(w) = &self.route[op] {
+            let weights = &w[from_node];
+            if weights.iter().sum::<f64>() > 1e-9 {
+                let l = self.rng.categorical(weights);
+                // Least-occupied instance with space on the sampled node.
+                let best = self.by_op[next]
+                    .iter()
+                    .copied()
+                    .filter(|&i| self.instances[i].node == l && self.instances[i].has_space(cap))
+                    .min_by_key(|&i| self.instances[i].occupancy());
+                if best.is_some() {
+                    return best;
+                }
+            }
+        }
+        // Fallback / no plan: least-occupied anywhere (local first on tie).
+        self.by_op[next]
+            .iter()
+            .copied()
+            .filter(|&i| self.instances[i].has_space(cap))
+            .min_by_key(|&i| {
+                (self.instances[i].occupancy(), (self.instances[i].node != from_node) as usize)
+            })
+    }
+
+    fn wake_waiters(&mut self, op: usize) {
+        let ws = std::mem::take(&mut self.waiters[op]);
+        for w in ws {
+            if w == SOURCE {
+                self.try_source();
+            } else {
+                self.try_place_outputs(w);
+                if self.instances[w].state == InstState::Draining && self.instances[w].idle() {
+                    self.finalize_stop(w);
+                } else {
+                    self.try_start(w);
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Metrics & oracles
+    // ------------------------------------------------------------------
+
+    /// Flush the metrics window: per-operator snapshots + pipeline output
+    /// records this window.  Resets window accumulators.
+    pub fn flush_metrics(&mut self) -> (Vec<OpMetrics>, u64) {
+        let now = self.engine.now();
+        let window_s = (now - self.win_start).max(1e-9);
+        let mut out = Vec::with_capacity(self.spec.n_ops());
+        for op in 0..self.spec.n_ops() {
+            let mut records = 0u64;
+            let mut busy = 0.0;
+            let mut active = 0.0;
+            let mut peak_mem: f64 = 0.0;
+            let mut ooms = 0u32;
+            let mut q_end = 0usize;
+            let mut q_sum = 0.0;
+            let mut q_n = 0u64;
+            let mut n_active = 0usize;
+            let mut per_instance = Vec::new();
+            for &i in &self.by_op[op] {
+                let inst = &mut self.instances[i];
+                if inst.state == InstState::Stopped {
+                    continue;
+                }
+                let start = inst.win_start.max(inst.created_at);
+                let mut down = inst.win.down_s;
+                if let Some(d) = inst.down_since {
+                    down += now - d.max(start);
+                }
+                let a = (now - start - down).max(0.0);
+                records += inst.win.records_done;
+                busy += inst.win.busy_s;
+                active += a;
+                peak_mem = peak_mem.max(inst.win.peak_mem_mb);
+                ooms += inst.win.oom_events;
+                q_end += inst.queue.len();
+                q_sum += inst.win.q_sum;
+                q_n += inst.win.q_n;
+                if a > 0.0 {
+                    n_active += 1;
+                }
+                per_instance.push(InstanceMetrics {
+                    inst: i,
+                    node: inst.node,
+                    records: inst.win.records_done,
+                    busy_s: inst.win.busy_s,
+                    active_s: a,
+                    peak_mem_mb: inst.win.peak_mem_mb,
+                    oom_events: inst.win.oom_events,
+                    queue_len: inst.queue.len(),
+                    config_gen: inst.config_gen,
+                });
+                inst.win.reset();
+                inst.win_start = now;
+            }
+            let acc = &mut self.op_acc[op];
+            let (feat_mean, feat_std) = acc.mean_std();
+            let q_begin = self
+                .prev_q_end
+                .get(op)
+                .copied()
+                .unwrap_or(0);
+            out.push(OpMetrics {
+                op,
+                window_s,
+                records_in: acc.records_in,
+                records_out: records,
+                rate_per_inst: if active > 0.0 { records as f64 / (active / n_active.max(1) as f64) / n_active.max(1) as f64 } else { 0.0 },
+                utilization: if active > 0.0 { (busy / active).min(1.0) } else { 0.0 },
+                queue_begin: q_begin,
+                queue_end: q_end,
+                queue_avg: if q_n > 0 { q_sum / q_n as f64 } else { q_end as f64 },
+                feat_mean,
+                feat_std,
+                peak_mem_mb: peak_mem,
+                oom_events: ooms,
+                n_active,
+                cluster_samples: std::mem::take(&mut acc.reservoir),
+                per_instance,
+            });
+            acc.reset();
+        }
+        // Record queue-end as next window's queue-begin.
+        self.prev_q_end = out.iter().map(|m| m.queue_end).collect();
+        for ns in &mut self.nodes {
+            ns.egress_mb_window = 0.0;
+        }
+        let w = self.out_window;
+        self.out_window = 0;
+        self.win_start = now;
+        (out, w)
+    }
+
+    /// Ground-truth sustainable per-instance rate for `op` under config θ
+    /// and the currently observed workload (isolated-profiling oracle —
+    /// evaluation only, never fed to the scheduler).
+    pub fn true_unit_rate(&self, op: usize, theta: &[f64]) -> f64 {
+        let attrs = self.attr_ema[op].unwrap_or(ItemAttrs {
+            tokens_in: 512.0,
+            tokens_out: 64.0,
+            pixels_m: 1.0,
+            frames: 1.0,
+        });
+        service::true_unit_rate(&self.spec.operators[op].service, theta, &attrs)
+    }
+
+    /// Current mean attrs seen by `op` (oracle input for benches).
+    pub fn mean_attrs(&self, op: usize) -> Option<ItemAttrs> {
+        self.attr_ema[op]
+    }
+
+    /// Pipeline throughput in original-input records/s over the whole run.
+    pub fn avg_throughput(&self) -> f64 {
+        if self.now() <= 0.0 {
+            return 0.0;
+        }
+        (self.out_records as f64 / self.d_o) / self.now()
+    }
+
+    /// True when the trace is exhausted and no work remains in flight.
+    pub fn drained(&self) -> bool {
+        self.source_done
+            && self
+                .instances
+                .iter()
+                .all(|i| i.state == InstState::Stopped || (i.idle() && i.queue.is_empty()))
+    }
+
+    /// Egress MB sent by each node in the current window (network metric).
+    pub fn egress_window_mb(&self) -> Vec<f64> {
+        self.nodes.iter().map(|n| n.egress_mb_window).collect()
+    }
+}

@@ -1,0 +1,356 @@
+//! Branch & bound for mixed-integer linear programs.
+//!
+//! Best-first search over LP relaxations (`simplex::solve_lp`), branching on
+//! the most fractional integer variable, with:
+//! * a rounding heuristic at every node to find incumbents early,
+//! * bound-based pruning against the incumbent,
+//! * a wall-clock budget (the scheduler runs re-optimization off the
+//!   critical path, but Algorithm 2 still wants an answer per round).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::{Duration, Instant};
+
+use super::model::{Problem, Solution, Status};
+use super::simplex::solve_lp;
+
+const INT_TOL: f64 = 1e-5;
+/// Relative optimality gap at which branches are pruned.
+const REL_GAP_TOL: f64 = 1e-4;
+
+struct Node {
+    bound: f64, // LP relaxation objective (upper bound for maximization)
+    lo: Vec<f64>,
+    up: Vec<f64>,
+    depth: usize,
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for Node {}
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap on bound (best-first).
+        self.bound.partial_cmp(&other.bound).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Statistics from a MILP solve (reported by the RQ6 overhead bench).
+#[derive(Debug, Clone, Default)]
+pub struct MilpStats {
+    pub nodes: usize,
+    pub lp_solves: usize,
+    pub wall: Duration,
+    pub gap: f64,
+}
+
+/// Solve `p` as a MILP.  Returns the best integer-feasible solution found
+/// within `budget`, with `Status::Optimal` when the search tree was
+/// exhausted and `Status::Limit` when the budget expired first.
+pub fn solve_milp(p: &Problem, budget: Duration) -> (Solution, MilpStats) {
+    solve_milp_from(p, budget, None)
+}
+
+/// Like [`solve_milp`] but seeded with a feasible warm-start point, which
+/// becomes the initial incumbent (pruning bound).  The point is verified;
+/// an infeasible warm start is ignored.
+pub fn solve_milp_from(
+    p: &Problem,
+    budget: Duration,
+    warm: Option<Vec<f64>>,
+) -> (Solution, MilpStats) {
+    let start = Instant::now();
+    let mut stats = MilpStats::default();
+
+    let mut incumbent: Option<Solution> = warm.and_then(|x| {
+        if p.is_feasible(&x, 1e-6) {
+            let obj = p.eval_obj(&x);
+            Some(Solution { status: Status::Optimal, obj, x })
+        } else {
+            None
+        }
+    });
+    let mut heap: BinaryHeap<Node> = BinaryHeap::new();
+    heap.push(Node { bound: f64::INFINITY, lo: p.lo.clone(), up: p.up.clone(), depth: 0 });
+
+    let mut exhausted = true;
+    while let Some(node) = heap.pop() {
+        if start.elapsed() > budget {
+            exhausted = false;
+            break;
+        }
+        if let Some(inc) = &incumbent {
+            // Prune on absolute or small relative gap: the scheduler does
+            // not benefit from the last <0.5% of objective.
+            if node.bound <= inc.obj + 1e-9 || node.bound <= inc.obj * (1.0 + REL_GAP_TOL) {
+                continue;
+            }
+        }
+        // Solve the node LP.
+        let mut sub = p.clone();
+        sub.lo = node.lo.clone();
+        sub.up = node.up.clone();
+        // Guard against crossed bounds introduced by branching.
+        if sub.lo.iter().zip(&sub.up).any(|(l, u)| l > u) {
+            continue;
+        }
+        stats.lp_solves += 1;
+        stats.nodes += 1;
+        let rel = solve_lp(&sub);
+        match rel.status {
+            Status::Infeasible => continue,
+            Status::Unbounded => {
+                // Integer restriction cannot fix an unbounded relaxation
+                // in our models (all scheduler vars are bounded); treat as
+                // an error status propagated to the caller.
+                return (
+                    Solution { status: Status::Unbounded, obj: f64::INFINITY, x: vec![] },
+                    stats,
+                );
+            }
+            Status::Optimal | Status::Limit => {}
+        }
+        if let Some(inc) = &incumbent {
+            if rel.obj <= inc.obj + 1e-9 || rel.obj <= inc.obj * (1.0 + REL_GAP_TOL) {
+                continue;
+            }
+        }
+
+        // Find most fractional integer variable.
+        let mut branch: Option<(usize, f64)> = None;
+        let mut best_frac = INT_TOL;
+        for j in 0..p.n_vars() {
+            if !p.integer[j] {
+                continue;
+            }
+            let f = (rel.x[j] - rel.x[j].round()).abs();
+            if f > best_frac {
+                best_frac = f;
+                branch = Some((j, rel.x[j]));
+            }
+        }
+
+        match branch {
+            None => {
+                // Integer feasible.
+                let cand = Solution { status: Status::Optimal, obj: rel.obj, x: rel.x };
+                if incumbent.as_ref().map(|i| cand.obj > i.obj).unwrap_or(true) {
+                    incumbent = Some(cand);
+                }
+            }
+            Some((j, xj)) => {
+                // Rounding heuristic: snap all integer vars and re-check.
+                let mut rounded = rel.x.clone();
+                for k in 0..p.n_vars() {
+                    if p.integer[k] {
+                        rounded[k] = rounded[k].round().clamp(p.lo[k], p.up[k]);
+                    }
+                }
+                if p.is_feasible(&rounded, 1e-6) {
+                    let obj = p.eval_obj(&rounded);
+                    if incumbent.as_ref().map(|i| obj > i.obj).unwrap_or(true) {
+                        incumbent = Some(Solution { status: Status::Optimal, obj, x: rounded });
+                    }
+                }
+
+                // Branch j <= floor, j >= ceil.
+                let (fl, ce) = (xj.floor(), xj.ceil());
+                let mut up_child = node.up.clone();
+                up_child[j] = fl;
+                if node.lo[j] <= fl {
+                    heap.push(Node { bound: rel.obj, lo: node.lo.clone(), up: up_child, depth: node.depth + 1 });
+                }
+                let mut lo_child = node.lo.clone();
+                lo_child[j] = ce;
+                if ce <= node.up[j] {
+                    heap.push(Node { bound: rel.obj, lo: lo_child, up: node.up.clone(), depth: node.depth + 1 });
+                }
+            }
+        }
+    }
+
+    stats.wall = start.elapsed();
+    match incumbent {
+        Some(mut sol) => {
+            let bound = heap
+                .peek()
+                .map(|n| n.bound)
+                .unwrap_or(sol.obj)
+                .max(sol.obj);
+            stats.gap = if sol.obj.abs() > 1e-12 {
+                ((bound - sol.obj) / sol.obj.abs()).max(0.0)
+            } else {
+                0.0
+            };
+            sol.status = if exhausted { Status::Optimal } else { Status::Limit };
+            (sol, stats)
+        }
+        None => (
+            Solution {
+                status: if exhausted { Status::Infeasible } else { Status::Limit },
+                obj: f64::NEG_INFINITY,
+                x: vec![],
+            },
+            stats,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+    use crate::solver::model::{Cmp, Problem};
+
+    fn budget() -> Duration {
+        Duration::from_secs(10)
+    }
+
+    #[test]
+    fn knapsack_small() {
+        // max 10a+13b+7c st 3a+4b+2c<=6, binary -> a=0,b=1,c=1 = 20
+        let mut p = Problem::new();
+        let a = p.int("a", 0.0, 1.0, 10.0);
+        let b = p.int("b", 0.0, 1.0, 13.0);
+        let c = p.int("c", 0.0, 1.0, 7.0);
+        p.constrain("w", vec![(a, 3.0), (b, 4.0), (c, 2.0)], Cmp::Le, 6.0);
+        let (s, _) = solve_milp(&p, budget());
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.obj - 20.0).abs() < 1e-6, "{s:?}");
+    }
+
+    #[test]
+    fn integer_rounding_not_lp_rounding() {
+        // Classic: max x+y st -x+y<=0.5, x+y<=3.5 ints -> best (1,1) or (2,1):
+        // x=2,y=1 obj 3 ; LP opt is (1.5, 2.0) obj 3.5.
+        let mut p = Problem::new();
+        let x = p.int("x", 0.0, 10.0, 1.0);
+        let y = p.int("y", 0.0, 10.0, 1.0);
+        p.constrain("c1", vec![(x, -1.0), (y, 1.0)], Cmp::Le, 0.5);
+        p.constrain("c2", vec![(x, 1.0), (y, 1.0)], Cmp::Le, 3.5);
+        let (s, _) = solve_milp(&p, budget());
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.obj - 3.0).abs() < 1e-6, "{s:?}");
+    }
+
+    #[test]
+    fn assignment_problem_integral() {
+        // 3x3 assignment: maximize total weight; optimal = 5+6+4 = 15
+        let w = [[5.0, 1.0, 2.0], [2.0, 6.0, 3.0], [1.0, 2.0, 4.0]];
+        let mut p = Problem::new();
+        let mut v = vec![];
+        for i in 0..3 {
+            for j in 0..3 {
+                v.push(p.int(&format!("x{i}{j}"), 0.0, 1.0, w[i][j]));
+            }
+        }
+        for i in 0..3 {
+            p.constrain(
+                &format!("r{i}"),
+                (0..3).map(|j| (v[i * 3 + j], 1.0)).collect(),
+                Cmp::Eq,
+                1.0,
+            );
+            p.constrain(
+                &format!("c{i}"),
+                (0..3).map(|j| (v[j * 3 + i], 1.0)).collect(),
+                Cmp::Eq,
+                1.0,
+            );
+        }
+        let (s, _) = solve_milp(&p, budget());
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.obj - 15.0).abs() < 1e-6, "{s:?}");
+    }
+
+    #[test]
+    fn mixed_integer_continuous() {
+        // max 2x + 3y, x int <=3.7 bound, y cont, x+2y<=8 -> x=3, y=2.5, obj 13.5
+        let mut p = Problem::new();
+        let x = p.int("x", 0.0, 3.7, 2.0);
+        let y = p.cont("y", 0.0, f64::INFINITY, 3.0);
+        p.constrain("c", vec![(x, 1.0), (y, 2.0)], Cmp::Le, 8.0);
+        let (s, _) = solve_milp(&p, budget());
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.obj - 13.5).abs() < 1e-6, "{s:?}");
+        assert!((s.x[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_milp() {
+        let mut p = Problem::new();
+        let x = p.int("x", 0.0, 10.0, 1.0);
+        p.constrain("a", vec![(x, 2.0)], Cmp::Eq, 3.0); // 2x=3 has no integer solution
+        let (s, _) = solve_milp(&p, budget());
+        assert_eq!(s.status, Status::Infeasible);
+    }
+
+    /// Brute-force optimum over integer grids for small random MILPs.
+    fn brute_force(p: &Problem, maxv: i64) -> Option<f64> {
+        let n = p.n_vars();
+        let mut best: Option<f64> = None;
+        let mut x = vec![0.0; n];
+        fn rec(p: &Problem, x: &mut Vec<f64>, j: usize, maxv: i64, best: &mut Option<f64>) {
+            if j == p.n_vars() {
+                if p.is_feasible(x, 1e-9) {
+                    let o = p.eval_obj(x);
+                    if best.map(|b| o > b).unwrap_or(true) {
+                        *best = Some(o);
+                    }
+                }
+                return;
+            }
+            let hi = p.up[j].min(maxv as f64) as i64;
+            let lo = p.lo[j].max(0.0) as i64;
+            for v in lo..=hi {
+                x[j] = v as f64;
+                rec(p, x, j + 1, maxv, best);
+            }
+        }
+        rec(p, &mut x, 0, maxv, &mut best);
+        best
+    }
+
+    #[test]
+    fn random_milps_match_brute_force() {
+        let mut rng = Rng::new(4242);
+        for case in 0..40 {
+            let nv = 2 + rng.below(3); // 2..4 int vars
+            let nc = 1 + rng.below(3);
+            let mut p = Problem::new();
+            let vars: Vec<_> = (0..nv)
+                .map(|i| p.int(&format!("v{i}"), 0.0, 4.0, rng.uniform(-3.0, 5.0)))
+                .collect();
+            for c in 0..nc {
+                let coeffs: Vec<_> = vars
+                    .iter()
+                    .map(|&v| (v, rng.uniform(-1.0, 3.0)))
+                    .collect();
+                p.constrain(&format!("c{c}"), coeffs, Cmp::Le, rng.uniform(2.0, 12.0));
+            }
+            let (s, _) = solve_milp(&p, budget());
+            let bf = brute_force(&p, 4);
+            match bf {
+                None => assert_eq!(s.status, Status::Infeasible, "case {case}"),
+                Some(opt) => {
+                    assert_eq!(s.status, Status::Optimal, "case {case}");
+                    assert!(
+                        (s.obj - opt).abs() < 1e-6,
+                        "case {case}: milp {} vs brute {}",
+                        s.obj,
+                        opt
+                    );
+                    assert!(p.is_feasible(&s.x, 1e-6), "case {case}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! LP/MILP solver substrate: problem builder, bounded-variable two-phase
+//! simplex, and best-first branch & bound.  Built from scratch because the
+//! offline environment has no solver crates; exactness on the scheduler's
+//! small instances (≲2k vars) is what matters.
+
+pub mod milp;
+pub mod model;
+pub mod simplex;
+
+pub use milp::{solve_milp, solve_milp_from, MilpStats};
+pub use model::{Cmp, Problem, Solution, Status, Var};
+pub use simplex::solve_lp;

@@ -1,0 +1,177 @@
+//! Problem-builder API for linear / mixed-integer programs.
+//!
+//! The scheduling layer constructs its MILP (Eqs. 10–26) through this
+//! interface; `simplex.rs` solves the LP relaxation and `milp.rs` wraps it
+//! in branch & bound.  Maximization convention throughout.
+
+/// Variable handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Var(pub usize);
+
+/// Constraint comparison operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// One linear constraint: `sum coeffs · vars  cmp  rhs`.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub coeffs: Vec<(usize, f64)>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+    pub name: String,
+}
+
+/// A linear or mixed-integer program (maximize `obj`).
+#[derive(Debug, Clone, Default)]
+pub struct Problem {
+    pub obj: Vec<f64>,
+    pub lo: Vec<f64>,
+    pub up: Vec<f64>,
+    pub integer: Vec<bool>,
+    pub names: Vec<String>,
+    pub rows: Vec<Row>,
+}
+
+impl Problem {
+    pub fn new() -> Self {
+        Problem::default()
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.obj.len()
+    }
+
+    /// Add a variable with bounds `[lo, up]` (`up` may be `f64::INFINITY`),
+    /// objective coefficient `obj`, and integrality flag.
+    pub fn add_var(&mut self, name: impl Into<String>, lo: f64, up: f64, obj: f64, integer: bool) -> Var {
+        assert!(lo <= up, "bad bounds for {:?}", name.into());
+        self.obj.push(obj);
+        self.lo.push(lo);
+        self.up.push(up);
+        self.integer.push(integer);
+        self.names.push(String::new());
+        Var(self.obj.len() - 1)
+    }
+
+    /// Convenience: continuous variable in `[lo, up]`.
+    pub fn cont(&mut self, name: &str, lo: f64, up: f64, obj: f64) -> Var {
+        let v = self.add_var(name, lo, up, obj, false);
+        self.names[v.0] = name.to_string();
+        v
+    }
+
+    /// Convenience: integer variable in `[lo, up]`.
+    pub fn int(&mut self, name: &str, lo: f64, up: f64, obj: f64) -> Var {
+        let v = self.add_var(name, lo, up, obj, true);
+        self.names[v.0] = name.to_string();
+        v
+    }
+
+    /// Add `sum coeffs  cmp  rhs`.  Coefficients on the same variable are
+    /// accumulated.
+    pub fn constrain(&mut self, name: &str, coeffs: Vec<(Var, f64)>, cmp: Cmp, rhs: f64) {
+        let mut acc: Vec<(usize, f64)> = Vec::with_capacity(coeffs.len());
+        for (v, c) in coeffs {
+            debug_assert!(v.0 < self.n_vars(), "constraint references unknown var");
+            if c == 0.0 {
+                continue;
+            }
+            if let Some(slot) = acc.iter_mut().find(|(i, _)| *i == v.0) {
+                slot.1 += c;
+            } else {
+                acc.push((v.0, c));
+            }
+        }
+        self.rows.push(Row { coeffs: acc, cmp, rhs, name: name.to_string() });
+    }
+
+    /// Evaluate the objective at a point.
+    pub fn eval_obj(&self, x: &[f64]) -> f64 {
+        self.obj.iter().zip(x).map(|(c, v)| c * v).sum()
+    }
+
+    /// Check feasibility of a point within tolerance (bounds, rows,
+    /// integrality for integer vars).
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        if x.len() != self.n_vars() {
+            return false;
+        }
+        for j in 0..self.n_vars() {
+            if x[j] < self.lo[j] - tol || x[j] > self.up[j] + tol {
+                return false;
+            }
+            if self.integer[j] && (x[j] - x[j].round()).abs() > tol {
+                return false;
+            }
+        }
+        for row in &self.rows {
+            let lhs: f64 = row.coeffs.iter().map(|&(j, c)| c * x[j]).sum();
+            let ok = match row.cmp {
+                Cmp::Le => lhs <= row.rhs + tol,
+                Cmp::Ge => lhs >= row.rhs - tol,
+                Cmp::Eq => (lhs - row.rhs).abs() <= tol,
+            };
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Solver termination status.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Optimal,
+    Infeasible,
+    Unbounded,
+    /// Best incumbent at time/iteration limit (MILP) or iteration cap (LP).
+    Limit,
+}
+
+/// Solution: status, objective value, and the variable assignment.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub status: Status,
+    pub obj: f64,
+    pub x: Vec<f64>,
+}
+
+impl Solution {
+    pub fn value(&self, v: Var) -> f64 {
+        self.x[v.0]
+    }
+
+    pub fn int_value(&self, v: Var) -> i64 {
+        self.x[v.0].round() as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_accumulates_duplicate_coeffs() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, 10.0, 1.0);
+        p.constrain("r", vec![(x, 1.0), (x, 2.0)], Cmp::Le, 6.0);
+        assert_eq!(p.rows[0].coeffs, vec![(0, 3.0)]);
+    }
+
+    #[test]
+    fn feasibility_check() {
+        let mut p = Problem::new();
+        let x = p.int("x", 0.0, 5.0, 1.0);
+        let y = p.cont("y", 0.0, 5.0, 1.0);
+        p.constrain("c", vec![(x, 1.0), (y, 1.0)], Cmp::Le, 4.0);
+        assert!(p.is_feasible(&[2.0, 1.5], 1e-9));
+        assert!(!p.is_feasible(&[2.5, 1.0], 1e-9)); // fractional int
+        assert!(!p.is_feasible(&[3.0, 2.0], 1e-9)); // row violated
+        assert!(!p.is_feasible(&[-1.0, 0.0], 1e-9)); // bound violated
+    }
+}

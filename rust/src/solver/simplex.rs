@@ -1,0 +1,487 @@
+//! Two-phase primal simplex with bounded variables (dense tableau).
+//!
+//! Bounded-variable simplex keeps `lo <= x <= up` implicit (nonbasic
+//! variables rest at either bound; the ratio test allows bound flips), so
+//! the Trident MILP's ~10^2 bound constraints never enter the tableau.
+//! Phase 1 minimizes artificial infeasibility; phase 2 maximizes the real
+//! objective.  Bland's rule engages after a stall threshold to break
+//! degenerate cycles.
+
+use super::model::{Cmp, Problem, Solution, Status};
+
+const EPS: f64 = 1e-9;
+/// Dual feasibility tolerance for entering-variable selection.
+const DUAL_TOL: f64 = 1e-7;
+const MAX_ITERS: usize = 200_000;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum NbStatus {
+    Lower,
+    Upper,
+    Basic,
+}
+
+struct Tableau {
+    m: usize,
+    n: usize,          // total columns (struct + slack + artificial)
+    n_struct: usize,
+    a: Vec<f64>,       // m x n row-major
+    xb: Vec<f64>,      // basic values (of shifted vars)
+    basis: Vec<usize>, // var per row
+    status: Vec<NbStatus>,
+    ubound: Vec<f64>,  // shifted upper bounds (lo already subtracted)
+    rc: Vec<f64>,      // reduced costs for the active objective
+    obj_val: f64,
+    iters: usize,
+}
+
+impl Tableau {
+    #[inline]
+    fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    /// Nonbasic current value in shifted coordinates.
+    #[inline]
+    fn nb_val(&self, j: usize) -> f64 {
+        match self.status[j] {
+            NbStatus::Lower => 0.0,
+            NbStatus::Upper => self.ubound[j],
+            NbStatus::Basic => unreachable!(),
+        }
+    }
+
+    /// Recompute reduced costs and objective for cost vector `c`
+    /// (over all columns): rc = c - c_B^T B^{-1} A, using the tableau
+    /// which already stores B^{-1} A.
+    fn price(&mut self, c: &[f64]) {
+        let mut rc = c.to_vec();
+        for i in 0..self.m {
+            let cb = c[self.basis[i]];
+            if cb == 0.0 {
+                continue;
+            }
+            let row = &self.a[i * self.n..(i + 1) * self.n];
+            for (r, &aij) in rc.iter_mut().zip(row) {
+                *r -= cb * aij;
+            }
+        }
+        for i in 0..self.m {
+            rc[self.basis[i]] = 0.0;
+        }
+        self.rc = rc;
+        // Objective value = c_B x_B + sum over nonbasic-at-upper c_j u_j.
+        let mut z = 0.0;
+        for i in 0..self.m {
+            z += c[self.basis[i]] * self.xb[i];
+        }
+        for j in 0..self.n {
+            if self.status[j] == NbStatus::Upper {
+                z += c[j] * self.ubound[j];
+            }
+        }
+        self.obj_val = z;
+    }
+
+    /// One simplex iteration.  Returns false when optimal (no entering
+    /// column) — errors are reported via `Err(Status)`.
+    fn step(&mut self, bland: bool) -> Result<bool, Status> {
+        // --- entering variable -------------------------------------------
+        let mut enter: Option<(usize, f64)> = None; // (col, direction)
+        let mut best_score = DUAL_TOL;
+        for j in 0..self.n {
+            let (dir, score) = match self.status[j] {
+                NbStatus::Basic => continue,
+                NbStatus::Lower => (1.0, self.rc[j]),
+                NbStatus::Upper => (-1.0, -self.rc[j]),
+            };
+            if score > best_score {
+                enter = Some((j, dir));
+                if bland {
+                    break; // first eligible (Bland)
+                }
+                best_score = score;
+            }
+        }
+        let Some((q, dir)) = enter else { return Ok(false) };
+
+        // --- ratio test ----------------------------------------------------
+        // Moving x_q by t*dir changes basics: xb_i -= t*dir*T[i][q].
+        let mut t_max = self.ubound[q]; // bound-flip limit
+        let mut leave: Option<(usize, NbStatus)> = None; // (row, leaving-to)
+        for i in 0..self.m {
+            let aiq = dir * self.at(i, q);
+            let bi = self.basis[i];
+            if aiq > EPS {
+                // xb_i decreases toward 0
+                let t = self.xb[i] / aiq;
+                if t < t_max - EPS || (t < t_max + EPS && leave.is_none()) {
+                    if t < t_max - EPS || leave.is_none() {
+                        t_max = t.max(0.0);
+                        leave = Some((i, NbStatus::Lower));
+                    }
+                }
+            } else if aiq < -EPS && self.ubound[bi].is_finite() {
+                // xb_i increases toward its upper bound
+                let t = (self.ubound[bi] - self.xb[i]) / (-aiq);
+                if t < t_max - EPS || (t < t_max + EPS && leave.is_none()) {
+                    if t < t_max - EPS || leave.is_none() {
+                        t_max = t.max(0.0);
+                        leave = Some((i, NbStatus::Upper));
+                    }
+                }
+            }
+        }
+        if t_max.is_infinite() {
+            return Err(Status::Unbounded);
+        }
+
+        // --- apply move ------------------------------------------------------
+        let t = t_max;
+        for i in 0..self.m {
+            self.xb[i] -= t * dir * self.at(i, q);
+        }
+        self.obj_val += t * dir.abs() * self.rc[q] * dir.signum(); // rc gain along dir
+        // NB: dir=+1 gain = t*rc; dir=-1 gain = -t*rc. Simplify below:
+        // (kept explicit for clarity)
+        // fix up: the expression above equals t*rc*dir
+        // (dir.abs()*dir.signum() == dir)
+
+        match leave {
+            None => {
+                // Pure bound flip.
+                self.status[q] = if dir > 0.0 { NbStatus::Upper } else { NbStatus::Lower };
+            }
+            Some((r, to)) => {
+                let new_val = self.nb_val(q) + t * dir;
+                let leaving = self.basis[r];
+                self.status[leaving] = to;
+                self.status[q] = NbStatus::Basic;
+                self.basis[r] = q;
+                self.xb[r] = new_val;
+                self.eliminate(r, q);
+            }
+        }
+        self.iters += 1;
+        Ok(true)
+    }
+
+    /// Gauss-eliminate column `q` using pivot row `r` (and update rc row).
+    fn eliminate(&mut self, r: usize, q: usize) {
+        let n = self.n;
+        let piv = self.a[r * n + q];
+        debug_assert!(piv.abs() > EPS, "zero pivot");
+        let inv = 1.0 / piv;
+        for v in self.a[r * n..(r + 1) * n].iter_mut() {
+            *v *= inv;
+        }
+        // Split borrows: copy pivot row once.
+        let prow: Vec<f64> = self.a[r * n..(r + 1) * n].to_vec();
+        for i in 0..self.m {
+            if i == r {
+                continue;
+            }
+            let f = self.a[i * n + q];
+            if f.abs() > EPS {
+                let row = &mut self.a[i * n..(i + 1) * n];
+                for (x, &pv) in row.iter_mut().zip(&prow) {
+                    *x -= f * pv;
+                }
+                row[q] = 0.0;
+            }
+        }
+        let f = self.rc[q];
+        if f.abs() > EPS {
+            for (x, &pv) in self.rc.iter_mut().zip(&prow) {
+                *x -= f * pv;
+            }
+            self.rc[q] = 0.0;
+        }
+    }
+
+    fn run(&mut self, c: &[f64]) -> Status {
+        self.price(c);
+        let bland_after = 20 * (self.m + self.n);
+        loop {
+            if self.iters > MAX_ITERS {
+                return Status::Limit;
+            }
+            match self.step(self.iters > bland_after) {
+                Ok(true) => continue,
+                Ok(false) => return Status::Optimal,
+                Err(s) => return s,
+            }
+        }
+    }
+}
+
+/// Solve the LP relaxation of `p` (integrality ignored).
+pub fn solve_lp(p: &Problem) -> Solution {
+    let ns = p.n_vars();
+    let m = p.rows.len();
+
+    // Shift variables to x' = x - lo ∈ [0, u'] and normalize rows to rhs>=0.
+    let shift: Vec<f64> = p.lo.clone();
+    let mut ub: Vec<f64> = p
+        .lo
+        .iter()
+        .zip(&p.up)
+        .map(|(l, u)| if u.is_finite() { u - l } else { f64::INFINITY })
+        .collect();
+
+    // Column count: structural + one slack per Le/Ge row + artificials.
+    let n_slack = p.rows.iter().filter(|r| r.cmp != Cmp::Eq).count();
+    // Worst case every row needs an artificial.
+    let n_total_max = ns + n_slack + m;
+
+    let mut a = vec![0.0; m * n_total_max];
+    let mut rhs = vec![0.0; m];
+    let mut basis = vec![usize::MAX; m];
+    let mut slack_idx = ns;
+    let mut art_idx = ns + n_slack;
+    let mut art_cols: Vec<usize> = Vec::new();
+
+    for (i, row) in p.rows.iter().enumerate() {
+        let mut b = row.rhs;
+        for &(j, c) in &row.coeffs {
+            b -= c * shift[j];
+        }
+        // Flip the row so b >= 0.
+        let (flip, cmp) = if b < 0.0 {
+            (
+                -1.0,
+                match row.cmp {
+                    Cmp::Le => Cmp::Ge,
+                    Cmp::Ge => Cmp::Le,
+                    Cmp::Eq => Cmp::Eq,
+                },
+            )
+        } else {
+            (1.0, row.cmp)
+        };
+        let b = b * flip;
+        rhs[i] = b;
+        for &(j, c) in &row.coeffs {
+            a[i * n_total_max + j] += flip * c;
+        }
+        match cmp {
+            Cmp::Le => {
+                a[i * n_total_max + slack_idx] = 1.0;
+                basis[i] = slack_idx;
+                slack_idx += 1;
+            }
+            Cmp::Ge => {
+                a[i * n_total_max + slack_idx] = -1.0;
+                slack_idx += 1;
+                a[i * n_total_max + art_idx] = 1.0;
+                basis[i] = art_idx;
+                art_cols.push(art_idx);
+                art_idx += 1;
+            }
+            Cmp::Eq => {
+                a[i * n_total_max + art_idx] = 1.0;
+                basis[i] = art_idx;
+                art_cols.push(art_idx);
+                art_idx += 1;
+            }
+        }
+    }
+    let n = art_idx;
+
+    // Compact tableau to the true column count.
+    let mut a2 = vec![0.0; m * n];
+    for i in 0..m {
+        a2[i * n..(i + 1) * n].copy_from_slice(&a[i * n_total_max..i * n_total_max + n]);
+    }
+
+    ub.resize(n, f64::INFINITY);
+    // Artificials are [0, inf) in phase 1; pinned to 0 in phase 2.
+    let mut status = vec![NbStatus::Lower; n];
+    for i in 0..m {
+        status[basis[i]] = NbStatus::Basic;
+    }
+
+    let mut t = Tableau {
+        m,
+        n,
+        n_struct: ns,
+        a: a2,
+        xb: rhs,
+        basis,
+        status,
+        ubound: ub,
+        rc: vec![0.0; n],
+        obj_val: 0.0,
+        iters: 0,
+    };
+
+    // ---- Phase 1: maximize -sum(artificials) ------------------------------
+    if !art_cols.is_empty() {
+        let mut c1 = vec![0.0; n];
+        for &j in &art_cols {
+            c1[j] = -1.0;
+        }
+        let s = t.run(&c1);
+        if s == Status::Unbounded {
+            return Solution { status: Status::Infeasible, obj: f64::NEG_INFINITY, x: vec![] };
+        }
+        if t.obj_val < -1e-6 {
+            return Solution { status: Status::Infeasible, obj: f64::NEG_INFINITY, x: vec![] };
+        }
+        // Pin artificials to zero so they never re-enter.
+        for &j in &art_cols {
+            t.ubound[j] = 0.0;
+        }
+    }
+
+    // ---- Phase 2: maximize the real objective -----------------------------
+    let mut c2 = vec![0.0; n];
+    c2[..ns].copy_from_slice(&p.obj);
+    let s2 = t.run(&c2);
+    if s2 == Status::Unbounded {
+        return Solution { status: Status::Unbounded, obj: f64::INFINITY, x: vec![] };
+    }
+
+    // ---- Extract ----------------------------------------------------------
+    let mut x = vec![0.0; ns];
+    for j in 0..ns {
+        x[j] = shift[j]
+            + match t.status[j] {
+                NbStatus::Lower => 0.0,
+                NbStatus::Upper => t.ubound[j],
+                NbStatus::Basic => 0.0, // filled below
+            };
+    }
+    for i in 0..m {
+        let j = t.basis[i];
+        if j < ns {
+            x[j] = shift[j] + t.xb[i];
+        }
+    }
+    let obj = p.eval_obj(&x);
+    let status = if s2 == Status::Limit { Status::Limit } else { Status::Optimal };
+    Solution { status, obj, x }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::model::{Cmp, Problem};
+
+    fn assert_opt(sol: &Solution, obj: f64, tol: f64) {
+        assert_eq!(sol.status, Status::Optimal, "{sol:?}");
+        assert!((sol.obj - obj).abs() < tol, "obj={} expect={}", sol.obj, obj);
+    }
+
+    #[test]
+    fn basic_2d() {
+        // max 3x+2y st x+y<=4, x+3y<=6, x,y>=0 -> (4,0) obj 12
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, f64::INFINITY, 3.0);
+        let y = p.cont("y", 0.0, f64::INFINITY, 2.0);
+        p.constrain("c1", vec![(x, 1.0), (y, 1.0)], Cmp::Le, 4.0);
+        p.constrain("c2", vec![(x, 1.0), (y, 3.0)], Cmp::Le, 6.0);
+        assert_opt(&solve_lp(&p), 12.0, 1e-6);
+    }
+
+    #[test]
+    fn upper_bounds_implicit() {
+        // max x+y st x<=2 (bound), y<=3 (bound), x+y<=4 -> obj 4
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, 2.0, 1.0);
+        let y = p.cont("y", 0.0, 3.0, 1.0);
+        p.constrain("c", vec![(x, 1.0), (y, 1.0)], Cmp::Le, 4.0);
+        let s = solve_lp(&p);
+        assert_opt(&s, 4.0, 1e-6);
+        assert!(s.x[0] <= 2.0 + 1e-9 && s.x[1] <= 3.0 + 1e-9);
+    }
+
+    #[test]
+    fn ge_and_eq_constraints() {
+        // max -x-y st x+y>=3, x-y=1 -> x=2,y=1 obj -3
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, f64::INFINITY, -1.0);
+        let y = p.cont("y", 0.0, f64::INFINITY, -1.0);
+        p.constrain("g", vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 3.0);
+        p.constrain("e", vec![(x, 1.0), (y, -1.0)], Cmp::Eq, 1.0);
+        let s = solve_lp(&p);
+        assert_opt(&s, -3.0, 1e-6);
+        assert!((s.x[0] - 2.0).abs() < 1e-6);
+        assert!((s.x[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, 1.0, 1.0);
+        p.constrain("c", vec![(x, 1.0)], Cmp::Ge, 5.0);
+        assert_eq!(solve_lp(&p).status, Status::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut p = Problem::new();
+        let _ = p.cont("x", 0.0, f64::INFINITY, 1.0);
+        assert_eq!(solve_lp(&p).status, Status::Unbounded);
+    }
+
+    #[test]
+    fn negative_lower_bounds() {
+        // max x st -5<=x<=-2 -> -2
+        let mut p = Problem::new();
+        let x = p.cont("x", -5.0, -2.0, 1.0);
+        p.constrain("c", vec![(x, 1.0)], Cmp::Ge, -10.0);
+        let s = solve_lp(&p);
+        assert_opt(&s, -2.0, 1e-6);
+    }
+
+    #[test]
+    fn degenerate_transportation() {
+        // Balanced 2x2 transportation problem (equalities, degenerate).
+        // supplies [3,2], demands [2,3]; costs minimize: c11=1,c12=4,c21=2,c22=1
+        // min -> max of negative: optimum ships x11=2, x12=1, x22=2 cost 8.
+        let mut p = Problem::new();
+        let x11 = p.cont("x11", 0.0, f64::INFINITY, -1.0);
+        let x12 = p.cont("x12", 0.0, f64::INFINITY, -4.0);
+        let x21 = p.cont("x21", 0.0, f64::INFINITY, -2.0);
+        let x22 = p.cont("x22", 0.0, f64::INFINITY, -1.0);
+        p.constrain("s1", vec![(x11, 1.0), (x12, 1.0)], Cmp::Eq, 3.0);
+        p.constrain("s2", vec![(x21, 1.0), (x22, 1.0)], Cmp::Eq, 2.0);
+        p.constrain("d1", vec![(x11, 1.0), (x21, 1.0)], Cmp::Eq, 2.0);
+        p.constrain("d2", vec![(x12, 1.0), (x22, 1.0)], Cmp::Eq, 3.0);
+        let s = solve_lp(&p);
+        assert_opt(&s, -8.0, 1e-6);
+    }
+
+    #[test]
+    fn random_lps_respect_constraints() {
+        use crate::rngx::Rng;
+        // property: for random feasible-by-construction LPs the returned
+        // point satisfies every constraint and bound.
+        let mut rng = Rng::new(99);
+        for case in 0..60 {
+            let nv = 2 + rng.below(6);
+            let nc = 1 + rng.below(6);
+            let mut p = Problem::new();
+            let vars: Vec<_> = (0..nv)
+                .map(|i| {
+                    p.cont(&format!("v{i}"), 0.0, rng.uniform(0.5, 10.0), rng.uniform(-2.0, 3.0))
+                })
+                .collect();
+            for c in 0..nc {
+                let coeffs: Vec<_> = vars
+                    .iter()
+                    .map(|&v| (v, rng.uniform(0.0, 2.0)))
+                    .collect();
+                // rhs chosen >= 0 so x=0 is feasible
+                p.constrain(&format!("c{c}"), coeffs, Cmp::Le, rng.uniform(1.0, 20.0));
+            }
+            let s = solve_lp(&p);
+            assert_eq!(s.status, Status::Optimal, "case {case}");
+            assert!(p.is_feasible(&s.x, 1e-6), "case {case}: {:?}", s.x);
+            // optimal must be at least as good as origin (obj 0 requires all
+            // positive-coefficient vars... just check >= sum of negatives)
+            assert!(s.obj >= -1e-9, "case {case}: obj {}", s.obj);
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Property-testing helper (proptest is unavailable in the offline crate
+//! set).  `props::check` runs a closure over N seeded random cases and, on
+//! failure, reports the seed so the case can be replayed exactly.
+
+pub mod props {
+    use crate::rngx::Rng;
+
+    /// Run `f` for `cases` seeded RNGs derived from `root_seed`; panic with
+    /// the failing seed on the first error returned.
+    pub fn check<F>(root_seed: u64, cases: usize, mut f: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        for case in 0..cases {
+            let seed = root_seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(case as u64);
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!("property failed at case {case} (seed {seed}): {msg}");
+            }
+        }
+    }
+
+    /// Assert helper producing `Result` for use inside `check` closures.
+    #[macro_export]
+    macro_rules! prop_assert {
+        ($cond:expr, $($fmt:tt)*) => {
+            if !($cond) {
+                return Err(format!($($fmt)*));
+            }
+        };
+    }
+}

@@ -1,0 +1,167 @@
+//! Workload trace generators: synthetic equivalents of the paper's PDF
+//! (~200k documents, three types processed sequentially) and video
+//! (~410k clips, two categories) corpora.
+//!
+//! The regime *structure* — sequential type switches with distinct feature
+//! distributions — is what the observation/adaptation layers react to; item
+//! contents are irrelevant (DESIGN.md §Hardware-Adaptation).
+
+pub mod pdf;
+pub mod video;
+
+use crate::rngx::Rng;
+use crate::sim::items::Item;
+
+/// A source of input items.  `None` ends the trace.
+pub trait Trace {
+    fn next_item(&mut self, rng: &mut Rng) -> Option<Item>;
+    /// Number of distinct ground-truth regimes (clustering evaluation).
+    fn n_regimes(&self) -> usize;
+}
+
+/// A regime phase: `count` items drawn from one distribution.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub regime: u8,
+    pub count: u64,
+    pub sampler: ItemDist,
+}
+
+/// Parametric item distribution (lognormal token/pixel loads).
+#[derive(Debug, Clone, Copy)]
+pub struct ItemDist {
+    /// lognormal (mu, sigma) of prefill tokens
+    pub tokens_in: (f64, f64),
+    /// lognormal (mu, sigma) of decode tokens
+    pub tokens_out: (f64, f64),
+    /// lognormal (mu, sigma) of megapixels
+    pub pixels_m: (f64, f64),
+    /// lognormal (mu, sigma) of frames
+    pub frames: (f64, f64),
+    /// input record size, MB (lognormal)
+    pub size_mb: (f64, f64),
+}
+
+impl ItemDist {
+    pub fn sample(&self, regime: u8, rng: &mut Rng) -> Item {
+        let ln = |rng: &mut Rng, (mu, sigma): (f64, f64)| rng.lognormal(mu, sigma);
+        Item {
+            attrs: crate::sim::items::ItemAttrs {
+                tokens_in: ln(rng, self.tokens_in),
+                tokens_out: ln(rng, self.tokens_out),
+                pixels_m: ln(rng, self.pixels_m),
+                frames: ln(rng, self.frames),
+            },
+            size_mb: ln(rng, self.size_mb),
+            regime,
+        }
+    }
+
+    /// Mean of the lognormal tokens_in (analytics/tests).
+    pub fn mean_tokens_in(&self) -> f64 {
+        (self.tokens_in.0 + 0.5 * self.tokens_in.1 * self.tokens_in.1).exp()
+    }
+}
+
+/// Sequential-phase trace (the paper processes dataset segments by type).
+pub struct PhasedTrace {
+    phases: Vec<Phase>,
+    idx: usize,
+    emitted_in_phase: u64,
+    n_regimes: usize,
+}
+
+impl PhasedTrace {
+    pub fn new(phases: Vec<Phase>) -> Self {
+        let n_regimes = phases
+            .iter()
+            .map(|p| p.regime as usize + 1)
+            .max()
+            .unwrap_or(0);
+        PhasedTrace { phases, idx: 0, emitted_in_phase: 0, n_regimes }
+    }
+
+    /// Total items across phases.
+    pub fn total(&self) -> u64 {
+        self.phases.iter().map(|p| p.count).sum()
+    }
+}
+
+impl Trace for PhasedTrace {
+    fn next_item(&mut self, rng: &mut Rng) -> Option<Item> {
+        while self.idx < self.phases.len() {
+            let ph = &self.phases[self.idx];
+            if self.emitted_in_phase < ph.count {
+                self.emitted_in_phase += 1;
+                return Some(ph.sampler.sample(ph.regime, rng));
+            }
+            self.idx += 1;
+            self.emitted_in_phase = 0;
+        }
+        None
+    }
+
+    fn n_regimes(&self) -> usize {
+        self.n_regimes
+    }
+}
+
+/// Endless single-regime trace (isolated-operator benches).
+pub struct UniformTrace {
+    pub dist: ItemDist,
+    pub regime: u8,
+}
+
+impl Trace for UniformTrace {
+    fn next_item(&mut self, rng: &mut Rng) -> Option<Item> {
+        Some(self.dist.sample(self.regime, rng))
+    }
+
+    fn n_regimes(&self) -> usize {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dist(mu: f64) -> ItemDist {
+        ItemDist {
+            tokens_in: (mu, 0.3),
+            tokens_out: (4.0, 0.3),
+            pixels_m: (0.0, 0.1),
+            frames: (0.0, 0.0),
+            size_mb: (0.0, 0.1),
+        }
+    }
+
+    #[test]
+    fn phased_trace_switches_and_ends() {
+        let mut t = PhasedTrace::new(vec![
+            Phase { regime: 0, count: 10, sampler: dist(5.0) },
+            Phase { regime: 1, count: 5, sampler: dist(8.0) },
+        ]);
+        let mut rng = Rng::new(0);
+        let mut regimes = Vec::new();
+        while let Some(item) = t.next_item(&mut rng) {
+            regimes.push(item.regime);
+        }
+        assert_eq!(regimes.len(), 15);
+        assert_eq!(&regimes[..10], &[0; 10]);
+        assert_eq!(&regimes[10..], &[1; 5]);
+        assert_eq!(t.n_regimes(), 2);
+    }
+
+    #[test]
+    fn regimes_statistically_distinct() {
+        let mut rng = Rng::new(1);
+        let d0 = dist(5.0);
+        let d1 = dist(8.0);
+        let m0: f64 =
+            (0..500).map(|_| d0.sample(0, &mut rng).attrs.tokens_in).sum::<f64>() / 500.0;
+        let m1: f64 =
+            (0..500).map(|_| d1.sample(1, &mut rng).attrs.tokens_in).sum::<f64>() / 500.0;
+        assert!(m1 > 5.0 * m0, "regimes must differ strongly: {m0} vs {m1}");
+    }
+}

@@ -1,0 +1,206 @@
+//! PDF curation pipeline + document trace (paper §8.1):
+//! 17 operators across five stages — file I/O, parsing & layout detection,
+//! block segmentation, modality-specific LLM OCR (3 NPU operators), and
+//! aggregation — expanding each document into ~120 content blocks.
+//! Trace: three document types processed sequentially (academic papers,
+//! annual reports, financial reports).
+
+use crate::config::{
+    ConfigSpace, CostW, FeatureExtractor, OperatorKind, OperatorSpec, PipelineSpec, ServiceModel,
+};
+use crate::workload::{ItemDist, Phase, PhasedTrace};
+
+fn cpu_op(
+    name: &str,
+    cpu: f64,
+    mem_gb: f64,
+    base_rate: f64,
+    cost: CostW,
+    ref_cost: f64,
+    fanout: f64,
+    out_mb: f64,
+    child_scale: [f64; 4],
+) -> OperatorSpec {
+    OperatorSpec {
+        name: name.into(),
+        kind: OperatorKind::CpuSync,
+        cpu,
+        mem_gb,
+        accels: 0,
+        fanout,
+        out_mb,
+        start_s: 2.0,
+        stop_s: 1.0,
+        cold_s: 4.0,
+        tunable: false,
+        config_space: ConfigSpace::default(),
+        service: ServiceModel::Cpu { base_rate, ref_cost, cost },
+        features: FeatureExtractor::Cost,
+        child_scale,
+        queue_cap: 256,
+    }
+}
+
+fn llm_ocr_op(name: &str, peak_tok_rate: f64, prefix_share: f64) -> OperatorSpec {
+    OperatorSpec {
+        name: name.into(),
+        kind: OperatorKind::AccelAsync,
+        cpu: 8.0,
+        mem_gb: 32.0,
+        accels: 1,
+        fanout: 1.0,
+        out_mb: 0.05,
+        start_s: 8.0,
+        stop_s: 2.0,
+        // LLM engine restart: weight load + warmup (the paper's h_cold).
+        cold_s: 25.0,
+        tunable: true,
+        config_space: ConfigSpace::llm_engine(),
+        service: ServiceModel::Accel {
+            peak_tok_rate,
+            batch_half: 12.0,
+            decode_weight: 4.0,
+            prefix_share,
+            mem_base_mb: 18000.0,
+            kv_mb_per_token: 0.025,
+            act_mb_per_token: 2.8,
+            mem_noise_sigma: 0.03,
+        },
+        features: FeatureExtractor::LlmTokens,
+        child_scale: [1.0; 4],
+        queue_cap: 512,
+    }
+}
+
+/// The 17-operator PDF curation pipeline.
+pub fn pipeline() -> PipelineSpec {
+    let no_scale = [1.0; 4];
+    let ops = vec![
+        // --- stage 1: file I/O -------------------------------------------
+        cpu_op("fetch", 0.5, 1.0, 20.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 1.0, 0.4, no_scale),
+        cpu_op("decrypt", 0.5, 1.0, 16.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 1.0, 0.4, no_scale),
+        // --- stage 2: parsing + layout detection -------------------------
+        cpu_op("parse_pdf", 2.0, 4.0, 4.0, CostW { frames: 1.0, konst: 2.0, ..Default::default() }, 14.0, 1.0, 0.6, no_scale),
+        cpu_op("layout_detect", 4.0, 6.0, 2.2, CostW { frames: 1.0, konst: 1.0, ..Default::default() }, 13.0, 1.0, 0.7, no_scale),
+        // --- stage 3: block segmentation ----------------------------------
+        // doc -> 12 pages
+        cpu_op("split_pages", 1.0, 2.0, 10.0, CostW { frames: 1.0, ..Default::default() }, 12.0, 12.0, 0.5,
+            [1.0 / 12.0, 1.0 / 12.0, 1.0 / 12.0, 1.0 / 12.0]),
+        cpu_op("render_page", 2.0, 3.0, 14.0, CostW { pixels_m: 1.0, konst: 0.2, ..Default::default() }, 1.2, 1.0, 1.2, no_scale),
+        // page -> 10 blocks
+        cpu_op("detect_blocks", 2.0, 2.0, 9.0, CostW { pixels_m: 1.0, konst: 0.1, ..Default::default() }, 1.1, 10.0, 0.15,
+            [0.1, 0.1, 0.1, 1.0]),
+        cpu_op("classify_block", 1.0, 1.0, 70.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 1.0, 0.15, no_scale),
+        // only ~55% of blocks need model-based OCR (text crops OCR'd fast path)
+        cpu_op("route_modality", 0.5, 1.0, 150.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 0.55, 0.15, no_scale),
+        // --- stage 4: modality-specific OCR (NPU) --------------------------
+        llm_ocr_op("text_ocr", 5200.0, 0.55),
+        llm_ocr_op("table_ocr", 4200.0, 0.30),
+        llm_ocr_op("formula_ocr", 4800.0, 0.20),
+        // --- stage 5: aggregation ------------------------------------------
+        cpu_op("merge_blocks", 1.0, 1.0, 90.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 1.0, 0.08, no_scale),
+        cpu_op("dedup", 1.0, 2.0, 80.0, CostW { tokens_out: 0.004, konst: 0.5, ..Default::default() }, 1.0, 0.95, 0.08, no_scale),
+        cpu_op("quality_filter", 1.0, 1.0, 100.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 0.9, 0.08, no_scale),
+        // ~56 surviving blocks aggregate back into one document record
+        cpu_op("aggregate_doc", 1.0, 2.0, 110.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 1.0 / 56.4, 2.0,
+            [56.4, 56.4, 1.0, 12.0]),
+        cpu_op("write_out", 0.5, 1.0, 12.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 1.0, 2.0, no_scale),
+    ];
+    PipelineSpec { name: "pdf".into(), operators: ops }
+}
+
+/// Document distributions per type.  tokens_* are *document totals*; the
+/// split/detect stages scale them down to per-block loads (÷120).
+fn academic() -> ItemDist {
+    ItemDist {
+        tokens_in: (ln(36_000.0), 0.18),
+        tokens_out: (ln(7_200.0), 0.18),
+        pixels_m: (ln(12.0), 0.25),
+        frames: (ln(12.0), 0.20),
+        size_mb: (ln(2.0), 0.4),
+    }
+}
+
+/// Annual reports: long, table-heavy documents.
+fn annual_report() -> ItemDist {
+    ItemDist {
+        tokens_in: (ln(96_000.0), 0.16),
+        tokens_out: (ln(19_200.0), 0.16),
+        pixels_m: (ln(30.0), 0.25),
+        frames: (ln(30.0), 0.20),
+        size_mb: (ln(8.0), 0.4),
+    }
+}
+
+/// Financial reports: short, dense numeric pages.
+fn financial_report() -> ItemDist {
+    ItemDist {
+        tokens_in: (ln(12_000.0), 0.16),
+        tokens_out: (ln(2_400.0), 0.16),
+        pixels_m: (ln(8.0), 0.25),
+        frames: (ln(8.0), 0.20),
+        size_mb: (ln(1.5), 0.4),
+    }
+}
+
+fn ln(x: f64) -> f64 {
+    x.ln()
+}
+
+/// The three-regime PDF trace, scaled to `n_docs` total (paper: ~200k).
+pub fn trace(n_docs: u64) -> PhasedTrace {
+    let a = (n_docs as f64 * 0.4) as u64;
+    let b = (n_docs as f64 * 0.35) as u64;
+    let c = n_docs - a - b;
+    PhasedTrace::new(vec![
+        Phase { regime: 0, count: a, sampler: academic() },
+        Phase { regime: 1, count: b, sampler: annual_report() },
+        Phase { regime: 2, count: c, sampler: financial_report() },
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Trace;
+
+    #[test]
+    fn pipeline_shape_matches_paper() {
+        let p = pipeline();
+        assert_eq!(p.n_ops(), 17, "17 operators across five stages");
+        let npu_ops: Vec<_> = p.operators.iter().filter(|o| o.accels > 0).collect();
+        assert_eq!(npu_ops.len(), 3, "three LLM-based OCR operators on NPU");
+        assert!(npu_ops.iter().all(|o| o.tunable));
+        // ~120 content blocks per document at the OCR stages
+        let (d, d_o) = p.amplification();
+        let ocr_idx = p.operators.iter().position(|o| o.name == "text_ocr").unwrap();
+        assert!((d[ocr_idx] - 66.0).abs() < 10.0, "blocks reaching OCR: {}", d[ocr_idx]);
+        let blocks_idx = p.operators.iter().position(|o| o.name == "classify_block").unwrap();
+        assert!((d[blocks_idx] - 120.0).abs() < 1.0, "~120 blocks/doc: {}", d[blocks_idx]);
+        assert!((d_o - 1.0).abs() < 0.15, "one output doc per input doc: {d_o}");
+    }
+
+    #[test]
+    fn regimes_have_distinct_block_loads() {
+        // per-block tokens_in = doc_tokens / 120
+        let am = academic().mean_tokens_in() / 120.0;
+        let an = annual_report().mean_tokens_in() / 120.0;
+        let fi = financial_report().mean_tokens_in() / 120.0;
+        assert!(an > 1.8 * am, "annual blocks much heavier: {am} vs {an}");
+        assert!(am > 1.3 * fi, "academic heavier than financial: {am} vs {fi}");
+    }
+
+    #[test]
+    fn trace_phases_sequential() {
+        let mut t = trace(100);
+        let mut rng = crate::rngx::Rng::new(0);
+        let mut seen = Vec::new();
+        while let Some(i) = t.next_item(&mut rng) {
+            seen.push(i.regime);
+        }
+        assert_eq!(seen.len(), 100);
+        assert_eq!(t.n_regimes(), 3);
+        // strictly non-decreasing regime sequence
+        assert!(seen.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

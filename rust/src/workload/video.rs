@@ -1,0 +1,196 @@
+//! Video curation pipeline + clip trace (paper §8.1): 9 operators across
+//! four stages — scene-based splitting, aesthetic filtering (CLIP, NPU),
+//! OCR-based text filtering (CRAFT, NPU), and LLM captioning
+//! (Qwen2.5-VL-7B, NPU).  Trace: short-form clips then long-form videos.
+
+use crate::config::{
+    ConfigSpace, CostW, FeatureExtractor, OperatorKind, OperatorSpec, PipelineSpec, ServiceModel,
+};
+use crate::workload::{ItemDist, Phase, PhasedTrace};
+
+fn cpu_op(
+    name: &str,
+    cpu: f64,
+    mem_gb: f64,
+    base_rate: f64,
+    cost: CostW,
+    ref_cost: f64,
+    fanout: f64,
+    out_mb: f64,
+    child_scale: [f64; 4],
+) -> OperatorSpec {
+    OperatorSpec {
+        name: name.into(),
+        kind: OperatorKind::CpuSync,
+        cpu,
+        mem_gb,
+        accels: 0,
+        fanout,
+        out_mb,
+        start_s: 2.0,
+        stop_s: 1.0,
+        cold_s: 4.0,
+        tunable: false,
+        config_space: ConfigSpace::default(),
+        service: ServiceModel::Cpu { base_rate, ref_cost, cost },
+        features: FeatureExtractor::Cost,
+        child_scale,
+        queue_cap: 192,
+    }
+}
+
+fn vision_op(
+    name: &str,
+    peak_tok_rate: f64,
+    fanout: f64,
+    out_mb: f64,
+    mem_base_mb: f64,
+) -> OperatorSpec {
+    OperatorSpec {
+        name: name.into(),
+        kind: OperatorKind::AccelAsync,
+        cpu: 4.0,
+        mem_gb: 16.0,
+        accels: 1,
+        fanout,
+        out_mb,
+        start_s: 5.0,
+        stop_s: 2.0,
+        cold_s: 12.0,
+        tunable: true,
+        config_space: ConfigSpace::llm_engine(),
+        service: ServiceModel::Accel {
+            peak_tok_rate,
+            batch_half: 10.0,
+            decode_weight: 1.0,
+            prefix_share: 0.05,
+            mem_base_mb,
+            kv_mb_per_token: 0.012,
+            act_mb_per_token: 1.1,
+            mem_noise_sigma: 0.025,
+        },
+        features: FeatureExtractor::Vision,
+        child_scale: [1.0; 4],
+        queue_cap: 384,
+    }
+}
+
+/// The 9-operator video curation pipeline.
+pub fn pipeline() -> PipelineSpec {
+    let no_scale = [1.0; 4];
+    let ops = vec![
+        // --- stage 1: scene-based splitting --------------------------------
+        cpu_op("probe", 0.5, 1.0, 18.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 1.0, 0.5, no_scale),
+        // decode cost scales with frames x resolution; emits raw frame groups
+        cpu_op("decode", 4.0, 8.0, 5.0, CostW { frames: 0.004, ..Default::default() }, 2.4, 1.0, 24.0, no_scale),
+        // video -> 6 scene clips
+        cpu_op("scene_split", 2.0, 4.0, 8.0, CostW { frames: 0.002, ..Default::default() }, 1.2, 6.0, 10.0,
+            [1.0 / 6.0, 1.0, 1.0, 1.0 / 6.0]),
+        cpu_op("sample_frames", 1.0, 2.0, 26.0, CostW { frames: 0.01, konst: 0.2, ..Default::default() }, 1.2, 1.0, 5.0, no_scale),
+        // --- stage 2: aesthetic filtering (CLIP, NPU) -----------------------
+        vision_op("clip_score", 26_000.0, 0.7, 5.0, 6000.0),
+        // --- stage 3: OCR-based text filtering (CRAFT, NPU) -----------------
+        vision_op("text_detect", 30_000.0, 0.85, 5.0, 5000.0),
+        cpu_op("quality_filter", 1.0, 1.0, 60.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 0.9, 4.0, no_scale),
+        // --- stage 4: LLM captioning (Qwen2.5-VL-7B, NPU) -------------------
+        OperatorSpec {
+            name: "caption".into(),
+            kind: OperatorKind::AccelAsync,
+            cpu: 8.0,
+            mem_gb: 32.0,
+            accels: 1,
+            fanout: 1.0,
+            out_mb: 0.02,
+            start_s: 8.0,
+            stop_s: 2.0,
+            cold_s: 30.0,
+            tunable: true,
+            config_space: ConfigSpace::llm_engine(),
+            service: ServiceModel::Accel {
+                peak_tok_rate: 4600.0,
+                batch_half: 12.0,
+                decode_weight: 4.0,
+                prefix_share: 0.4,
+                mem_base_mb: 20000.0,
+                kv_mb_per_token: 0.03,
+                act_mb_per_token: 2.6,
+                mem_noise_sigma: 0.03,
+            },
+            features: FeatureExtractor::LlmTokens,
+            child_scale: [1.0; 4],
+            queue_cap: 512,
+        },
+        cpu_op("package", 0.5, 1.0, 40.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 1.0, 1.0, no_scale),
+    ];
+    PipelineSpec { name: "video".into(), operators: ops }
+}
+
+fn ln(x: f64) -> f64 {
+    x.ln()
+}
+
+/// Short-form clips: 10–30 s, ≤720p.  tokens_in is the *vision-token* load
+/// per video (sampled frames × patches); scene_split divides it per clip.
+fn short_form() -> ItemDist {
+    ItemDist {
+        tokens_in: (ln(5_400.0), 0.20),
+        tokens_out: (ln(480.0), 0.25),
+        pixels_m: (ln(0.9), 0.20),
+        frames: (ln(600.0), 0.30),
+        size_mb: (ln(18.0), 0.4),
+    }
+}
+
+/// Long-form videos: 5–10 min, 1080p–4K.
+fn long_form() -> ItemDist {
+    ItemDist {
+        tokens_in: (ln(24_000.0), 0.18),
+        tokens_out: (ln(900.0), 0.18),
+        pixels_m: (ln(4.5), 0.35),
+        frames: (ln(10_800.0), 0.25),
+        size_mb: (ln(420.0), 0.4),
+    }
+}
+
+/// The two-regime video trace, scaled to `n_videos` total (paper: ~410k).
+pub fn trace(n_videos: u64) -> PhasedTrace {
+    let short = (n_videos as f64 * 0.65) as u64;
+    PhasedTrace::new(vec![
+        Phase { regime: 0, count: short, sampler: short_form() },
+        Phase { regime: 1, count: n_videos - short, sampler: long_form() },
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Trace;
+
+    #[test]
+    fn pipeline_shape_matches_paper() {
+        let p = pipeline();
+        assert_eq!(p.n_ops(), 9, "9 operators across four stages");
+        let npu: Vec<_> = p.operators.iter().filter(|o| o.accels > 0).collect();
+        assert_eq!(npu.len(), 3, "CLIP + CRAFT + captioning on NPU");
+        assert_eq!(npu[2].name, "caption");
+        let cpu_count = p.operators.iter().filter(|o| o.accels == 0).count();
+        assert_eq!(cpu_count, 6, "remaining six CPU-bound");
+    }
+
+    #[test]
+    fn long_form_is_much_heavier() {
+        let s = short_form();
+        let l = long_form();
+        assert!(l.mean_tokens_in() > 3.0 * s.mean_tokens_in());
+        // long-form raw size stresses the network (placement matters more
+        // on the video pipeline — Fig. 3)
+        assert!(l.size_mb.0 > s.size_mb.0 + 2.0);
+    }
+
+    #[test]
+    fn trace_two_regimes() {
+        let t = trace(1000);
+        assert_eq!(t.n_regimes(), 2);
+        assert_eq!(t.total(), 1000);
+    }
+}

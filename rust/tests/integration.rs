@@ -1,0 +1,204 @@
+//! Integration tests: closed loop, PJRT round-trip vs native oracle, plan
+//! feasibility invariants, failure injection.
+
+use std::time::Duration;
+
+use trident::config::{ClusterSpec, TridentConfig};
+use trident::coordinator::{Coordinator, Policy, Variant};
+use trident::rngx::Rng;
+use trident::runtime::{fit_hyper, GpBackend};
+use trident::scheduling::{solve, MilpInput, OpSched};
+use trident::sim::ItemAttrs;
+use trident::workload::pdf;
+
+fn mini() -> Coordinator {
+    let mut cfg = TridentConfig::default();
+    cfg.native_gp = true;
+    cfg.tune_trigger = 32;
+    cfg.bo_budget = 8;
+    cfg.bo_init = 3;
+    cfg.milp_time_budget_ms = 800;
+    Coordinator::new(
+        pdf::pipeline(),
+        ClusterSpec::homogeneous(2, 128.0, 512.0, 4, 65536.0, 2500.0),
+        Box::new(pdf::trace(50_000)),
+        cfg,
+        Variant::trident(),
+        ItemAttrs { tokens_in: 36_000.0, tokens_out: 7_200.0, pixels_m: 12.0, frames: 12.0 },
+        5,
+    )
+}
+
+#[test]
+fn closed_loop_survives_regime_shifts_and_makes_progress() {
+    let mut c = mini();
+    let r = c.run(900.0);
+    assert!(r.throughput > 0.1, "{r:?}");
+    assert!(r.items_processed > 50);
+    // the control loop actually ran
+    assert!(!r.milp_ms.is_empty());
+    assert!(r.obs_overhead_ms >= 0.0);
+}
+
+/// The PJRT artifact and the native oracle must agree numerically.
+#[test]
+fn pjrt_matches_native_gp() {
+    let Ok(arts) = trident::runtime::Artifacts::load(&trident::runtime::Artifacts::default_dir())
+    else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let pjrt = GpBackend::Pjrt(arts);
+    let native = GpBackend::Native;
+    let mut rng = Rng::new(0);
+    for case in 0..5 {
+        let n = 5 + rng.below(40);
+        let xs: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..4).map(|_| rng.uniform(0.0, 2.0)).collect())
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + x[0] - 0.5 * x[1] + rng.normal(0.0, 0.05)).collect();
+        let qs: Vec<Vec<f64>> = (0..8)
+            .map(|_| (0..4).map(|_| rng.uniform(0.0, 2.0)).collect())
+            .collect();
+        let hyper = fit_hyper(&xs, &ys);
+        let a = pjrt.gp_predict(&xs, &ys, &qs, hyper).unwrap();
+        let b = native.gp_predict(&xs, &ys, &qs, hyper).unwrap();
+        for (i, ((ma, va), (mb, vb))) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (ma - mb).abs() < 2e-2 * (1.0 + mb.abs()),
+                "case {case} q{i}: mean {ma} vs {mb}"
+            );
+            assert!((va - vb).abs() < 5e-2 * (1.0 + vb.abs()), "case {case} q{i}: var {va} vs {vb}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_acquisition_matches_native() {
+    let Ok(arts) = trident::runtime::Artifacts::load(&trident::runtime::Artifacts::default_dir())
+    else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let pjrt = GpBackend::Pjrt(arts);
+    let native = GpBackend::Native;
+    let mut rng = Rng::new(1);
+    let n = 12;
+    let thetas: Vec<Vec<f64>> = (0..n).map(|_| (0..6).map(|_| rng.f64()).collect()).collect();
+    let uts: Vec<f64> = thetas.iter().map(|t| 5.0 + 4.0 * t[0]).collect();
+    let mems: Vec<f64> = thetas.iter().map(|t| 30.0 + 30.0 * t[0] * t[0]).collect();
+    let cands: Vec<Vec<f64>> = (0..20).map(|_| (0..6).map(|_| rng.f64()).collect()).collect();
+    let hu = fit_hyper(&thetas, &uts);
+    let hm = fit_hyper(&thetas, &mems);
+    let a = pjrt.acquisition(&thetas, &uts, &mems, &cands, hu, hm, 8.0, 55.0).unwrap();
+    let b = native.acquisition(&thetas, &uts, &mems, &cands, hu, hm, 8.0, 55.0).unwrap();
+    for (i, (pa, pb)) in a.iter().zip(&b).enumerate() {
+        assert!((pa.pof - pb.pof).abs() < 0.05, "cand {i}: pof {} vs {}", pa.pof, pb.pof);
+        assert!(
+            (pa.mu_ut - pb.mu_ut).abs() < 0.1 * (1.0 + pb.mu_ut.abs()),
+            "cand {i}: mu {} vs {}",
+            pa.mu_ut,
+            pb.mu_ut
+        );
+    }
+}
+
+/// Property: MILP plans are feasible under random scheduler states.
+#[test]
+fn milp_plans_always_feasible() {
+    let mut rng = Rng::new(7);
+    for case in 0..15 {
+        let k = 2 + rng.below(3);
+        let n = 3 + rng.below(5);
+        let nodes = ClusterSpec::homogeneous(k, 64.0, 256.0, 4, 65536.0, 1250.0).nodes;
+        let ops: Vec<OpSched> = (0..n)
+            .map(|i| {
+                let accel = rng.bool(0.3);
+                OpSched {
+                    name: format!("op{i}"),
+                    ut_cur: rng.uniform(0.5, 30.0),
+                    ut_cand: rng.bool(0.3).then(|| rng.uniform(1.0, 40.0)),
+                    n_new: 0,
+                    n_old: rng.below(6) as u32 + 1,
+                    cpu: if accel { 8.0 } else { rng.uniform(0.5, 4.0) },
+                    mem_gb: rng.uniform(1.0, 8.0),
+                    accels: accel as u32,
+                    out_mb: rng.uniform(0.05, 20.0),
+                    d_i: rng.uniform(0.5, 20.0),
+                    h_start: 2.0,
+                    h_stop: 1.0,
+                    h_cold: rng.uniform(5.0, 40.0),
+                    cur_x: (0..k).map(|_| rng.below(3) as u32).collect(),
+                }
+            })
+            .collect();
+        let input = MilpInput {
+            ops,
+            nodes,
+            d_o: rng.uniform(0.5, 5.0),
+            t_sched: 90.0,
+            lambda1: 1e-4,
+            lambda2: 1e-6,
+            b_max: 4,
+            placement_aware: rng.bool(0.7),
+            all_at_once: rng.bool(0.3),
+        };
+        let plan = solve(&input, Duration::from_secs(3));
+        // Plan invariants
+        for (i, o) in input.ops.iter().enumerate() {
+            assert_eq!(
+                plan.x[i].iter().sum::<u32>(),
+                plan.p[i],
+                "case {case}: placement consistency"
+            );
+            assert!(plan.p[i] >= 1, "case {case}: p>=1");
+            assert!(
+                plan.b[i] <= o.n_old.max(plan.p[i]),
+                "case {case}: rolling batch bound"
+            );
+        }
+        for kk in 0..k {
+            let acc: u32 = (0..n).map(|i| plan.x[i][kk] * input.ops[i].accels).sum();
+            assert!(acc <= 4, "case {case}: accel capacity");
+            let cpu: f64 = (0..n).map(|i| plan.x[i][kk] as f64 * input.ops[i].cpu).sum();
+            assert!(cpu <= 64.0 + 1e-6, "case {case}: cpu capacity");
+        }
+    }
+}
+
+/// Failure injection: an OOM-prone deployed configuration must not wedge
+/// the pipeline — the safety fallback reverts to defaults.
+#[test]
+fn oom_storm_recovers() {
+    let mut cfg = TridentConfig::default();
+    cfg.native_gp = true;
+    let mut variant = Variant::baseline(Policy::Static);
+    // Deploy an OOM-prone config on every tunable op from t=0.
+    let pl = pdf::pipeline();
+    variant.initial_configs = Some(
+        pl.operators
+            .iter()
+            .map(|o| o.tunable.then(|| vec![128.0, 16384.0, 32.0, 0.0, 0.0, 0.0]))
+            .collect(),
+    );
+    let mut c = Coordinator::new(
+        pl,
+        ClusterSpec::homogeneous(2, 128.0, 512.0, 4, 65536.0, 2500.0),
+        Box::new(pdf::trace(50_000)),
+        cfg,
+        variant,
+        ItemAttrs { tokens_in: 96_000.0, tokens_out: 19_200.0, pixels_m: 30.0, frames: 30.0 },
+        9,
+    );
+    let r = c.run(600.0);
+    assert!(r.oom_events > 0, "injection must trigger OOMs");
+    assert!(r.throughput > 0.01, "pipeline must keep making progress: {r:?}");
+}
+
+#[test]
+fn deterministic_runs_same_seed() {
+    let r1 = mini().run(300.0);
+    let r2 = mini().run(300.0);
+    assert_eq!(r1.items_processed, r2.items_processed);
+    assert!((r1.throughput - r2.throughput).abs() < 1e-12);
+}
