@@ -1,13 +1,24 @@
 //! Shared mini-harness for the paper-reproduction benches (criterion is
 //! unavailable in the offline crate set; each bench is a `harness = false`
 //! binary that prints the paper-style rows and persists results/).
+//!
+//! Simulation-bound benches fan their (workload, variant, seed) grids out
+//! across cores through `trident::harness` ([`run_cells`]); cells are
+//! seeded deterministically and share no state, so results match the old
+//! serial loops whenever every Trident MILP solve completes within its
+//! wall-clock budget (see the harness module docs for the anytime-solver
+//! caveat).  Wall-clock-measuring benches (rq6) stay serial so timings
+//! are not perturbed by sibling cells.
+
+#![allow(dead_code)] // each bench includes this module and uses a subset
 
 use trident::config::{ClusterSpec, TridentConfig};
-use trident::coordinator::{Coordinator, Policy, RunReport, Variant};
+use trident::coordinator::{Coordinator, RunReport, Variant};
+use trident::harness::{self, Job};
 use trident::sim::ItemAttrs;
 use trident::workload::{pdf, video, Trace};
 
-pub const MAX_SIM_S: f64 = 4.0 * 3600.0;
+pub const MAX_SIM_S: f64 = harness::MAX_SIM_S;
 
 pub fn cluster(nodes: usize) -> ClusterSpec {
     ClusterSpec::homogeneous(nodes, 256.0, 1024.0, 8, 65536.0, 12_500.0)
@@ -46,55 +57,56 @@ pub fn workload(name: &str) -> Workload {
     if name == "Video" { video_workload(items_for(name)) } else { pdf_workload(items_for(name)) }
 }
 
-/// Run one (workload, variant) pair to completion on the 8-node cluster.
-pub fn run(w: Workload, variant: Variant, seed: u64) -> RunReport {
+fn coordinator_for(wname: &str, variant: Variant, seed: u64, collect_mape: bool) -> Coordinator {
+    let w = workload(wname);
     let mut cfg = TridentConfig::default();
     cfg.native_gp = std::env::var("TRIDENT_NATIVE_GP").map(|v| v == "1").unwrap_or(false);
     let mut coord = Coordinator::new(w.pipeline, cluster(8), w.trace, cfg, variant, w.src, seed);
-    coord.run_to_completion(MAX_SIM_S)
+    coord.collect_mape = collect_mape;
+    coord
 }
 
-/// SCOOT's offline per-operator tuning phase: BO against a sustained
-/// isolated-operator evaluation at the *first* regime (the paper tunes
-/// offline before the run), then deploy statically.
-pub fn scoot_variant(pipeline: &trident::config::PipelineSpec, src: ItemAttrs) -> Variant {
-    use trident::adaptation::{ConfigTuner, Strategy, TunerConfig};
-    use trident::runtime::GpBackend;
-    let backend = GpBackend::from_env();
-    let nominal = trident::coordinator::nominal_attrs(pipeline, src);
-    let mut rng = trident::rngx::Rng::new(99);
-    let configs: Vec<Option<Vec<f64>>> = pipeline
-        .operators
+/// One grid cell for [`run_cells`]: a (workload, variant, seed) triple run
+/// to completion on the 8-node cluster.
+pub struct Cell {
+    pub label: String,
+    pub workload: &'static str,
+    pub variant: Variant,
+    pub seed: u64,
+    pub collect_mape: bool,
+}
+
+impl Cell {
+    pub fn new(label: impl Into<String>, workload: &'static str, variant: Variant, seed: u64) -> Cell {
+        Cell { label: label.into(), workload, variant, seed, collect_mape: false }
+    }
+}
+
+/// Worker count for [`run_cells`]: `TRIDENT_BENCH_JOBS` overrides the
+/// one-per-core default.  Cap it below the core count (or set it to 1)
+/// when strict Trident reproducibility matters on a loaded host — see the
+/// anytime-MILP caveat in the harness module docs.
+fn bench_workers() -> usize {
+    std::env::var("TRIDENT_BENCH_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(harness::default_workers)
+}
+
+/// Fan the cells out across cores; reports come back in cell order.
+pub fn run_cells(cells: &[Cell]) -> Vec<RunReport> {
+    let jobs: Vec<Job> = cells
         .iter()
-        .enumerate()
-        .map(|(i, o)| {
-            if !o.tunable {
-                return None;
-            }
-            let mut tuner = ConfigTuner::new(
-                o.config_space.clone(),
-                TunerConfig {
-                    strategy: Strategy::ConstrainedBo,
-                    budget: 30,
-                    n_init: 5,
-                    eta: 0.6,
-                    mem_limit_mb: 65_536.0 - 2048.0,
-                    seed: i as u64,
-                },
-            );
-            while !tuner.done() {
-                let theta = tuner.next_candidate(&backend);
-                let ut = trident::sim::service::true_unit_rate(&o.service, &theta, &nominal[i])
-                    * rng.lognormal(0.0, 0.05);
-                let mem = trident::sim::service::expected_mem(&o.service, &theta, &nominal[i])
-                    * rng.lognormal(0.02, 0.03);
-                let oom = mem > 65_536.0;
-                tuner.record(theta, ut, mem, oom);
-            }
-            tuner.best().map(|e| e.theta.clone())
-        })
+        .map(|c| Job::new(c.label.clone(), c.variant.clone(), c.seed))
         .collect();
-    let mut v = Variant::baseline(Policy::Scoot);
-    v.initial_configs = Some(configs);
-    v
+    harness::run_grid(&jobs, bench_workers(), |i, job| {
+        coordinator_for(cells[i].workload, job.variant.clone(), job.seed, cells[i].collect_mape)
+    })
+}
+
+/// SCOOT's offline tuning phase (now in the library so the CLI sweep can
+/// use it too).
+pub fn scoot_variant(pipeline: &trident::config::PipelineSpec, src: ItemAttrs) -> Variant {
+    harness::scoot_variant(pipeline, src)
 }

@@ -2,6 +2,9 @@
 //! pipelines, reported as speedup over Static.
 //! Paper: Trident 2.01x/1.88x > SCOOT 1.21x/1.17x > RayData 1.12x/1.18x >
 //! ContTune 1.04x/0.96x > DS2 0.87x/0.79x.
+//!
+//! The 12 (method, workload) cells are independent runs; they fan out
+//! across cores through the experiment harness.
 
 #[path = "common.rs"]
 mod common;
@@ -9,12 +12,9 @@ mod common;
 use trident::coordinator::{Policy, Variant};
 use trident::report::{f2, Table};
 
+const WORKLOADS: [&str; 2] = ["PDF", "Video"];
+
 fn main() {
-    let mut table = Table::new(
-        "Figure 2: end-to-end throughput (speedup vs Static)",
-        &["Method", "PDF items/s", "PDF speedup", "Video items/s", "Video speedup"],
-    );
-    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
     let methods: Vec<(&str, Box<dyn Fn(&common::Workload) -> Variant>)> = vec![
         ("Static", Box::new(|_| Variant::baseline(Policy::Static))),
         ("Ray Data", Box::new(|_| Variant::baseline(Policy::RayData))),
@@ -23,15 +23,31 @@ fn main() {
         ("SCOOT", Box::new(|w| common::scoot_variant(&w.pipeline, w.src))),
         ("Trident", Box::new(|_| Variant::trident())),
     ];
+    let mut cells = Vec::new();
     for (name, mk) in &methods {
-        let mut thr = Vec::new();
-        for wname in ["PDF", "Video"] {
+        for wname in WORKLOADS {
             let w = common::workload(wname);
-            let variant = mk(&w);
-            let r = common::run(w, variant, 7);
-            eprintln!("  {name} / {wname}: {:.3} items/s ({:.0}s)", r.throughput, r.duration_s);
-            thr.push(r.throughput);
+            cells.push(common::Cell::new(format!("{name}/{wname}"), wname, mk(&w), 7));
         }
+    }
+    let reports = common::run_cells(&cells);
+
+    let mut table = Table::new(
+        "Figure 2: end-to-end throughput (speedup vs Static)",
+        &["Method", "PDF items/s", "PDF speedup", "Video items/s", "Video speedup"],
+    );
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for (mi, (name, _)) in methods.iter().enumerate() {
+        let thr: Vec<f64> = (0..WORKLOADS.len())
+            .map(|j| {
+                let r = &reports[mi * WORKLOADS.len() + j];
+                eprintln!(
+                    "  {name} / {}: {:.3} items/s ({:.0}s)",
+                    WORKLOADS[j], r.throughput, r.duration_s
+                );
+                r.throughput
+            })
+            .collect();
         rows.push((name.to_string(), thr));
     }
     let base = rows[0].1.clone();

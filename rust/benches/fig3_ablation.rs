@@ -2,6 +2,8 @@
 //! Trident (100%).
 //! Paper: w/o observation 66.5/60.9 < w/o adaptation 79.6/78.1 <
 //! w/o placement 90.5/84.0 < w/o rolling 95.5/95.2.
+//!
+//! The 10 (variant, workload) cells fan out across cores.
 
 #[path = "common.rs"]
 mod common;
@@ -9,11 +11,9 @@ mod common;
 use trident::coordinator::Variant;
 use trident::report::Table;
 
+const WORKLOADS: [&str; 2] = ["PDF", "Video"];
+
 fn main() {
-    let mut table = Table::new(
-        "Figure 3: ablation (throughput normalized to full Trident = 100%)",
-        &["Variant", "PDF", "Video"],
-    );
     let variants: Vec<(&str, Box<dyn Fn() -> Variant>)> = vec![
         ("Trident (full)", Box::new(Variant::trident)),
         ("w/o Observation Layer", Box::new(|| {
@@ -37,14 +37,25 @@ fn main() {
             v
         })),
     ];
+    let mut cells = Vec::new();
+    for (name, mk) in &variants {
+        for wname in WORKLOADS {
+            cells.push(common::Cell::new(format!("{name}/{wname}"), wname, mk(), 17));
+        }
+    }
+    let reports = common::run_cells(&cells);
+
+    let mut table = Table::new(
+        "Figure 3: ablation (throughput normalized to full Trident = 100%)",
+        &["Variant", "PDF", "Video"],
+    );
     let mut base = [1.0, 1.0];
     let mut rows = Vec::new();
-    for (name, mk) in &variants {
+    for (vi, (name, _)) in variants.iter().enumerate() {
         let mut vals = Vec::new();
-        for (j, wname) in ["PDF", "Video"].iter().enumerate() {
-            let w = common::workload(wname);
-            let r = common::run(w, mk(), 17);
-            eprintln!("  {name} / {wname}: {:.3}", r.throughput);
+        for j in 0..WORKLOADS.len() {
+            let r = &reports[vi * WORKLOADS.len() + j];
+            eprintln!("  {name} / {}: {:.3}", WORKLOADS[j], r.throughput);
             if *name == "Trident (full)" {
                 base[j] = r.throughput.max(1e-12);
             }

@@ -3,6 +3,8 @@
 //! recommendations, applied all-at-once).
 //! Paper: Trident 2.01x/1.88x > Trident(all-at-once) 1.92x/1.79x >
 //! ContTune 1.42x/1.36x > DS2 1.38x/1.25x > RayData 1.22x/1.30x.
+//!
+//! The 12 (method, workload) cells fan out across cores.
 
 #[path = "common.rs"]
 mod common;
@@ -10,11 +12,9 @@ mod common;
 use trident::coordinator::{Policy, Variant};
 use trident::report::Table;
 
+const WORKLOADS: [&str; 2] = ["PDF", "Video"];
+
 fn main() {
-    let mut table = Table::new(
-        "Table 2: scheduling under shared Observation+Adaptation (vs Static)",
-        &["Method", "PDF", "Video"],
-    );
     let methods: Vec<(&str, Variant)> = vec![
         ("Static", Variant::baseline(Policy::Static)),
         ("Ray Data", Variant::controlled(Policy::RayData)),
@@ -27,15 +27,26 @@ fn main() {
         }),
         ("Trident", Variant::trident()),
     ];
+    let mut cells = Vec::new();
+    for (name, variant) in &methods {
+        for wname in WORKLOADS {
+            cells.push(common::Cell::new(format!("{name}/{wname}"), wname, variant.clone(), 11));
+        }
+    }
+    let reports = common::run_cells(&cells);
+
+    let mut table = Table::new(
+        "Table 2: scheduling under shared Observation+Adaptation (vs Static)",
+        &["Method", "PDF", "Video"],
+    );
     let mut base = [1.0, 1.0];
     let mut rows = Vec::new();
-    for (name, variant) in methods {
+    for (mi, (name, _)) in methods.iter().enumerate() {
         let mut speed = Vec::new();
-        for (j, wname) in ["PDF", "Video"].iter().enumerate() {
-            let w = common::workload(wname);
-            let r = common::run(w, variant.clone(), 11);
-            eprintln!("  {name} / {wname}: {:.3} items/s", r.throughput);
-            if name == "Static" {
+        for j in 0..WORKLOADS.len() {
+            let r = &reports[mi * WORKLOADS.len() + j];
+            eprintln!("  {name} / {}: {:.3} items/s", WORKLOADS[j], r.throughput);
+            if *name == "Static" {
                 base[j] = r.throughput.max(1e-12);
             }
             speed.push(r.throughput / base[j]);

@@ -2,37 +2,39 @@
 //! isolated-profiling oracle, for the estimator lattice.
 //! Paper: true-rate 62.7/54.3 >> EMA 28.3/25.7 > GP 24.3/21.8 >>
 //! GP+signal 8.4/7.1 > GP+two-stage 5.6/4.8.
+//!
+//! The two workload runs fan out across cores (MAPE collection is per-run
+//! state, so the cells stay independent).
 
 #[path = "common.rs"]
 mod common;
 
-use trident::config::TridentConfig;
-use trident::coordinator::{Coordinator, Policy, Variant};
+use trident::coordinator::{Policy, Variant};
 use trident::report::{pct, Table};
 
 fn main() {
+    let cells: Vec<common::Cell> = ["PDF", "Video"]
+        .into_iter()
+        .map(|wname| {
+            let mut c =
+                common::Cell::new(wname, wname, Variant::baseline(Policy::Static), 3);
+            c.collect_mape = true;
+            c
+        })
+        .collect();
+    let reports = common::run_cells(&cells);
+    let cols: Vec<std::collections::HashMap<&'static str, f64>> = reports
+        .iter()
+        .map(|r| {
+            eprintln!("  {}: {:?}", r.pipeline, r.estimator_mape);
+            r.estimator_mape.clone()
+        })
+        .collect();
+
     let mut table = Table::new(
         "Table 3: processing-capacity estimation accuracy (MAPE %)",
         &["Method", "PDF", "Video"],
     );
-    let mut cols: Vec<std::collections::HashMap<&'static str, f64>> = Vec::new();
-    for wname in ["PDF", "Video"] {
-        let w = common::workload(wname);
-        let cfg = TridentConfig::default();
-        let mut coord = Coordinator::new(
-            w.pipeline,
-            common::cluster(8),
-            w.trace,
-            cfg,
-            Variant::baseline(Policy::Static),
-            w.src,
-            3,
-        );
-        coord.collect_mape = true;
-        let r = coord.run_to_completion(common::MAX_SIM_S);
-        eprintln!("  {wname}: {:?}", r.estimator_mape);
-        cols.push(r.estimator_mape);
-    }
     for (label, key) in [
         ("True Processing Rate", "true_rate"),
         ("EMA", "ema"),

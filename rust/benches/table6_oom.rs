@@ -3,6 +3,9 @@
 //! plus an (approximate) OOM-free oracle.
 //! Paper: constrained cuts OOM events ~80% and downtime 462→102 s /
 //! 352→68 s, ending up faster despite conservative configs.
+//!
+//! The 6 (workload, strategy) cells — oracle + two strategies per
+//! workload — fan out across cores.
 
 #[path = "common.rs"]
 mod common;
@@ -12,28 +15,31 @@ use trident::coordinator::Variant;
 use trident::report::Table;
 
 fn main() {
-    let mut table = Table::new(
-        "Table 6: OOM events and throughput impact (end-to-end)",
-        &["Metric", "PDF Unconstr.", "PDF Constr.", "Video Unconstr.", "Video Constr."],
-    );
+    // Per workload: [oracle (constrained, wide margin), Unconstrained,
+    // Constrained] — 3 cells each, in that order.
+    let mut cells = Vec::new();
+    for wname in ["PDF", "Video"] {
+        let mut oracle = Variant::trident();
+        oracle.strategy = Strategy::ConstrainedBo;
+        cells.push(common::Cell::new(format!("oracle/{wname}"), wname, oracle, 21));
+        for strategy in [Strategy::UnconstrainedBo, Strategy::ConstrainedBo] {
+            let mut v = Variant::trident();
+            v.strategy = strategy;
+            cells.push(common::Cell::new(format!("{strategy:?}/{wname}"), wname, v, 13));
+        }
+    }
+    let reports = common::run_cells(&cells);
+
     let mut events = Vec::new();
     let mut downtime = Vec::new();
     let mut loss = Vec::new();
-    for wname in ["PDF", "Video"] {
-        // approximate OOM-free oracle: constrained BO with a wide margin
-        let oracle = {
-            let w = common::workload(wname);
-            let mut v = Variant::trident();
-            v.strategy = Strategy::ConstrainedBo;
-            let mut cfg_run = common::run(w, v, 21);
-            cfg_run.throughput += 0.0;
-            cfg_run
-        };
-        for strategy in [Strategy::UnconstrainedBo, Strategy::ConstrainedBo] {
-            let w = common::workload(wname);
-            let mut v = Variant::trident();
-            v.strategy = strategy;
-            let r = common::run(w, v, 13);
+    for (wi, wname) in ["PDF", "Video"].into_iter().enumerate() {
+        let oracle = &reports[wi * 3];
+        for (si, strategy) in [Strategy::UnconstrainedBo, Strategy::ConstrainedBo]
+            .into_iter()
+            .enumerate()
+        {
+            let r = &reports[wi * 3 + 1 + si];
             eprintln!(
                 "  {wname} {strategy:?}: {} OOMs, {:.0}s downtime, {:.3} items/s",
                 r.oom_events, r.oom_downtime_s, r.throughput
@@ -44,6 +50,11 @@ fn main() {
             loss.push(100.0 * (1.0 - r.throughput / oracle_thr));
         }
     }
+
+    let mut table = Table::new(
+        "Table 6: OOM events and throughput impact (end-to-end)",
+        &["Metric", "PDF Unconstr.", "PDF Constr.", "Video Unconstr.", "Video Constr."],
+    );
     table.row(vec![
         "OOM events".into(),
         events[0].to_string(),

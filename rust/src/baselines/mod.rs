@@ -13,11 +13,14 @@
 //! * **SCOOT** — offline per-operator configuration tuning; deploys the
 //!   tuned configs on the Static allocation, no runtime adaptation.
 //!
-//! All of them produce a placement matrix `x[op][node]`; the coordinator
-//! applies it to the executor identically for every scheduler, so RQ1/RQ2
-//! comparisons differ only in policy.
+//! All of them produce a placement matrix `x[op][node]`; each implements
+//! the coordinator's [`SchedulingPolicy`] trait, and the coordinator
+//! applies every plan to the executor identically, so RQ1/RQ2 comparisons
+//! differ only in policy.  (Static and SCOOT never re-plan; their policy
+//! impl lives in `coordinator::policy` next to Trident's.)
 
 use crate::config::{ClusterSpec, PipelineSpec};
+use crate::coordinator::policy::{Plan, PolicyCtx, SchedulingPolicy, TransitionCmd};
 use crate::sim::OpMetrics;
 
 /// A placement decision: instances per (op, node).
@@ -98,6 +101,31 @@ pub fn waterfall(
         .collect()
 }
 
+/// DS2 as a pluggable policy: useful-time rates + waterfall parallelism
+/// with a small headroom, greedily re-packed every scheduling round.
+pub struct Ds2 {
+    pub headroom: f64,
+}
+
+impl Default for Ds2 {
+    fn default() -> Self {
+        Ds2 { headroom: 1.05 }
+    }
+}
+
+impl SchedulingPolicy for Ds2 {
+    fn plan(&mut self, ctx: &PolicyCtx<'_>) -> Plan {
+        let p = waterfall(ctx.spec, ctx.cluster, ctx.rates, self.headroom);
+        let x = pack(ctx.spec, ctx.cluster, &p);
+        Plan {
+            placement: Some(x),
+            routes: None,
+            transitions: TransitionCmd::AllAtOnce,
+            milp_ms: None,
+        }
+    }
+}
+
 /// Ray Data's default reactive autoscaler: per-operator thresholds on
 /// queue backlog and utilization, one step at a time, no global view.
 pub struct RayDataAutoscaler {
@@ -133,6 +161,19 @@ impl RayDataAutoscaler {
             }
         }
         p
+    }
+}
+
+impl SchedulingPolicy for RayDataAutoscaler {
+    fn plan(&mut self, ctx: &PolicyCtx<'_>) -> Plan {
+        let p = self.step(ctx.spec, ctx.metrics, ctx.cur_p);
+        let x = pack(ctx.spec, ctx.cluster, &p);
+        Plan {
+            placement: Some(x),
+            routes: None,
+            transitions: TransitionCmd::AllAtOnce,
+            milp_ms: None,
+        }
     }
 }
 
@@ -185,6 +226,19 @@ impl ContTune {
         }
         self.last_throughput = throughput;
         p
+    }
+}
+
+impl SchedulingPolicy for ContTune {
+    fn plan(&mut self, ctx: &PolicyCtx<'_>) -> Plan {
+        let p = self.step(ctx.spec, ctx.rates, ctx.metrics, ctx.cur_p, ctx.last_throughput);
+        let x = pack(ctx.spec, ctx.cluster, &p);
+        Plan {
+            placement: Some(x),
+            routes: None,
+            transitions: TransitionCmd::AllAtOnce,
+            milp_ms: None,
+        }
     }
 }
 

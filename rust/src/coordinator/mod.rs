@@ -3,8 +3,20 @@
 //! Wires the pipeline executor (simulator), metrics collector, observation
 //! layer, adaptation layer, and scheduling layer together — including
 //! paths ⑧ (plan application) and ⑨ (sample invalidation on configuration
-//! transitions) — and hosts every baseline scheduler behind the same
-//! plan-application path so evaluation comparisons differ only in policy.
+//! transitions).  The loop itself is policy-agnostic: every scheduler in
+//! the evaluation (Trident's MILP and all baselines) implements the
+//! [`SchedulingPolicy`] trait and is applied through the same
+//! plan-application path, so comparisons differ only in policy.
+//!
+//! Module family (see `DESIGN.md`):
+//! * [`policy`] — the [`SchedulingPolicy`] trait, [`PolicyCtx`] /
+//!   [`Plan`], and the Static / SCOOT / Trident implementations
+//!   (Ray Data, DS2, ContTune live in [`crate::baselines`]);
+//! * [`ingest`] — per-window metrics ingestion, the Table-3
+//!   `EstimatorBank` MAPE lattice, and BO probe evaluation;
+//! * [`transition`] — initial deployment, placement application, rolling
+//!   updates + sample invalidation (path ⑨), and the OOM safety fallback;
+//! * [`report`] — [`RunReport`] assembly.
 //!
 //! One deliberate simulation shortcut (DESIGN.md): BO probe evaluations are
 //! measured against the operator's ground-truth service model plus
@@ -13,156 +25,28 @@
 //! instance would report; a probe OOM still costs real downtime (one live
 //! instance is cold-restarted) so Table 6's downtime is honest.
 
-use std::collections::HashMap;
-use std::time::{Duration, Instant};
+mod ingest;
+pub mod policy;
+pub mod report;
+mod transition;
 
-use crate::adaptation::{OperatorAdaptation, Strategy};
-use crate::baselines::{pack, ContTune, RayDataAutoscaler};
+#[cfg(test)]
+mod tests;
+
+pub use policy::{Plan, Policy, PolicyCtx, SchedulingPolicy, TransitionCmd, Variant};
+pub use report::RunReport;
+
+use std::collections::HashMap;
+
+use crate::adaptation::OperatorAdaptation;
 use crate::config::{ClusterSpec, PipelineSpec, TridentConfig};
 use crate::observation::{CapacityEstimator, ObsConfig, UsefulTimeEstimator};
 use crate::runtime::GpBackend;
-use crate::scheduling::{self, MilpInput, OpSched, RollingState};
+use crate::scheduling::RollingState;
 use crate::sim::{ItemAttrs, OpMetrics, PipelineSim};
 use crate::workload::Trace;
 
-/// Which scheduling policy drives the run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Policy {
-    /// Fixed manually-tuned allocation (one-shot nominal MILP).
-    Static,
-    /// Ray Data's reactive threshold autoscaler.
-    RayData,
-    /// DS2: useful-time rates + waterfall parallelism.
-    Ds2,
-    /// ContTune: DS2 + conservative parallelism BO.
-    ContTune,
-    /// SCOOT: offline per-op config tuning + Static allocation.
-    Scoot,
-    /// The full Trident MILP.
-    Trident,
-}
-
-impl Policy {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Policy::Static => "Static",
-            Policy::RayData => "Ray Data",
-            Policy::Ds2 => "DS2",
-            Policy::ContTune => "ContTune",
-            Policy::Scoot => "SCOOT",
-            Policy::Trident => "Trident",
-        }
-    }
-}
-
-/// Full experiment variant: policy + layer toggles (RQ2 sharing, RQ5
-/// ablations, Table 5/6 strategies).
-#[derive(Debug, Clone)]
-pub struct Variant {
-    pub policy: Policy,
-    /// RQ2: give baselines Trident's observation-layer estimates.
-    pub shared_observation: bool,
-    /// RQ2: give baselines Trident's adaptation recommendations
-    /// (applied all-at-once).
-    pub shared_adaptation: bool,
-    /// RQ5 w/o Observation: Trident falls back to useful-time rates.
-    pub use_observation: bool,
-    /// RQ5 w/o Adaptation: disable clustering + tuning.
-    pub use_adaptation: bool,
-    /// RQ5 w/o Placement: network-agnostic MILP.
-    pub placement_aware: bool,
-    /// RQ5 w/o Rolling: all-at-once config switches.
-    pub rolling: bool,
-    /// Tuning strategy (Table 5/6).
-    pub strategy: Strategy,
-    /// Initial per-op configs (SCOOT's offline-tuned configs).
-    pub initial_configs: Option<Vec<Option<Vec<f64>>>>,
-}
-
-impl Variant {
-    pub fn trident() -> Self {
-        Variant {
-            policy: Policy::Trident,
-            shared_observation: false,
-            shared_adaptation: false,
-            use_observation: true,
-            use_adaptation: true,
-            placement_aware: true,
-            rolling: true,
-            strategy: Strategy::ConstrainedBo,
-            initial_configs: None,
-        }
-    }
-
-    pub fn baseline(policy: Policy) -> Self {
-        Variant { policy, use_adaptation: false, ..Variant::trident() }
-    }
-
-    /// RQ2: baseline with Trident's observation + adaptation layers.
-    pub fn controlled(policy: Policy) -> Self {
-        Variant {
-            policy,
-            shared_observation: true,
-            shared_adaptation: true,
-            use_adaptation: true,
-            rolling: false,
-            ..Variant::trident()
-        }
-    }
-}
-
-/// Run outcome for reports and benches.
-#[derive(Debug, Clone)]
-pub struct RunReport {
-    pub pipeline: String,
-    pub variant: String,
-    pub duration_s: f64,
-    /// Average pipeline throughput, input records/s.
-    pub throughput: f64,
-    /// (time, windowed throughput) series.
-    pub series: Vec<(f64, f64)>,
-    pub oom_events: u32,
-    pub oom_downtime_s: f64,
-    pub config_transitions: u64,
-    /// Wall-clock of each MILP solve, ms.
-    pub milp_ms: Vec<f64>,
-    /// Mean per-invocation overhead of obs / adaptation layers, ms.
-    pub obs_overhead_ms: f64,
-    pub adapt_overhead_ms: f64,
-    /// MAPE per estimator variant (Table 3), percent.
-    pub estimator_mape: HashMap<&'static str, f64>,
-    /// Clustering snapshots: per tunable op, (assignments, truth) samples.
-    pub cluster_eval: Vec<(Vec<usize>, Vec<u8>)>,
-    pub items_processed: u64,
-}
-
-/// Estimator lattice carried for Table 3 MAPE accounting.
-struct EstimatorBank {
-    true_rate: UsefulTimeEstimator,
-    ema_only: CapacityEstimator,
-    gp_raw: CapacityEstimator,
-    gp_signal: CapacityEstimator,
-    gp_full: CapacityEstimator,
-}
-
-impl EstimatorBank {
-    fn new(cfg: &TridentConfig, ex: crate::config::FeatureExtractor) -> Self {
-        let base = ObsConfig::from_trident(cfg);
-        EstimatorBank {
-            true_rate: UsefulTimeEstimator::new(),
-            ema_only: CapacityEstimator::new(
-                ObsConfig { use_gp: false, model_filter: false, signal_filter: false, ..base.clone() },
-                ex,
-            ),
-            gp_raw: CapacityEstimator::new(
-                ObsConfig { signal_filter: false, model_filter: false, ..base.clone() },
-                ex,
-            ),
-            gp_signal: CapacityEstimator::new(ObsConfig { model_filter: false, ..base.clone() }, ex),
-            gp_full: CapacityEstimator::new(base, ex),
-        }
-    }
-}
+use ingest::EstimatorBank;
 
 /// The coordinator.
 pub struct Coordinator {
@@ -179,8 +63,9 @@ pub struct Coordinator {
     mape: HashMap<&'static str, (f64, u64)>,
     adaptation: Vec<Option<OperatorAdaptation>>,
     rolling: Vec<RollingState>,
-    raydata: RayDataAutoscaler,
-    conttune: ContTune,
+    /// The active scheduler (trait object — replaces the old inline
+    /// per-policy match arms and per-baseline fields).
+    policy: Box<dyn SchedulingPolicy>,
     /// Whether the op has had its samples invalidated for the current
     /// transition already.
     invalidated: Vec<bool>,
@@ -274,6 +159,7 @@ impl Coordinator {
                 RollingState::new(init, 0)
             })
             .collect();
+        let policy = variant.policy.build();
         let sim = PipelineSim::new(pipeline, cluster, trace, seed);
         Coordinator {
             sim,
@@ -287,8 +173,7 @@ impl Coordinator {
             mape: HashMap::new(),
             adaptation,
             rolling,
-            raydata: RayDataAutoscaler::default(),
-            conttune: ContTune::default(),
+            policy,
             invalidated: vec![false; n],
             recent_ooms: vec![0; n],
             milp_ms: Vec::new(),
@@ -304,372 +189,57 @@ impl Coordinator {
         }
     }
 
-    /// Nominal per-instance rate for the Static plan ("manual tuning"):
-    /// the default-config capacity at the first regime's expected load.
-    fn nominal_rates(&self) -> Vec<f64> {
-        self.sim
-            .spec
-            .operators
-            .iter()
-            .enumerate()
-            .map(|(i, o)| {
-                crate::sim::service::true_unit_rate(
-                    &o.service,
-                    &self.rolling[i].current,
-                    &self.nominal[i],
-                )
-            })
-            .collect()
-    }
-
-    /// Initial deployment shared by every policy: one-shot MILP on nominal
-    /// rates (the "manually tuned" allocation).
-    pub fn deploy_initial(&mut self) {
-        let rates = self.nominal_rates();
-        let input = self.milp_input(&rates, &vec![None; rates.len()]);
-        let plan = scheduling::solve(&input, Duration::from_millis(self.cfg.milp_time_budget_ms));
-        let x = if plan.t_pred > 0.0 {
-            plan.x
-        } else {
-            // Fallback: greedy pack of a waterfall plan.
-            let p = crate::baselines::waterfall(&self.sim.spec, &self.sim.cluster, &rates, 1.1);
-            pack(&self.sim.spec, &self.sim.cluster, &p)
-        };
-        self.apply_placement(&x);
-        if self.variant.policy == Policy::Trident && self.variant.placement_aware {
-            for (i, m) in plan.route.iter().enumerate() {
-                self.sim.set_route(i, Some(m.clone()));
-            }
-        }
-        for (i, rs) in self.rolling.iter_mut().enumerate() {
-            rs.sync_count(x[i].iter().sum());
-        }
-    }
-
-    fn milp_input(&self, ut: &[f64], cand: &[Option<(f64, ())>]) -> MilpInput {
-        let (d_i, d_o) = self.sim.spec.amplification();
-        let cur = self.sim.placement();
-        MilpInput {
-            ops: self
-                .sim
-                .spec
-                .operators
-                .iter()
-                .enumerate()
-                .map(|(i, o)| OpSched {
-                    name: o.name.clone(),
-                    ut_cur: ut[i].max(1e-6),
-                    ut_cand: cand[i].map(|(u, _)| u).filter(|_| self.rolling[i].in_transition()),
-                    n_new: self.rolling[i].n_new,
-                    n_old: self.rolling[i].n_old,
-                    cpu: o.cpu,
-                    mem_gb: o.mem_gb,
-                    accels: o.accels,
-                    out_mb: o.out_mb,
-                    d_i: d_i[i],
-                    h_start: o.start_s,
-                    h_stop: o.stop_s,
-                    h_cold: o.cold_s,
-                    cur_x: cur[i].clone(),
-                })
-                .collect(),
-            nodes: self.sim.cluster.nodes.clone(),
-            d_o,
-            t_sched: self.cfg.t_sched_s,
-            lambda1: self.cfg.lambda1,
-            lambda2: self.cfg.lambda2,
-            b_max: self.cfg.b_max as u32,
-            placement_aware: self.variant.placement_aware,
-            all_at_once: !self.variant.rolling,
-        }
-    }
-
-    /// Apply a placement diff: start missing instances, drain surplus.
-    fn apply_placement(&mut self, x: &[Vec<u32>]) {
-        let k = self.sim.cluster.nodes.len();
-        for op in 0..self.sim.spec.n_ops() {
-            for node in 0..k {
-                let have: Vec<usize> = self
-                    .sim
-                    .instances_of(op)
-                    .into_iter()
-                    .filter(|&i| self.sim.instances[i].node == node)
-                    .collect();
-                let want = x[op][node] as usize;
-                if have.len() < want {
-                    let theta = self.launch_config(op);
-                    for _ in have.len()..want {
-                        // Capacity races can reject; skip silently (the next
-                        // round repairs).
-                        let _ = self.sim.add_instance(op, node, theta.clone());
-                    }
-                } else if have.len() > want {
-                    // Drain the newest instances, but never the candidate-
-                    // config ones mid-rollout (no-rollback semantics).
-                    let cand = self.rolling[op].candidate.clone();
-                    let mut surplus: Vec<usize> = have.clone();
-                    surplus.sort_by_key(|&i| {
-                        let is_cand =
-                            cand.as_deref() == Some(&self.sim.instances[i].theta[..]);
-                        (is_cand as u8, std::cmp::Reverse(i))
-                    });
-                    // stop non-candidate, newest-first
-                    for &i in surplus.iter().take(have.len() - want) {
-                        self.sim.stop_instance(i);
-                    }
-                }
-            }
-        }
-    }
-
-    /// Config for newly launched instances of `op`: the rolling current
-    /// config (new instances join the old pool; the MILP's b decides
-    /// transitions).
-    fn launch_config(&self, op: usize) -> Vec<f64> {
-        self.rolling[op].current.clone()
-    }
-
-    /// One metrics window tick: ingest metrics into every layer.
-    fn ingest_window(&mut self, metrics: &[OpMetrics]) {
-        let t0 = Instant::now();
-        for (i, m) in metrics.iter().enumerate() {
-            self.useful_time[i].observe(m);
-            if self.variant.use_observation {
-                self.estimators[i].observe(m, &self.backend);
-            }
-            // Table 3 targets the asynchronous accelerator operators —
-            // useful-time estimation is exact for synchronous CPU ops and
-            // averaging them in would mask the effect the paper measures.
-            let async_op = self.sim.spec.operators[i].kind
-                == crate::config::OperatorKind::AccelAsync;
-            if self.collect_mape && m.records_out > 0 && async_op {
-                let bank = &mut self.banks[i];
-                bank.true_rate.observe(m);
-                bank.ema_only.observe(m, &self.backend);
-                bank.gp_raw.observe(m, &self.backend);
-                bank.gp_signal.observe(m, &self.backend);
-                bank.gp_full.observe(m, &self.backend);
-                // Score each estimator against the isolated-profiling
-                // oracle at the op's current config + workload.
-                let theta = &self.rolling[i].current;
-                let truth = self.sim.true_unit_rate(i, theta);
-                if truth > 1e-6 {
-                    let score = |name: &'static str, est: f64, mape: &mut HashMap<_, (f64, u64)>| {
-                        let e = ((est - truth) / truth).abs() * 100.0;
-                        let ent = mape.entry(name).or_insert((0.0, 0));
-                        ent.0 += e.min(300.0);
-                        ent.1 += 1;
-                    };
-                    let (e1, _) = self.banks[i].ema_only.estimate(m, &self.backend);
-                    let (e2, _) = self.banks[i].gp_raw.estimate(m, &self.backend);
-                    let (e3, _) = self.banks[i].gp_signal.estimate(m, &self.backend);
-                    let (e4, _) = self.banks[i].gp_full.estimate(m, &self.backend);
-                    let tr = self.banks[i].true_rate.estimate();
-                    score("true_rate", tr, &mut self.mape);
-                    score("ema", e1, &mut self.mape);
-                    score("gp_raw", e2, &mut self.mape);
-                    score("gp_signal", e3, &mut self.mape);
-                    score("gp_two_stage", e4, &mut self.mape);
-                }
-            }
-        }
-        self.obs_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-
-        let t1 = Instant::now();
-        for (i, ad) in self.adaptation.iter_mut().enumerate() {
-            if let Some(ad) = ad {
-                ad.ingest(&metrics[i]);
-                // Probe evaluation (see module docs): synthesize one probe
-                // measurement per window while a tuning job is active.
-                if let Some(theta) = ad.probe_request(&self.backend) {
-                    let (ut, mem, oom) = probe_measure(&self.sim, i, &theta);
-                    ad.probe_result(ut, mem, oom);
-                    if oom {
-                        // The probe crash costs a real instance restart.
-                        if let Some(&victim) = self.sim.instances_of(i).first() {
-                            let cur = self.sim.instances[victim].theta.clone();
-                            self.sim.restart_with_config(victim, cur);
-                            self.sim.oom_events_total[i] += 1;
-                            self.sim.oom_downtime_s[i] += self.sim.spec.operators[i].cold_s;
-                        }
-                    }
-                }
-                // Collect clustering evaluation samples.
-                if self.cluster_eval.len() <= i {
-                    self.cluster_eval.resize_with(i + 1, || (Vec::new(), Vec::new()));
-                }
-                for (f, truth) in &metrics[i].cluster_samples {
-                    // Re-assign for evaluation only (cheap): nearest centroid.
-                    let assigned = ad
-                        .clustering
-                        .clusters
-                        .iter()
-                        .enumerate()
-                        .min_by(|(_, a), (_, b)| {
-                            let da: f64 = a.centroid.iter().zip(f).map(|(x, y)| (x - y) * (x - y)).sum();
-                            let db: f64 = b.centroid.iter().zip(f).map(|(x, y)| (x - y) * (x - y)).sum();
-                            da.partial_cmp(&db).unwrap()
-                        })
-                        .map(|(idx, _)| idx)
-                        .unwrap_or(0);
-                    self.cluster_eval[i].0.push(assigned);
-                    self.cluster_eval[i].1.push(*truth);
-                }
-            }
-        }
-        self.adapt_ms.push(t1.elapsed().as_secs_f64() * 1e3);
-
-        // Deployed-config OOM safety fallback: repeated OOMs on the live
-        // config revert the operator to its default configuration.
-        for (i, m) in metrics.iter().enumerate() {
-            self.recent_ooms[i] = self.recent_ooms[i] / 2 + m.oom_events;
-            if self.recent_ooms[i] >= 2 {
-                let default = self.sim.spec.operators[i].config_space.default_config();
-                if !default.is_empty() && self.rolling[i].current != default {
-                    for inst in self.sim.instances_of(i) {
-                        self.sim.restart_with_config(inst, default.clone());
-                    }
-                    self.rolling[i] = RollingState::new(default, self.sim.instances_of(i).len() as u32);
-                    self.estimators[i].invalidate();
-                    self.recent_ooms[i] = 0;
-                }
-            }
-        }
-    }
-
-    /// Current capacity estimates for the scheduler (per-op records/s per
-    /// instance), from whichever observation path the variant uses.
-    fn current_rates(&self, metrics: &[OpMetrics]) -> Vec<f64> {
-        let use_obs = match self.variant.policy {
-            Policy::Trident => self.variant.use_observation,
-            _ => self.variant.shared_observation,
-        };
-        (0..self.sim.spec.n_ops())
-            .map(|i| {
-                if use_obs {
-                    let (e, _) = self.estimators[i].estimate(&metrics[i], &self.backend);
-                    e
-                } else {
-                    self.useful_time[i].estimate().max(1e-6)
-                }
-            })
-            .collect()
-    }
-
-    /// One scheduling round (Algorithm 2).
+    /// One scheduling round (Algorithm 2): estimate rates, forward
+    /// adaptation recommendations into rolling state, ask the policy for a
+    /// plan, and apply it through the shared path ⑧.
     fn schedule_round(&mut self, metrics: &[OpMetrics]) {
         let rates = self.current_rates(metrics);
-        let n = self.sim.spec.n_ops();
-
-        // Forward adaptation recommendations into rolling state.
-        let adapt_on = self.variant.use_adaptation
-            && (self.variant.policy == Policy::Trident || self.variant.shared_adaptation);
-        if adapt_on {
-            for i in 0..n {
-                // Anti-thrash cooldown: when workload clusters alternate in
-                // dominance (queues hold a regime mix), back-to-back
-                // re-transitions would pay restart cost every round.  A new
-                // transition may start at most once per cooldown window.
-                let cooldown_ok = self.sim.now()
-                    >= self.last_transition_t[i] + 3.0 * self.cfg.t_sched_s;
-                if !cooldown_ok && !self.rolling[i].in_transition() {
-                    continue;
-                }
-                if let Some(ad) = &self.adaptation[i] {
-                    if let Some(rec) = ad.recommendation() {
-                        let fresh = self.rolling[i].offer(rec.config, rec.ut_cand);
-                        if fresh && std::env::var("TRIDENT_DEBUG").is_ok() {
-                            eprintln!(
-                                "[{:.0}s] op{} candidate accepted: ut_cand={:.2}",
-                                self.sim.now(), i, rec.ut_cand
-                            );
-                        }
-                    } else if std::env::var("TRIDENT_DEBUG").is_ok() {
-                        eprintln!(
-                            "[{:.0}s] op{}: no recommendation (tuning={}, clusters={})",
-                            self.sim.now(), i, ad.is_tuning(), ad.clustering.n_clusters()
-                        );
-                    }
-                }
+        let adapt_on = self.forward_recommendations();
+        let placement = self.sim.placement();
+        // Note: includes draining instances (unlike `placement()`), matching
+        // what the reactive baselines have always seen as "current p".
+        let cur_p: Vec<u32> = (0..self.sim.spec.n_ops())
+            .map(|i| self.sim.instances_of(i).len() as u32)
+            .collect();
+        let plan = {
+            let ctx = PolicyCtx {
+                spec: &self.sim.spec,
+                cluster: &self.sim.cluster,
+                cfg: &self.cfg,
+                variant: &self.variant,
+                metrics,
+                rates: &rates,
+                cur_p: &cur_p,
+                placement: &placement,
+                rolling: &self.rolling,
+                last_throughput: self.last_throughput,
+                now: self.sim.now(),
+            };
+            self.policy.plan(&ctx)
+        };
+        if let Some(ms) = plan.milp_ms {
+            self.milp_ms.push(ms);
+        }
+        if let Some(x) = &plan.placement {
+            self.apply_placement(x);
+        }
+        if let Some(routes) = plan.routes {
+            for (i, m) in routes.into_iter().enumerate() {
+                self.sim.set_route(i, Some(m));
             }
         }
-
-        match self.variant.policy {
-            Policy::Static | Policy::Scoot => { /* never re-plan */ }
-            Policy::RayData => {
-                let cur_p: Vec<u32> =
-                    (0..n).map(|i| self.sim.instances_of(i).len() as u32).collect();
-                let p = self.raydata.step(&self.sim.spec, metrics, &cur_p);
-                let x = pack(&self.sim.spec, &self.sim.cluster, &p);
-                self.apply_placement(&x);
-                self.apply_all_at_once_transitions(adapt_on);
-            }
-            Policy::Ds2 => {
-                let p = crate::baselines::waterfall(&self.sim.spec, &self.sim.cluster, &rates, 1.05);
-                let x = pack(&self.sim.spec, &self.sim.cluster, &p);
-                self.apply_placement(&x);
-                self.apply_all_at_once_transitions(adapt_on);
-            }
-            Policy::ContTune => {
-                let cur_p: Vec<u32> =
-                    (0..n).map(|i| self.sim.instances_of(i).len() as u32).collect();
-                let p = self.conttune.step(
-                    &self.sim.spec,
-                    &rates,
-                    metrics,
-                    &cur_p,
-                    self.last_throughput,
-                );
-                let x = pack(&self.sim.spec, &self.sim.cluster, &p);
-                self.apply_placement(&x);
-                self.apply_all_at_once_transitions(adapt_on);
-            }
-            Policy::Trident => {
-                let cand: Vec<Option<(f64, ())>> = (0..n)
-                    .map(|i| {
-                        self.rolling[i]
-                            .in_transition()
-                            .then(|| (self.rolling[i].ut_cand, ()))
-                    })
-                    .collect();
-                let input = self.milp_input(&rates, &cand);
-                let t0 = Instant::now();
-                let plan =
-                    scheduling::solve(&input, Duration::from_millis(self.cfg.milp_time_budget_ms));
-                self.milp_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-                if plan.t_pred <= 0.0 {
-                    return; // keep the previous feasible plan (paper §7)
-                }
-                self.apply_placement(&plan.x);
-                if self.variant.placement_aware {
-                    for (i, m) in plan.route.iter().enumerate() {
-                        self.sim.set_route(i, Some(m.clone()));
-                    }
-                }
-                // Rolling transitions: restart b_i old-config instances.
-                if std::env::var("TRIDENT_DEBUG").is_ok() {
-                    eprintln!(
-                        "[{:.0}s] plan: T={:.2} p={:?} b={:?}",
-                        self.sim.now(), plan.t_pred, plan.p, plan.b
-                    );
-                    for (i, o) in input.ops.iter().enumerate() {
-                        if o.ut_cand.is_some() || self.sim.spec.operators[i].tunable {
-                            eprintln!(
-                                "    op{i} {}: ut_cur={:.2} ut_cand={:?} n_old={} n_new={} util={:.2}",
-                                o.name, o.ut_cur, o.ut_cand, o.n_old, o.n_new,
-                                metrics[i].utilization
-                            );
-                        }
-                    }
-                }
-                for i in 0..n {
-                    let b = plan.b[i];
-                    if b > 0 {
-                        self.start_transition(i, b);
+        match plan.transitions {
+            TransitionCmd::None => {}
+            TransitionCmd::AllAtOnce => self.apply_all_at_once_transitions(adapt_on),
+            TransitionCmd::Rolling(b) => {
+                for i in 0..self.sim.spec.n_ops() {
+                    let bi = b[i];
+                    if bi > 0 {
+                        self.start_transition(i, bi);
                     }
                     let p_now = self.sim.instances_of(i).len() as u32;
-                    if b > 0 {
-                        self.rolling[i].apply_round(b, p_now);
+                    if bi > 0 {
+                        self.rolling[i].apply_round(bi, p_now);
                     } else {
                         self.rolling[i].sync_count(p_now);
                     }
@@ -683,65 +253,18 @@ impl Coordinator {
             .unwrap_or(0.0);
     }
 
-    /// Restart `b` old-config instances of op `i` with the candidate
-    /// config, invalidating observation samples (path ⑨) once per
-    /// transition.
-    fn start_transition(&mut self, i: usize, b: u32) {
-        let Some(cand) = self.rolling[i].candidate.clone() else { return };
-        let old: Vec<usize> = self
-            .sim
-            .instances_of(i)
-            .into_iter()
-            .filter(|&id| self.sim.instances[id].theta == self.rolling[i].current)
-            .take(b as usize)
-            .collect();
-        for id in &old {
-            self.sim.restart_with_config(*id, cand.clone());
-        }
-        if !old.is_empty() && !self.invalidated[i] {
-            self.estimators[i].invalidate();
-            self.invalidated[i] = true;
-            self.transitions += 1;
-            self.last_transition_t[i] = self.sim.now();
-        }
-        if !self.rolling[i].in_transition() {
-            self.invalidated[i] = false;
-        }
-    }
-
-    /// All-at-once transition application for baselines (RQ2 protocol) and
-    /// the w/o-rolling ablation.
-    fn apply_all_at_once_transitions(&mut self, adapt_on: bool) {
-        if !adapt_on {
-            return;
-        }
-        for i in 0..self.sim.spec.n_ops() {
-            if self.rolling[i].in_transition() {
-                let cand = self.rolling[i].candidate.clone().unwrap();
-                let insts = self.sim.instances_of(i);
-                let n_inst = insts.len() as u32;
-                for id in insts {
-                    self.sim.restart_with_config(id, cand.clone());
-                }
-                self.rolling[i].apply_round(n_inst, n_inst);
-                self.estimators[i].invalidate();
-                self.transitions += 1;
-                self.last_transition_t[i] = self.sim.now();
-            }
-        }
-    }
-
-    /// Drive the closed loop until the input trace is fully processed
-    /// (the paper's offline paradigm: fixed dataset, fastest finish wins)
-    /// or `max_s` elapses.  Throughput = items / completion time.
-    pub fn run_to_completion(&mut self, max_s: f64) -> RunReport {
+    /// The closed drive loop shared by [`run`](Coordinator::run) and
+    /// [`run_to_completion`](Coordinator::run_to_completion): advance the
+    /// simulator one metrics window at a time, ingest, and re-schedule
+    /// every `t_sched_s`.
+    fn drive(&mut self, max_s: f64, until_drained: bool) -> RunReport {
         if self.sim.instances.is_empty() {
             self.deploy_initial();
         }
         let mut t = self.sim.now();
         let end = t + max_s;
         let mut next_sched = t + self.cfg.t_sched_s;
-        while t < end && !self.sim.drained() {
+        while t < end && !(until_drained && self.sim.drained()) {
             t = (t + self.cfg.metrics_interval_s).min(end);
             self.sim.run_until(t);
             let (metrics, out) = self.sim.flush_metrics();
@@ -749,178 +272,26 @@ impl Coordinator {
             self.series.push((t, thr));
             self.ingest_window(&metrics);
             self.last_metrics = Some(metrics);
-            if t >= next_sched && !self.sim.drained() {
+            if t >= next_sched && !(until_drained && self.sim.drained()) {
                 next_sched = t + self.cfg.t_sched_s;
                 let m = self.last_metrics.take().unwrap();
                 self.schedule_round(&m);
                 self.last_metrics = Some(m);
             }
         }
-        self.report(self.sim.now())
+        let duration = if until_drained { self.sim.now() } else { max_s };
+        self.report(duration)
+    }
+
+    /// Drive the closed loop until the input trace is fully processed
+    /// (the paper's offline paradigm: fixed dataset, fastest finish wins)
+    /// or `max_s` elapses.  Throughput = items / completion time.
+    pub fn run_to_completion(&mut self, max_s: f64) -> RunReport {
+        self.drive(max_s, true)
     }
 
     /// Drive the closed loop for `duration_s` simulated seconds.
     pub fn run(&mut self, duration_s: f64) -> RunReport {
-        if self.sim.instances.is_empty() {
-            self.deploy_initial();
-        }
-        let mut t = self.sim.now();
-        let end = t + duration_s;
-        let mut next_sched = t + self.cfg.t_sched_s;
-        while t < end {
-            t = (t + self.cfg.metrics_interval_s).min(end);
-            self.sim.run_until(t);
-            let (metrics, out) = self.sim.flush_metrics();
-            let thr = out as f64 / self.sim.d_o / self.cfg.metrics_interval_s;
-            self.series.push((t, thr));
-            self.ingest_window(&metrics);
-            self.last_metrics = Some(metrics);
-            if t >= next_sched {
-                next_sched = t + self.cfg.t_sched_s;
-                let m = self.last_metrics.take().unwrap();
-                self.schedule_round(&m);
-                self.last_metrics = Some(m);
-            }
-        }
-        self.report(duration_s)
-    }
-
-    fn report(&self, duration_s: f64) -> RunReport {
-        let mean = |v: &[f64]| {
-            if v.is_empty() {
-                0.0
-            } else {
-                v.iter().sum::<f64>() / v.len() as f64
-            }
-        };
-        RunReport {
-            pipeline: self.sim.spec.name.clone(),
-            variant: self.variant.policy.name().to_string(),
-            duration_s,
-            throughput: self.sim.avg_throughput(),
-            series: self.series.clone(),
-            oom_events: self.sim.oom_events_total.iter().sum(),
-            oom_downtime_s: self.sim.oom_downtime_s.iter().sum(),
-            config_transitions: self.transitions,
-            milp_ms: self.milp_ms.clone(),
-            obs_overhead_ms: mean(&self.obs_ms),
-            adapt_overhead_ms: mean(&self.adapt_ms),
-            estimator_mape: self
-                .mape
-                .iter()
-                .map(|(&k, &(s, n))| (k, if n > 0 { s / n as f64 } else { 0.0 }))
-                .collect(),
-            cluster_eval: self.cluster_eval.clone(),
-            items_processed: self.sim.out_records,
-        }
-    }
-}
-
-/// Synthesized probe measurement: what a dedicated probe instance would
-/// report after a sustained evaluation window at config θ (ground-truth
-/// service model + measurement noise; OOM when the noisy peak crosses the
-/// device limit).
-fn probe_measure(sim: &PipelineSim, op: usize, theta: &[f64]) -> (f64, f64, bool) {
-    let attrs = sim.mean_attrs(op).unwrap_or(ItemAttrs {
-        tokens_in: 512.0,
-        tokens_out: 64.0,
-        pixels_m: 1.0,
-        frames: 1.0,
-    });
-    let o = &sim.spec.operators[op];
-    // Deterministic per-(op, theta) noise so repeated probes agree.
-    let mut h = 0u64;
-    for &v in theta {
-        h = h.wrapping_mul(31).wrapping_add(v.to_bits());
-    }
-    let mut rng = crate::rngx::Rng::new(h ^ (op as u64) << 32 ^ sim.now().to_bits());
-    let ut = crate::sim::service::true_unit_rate(&o.service, theta, &attrs)
-        * rng.lognormal(0.0, 0.05);
-    // Peak-of-window telemetry (NVML-style max), not the mean: a sustained
-    // evaluation sees the upper tail of the allocator noise, which is what
-    // the memory surrogate must learn to stay OOM-safe after deployment.
-    let peak_factor = (2.0 * 0.03f64).exp();
-    let mem = crate::sim::service::expected_mem(&o.service, theta, &attrs)
-        * rng.lognormal(0.02, 0.03)
-        * peak_factor;
-    let cap = sim.cluster.nodes[0].accel_mem_mb;
-    (ut, mem, mem > cap)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::workload::pdf;
-
-    fn mini_cluster() -> ClusterSpec {
-        ClusterSpec::homogeneous(2, 128.0, 512.0, 4, 65536.0, 2500.0)
-    }
-
-    fn mk(variant: Variant, seed: u64) -> Coordinator {
-        let mut cfg = TridentConfig::default();
-        cfg.native_gp = true;
-        cfg.milp_time_budget_ms = 1500;
-        cfg.tune_trigger = 32;
-        cfg.bo_budget = 10;
-        cfg.bo_init = 4;
-        let trace = Box::new(pdf::trace(100_000));
-        let src = crate::sim::ItemAttrs {
-            tokens_in: 36_000.0,
-            tokens_out: 7_200.0,
-            pixels_m: 12.0,
-            frames: 12.0,
-        };
-        Coordinator::new(pdf::pipeline(), mini_cluster(), trace, cfg, variant, src, seed)
-    }
-
-    #[test]
-    fn static_deploys_and_flows() {
-        let mut c = mk(Variant::baseline(Policy::Static), 1);
-        let r = c.run(400.0);
-        assert!(r.throughput > 0.0, "static must process documents: {r:?}");
-        assert!(r.items_processed > 0);
-        // all accel ops placed
-        for i in 0..c.sim.spec.n_ops() {
-            if c.sim.spec.operators[i].accels > 0 {
-                assert!(!c.sim.instances_of(i).is_empty(), "op {i} placed");
-            }
-        }
-    }
-
-    #[test]
-    fn trident_beats_nothing_crashes_and_schedules() {
-        let mut c = mk(Variant::trident(), 2);
-        let r = c.run(400.0);
-        assert!(r.throughput > 0.0);
-        assert!(!r.milp_ms.is_empty(), "trident must re-solve the MILP");
-    }
-
-    #[test]
-    fn raydata_reacts() {
-        let mut c = mk(Variant::baseline(Policy::RayData), 3);
-        let r = c.run(400.0);
-        assert!(r.throughput > 0.0);
-    }
-
-    #[test]
-    fn ds2_runs() {
-        let mut c = mk(Variant::baseline(Policy::Ds2), 4);
-        let r = c.run(400.0);
-        assert!(r.throughput > 0.0);
-    }
-
-    #[test]
-    fn nominal_attrs_propagate_scaling() {
-        let pl = pdf::pipeline();
-        let src = crate::sim::ItemAttrs {
-            tokens_in: 36_000.0,
-            tokens_out: 7_200.0,
-            pixels_m: 12.0,
-            frames: 12.0,
-        };
-        let nom = nominal_attrs(&pl, src);
-        let ocr = pl.operators.iter().position(|o| o.name == "text_ocr").unwrap();
-        // per-block tokens at the OCR stage = 36000 / 120 = 300
-        assert!((nom[ocr].tokens_in - 300.0).abs() < 1.0, "{}", nom[ocr].tokens_in);
+        self.drive(duration_s, false)
     }
 }

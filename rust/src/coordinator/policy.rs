@@ -1,0 +1,265 @@
+//! The scheduling-policy abstraction: every scheduler in the evaluation —
+//! Trident's MILP and all baselines — implements [`SchedulingPolicy`] over
+//! the same read-only round context ([`PolicyCtx`]) and returns a [`Plan`]
+//! that the coordinator applies through one shared path.  Comparisons
+//! therefore differ only in policy, never in plumbing (the RQ1/RQ2
+//! protocol), and a new scheduler is one `impl` block away.
+//!
+//! Static, SCOOT, and Trident live here; the Ray Data, DS2, and ContTune
+//! implementations live in [`crate::baselines`] next to their models.
+
+use std::time::{Duration, Instant};
+
+use crate::adaptation::Strategy;
+use crate::baselines::Placement;
+use crate::config::{ClusterSpec, PipelineSpec, TridentConfig};
+use crate::scheduling::{self, MilpInput, OpSched, RollingState};
+use crate::sim::OpMetrics;
+
+/// Full experiment variant: policy + layer toggles (RQ2 sharing, RQ5
+/// ablations, Table 5/6 strategies).
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub policy: Policy,
+    /// RQ2: give baselines Trident's observation-layer estimates.
+    pub shared_observation: bool,
+    /// RQ2: give baselines Trident's adaptation recommendations
+    /// (applied all-at-once).
+    pub shared_adaptation: bool,
+    /// RQ5 w/o Observation: Trident falls back to useful-time rates.
+    pub use_observation: bool,
+    /// RQ5 w/o Adaptation: disable clustering + tuning.
+    pub use_adaptation: bool,
+    /// RQ5 w/o Placement: network-agnostic MILP.
+    pub placement_aware: bool,
+    /// RQ5 w/o Rolling: all-at-once config switches.
+    pub rolling: bool,
+    /// Tuning strategy (Table 5/6).
+    pub strategy: Strategy,
+    /// Initial per-op configs (SCOOT's offline-tuned configs).
+    pub initial_configs: Option<Vec<Option<Vec<f64>>>>,
+}
+
+impl Variant {
+    pub fn trident() -> Self {
+        Variant {
+            policy: Policy::Trident,
+            shared_observation: false,
+            shared_adaptation: false,
+            use_observation: true,
+            use_adaptation: true,
+            placement_aware: true,
+            rolling: true,
+            strategy: Strategy::ConstrainedBo,
+            initial_configs: None,
+        }
+    }
+
+    pub fn baseline(policy: Policy) -> Self {
+        Variant { policy, use_adaptation: false, ..Variant::trident() }
+    }
+
+    /// RQ2: baseline with Trident's observation + adaptation layers.
+    pub fn controlled(policy: Policy) -> Self {
+        Variant {
+            policy,
+            shared_observation: true,
+            shared_adaptation: true,
+            use_adaptation: true,
+            rolling: false,
+            ..Variant::trident()
+        }
+    }
+}
+
+/// Which scheduling policy drives the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Fixed manually-tuned allocation (one-shot nominal MILP).
+    Static,
+    /// Ray Data's reactive threshold autoscaler.
+    RayData,
+    /// DS2: useful-time rates + waterfall parallelism.
+    Ds2,
+    /// ContTune: DS2 + conservative parallelism BO.
+    ContTune,
+    /// SCOOT: offline per-op config tuning + Static allocation.
+    Scoot,
+    /// The full Trident MILP.
+    Trident,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Static => "Static",
+            Policy::RayData => "Ray Data",
+            Policy::Ds2 => "DS2",
+            Policy::ContTune => "ContTune",
+            Policy::Scoot => "SCOOT",
+            Policy::Trident => "Trident",
+        }
+    }
+
+    /// Instantiate the policy implementation that drives a run.
+    pub fn build(self) -> Box<dyn SchedulingPolicy> {
+        match self {
+            // SCOOT = offline-tuned initial configs + Static allocation;
+            // at runtime both never re-plan.
+            Policy::Static | Policy::Scoot => Box::new(StaticPolicy),
+            Policy::RayData => Box::new(crate::baselines::RayDataAutoscaler::default()),
+            Policy::Ds2 => Box::new(crate::baselines::Ds2::default()),
+            Policy::ContTune => Box::new(crate::baselines::ContTune::default()),
+            Policy::Trident => Box::new(TridentPolicy),
+        }
+    }
+}
+
+/// Read-only view of the coordinator state a policy may consult when
+/// planning one scheduling round (the inputs of Algorithm 2).
+pub struct PolicyCtx<'a> {
+    pub spec: &'a PipelineSpec,
+    pub cluster: &'a ClusterSpec,
+    pub cfg: &'a TridentConfig,
+    pub variant: &'a Variant,
+    /// Metrics of the last completed window, one entry per operator.
+    pub metrics: &'a [OpMetrics],
+    /// Per-instance capacity estimates (records/s) from whichever
+    /// observation path the variant uses.
+    pub rates: &'a [f64],
+    /// Live instance count per operator.
+    pub cur_p: &'a [u32],
+    /// Live placement `x[op][node]`.
+    pub placement: &'a [Vec<u32>],
+    /// Rolling-update state per operator (candidate config, n_old/n_new).
+    pub rolling: &'a [RollingState],
+    /// Pipeline throughput observed over the previous round.
+    pub last_throughput: f64,
+    /// Simulation clock, seconds.
+    pub now: f64,
+}
+
+/// How configuration transitions are applied this round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransitionCmd {
+    /// Leave rolling state untouched (Static / SCOOT).
+    None,
+    /// Restart every instance of an op mid-transition at once (baselines
+    /// under the RQ2 shared-adaptation protocol; w/o-rolling ablation).
+    AllAtOnce,
+    /// Trident: restart `b[i]` old-config instances of operator `i`
+    /// (rolling update, paper §6.5).
+    Rolling(Vec<u32>),
+}
+
+/// A policy's decision for one scheduling round.  Everything is optional:
+/// `Plan::keep()` leaves the deployment untouched.
+pub struct Plan {
+    /// Target placement (`None` = keep the current deployment).
+    pub placement: Option<Placement>,
+    /// Placement-aware routing fractions per op (Trident MILP only).
+    pub routes: Option<Vec<Vec<Vec<f64>>>>,
+    pub transitions: TransitionCmd,
+    /// Wall-clock of the MILP solve backing this plan, ms (RQ6).
+    pub milp_ms: Option<f64>,
+}
+
+impl Plan {
+    /// Keep the current deployment as-is.
+    pub fn keep() -> Plan {
+        Plan { placement: None, routes: None, transitions: TransitionCmd::None, milp_ms: None }
+    }
+}
+
+/// One scheduler in the evaluation: consumes the shared observation /
+/// adaptation state through [`PolicyCtx`] and emits a [`Plan`] the
+/// coordinator applies identically for every policy.
+pub trait SchedulingPolicy: Send {
+    fn plan(&mut self, ctx: &PolicyCtx<'_>) -> Plan;
+}
+
+/// Static and SCOOT: deploy once, never re-plan.
+pub struct StaticPolicy;
+
+impl SchedulingPolicy for StaticPolicy {
+    fn plan(&mut self, _ctx: &PolicyCtx<'_>) -> Plan {
+        Plan::keep()
+    }
+}
+
+/// The full Trident MILP (paper §6, Algorithm 2): joint parallelism /
+/// placement / transition planning on the observation-layer estimates.
+pub struct TridentPolicy;
+
+impl SchedulingPolicy for TridentPolicy {
+    fn plan(&mut self, ctx: &PolicyCtx<'_>) -> Plan {
+        let input = milp_input(ctx);
+        let t0 = Instant::now();
+        let plan = scheduling::solve(&input, Duration::from_millis(ctx.cfg.milp_time_budget_ms));
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        if plan.t_pred <= 0.0 {
+            // Keep the previous feasible plan (paper §7).
+            return Plan { milp_ms: Some(ms), ..Plan::keep() };
+        }
+        if std::env::var("TRIDENT_DEBUG").is_ok() {
+            eprintln!(
+                "[{:.0}s] plan: T={:.2} p={:?} b={:?}",
+                ctx.now, plan.t_pred, plan.p, plan.b
+            );
+            for (i, o) in input.ops.iter().enumerate() {
+                if o.ut_cand.is_some() || ctx.spec.operators[i].tunable {
+                    eprintln!(
+                        "    op{i} {}: ut_cur={:.2} ut_cand={:?} n_old={} n_new={} util={:.2}",
+                        o.name, o.ut_cur, o.ut_cand, o.n_old, o.n_new,
+                        ctx.metrics[i].utilization
+                    );
+                }
+            }
+        }
+        Plan {
+            placement: Some(plan.x),
+            routes: ctx.variant.placement_aware.then_some(plan.route),
+            transitions: TransitionCmd::Rolling(plan.b),
+            milp_ms: Some(ms),
+        }
+    }
+}
+
+/// Build the round's MILP input from the shared context.  Candidate rates
+/// enter only for operators mid-transition (single-transition invariant);
+/// the current placement seeds the movement-cost terms.
+pub fn milp_input(ctx: &PolicyCtx<'_>) -> MilpInput {
+    let (d_i, d_o) = ctx.spec.amplification();
+    MilpInput {
+        ops: ctx
+            .spec
+            .operators
+            .iter()
+            .enumerate()
+            .map(|(i, o)| OpSched {
+                name: o.name.clone(),
+                ut_cur: ctx.rates[i].max(1e-6),
+                ut_cand: ctx.rolling[i].in_transition().then(|| ctx.rolling[i].ut_cand),
+                n_new: ctx.rolling[i].n_new,
+                n_old: ctx.rolling[i].n_old,
+                cpu: o.cpu,
+                mem_gb: o.mem_gb,
+                accels: o.accels,
+                out_mb: o.out_mb,
+                d_i: d_i[i],
+                h_start: o.start_s,
+                h_stop: o.stop_s,
+                h_cold: o.cold_s,
+                cur_x: ctx.placement[i].clone(),
+            })
+            .collect(),
+        nodes: ctx.cluster.nodes.clone(),
+        d_o,
+        t_sched: ctx.cfg.t_sched_s,
+        lambda1: ctx.cfg.lambda1,
+        lambda2: ctx.cfg.lambda2,
+        b_max: ctx.cfg.b_max as u32,
+        placement_aware: ctx.variant.placement_aware,
+        all_at_once: !ctx.variant.rolling,
+    }
+}

@@ -1,0 +1,63 @@
+//! Run outcome assembly: the [`RunReport`] consumed by the CLI, the
+//! experiment harness, and every paper-reproduction bench.
+
+use std::collections::HashMap;
+
+use super::Coordinator;
+
+/// Run outcome for reports and benches.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub pipeline: String,
+    pub variant: String,
+    pub duration_s: f64,
+    /// Average pipeline throughput, input records/s.
+    pub throughput: f64,
+    /// (time, windowed throughput) series.
+    pub series: Vec<(f64, f64)>,
+    pub oom_events: u32,
+    pub oom_downtime_s: f64,
+    pub config_transitions: u64,
+    /// Wall-clock of each MILP solve, ms.
+    pub milp_ms: Vec<f64>,
+    /// Mean per-invocation overhead of obs / adaptation layers, ms.
+    pub obs_overhead_ms: f64,
+    pub adapt_overhead_ms: f64,
+    /// MAPE per estimator variant (Table 3), percent.
+    pub estimator_mape: HashMap<&'static str, f64>,
+    /// Clustering snapshots: per tunable op, (assignments, truth) samples.
+    pub cluster_eval: Vec<(Vec<usize>, Vec<u8>)>,
+    pub items_processed: u64,
+}
+
+impl Coordinator {
+    pub(super) fn report(&self, duration_s: f64) -> RunReport {
+        let mean = |v: &[f64]| {
+            if v.is_empty() {
+                0.0
+            } else {
+                v.iter().sum::<f64>() / v.len() as f64
+            }
+        };
+        RunReport {
+            pipeline: self.sim.spec.name.clone(),
+            variant: self.variant.policy.name().to_string(),
+            duration_s,
+            throughput: self.sim.avg_throughput(),
+            series: self.series.clone(),
+            oom_events: self.sim.oom_events_total.iter().sum(),
+            oom_downtime_s: self.sim.oom_downtime_s.iter().sum(),
+            config_transitions: self.transitions,
+            milp_ms: self.milp_ms.clone(),
+            obs_overhead_ms: mean(&self.obs_ms),
+            adapt_overhead_ms: mean(&self.adapt_ms),
+            estimator_mape: self
+                .mape
+                .iter()
+                .map(|(&k, &(s, n))| (k, if n > 0 { s / n as f64 } else { 0.0 }))
+                .collect(),
+            cluster_eval: self.cluster_eval.clone(),
+            items_processed: self.sim.out_records,
+        }
+    }
+}

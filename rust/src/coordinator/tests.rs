@@ -1,0 +1,78 @@
+//! Coordinator unit tests (moved out of `mod.rs` with the policy split;
+//! behavior-parity regression tests live in `tests/policy_parity.rs`).
+
+use super::{nominal_attrs, Coordinator, Policy, Variant};
+use crate::config::{ClusterSpec, TridentConfig};
+use crate::workload::pdf;
+
+fn mini_cluster() -> ClusterSpec {
+    ClusterSpec::homogeneous(2, 128.0, 512.0, 4, 65536.0, 2500.0)
+}
+
+fn mk(variant: Variant, seed: u64) -> Coordinator {
+    let mut cfg = TridentConfig::default();
+    cfg.native_gp = true;
+    cfg.milp_time_budget_ms = 1500;
+    cfg.tune_trigger = 32;
+    cfg.bo_budget = 10;
+    cfg.bo_init = 4;
+    let trace = Box::new(pdf::trace(100_000));
+    let src = crate::sim::ItemAttrs {
+        tokens_in: 36_000.0,
+        tokens_out: 7_200.0,
+        pixels_m: 12.0,
+        frames: 12.0,
+    };
+    Coordinator::new(pdf::pipeline(), mini_cluster(), trace, cfg, variant, src, seed)
+}
+
+#[test]
+fn static_deploys_and_flows() {
+    let mut c = mk(Variant::baseline(Policy::Static), 1);
+    let r = c.run(400.0);
+    assert!(r.throughput > 0.0, "static must process documents: {r:?}");
+    assert!(r.items_processed > 0);
+    // all accel ops placed
+    for i in 0..c.sim.spec.n_ops() {
+        if c.sim.spec.operators[i].accels > 0 {
+            assert!(!c.sim.instances_of(i).is_empty(), "op {i} placed");
+        }
+    }
+}
+
+#[test]
+fn trident_beats_nothing_crashes_and_schedules() {
+    let mut c = mk(Variant::trident(), 2);
+    let r = c.run(400.0);
+    assert!(r.throughput > 0.0);
+    assert!(!r.milp_ms.is_empty(), "trident must re-solve the MILP");
+}
+
+#[test]
+fn raydata_reacts() {
+    let mut c = mk(Variant::baseline(Policy::RayData), 3);
+    let r = c.run(400.0);
+    assert!(r.throughput > 0.0);
+}
+
+#[test]
+fn ds2_runs() {
+    let mut c = mk(Variant::baseline(Policy::Ds2), 4);
+    let r = c.run(400.0);
+    assert!(r.throughput > 0.0);
+}
+
+#[test]
+fn nominal_attrs_propagate_scaling() {
+    let pl = pdf::pipeline();
+    let src = crate::sim::ItemAttrs {
+        tokens_in: 36_000.0,
+        tokens_out: 7_200.0,
+        pixels_m: 12.0,
+        frames: 12.0,
+    };
+    let nom = nominal_attrs(&pl, src);
+    let ocr = pl.operators.iter().position(|o| o.name == "text_ocr").unwrap();
+    // per-block tokens at the OCR stage = 36000 / 120 = 300
+    assert!((nom[ocr].tokens_in - 300.0).abs() < 1.0, "{}", nom[ocr].tokens_in);
+}

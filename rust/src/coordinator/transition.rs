@@ -1,0 +1,233 @@
+//! Transition-side of the closed loop: initial deployment, placement
+//! application (instance start/drain), rolling configuration updates with
+//! sample invalidation (path ⑨), the all-at-once transition path used by
+//! baselines and the w/o-rolling ablation, and the deployed-config OOM
+//! safety fallback.
+
+use std::time::Duration;
+
+use crate::baselines::pack;
+use crate::scheduling::{self, RollingState};
+use crate::sim::OpMetrics;
+
+use super::policy::{self, Policy, PolicyCtx};
+use super::Coordinator;
+
+impl Coordinator {
+    /// Nominal per-instance rate for the Static plan ("manual tuning"):
+    /// the default-config capacity at the first regime's expected load.
+    fn nominal_rates(&self) -> Vec<f64> {
+        self.sim
+            .spec
+            .operators
+            .iter()
+            .enumerate()
+            .map(|(i, o)| {
+                crate::sim::service::true_unit_rate(
+                    &o.service,
+                    &self.rolling[i].current,
+                    &self.nominal[i],
+                )
+            })
+            .collect()
+    }
+
+    /// Initial deployment shared by every policy: one-shot MILP on nominal
+    /// rates (the "manually tuned" allocation).
+    pub fn deploy_initial(&mut self) {
+        let rates = self.nominal_rates();
+        let placement = self.sim.placement();
+        let cur_p: Vec<u32> = placement.iter().map(|row| row.iter().sum()).collect();
+        let input = {
+            let ctx = PolicyCtx {
+                spec: &self.sim.spec,
+                cluster: &self.sim.cluster,
+                cfg: &self.cfg,
+                variant: &self.variant,
+                metrics: &[],
+                rates: &rates,
+                cur_p: &cur_p,
+                placement: &placement,
+                rolling: &self.rolling,
+                last_throughput: 0.0,
+                now: self.sim.now(),
+            };
+            policy::milp_input(&ctx)
+        };
+        let plan = scheduling::solve(&input, Duration::from_millis(self.cfg.milp_time_budget_ms));
+        let x = if plan.t_pred > 0.0 {
+            plan.x
+        } else {
+            // Fallback: greedy pack of a waterfall plan.
+            let p = crate::baselines::waterfall(&self.sim.spec, &self.sim.cluster, &rates, 1.1);
+            pack(&self.sim.spec, &self.sim.cluster, &p)
+        };
+        self.apply_placement(&x);
+        if self.variant.policy == Policy::Trident && self.variant.placement_aware {
+            for (i, m) in plan.route.iter().enumerate() {
+                self.sim.set_route(i, Some(m.clone()));
+            }
+        }
+        for (i, rs) in self.rolling.iter_mut().enumerate() {
+            rs.sync_count(x[i].iter().sum());
+        }
+    }
+
+    /// Apply a placement diff: start missing instances, drain surplus.
+    pub(super) fn apply_placement(&mut self, x: &[Vec<u32>]) {
+        let k = self.sim.cluster.nodes.len();
+        for op in 0..self.sim.spec.n_ops() {
+            for node in 0..k {
+                let have: Vec<usize> = self
+                    .sim
+                    .instances_of(op)
+                    .into_iter()
+                    .filter(|&i| self.sim.instances[i].node == node)
+                    .collect();
+                let want = x[op][node] as usize;
+                if have.len() < want {
+                    let theta = self.launch_config(op);
+                    for _ in have.len()..want {
+                        // Capacity races can reject; skip silently (the next
+                        // round repairs).
+                        let _ = self.sim.add_instance(op, node, theta.clone());
+                    }
+                } else if have.len() > want {
+                    // Drain the newest instances, but never the candidate-
+                    // config ones mid-rollout (no-rollback semantics).
+                    let cand = self.rolling[op].candidate.clone();
+                    let mut surplus: Vec<usize> = have.clone();
+                    surplus.sort_by_key(|&i| {
+                        let is_cand =
+                            cand.as_deref() == Some(&self.sim.instances[i].theta[..]);
+                        (is_cand as u8, std::cmp::Reverse(i))
+                    });
+                    // stop non-candidate, newest-first
+                    for &i in surplus.iter().take(have.len() - want) {
+                        self.sim.stop_instance(i);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Config for newly launched instances of `op`: the rolling current
+    /// config (new instances join the old pool; the MILP's b decides
+    /// transitions).
+    fn launch_config(&self, op: usize) -> Vec<f64> {
+        self.rolling[op].current.clone()
+    }
+
+    /// Forward adaptation recommendations into rolling state (Algorithm 2
+    /// step 1).  Returns whether adaptation drives transitions this run —
+    /// Trident with its own adaptation layer, or a baseline under the RQ2
+    /// shared-adaptation protocol.
+    pub(super) fn forward_recommendations(&mut self) -> bool {
+        let adapt_on = self.variant.use_adaptation
+            && (self.variant.policy == Policy::Trident || self.variant.shared_adaptation);
+        if !adapt_on {
+            return false;
+        }
+        for i in 0..self.sim.spec.n_ops() {
+            // Anti-thrash cooldown: when workload clusters alternate in
+            // dominance (queues hold a regime mix), back-to-back
+            // re-transitions would pay restart cost every round.  A new
+            // transition may start at most once per cooldown window.
+            let cooldown_ok =
+                self.sim.now() >= self.last_transition_t[i] + 3.0 * self.cfg.t_sched_s;
+            if !cooldown_ok && !self.rolling[i].in_transition() {
+                continue;
+            }
+            if let Some(ad) = &self.adaptation[i] {
+                if let Some(rec) = ad.recommendation() {
+                    let fresh = self.rolling[i].offer(rec.config, rec.ut_cand);
+                    if fresh && std::env::var("TRIDENT_DEBUG").is_ok() {
+                        eprintln!(
+                            "[{:.0}s] op{} candidate accepted: ut_cand={:.2}",
+                            self.sim.now(),
+                            i,
+                            rec.ut_cand
+                        );
+                    }
+                } else if std::env::var("TRIDENT_DEBUG").is_ok() {
+                    eprintln!(
+                        "[{:.0}s] op{}: no recommendation (tuning={}, clusters={})",
+                        self.sim.now(),
+                        i,
+                        ad.is_tuning(),
+                        ad.clustering.n_clusters()
+                    );
+                }
+            }
+        }
+        true
+    }
+
+    /// Restart `b` old-config instances of op `i` with the candidate
+    /// config, invalidating observation samples (path ⑨) once per
+    /// transition.
+    pub(super) fn start_transition(&mut self, i: usize, b: u32) {
+        let Some(cand) = self.rolling[i].candidate.clone() else { return };
+        let old: Vec<usize> = self
+            .sim
+            .instances_of(i)
+            .into_iter()
+            .filter(|&id| self.sim.instances[id].theta == self.rolling[i].current)
+            .take(b as usize)
+            .collect();
+        for id in &old {
+            self.sim.restart_with_config(*id, cand.clone());
+        }
+        if !old.is_empty() && !self.invalidated[i] {
+            self.estimators[i].invalidate();
+            self.invalidated[i] = true;
+            self.transitions += 1;
+            self.last_transition_t[i] = self.sim.now();
+        }
+        if !self.rolling[i].in_transition() {
+            self.invalidated[i] = false;
+        }
+    }
+
+    /// All-at-once transition application for baselines (RQ2 protocol) and
+    /// the w/o-rolling ablation.
+    pub(super) fn apply_all_at_once_transitions(&mut self, adapt_on: bool) {
+        if !adapt_on {
+            return;
+        }
+        for i in 0..self.sim.spec.n_ops() {
+            if self.rolling[i].in_transition() {
+                let cand = self.rolling[i].candidate.clone().unwrap();
+                let insts = self.sim.instances_of(i);
+                let n_inst = insts.len() as u32;
+                for id in insts {
+                    self.sim.restart_with_config(id, cand.clone());
+                }
+                self.rolling[i].apply_round(n_inst, n_inst);
+                self.estimators[i].invalidate();
+                self.transitions += 1;
+                self.last_transition_t[i] = self.sim.now();
+            }
+        }
+    }
+
+    /// Deployed-config OOM safety fallback: repeated OOMs on the live
+    /// config revert the operator to its default configuration.
+    pub(super) fn oom_safety_fallback(&mut self, metrics: &[OpMetrics]) {
+        for (i, m) in metrics.iter().enumerate() {
+            self.recent_ooms[i] = self.recent_ooms[i] / 2 + m.oom_events;
+            if self.recent_ooms[i] >= 2 {
+                let default = self.sim.spec.operators[i].config_space.default_config();
+                if !default.is_empty() && self.rolling[i].current != default {
+                    for inst in self.sim.instances_of(i) {
+                        self.sim.restart_with_config(inst, default.clone());
+                    }
+                    self.rolling[i] =
+                        RollingState::new(default, self.sim.instances_of(i).len() as u32);
+                    self.estimators[i].invalidate();
+                    self.recent_ooms[i] = 0;
+                }
+            }
+        }
+    }
+}

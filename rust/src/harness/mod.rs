@@ -1,0 +1,274 @@
+//! Parallel multi-seed experiment harness: execute variant × seed grids
+//! across OS threads and aggregate the [`RunReport`]s into mean ± std
+//! summaries.
+//!
+//! This is the single entry point for grid-shaped evaluation — the CLI's
+//! `compare` / `sweep` subcommands and the paper-reproduction benches all
+//! fan out through [`run_grid`].  Every grid cell owns its coordinator
+//! (and RNG chain) seeded purely from the [`Job`], cells never share
+//! mutable state, and results land in index-addressed slots, so cell
+//! outputs do not depend on worker count or OS scheduling
+//! (`tests/policy_parity.rs` pins this).
+//!
+//! One caveat: the Trident MILP is an *anytime* solver with a wall-clock
+//! budget (paper §7).  A solve that exhausts its search tree within the
+//! budget (`Status::Optimal`, the common case at evaluation sizes) is
+//! deterministic; a budget-bound solve returns the incumbent at cutoff,
+//! which heavy core oversubscription can perturb.  For strict
+//! reproducibility of Trident cells on a loaded host, cap `workers` below
+//! the core count or raise `milp_time_budget_ms`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::adaptation::{ConfigTuner, Strategy, TunerConfig};
+use crate::config::PipelineSpec;
+use crate::coordinator::{Coordinator, Policy, RunReport, Variant};
+use crate::runtime::GpBackend;
+use crate::sim::ItemAttrs;
+
+/// Default simulated-time cap for run-to-completion cells (the paper's
+/// offline paradigm: fixed dataset, fastest finish wins).
+pub const MAX_SIM_S: f64 = 4.0 * 3600.0;
+
+/// One grid cell: a variant at a seed.  Cells with the same `label` are
+/// aggregated together by [`summarize`].
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub label: String,
+    pub variant: Variant,
+    pub seed: u64,
+    /// Simulated-time budget, seconds.
+    pub max_s: f64,
+    /// Run until the trace drains (true) or for exactly `max_s` (false).
+    pub until_drained: bool,
+}
+
+impl Job {
+    /// A run-to-completion cell (offline paradigm, [`MAX_SIM_S`] cap).
+    pub fn new(label: impl Into<String>, variant: Variant, seed: u64) -> Job {
+        Job { label: label.into(), variant, seed, max_s: MAX_SIM_S, until_drained: true }
+    }
+
+    /// A fixed-duration cell (`duration_s` of simulated time).
+    pub fn timed(label: impl Into<String>, variant: Variant, seed: u64, duration_s: f64) -> Job {
+        Job { label: label.into(), variant, seed, max_s: duration_s, until_drained: false }
+    }
+}
+
+/// Worker-count default: one per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Execute every job on a pool of `workers` OS threads.  `factory` builds
+/// the coordinator for a cell *inside* the worker thread (coordinators are
+/// not `Send` — they own the trace generator), keyed by the cell index and
+/// job.  Reports come back in job order, independent of worker count.
+pub fn run_grid<F>(jobs: &[Job], workers: usize, factory: F) -> Vec<RunReport>
+where
+    F: Fn(usize, &Job) -> Coordinator + Sync,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<RunReport>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = &jobs[i];
+                let mut coord = factory(i, job);
+                let report = if job.until_drained {
+                    coord.run_to_completion(job.max_s)
+                } else {
+                    coord.run(job.max_s)
+                };
+                slots.lock().unwrap()[i] = Some(report);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every job index is claimed by exactly one worker"))
+        .collect()
+}
+
+/// Mean / population-std / min / max of a metric across seeds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stat {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stat {
+    pub fn of(vals: &[f64]) -> Stat {
+        if vals.is_empty() {
+            return Stat { mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+        }
+        let n = vals.len() as f64;
+        let mean = vals.iter().sum::<f64>() / n;
+        let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+        let min = vals.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = vals.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        Stat { mean, std: var.sqrt(), min, max }
+    }
+
+    /// "mean ± std" with three decimals.
+    pub fn pm(&self) -> String {
+        format!("{:.3} ± {:.3}", self.mean, self.std)
+    }
+}
+
+/// Aggregate of all cells sharing one label (variant across seeds).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub label: String,
+    pub n: usize,
+    pub throughput: Stat,
+    pub oom_events: Stat,
+    pub oom_downtime_s: Stat,
+    pub transitions: Stat,
+    pub duration_s: Stat,
+    pub items_processed: Stat,
+}
+
+/// Group reports by job label (first-seen order) and reduce each metric
+/// to mean ± std across the label's seeds.
+pub fn summarize(jobs: &[Job], reports: &[RunReport]) -> Vec<Summary> {
+    assert_eq!(jobs.len(), reports.len(), "one report per job");
+    let mut order: Vec<&str> = Vec::new();
+    for j in jobs {
+        if !order.iter().any(|l| *l == j.label.as_str()) {
+            order.push(j.label.as_str());
+        }
+    }
+    order
+        .iter()
+        .map(|label| {
+            let rs: Vec<&RunReport> = jobs
+                .iter()
+                .zip(reports)
+                .filter(|(j, _)| j.label.as_str() == *label)
+                .map(|(_, r)| r)
+                .collect();
+            let stat = |g: fn(&RunReport) -> f64| -> Stat {
+                Stat::of(&rs.iter().map(|&r| g(r)).collect::<Vec<f64>>())
+            };
+            Summary {
+                label: label.to_string(),
+                n: rs.len(),
+                throughput: stat(|r| r.throughput),
+                oom_events: stat(|r| r.oom_events as f64),
+                oom_downtime_s: stat(|r| r.oom_downtime_s),
+                transitions: stat(|r| r.config_transitions as f64),
+                duration_s: stat(|r| r.duration_s),
+                items_processed: stat(|r| r.items_processed as f64),
+            }
+        })
+        .collect()
+}
+
+/// SCOOT's offline per-operator tuning phase: BO against a sustained
+/// isolated-operator evaluation at the *first* regime (the paper tunes
+/// offline before the run), then deploy statically.  (Moved here from
+/// `benches/common.rs` so the CLI sweep can run SCOOT too; constants are
+/// unchanged, so bench results are unchanged.)
+pub fn scoot_variant(pipeline: &PipelineSpec, src: ItemAttrs) -> Variant {
+    let backend = GpBackend::from_env();
+    let nominal = crate::coordinator::nominal_attrs(pipeline, src);
+    let mut rng = crate::rngx::Rng::new(99);
+    let configs: Vec<Option<Vec<f64>>> = pipeline
+        .operators
+        .iter()
+        .enumerate()
+        .map(|(i, o)| {
+            if !o.tunable {
+                return None;
+            }
+            let mut tuner = ConfigTuner::new(
+                o.config_space.clone(),
+                TunerConfig {
+                    strategy: Strategy::ConstrainedBo,
+                    budget: 30,
+                    n_init: 5,
+                    eta: 0.6,
+                    mem_limit_mb: 65_536.0 - 2048.0,
+                    seed: i as u64,
+                },
+            );
+            while !tuner.done() {
+                let theta = tuner.next_candidate(&backend);
+                let ut = crate::sim::service::true_unit_rate(&o.service, &theta, &nominal[i])
+                    * rng.lognormal(0.0, 0.05);
+                let mem = crate::sim::service::expected_mem(&o.service, &theta, &nominal[i])
+                    * rng.lognormal(0.02, 0.03);
+                let oom = mem > 65_536.0;
+                tuner.record(theta, ut, mem, oom);
+            }
+            tuner.best().map(|e| e.theta.clone())
+        })
+        .collect();
+    let mut v = Variant::baseline(Policy::Scoot);
+    v.initial_configs = Some(configs);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stat_of_mean_std() {
+        let s = Stat::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!((s.min, s.max), (1.0, 4.0));
+        let e = Stat::of(&[]);
+        assert_eq!(e.mean, 0.0);
+    }
+
+    #[test]
+    fn summarize_groups_by_label_in_order() {
+        let v = Variant::baseline(Policy::Static);
+        let jobs = vec![
+            Job::timed("b", v.clone(), 0, 1.0),
+            Job::timed("a", v.clone(), 1, 1.0),
+            Job::timed("b", v, 2, 1.0),
+        ];
+        let mk = |thr: f64| RunReport {
+            pipeline: "p".into(),
+            variant: "v".into(),
+            duration_s: 1.0,
+            throughput: thr,
+            series: vec![],
+            oom_events: 0,
+            oom_downtime_s: 0.0,
+            config_transitions: 0,
+            milp_ms: vec![],
+            obs_overhead_ms: 0.0,
+            adapt_overhead_ms: 0.0,
+            estimator_mape: Default::default(),
+            cluster_eval: vec![],
+            items_processed: 0,
+        };
+        let reports = vec![mk(1.0), mk(5.0), mk(3.0)];
+        let s = summarize(&jobs, &reports);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].label, "b");
+        assert_eq!(s[0].n, 2);
+        assert!((s[0].throughput.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s[1].label, "a");
+        assert_eq!(s[1].n, 1);
+    }
+}

@@ -7,7 +7,10 @@
 //! * **Layer 3 (this crate)** — the streaming coordinator: discrete-event
 //!   cluster/pipeline runtime, metrics collection, the observation /
 //!   adaptation / scheduling closed loop, the MILP scheduler, and all
-//!   baseline schedulers from the paper's evaluation.
+//!   baseline schedulers from the paper's evaluation.  Schedulers are
+//!   pluggable [`coordinator::SchedulingPolicy`] implementations over one
+//!   shared substrate, and the [`harness`] module fans variant × seed
+//!   evaluation grids out across cores.
 //! * **Layer 2 (`python/compile/model.py`)** — the GP posterior and the
 //!   memory-constrained BO acquisition as JAX graphs, AOT-lowered to HLO
 //!   text artifacts.
@@ -15,8 +18,10 @@
 //!   cross-covariance Pallas kernel the Layer-2 graphs call.
 //!
 //! At runtime Python is never on the path: `runtime/` loads the artifacts
-//! through the PJRT CPU client (`xla` crate) and the coordinator calls the
-//! compiled executables directly.
+//! through the PJRT CPU client (`xla` crate, behind the off-by-default
+//! `pjrt` cargo feature) and the coordinator calls the compiled
+//! executables directly.  The default build uses the pure-Rust native GP
+//! oracle and has no third-party dependencies at all.
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
@@ -25,6 +30,7 @@ pub mod adaptation;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
+pub mod harness;
 pub mod linalg;
 pub mod observation;
 pub mod report;

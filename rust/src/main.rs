@@ -1,17 +1,20 @@
 //! Trident CLI launcher.
 //!
 //! ```text
-//! trident run   --pipeline pdf|video --policy trident|static|raydata|ds2|conttune
+//! trident run   --pipeline pdf|video --policy trident|static|raydata|ds2|conttune|scoot
 //!               [--duration 1800] [--nodes 8] [--seed 0] [--items 20000]
 //!               [--native-gp] [--config cfg.json]
-//! trident compare --pipeline pdf [--duration 1800]    # all policies
-//! trident milp-bench [--nodes 8|16]                   # RQ6 solve times
+//! trident compare --pipeline pdf [--duration 1800] [--jobs J]   # all policies, parallel
+//! trident sweep --pipeline pdf --seeds 4 --jobs 4 [--policies static,trident]
+//!               [--duration 1800] [--seed 0]      # variant × seed grid, mean ± std
+//! trident milp-bench [--nodes 8|16]               # RQ6 solve times
 //! ```
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use trident::config::{ClusterSpec, Json, TridentConfig};
 use trident::coordinator::{Coordinator, Policy, Variant};
+use trident::harness::{self, Job};
 use trident::report::{f2, Table};
 use trident::sim::ItemAttrs;
 use trident::workload::{pdf, video, Trace};
@@ -56,14 +59,30 @@ impl Args {
     }
 }
 
+fn try_policy_of(s: &str) -> Option<Policy> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "static" => Some(Policy::Static),
+        "raydata" | "ray-data" => Some(Policy::RayData),
+        "ds2" => Some(Policy::Ds2),
+        "conttune" => Some(Policy::ContTune),
+        "scoot" => Some(Policy::Scoot),
+        "trident" => Some(Policy::Trident),
+        _ => None,
+    }
+}
+
+/// Strict: a typo'd policy name must not silently run a different
+/// scheduler (the flag's absence still defaults to trident upstream).
 fn policy_of(s: &str) -> Policy {
-    match s.to_ascii_lowercase().as_str() {
-        "static" => Policy::Static,
-        "raydata" | "ray-data" => Policy::RayData,
-        "ds2" => Policy::Ds2,
-        "conttune" => Policy::ContTune,
-        "scoot" => Policy::Scoot,
-        _ => Policy::Trident,
+    match try_policy_of(s) {
+        Some(p) => p,
+        None => {
+            eprintln!(
+                "unknown policy '{}' (expected static|raydata|ds2|conttune|scoot|trident)",
+                s.trim()
+            );
+            std::process::exit(2);
+        }
     }
 }
 
@@ -90,26 +109,46 @@ fn build_cfg(args: &Args) -> TridentConfig {
     cfg
 }
 
-fn run_one(args: &Args, policy: Policy) -> trident::coordinator::RunReport {
+/// Variant for a CLI-selected policy (SCOOT gets its offline-tuned
+/// initial configs).
+fn variant_of(args: &Args, policy: Policy) -> Variant {
+    match policy {
+        Policy::Trident => Variant::trident(),
+        Policy::Scoot => {
+            let items = args.f64("items", 50_000.0) as u64;
+            let (pl, _, src) = pipeline_of(&args.get("pipeline", "pdf"), items);
+            harness::scoot_variant(&pl, src)
+        }
+        p => Variant::baseline(p),
+    }
+}
+
+/// Build a coordinator from the CLI flags for one (variant, seed) cell.
+fn build_coordinator(args: &Args, variant: Variant, seed: u64) -> Coordinator {
     let nodes = args.f64("nodes", 8.0) as usize;
     let items = args.f64("items", 50_000.0) as u64;
     let (pl, trace, src) = pipeline_of(&args.get("pipeline", "pdf"), items);
     let cluster = ClusterSpec::homogeneous(nodes, 256.0, 1024.0, 8, 65536.0, 12_500.0);
     let cfg = build_cfg(args);
-    let variant = match policy {
-        Policy::Trident => Variant::trident(),
-        p => Variant::baseline(p),
-    };
-    let mut coord = Coordinator::new(
-        pl,
-        cluster,
-        trace,
-        cfg,
-        variant,
-        src,
-        args.f64("seed", 0.0) as u64,
-    );
+    Coordinator::new(pl, cluster, trace, cfg, variant, src, seed)
+}
+
+fn run_one(args: &Args, policy: Policy) -> trident::coordinator::RunReport {
+    let variant = variant_of(args, policy);
+    let mut coord = build_coordinator(args, variant, args.f64("seed", 0.0) as u64);
     coord.run(args.f64("duration", 1800.0))
+}
+
+/// Policies named by `--policies a,b,c` (default: all but SCOOT, whose
+/// offline tuning phase is opt-in).  Tokens are trimmed and unknown names
+/// abort rather than silently substituting a different scheduler.
+fn policies_of(args: &Args, key: &str, default: &str) -> Vec<Policy> {
+    args.get(key, default)
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(policy_of)
+        .collect()
 }
 
 fn main() {
@@ -132,22 +171,30 @@ fn main() {
             }
         }
         "compare" => {
-            let mut table = Table::new(
-                "End-to-end throughput (items/s, speedup vs Static)",
-                &["Method", "items/s", "speedup"],
-            );
-            let mut static_thr = 0.0;
-            for policy in [
+            let duration = args.f64("duration", 1800.0);
+            let seed = args.f64("seed", 0.0) as u64;
+            let workers = args.f64("jobs", harness::default_workers() as f64) as usize;
+            let order = [
                 Policy::Static,
                 Policy::RayData,
                 Policy::Ds2,
                 Policy::ContTune,
                 Policy::Trident,
-            ] {
-                let r = run_one(&args, policy);
-                if policy == Policy::Static {
-                    static_thr = r.throughput.max(1e-12);
-                }
+            ];
+            let jobs: Vec<Job> = order
+                .iter()
+                .map(|&p| Job::timed(p.name(), variant_of(&args, p), seed, duration))
+                .collect();
+            let reports =
+                harness::run_grid(&jobs, workers, |_, job| {
+                    build_coordinator(&args, job.variant.clone(), job.seed)
+                });
+            let mut table = Table::new(
+                "End-to-end throughput (items/s, speedup vs Static)",
+                &["Method", "items/s", "speedup"],
+            );
+            let static_thr = reports[0].throughput.max(1e-12);
+            for (policy, r) in order.iter().zip(&reports) {
                 table.row(vec![
                     policy.name().into(),
                     f2(r.throughput),
@@ -156,6 +203,65 @@ fn main() {
                 eprintln!("done: {}", policy.name());
             }
             table.emit("cli_compare");
+        }
+        "sweep" => {
+            let duration = args.f64("duration", 1800.0);
+            let seeds = (args.f64("seeds", 4.0) as u64).max(1);
+            let base_seed = args.f64("seed", 0.0) as u64;
+            let workers = args.f64("jobs", harness::default_workers() as f64) as usize;
+            let policies = policies_of(&args, "policies", "static,raydata,ds2,conttune,trident");
+            // Paired design: every policy sees the same seed list, so
+            // per-seed workload draws are directly comparable.
+            let jobs: Vec<Job> = policies
+                .iter()
+                .flat_map(|&p| {
+                    let variant = variant_of(&args, p);
+                    (0..seeds).map(move |s| {
+                        Job::timed(p.name(), variant.clone(), base_seed + s, duration)
+                    })
+                })
+                .collect();
+            let t0 = Instant::now();
+            let reports = harness::run_grid(&jobs, workers, |_, job| {
+                build_coordinator(&args, job.variant.clone(), job.seed)
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let summaries = harness::summarize(&jobs, &reports);
+            let mut table = Table::new(
+                &format!(
+                    "Sweep: {} policies x {} seeds ({}s sim each)",
+                    policies.len(),
+                    seeds,
+                    duration
+                ),
+                &["Method", "items/s (mean ± std)", "speedup", "OOMs", "transitions"],
+            );
+            // Speedup is relative to Static; without it in the grid the
+            // column has no referent.
+            let static_mean = summaries
+                .iter()
+                .find(|s| s.label == Policy::Static.name())
+                .map(|s| s.throughput.mean.max(1e-12));
+            for s in &summaries {
+                let speedup = match static_mean {
+                    Some(base) => format!("{:.2}x", s.throughput.mean / base),
+                    None => "-".to_string(),
+                };
+                table.row(vec![
+                    s.label.clone(),
+                    s.throughput.pm(),
+                    speedup,
+                    format!("{:.1}", s.oom_events.mean),
+                    format!("{:.1}", s.transitions.mean),
+                ]);
+            }
+            table.emit("cli_sweep");
+            println!(
+                "{} cells on {} workers in {:.1}s wall-clock",
+                jobs.len(),
+                workers.clamp(1, jobs.len().max(1)),
+                wall
+            );
         }
         "milp-bench" => {
             let nodes = args.f64("nodes", 8.0) as usize;
@@ -211,7 +317,10 @@ fn main() {
             }
         }
         _ => {
-            println!("usage: trident <run|compare|milp-bench> [--pipeline pdf|video] [--policy ...] [--duration S] [--nodes N] [--seed S] [--native-gp]");
+            println!(
+                "usage: trident <run|compare|sweep|milp-bench> [--pipeline pdf|video] [--policy ...] \
+                 [--policies a,b,c] [--seeds N] [--jobs J] [--duration S] [--nodes N] [--seed S] [--native-gp]"
+            );
         }
     }
 }

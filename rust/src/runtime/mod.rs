@@ -12,10 +12,23 @@
 //!
 //! [`GpBackend`] abstracts over the PJRT path and the pure-Rust
 //! [`native`] oracle (used in tests and via `TRIDENT_NATIVE_GP=1`).
+//!
+//! The PJRT path depends on the external `xla` and `anyhow` crates, which
+//! the offline build environment does not ship; it is compiled only under
+//! the off-by-default `pjrt` cargo feature (see `rust/Cargo.toml`).  The
+//! default build always uses the native backend, with identical call-site
+//! signatures so no caller changes across builds.
 
 pub mod native;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
+
+/// Fallible runtime result.  Without the `pjrt` feature the native backend
+/// cannot fail, but the `Result` signatures are kept so call sites are
+/// identical whether or not the feature is enabled.
+#[cfg(not(feature = "pjrt"))]
+pub type Result<T> = std::result::Result<T, std::convert::Infallible>;
 
 /// AOT shape constants — must match `python/compile/model.py`.
 pub const N_TRAIN: usize = 64;
@@ -33,6 +46,7 @@ pub struct GpHyper {
 }
 
 impl GpHyper {
+    #[cfg(feature = "pjrt")]
     fn as_f32(&self) -> [f32; 4] {
         [
             self.lengthscale as f32,
@@ -90,12 +104,14 @@ pub struct AcqPoint {
 }
 
 /// Compiled PJRT executables for both artifacts.
+#[cfg(feature = "pjrt")]
 pub struct Artifacts {
     _client: xla::PjRtClient,
     gp: xla::PjRtLoadedExecutable,
     acq: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Artifacts {
     /// Compile `gp_predict.hlo.txt` + `bo_acquisition.hlo.txt` from `dir`.
     pub fn load(dir: &str) -> Result<Artifacts> {
@@ -119,16 +135,19 @@ impl Artifacts {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn lit1(v: &[f32]) -> xla::Literal {
     xla::Literal::vec1(v)
 }
 
+#[cfg(feature = "pjrt")]
 fn lit2(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
     Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
 }
 
 /// Pad `xs`/`ys` (most recent last) into fixed N_TRAIN × D_FEAT buffers.
 /// If more than N_TRAIN points are given, the oldest are dropped.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 fn pad_train(xs: &[Vec<f64>], ys: &[f64]) -> (Vec<f32>, Vec<f32>, Vec<f32>, usize) {
     let n = xs.len().min(N_TRAIN);
     let off = xs.len() - n;
@@ -146,6 +165,7 @@ fn pad_train(xs: &[Vec<f64>], ys: &[f64]) -> (Vec<f32>, Vec<f32>, Vec<f32>, usiz
     (x, y, m, n)
 }
 
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 fn pad_queries(qs: &[Vec<f64>], rows: usize) -> Vec<f32> {
     let mut q = vec![0f32; rows * D_FEAT];
     for (i, src) in qs.iter().enumerate().take(rows) {
@@ -159,6 +179,7 @@ fn pad_queries(qs: &[Vec<f64>], rows: usize) -> Vec<f32> {
 /// Backend for all GP math: PJRT artifacts (production) or native Rust
 /// (oracle / fallback).
 pub enum GpBackend {
+    #[cfg(feature = "pjrt")]
     Pjrt(Artifacts),
     Native,
 }
@@ -166,6 +187,7 @@ pub enum GpBackend {
 impl GpBackend {
     /// Construct from the environment: native if `TRIDENT_NATIVE_GP=1` or
     /// artifacts are missing, PJRT otherwise.
+    #[cfg(feature = "pjrt")]
     pub fn from_env() -> GpBackend {
         if std::env::var("TRIDENT_NATIVE_GP").map(|v| v == "1").unwrap_or(false) {
             return GpBackend::Native;
@@ -182,8 +204,18 @@ impl GpBackend {
         }
     }
 
+    /// Without the `pjrt` feature the native oracle is the only backend.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn from_env() -> GpBackend {
+        GpBackend::Native
+    }
+
     pub fn is_native(&self) -> bool {
-        matches!(self, GpBackend::Native)
+        match self {
+            GpBackend::Native => true,
+            #[cfg(feature = "pjrt")]
+            GpBackend::Pjrt(_) => false,
+        }
     }
 
     /// GP posterior at `queries` given observations `(xs, ys)`.
@@ -198,6 +230,7 @@ impl GpBackend {
     ) -> Result<Vec<(f64, f64)>> {
         match self {
             GpBackend::Native => Ok(native::gp_predict(xs, ys, queries, hyper)),
+            #[cfg(feature = "pjrt")]
             GpBackend::Pjrt(a) => {
                 let (x, y, m, _) = pad_train(xs, ys);
                 let mut out = Vec::with_capacity(queries.len());
@@ -240,6 +273,7 @@ impl GpBackend {
             GpBackend::Native => Ok(native::acquisition(
                 thetas, uts, mems, cands, hyper_ut, hyper_mem, best_ut, mem_limit,
             )),
+            #[cfg(feature = "pjrt")]
             GpBackend::Pjrt(a) => {
                 let (x, ut, m, _) = pad_train(thetas, uts);
                 let (_, mem, _, _) = pad_train(thetas, mems);

@@ -6,6 +6,7 @@ use std::time::Duration;
 use trident::config::{ClusterSpec, TridentConfig};
 use trident::coordinator::{Coordinator, Policy, Variant};
 use trident::rngx::Rng;
+#[cfg(feature = "pjrt")]
 use trident::runtime::{fit_hyper, GpBackend};
 use trident::scheduling::{solve, MilpInput, OpSched};
 use trident::sim::ItemAttrs;
@@ -41,6 +42,9 @@ fn closed_loop_survives_regime_shifts_and_makes_progress() {
 }
 
 /// The PJRT artifact and the native oracle must agree numerically.
+/// (Compiled only with the `pjrt` feature; the offline default build has
+/// no PJRT backend at all.)
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_matches_native_gp() {
     let Ok(arts) = trident::runtime::Artifacts::load(&trident::runtime::Artifacts::default_dir())
@@ -73,6 +77,7 @@ fn pjrt_matches_native_gp() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_acquisition_matches_native() {
     let Ok(arts) = trident::runtime::Artifacts::load(&trident::runtime::Artifacts::default_dir())

@@ -1,0 +1,146 @@
+//! Policy-parity regression tests for the trait-based policy refactor:
+//! the `SchedulingPolicy` dispatch must change structure, not results.
+//!
+//! * every policy driven through the parallel harness produces a
+//!   bit-identical `RunReport` to the reference serial path;
+//! * the per-policy semantics of the old inline dispatch are preserved
+//!   (Static/SCOOT never re-plan, only Trident touches the MILP, every
+//!   baseline keeps making progress);
+//! * harness aggregates are invariant to the worker count (`--jobs`).
+
+use trident::config::{ClusterSpec, TridentConfig};
+use trident::coordinator::{Coordinator, Policy, RunReport, Variant};
+use trident::harness::{self, Job};
+use trident::sim::ItemAttrs;
+use trident::workload::pdf;
+
+fn mini_cfg() -> TridentConfig {
+    let mut cfg = TridentConfig::default();
+    cfg.native_gp = true;
+    cfg.milp_time_budget_ms = 800;
+    cfg.tune_trigger = 32;
+    cfg.bo_budget = 8;
+    cfg.bo_init = 3;
+    cfg
+}
+
+fn mk_with_cfg(variant: &Variant, seed: u64, cfg: TridentConfig) -> Coordinator {
+    Coordinator::new(
+        pdf::pipeline(),
+        ClusterSpec::homogeneous(2, 128.0, 512.0, 4, 65536.0, 2500.0),
+        Box::new(pdf::trace(50_000)),
+        cfg,
+        variant.clone(),
+        ItemAttrs { tokens_in: 36_000.0, tokens_out: 7_200.0, pixels_m: 12.0, frames: 12.0 },
+        seed,
+    )
+}
+
+fn mk(variant: &Variant, seed: u64) -> Coordinator {
+    mk_with_cfg(variant, seed, mini_cfg())
+}
+
+/// Like [`mk`] but with a generous MILP wall-clock budget: the mini
+/// 2-node instance always reaches `Status::Optimal`, so Trident plans are
+/// deterministic even when sibling worker threads oversubscribe the host
+/// (the anytime-solver caveat in the harness docs).
+fn mk_det(variant: &Variant, seed: u64) -> Coordinator {
+    let mut cfg = mini_cfg();
+    cfg.milp_time_budget_ms = 10_000;
+    mk_with_cfg(variant, seed, cfg)
+}
+
+fn all_policies() -> Vec<(&'static str, Variant)> {
+    vec![
+        ("Static", Variant::baseline(Policy::Static)),
+        ("Ray Data", Variant::baseline(Policy::RayData)),
+        ("DS2", Variant::baseline(Policy::Ds2)),
+        ("ContTune", Variant::baseline(Policy::ContTune)),
+        ("SCOOT", Variant::baseline(Policy::Scoot)),
+        ("Trident", Variant::trident()),
+    ]
+}
+
+/// The fields that pin a run's outcome exactly (throughput compared at the
+/// bit level — the refactor must not perturb a single event).
+fn key(r: &RunReport) -> (u64, u64, u32, u64, usize) {
+    (
+        r.throughput.to_bits(),
+        r.items_processed,
+        r.oom_events,
+        r.config_transitions,
+        r.milp_ms.len(),
+    )
+}
+
+/// Each of the six policies, run through the harness, must reproduce the
+/// reference serial run bit-for-bit.
+#[test]
+fn trait_dispatch_matches_serial_reference() {
+    for (name, variant) in all_policies() {
+        let serial = mk_det(&variant, 5).run(300.0);
+        let jobs = vec![Job::timed(name, variant.clone(), 5, 300.0)];
+        let harnessed = harness::run_grid(&jobs, 1, |_, job| mk_det(&job.variant, job.seed));
+        assert_eq!(key(&serial), key(&harnessed[0]), "policy {name} diverged");
+        assert!(serial.throughput > 0.0, "{name} must make progress");
+    }
+}
+
+/// Semantics of the pre-refactor inline dispatch, now enforced per trait
+/// impl: Static/SCOOT never transition or re-solve; only Trident records
+/// MILP solves; reactive baselines keep flowing.
+#[test]
+fn policy_semantics_preserved() {
+    let s = mk(&Variant::baseline(Policy::Static), 3).run(300.0);
+    assert_eq!(s.config_transitions, 0, "Static never transitions");
+    assert!(s.milp_ms.is_empty(), "Static never re-solves the MILP");
+
+    let sc = mk(&Variant::baseline(Policy::Scoot), 3).run(300.0);
+    assert_eq!(sc.config_transitions, 0, "SCOOT never transitions at runtime");
+    assert!(sc.milp_ms.is_empty(), "SCOOT never re-solves the MILP");
+
+    let t = mk(&Variant::trident(), 3).run(300.0);
+    assert!(!t.milp_ms.is_empty(), "Trident re-solves the MILP");
+
+    for p in [Policy::RayData, Policy::Ds2, Policy::ContTune] {
+        let r = mk(&Variant::baseline(p), 3).run(300.0);
+        assert!(r.throughput > 0.0, "{p:?} must make progress");
+        assert!(r.milp_ms.is_empty(), "{p:?} never touches the MILP");
+    }
+}
+
+/// Same grid, different `--jobs`: reports and aggregates are identical.
+#[test]
+fn harness_invariant_to_worker_count() {
+    let grid: Vec<Job> = [
+        ("Static", Variant::baseline(Policy::Static)),
+        ("DS2", Variant::baseline(Policy::Ds2)),
+        ("Trident", Variant::trident()),
+    ]
+    .into_iter()
+    .flat_map(|(name, v)| {
+        (0..2u64).map(move |s| Job::timed(name, v.clone(), 5 + s, 250.0))
+    })
+    .collect();
+
+    let serial = harness::run_grid(&grid, 1, |_, job| mk_det(&job.variant, job.seed));
+    let parallel = harness::run_grid(&grid, 4, |_, job| mk_det(&job.variant, job.seed));
+    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(key(a), key(b), "cell {i} depends on worker count");
+    }
+
+    let s1 = harness::summarize(&grid, &serial);
+    let s4 = harness::summarize(&grid, &parallel);
+    assert_eq!(s1.len(), 3);
+    for (a, b) in s1.iter().zip(&s4) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.n, 2, "two seeds per label");
+        assert_eq!(
+            a.throughput.mean.to_bits(),
+            b.throughput.mean.to_bits(),
+            "aggregate for {} depends on worker count",
+            a.label
+        );
+        assert_eq!(a.throughput.std.to_bits(), b.throughput.std.to_bits());
+    }
+}
