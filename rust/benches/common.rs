@@ -16,7 +16,7 @@ use trident::config::{ClusterSpec, TridentConfig};
 use trident::coordinator::{Coordinator, RunReport, Variant};
 use trident::harness::{self, Job};
 use trident::sim::ItemAttrs;
-use trident::workload::{pdf, video, Trace};
+use trident::workload::{pdf, speech, video, Trace};
 
 pub const MAX_SIM_S: f64 = harness::MAX_SIM_S;
 
@@ -36,7 +36,7 @@ pub fn pdf_workload(docs: u64) -> Workload {
         name: "PDF",
         pipeline: pdf::pipeline(),
         trace: Box::new(pdf::trace(docs)),
-        src: ItemAttrs { tokens_in: 36_000.0, tokens_out: 7_200.0, pixels_m: 12.0, frames: 12.0 },
+        src: pdf::src_attrs(),
     }
 }
 
@@ -45,16 +45,40 @@ pub fn video_workload(vids: u64) -> Workload {
         name: "Video",
         pipeline: video::pipeline(),
         trace: Box::new(video::trace(vids)),
-        src: ItemAttrs { tokens_in: 5_400.0, tokens_out: 480.0, pixels_m: 0.9, frames: 600.0 },
+        src: video::src_attrs(),
+    }
+}
+
+/// The branching (fork/join) speech curation DAG — every policy in the
+/// end-to-end benches is also evaluated on a non-chain topology.
+pub fn speech_workload(clips: u64) -> Workload {
+    Workload {
+        name: "Speech",
+        pipeline: speech::pipeline(),
+        trace: Box::new(speech::trace(clips)),
+        src: speech::src_attrs(),
     }
 }
 
 pub fn items_for(name: &str) -> u64 {
-    if name == "Video" { 2000 } else { 900 }
+    match name {
+        "PDF" => 900,
+        "Video" => 2000,
+        "Speech" => 1500,
+        other => panic!("unknown bench workload '{other}' (expected PDF|Video|Speech)"),
+    }
 }
 
+/// Strict lookup: a typo'd workload name must not silently bench the PDF
+/// chain under another column's label (same contract as the CLI's
+/// `pipeline_of`).
 pub fn workload(name: &str) -> Workload {
-    if name == "Video" { video_workload(items_for(name)) } else { pdf_workload(items_for(name)) }
+    match name {
+        "PDF" => pdf_workload(items_for(name)),
+        "Video" => video_workload(items_for(name)),
+        "Speech" => speech_workload(items_for(name)),
+        other => panic!("unknown bench workload '{other}' (expected PDF|Video|Speech)"),
+    }
 }
 
 fn coordinator_for(wname: &str, variant: Variant, seed: u64, collect_mape: bool) -> Coordinator {

@@ -42,6 +42,7 @@ fn milp_input(wname: &str, nodes: usize) -> MilpInput {
                 cur_x: vec![0; nodes],
             })
             .collect(),
+        edges: w.pipeline.edges.clone(),
         nodes: common::cluster(nodes).nodes,
         d_o,
         t_sched: 90.0,
@@ -74,7 +75,8 @@ fn main() {
     table.row(vec!["Adaptation layer / invocation".into(), format!("{:.2} ms", r.adapt_overhead_ms)]);
 
     for nodes in [8usize, 16] {
-        for wname in ["PDF", "Video"] {
+        // Speech exercises the DAG (fork/join) edge-list formulation.
+        for wname in ["PDF", "Video", "Speech"] {
             let input = milp_input(wname, nodes);
             // median of 5 solves
             // The scheduler consumes the incumbent at its solve budget

@@ -265,28 +265,226 @@ impl OperatorSpec {
     }
 }
 
-/// A linear pipeline of operators (the paper's dataflow shape).
+/// A pipeline of operators over an explicit edge-list DAG.
+///
+/// The paper's workloads are linear chains, which are the path-shaped
+/// special case (`PipelineSpec::chain`).  General DAGs add two structural
+/// roles, both derived from the edge list rather than declared:
+///
+/// * **fork** — an operator with several outgoing edges *replicates* each
+///   output record onto every edge (modality-parallel branches see the
+///   same items, e.g. ASR and captioning both consume the decoded clip);
+/// * **join** — an operator with several incoming edges merges records
+///   that share an item id (align-by-item-id), consuming one merged
+///   record per aligned group.
+///
+/// Between a fork and its join every operator must emit at most one child
+/// per input (fanout ≤ 1) so item ids survive the branch; the fork itself
+/// may fan out freely (children are replicated with matching ids).
 #[derive(Debug, Clone)]
 pub struct PipelineSpec {
     pub name: String,
     pub operators: Vec<OperatorSpec>,
+    /// Dataflow edges `(from_op, to_op)`.  Operator 0 is the unique
+    /// source; operators without outgoing edges are sinks.
+    pub edges: Vec<(usize, usize)>,
 }
 
 impl PipelineSpec {
+    /// A linear chain `0 -> 1 -> ... -> n-1` (the paper's shape).
+    pub fn chain(name: impl Into<String>, operators: Vec<OperatorSpec>) -> Self {
+        let edges = (1..operators.len()).map(|i| (i - 1, i)).collect();
+        PipelineSpec { name: name.into(), operators, edges }
+    }
+
     pub fn n_ops(&self) -> usize {
         self.operators.len()
     }
 
-    /// Amplification factors D_i (input volume of operator i relative to
-    /// pipeline input; D_1 = 1) and D_o at the output.
-    pub fn amplification(&self) -> (Vec<f64>, f64) {
-        let mut d = Vec::with_capacity(self.operators.len());
-        let mut cur = 1.0;
-        for op in &self.operators {
-            d.push(cur);
-            cur *= op.fanout;
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Edge ids leaving `op`, in edge-list order.
+    pub fn out_edges(&self, op: usize) -> Vec<usize> {
+        (0..self.edges.len()).filter(|&e| self.edges[e].0 == op).collect()
+    }
+
+    /// Edge ids entering `op`, in edge-list order.  A join's partial-result
+    /// slots are indexed by position in this list.
+    pub fn in_edges(&self, op: usize) -> Vec<usize> {
+        (0..self.edges.len()).filter(|&e| self.edges[e].1 == op).collect()
+    }
+
+    pub fn in_degree(&self, op: usize) -> usize {
+        self.edges.iter().filter(|&&(_, v)| v == op).count()
+    }
+
+    /// Joins are operators with more than one incoming edge.
+    pub fn is_join(&self, op: usize) -> bool {
+        self.in_degree(op) > 1
+    }
+
+    /// Operators with no outgoing edges (their outputs leave the pipeline).
+    pub fn sinks(&self) -> Vec<usize> {
+        (0..self.operators.len()).filter(|&i| self.out_edges(i).is_empty()).collect()
+    }
+
+    /// Deterministic topological order: repeatedly take the lowest-index
+    /// operator whose predecessors are all placed.  Panics on cycles
+    /// (`validate` reports them as errors instead).
+    pub fn topo_order(&self) -> Vec<usize> {
+        self.try_topo_order().expect("pipeline edge list contains a cycle")
+    }
+
+    /// The Kahn scan behind both [`topo_order`](Self::topo_order) and
+    /// [`validate`](Self::validate).
+    fn try_topo_order(&self) -> Result<Vec<usize>, String> {
+        let n = self.operators.len();
+        let mut indeg: Vec<usize> = (0..n).map(|i| self.in_degree(i)).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut placed = vec![false; n];
+        for _ in 0..n {
+            let Some(next) = (0..n).find(|&i| !placed[i] && indeg[i] == 0) else {
+                return Err("pipeline edge list contains a cycle".into());
+            };
+            placed[next] = true;
+            order.push(next);
+            for &(u, v) in &self.edges {
+                if u == next {
+                    indeg[v] -= 1;
+                }
+            }
         }
-        (d, cur)
+        Ok(order)
+    }
+
+    /// Structural sanity of the DAG: indices in range, no self-loops,
+    /// duplicate edges, or cycles; operator 0 the unique source; every
+    /// operator reachable; and the fork/join alignment invariants the
+    /// executor's align-by-item-id joins depend on — every operator on a
+    /// branch leading into a join must be strictly record-to-record
+    /// (`fanout == 1`, so lineage ids survive and no group is orphaned),
+    /// and all of a join's incoming edges must carry equal volume.
+    /// Violations would not panic the executor; they would silently wedge
+    /// it (incomplete join groups pile up until backpressure stops the
+    /// pipeline), so they are rejected here instead.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.operators.len();
+        for (ei, &(u, v)) in self.edges.iter().enumerate() {
+            if u >= n || v >= n {
+                return Err(format!("edge ({u}, {v}) out of range for {n} operators"));
+            }
+            if u == v {
+                return Err(format!("self-loop on operator {u}"));
+            }
+            if self.edges[..ei].contains(&(u, v)) {
+                return Err(format!("duplicate edge ({u}, {v})"));
+            }
+        }
+        for i in 1..n {
+            if self.in_degree(i) == 0 {
+                return Err(format!("operator {i} is unreachable (no incoming edges)"));
+            }
+        }
+        if n > 0 && self.in_degree(0) != 0 {
+            return Err("operator 0 must be the source (no incoming edges)".into());
+        }
+        // Cycle check (shared Kahn scan with topo_order).
+        self.try_topo_order()?;
+        // Acyclic from here on: edge volumes are well-defined.
+        let vols = self.edge_volumes();
+        // Fork/join alignment: walk each join's branches backwards to its
+        // anchor — the nearest fork (out-degree > 1, whose replicas carry
+        // matching ids), nested join (emits id-preserving merged records),
+        // or the source.  Every operator passed on the way must have
+        // fanout exactly 1 (so lineage ids survive and no group is
+        // orphaned), and all branches must share ONE anchor: two distinct
+        // forks both splitting (fanout > 1) would mint disjoint id sets
+        // that can never align.
+        for j in 0..n {
+            if self.in_degree(j) <= 1 {
+                continue;
+            }
+            let mut anchor: Option<usize> = None;
+            for &e in &self.in_edges(j) {
+                let mut u = self.edges[e].0;
+                loop {
+                    if self.out_edges(u).len() > 1 {
+                        break; // fork anchor: replicas carry matching ids
+                    }
+                    if self.operators[u].fanout != 1.0 {
+                        return Err(format!(
+                            "operator {u} ({}) on a branch into join {j} ({}) has fanout {} — \
+                             branch operators must be record-to-record for id alignment",
+                            self.operators[u].name, self.operators[j].name, self.operators[u].fanout
+                        ));
+                    }
+                    if self.in_degree(u) != 1 {
+                        break; // source or nested join anchor
+                    }
+                    u = self.edges[self.in_edges(u)[0]].0;
+                }
+                match anchor {
+                    None => anchor = Some(u),
+                    Some(a) if a != u => {
+                        return Err(format!(
+                            "join {j} ({}) branches anchor at different operators \
+                             ({a} and {u}) — their lineage-id streams cannot align",
+                            self.operators[j].name
+                        ));
+                    }
+                    Some(_) => {}
+                }
+            }
+            // Equal volumes on every in-edge (amplification consistency).
+            let first = vols[self.in_edges(j)[0]];
+            for &e in &self.in_edges(j) {
+                if (vols[e] - first).abs() > 1e-9 * first.max(1.0) {
+                    return Err(format!(
+                        "join {j} ({}) receives unequal edge volumes ({} vs {})",
+                        self.operators[j].name, first, vols[e]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Volume carried by each edge relative to pipeline input: a fork
+    /// replicates, so every outgoing edge of `u` carries `D_u * fanout_u`.
+    pub fn edge_volumes(&self) -> Vec<f64> {
+        let (d, _) = self.amplification();
+        self.edges.iter().map(|&(u, _)| d[u] * self.operators[u].fanout).collect()
+    }
+
+    /// Amplification factors D_i (input volume of operator i relative to
+    /// pipeline input; D_source = 1) and D_o at the output.
+    ///
+    /// Over the DAG: an operator with one incoming edge sees that edge's
+    /// volume; a join consumes one merged record per aligned group, so it
+    /// sees the volume of a *single* incoming edge (branches between a
+    /// fork and its join carry equal volumes by construction — we take the
+    /// first in-edge).  D_o sums the emissions of all sinks.  For a chain
+    /// this reduces exactly to the old cumulative-fanout product.
+    pub fn amplification(&self) -> (Vec<f64>, f64) {
+        let n = self.operators.len();
+        let mut d = vec![0.0; n];
+        for &i in &self.topo_order() {
+            d[i] = match self.in_edges(i).first() {
+                None => 1.0,
+                Some(&e) => {
+                    let u = self.edges[e].0;
+                    d[u] * self.operators[u].fanout
+                }
+            };
+        }
+        let d_o = self
+            .sinks()
+            .iter()
+            .map(|&s| d[s] * self.operators[s].fanout)
+            .sum();
+        (d, d_o)
     }
 }
 
@@ -452,7 +650,15 @@ mod tests {
 
     #[test]
     fn amplification_tracks_fanout() {
-        let mk = |fanout: f64| OperatorSpec {
+        let p = PipelineSpec::chain("t", vec![mk_op(10.0), mk_op(0.5), mk_op(1.0)]);
+        assert_eq!(p.edges, vec![(0, 1), (1, 2)]);
+        let (d, d_out) = p.amplification();
+        assert_eq!(d, vec![1.0, 10.0, 5.0]);
+        assert_eq!(d_out, 5.0);
+    }
+
+    fn mk_op(fanout: f64) -> OperatorSpec {
+        OperatorSpec {
             name: "op".into(),
             kind: OperatorKind::CpuSync,
             cpu: 1.0,
@@ -469,11 +675,80 @@ mod tests {
             features: FeatureExtractor::Cost,
             child_scale: [1.0; 4],
             queue_cap: 512,
+        }
+    }
+
+    /// Diamond: 0 -> {1, 2} -> 3 -> 4.  The fork replicates, the join
+    /// consumes one merged record per aligned pair.
+    fn diamond(fork_fanout: f64) -> PipelineSpec {
+        PipelineSpec {
+            name: "diamond".into(),
+            operators: vec![mk_op(fork_fanout), mk_op(1.0), mk_op(1.0), mk_op(1.0), mk_op(1.0)],
+            edges: vec![(0, 1), (0, 2), (1, 3), (2, 3), (3, 4)],
+        }
+    }
+
+    #[test]
+    fn dag_helpers_classify_fork_and_join() {
+        let p = diamond(1.0);
+        assert!(p.validate().is_ok());
+        assert_eq!(p.out_edges(0), vec![0, 1], "fork has two out-edges");
+        assert_eq!(p.in_edges(3), vec![2, 3], "join has two in-edges");
+        assert!(p.is_join(3));
+        assert!(!p.is_join(1));
+        assert_eq!(p.sinks(), vec![4]);
+        assert_eq!(p.topo_order(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn dag_amplification_fork_replicates_join_aligns() {
+        let p = diamond(3.0);
+        let (d, d_o) = p.amplification();
+        // Fork emits 3 children per input, replicated onto both branches.
+        assert_eq!(d, vec![1.0, 3.0, 3.0, 3.0, 3.0]);
+        assert_eq!(d_o, 3.0);
+        let vols = p.edge_volumes();
+        assert_eq!(vols, vec![3.0, 3.0, 3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn validate_rejects_broken_topologies() {
+        let mut cyc = diamond(1.0);
+        cyc.edges.push((4, 0));
+        assert!(cyc.validate().unwrap_err().contains("source"));
+        let mut orphan = diamond(1.0);
+        orphan.edges.retain(|&(_, v)| v != 4);
+        assert!(orphan.validate().unwrap_err().contains("unreachable"));
+        let mut oob = diamond(1.0);
+        oob.edges.push((1, 9));
+        assert!(oob.validate().unwrap_err().contains("out of range"));
+        let mut dup = diamond(1.0);
+        dup.edges.push((0, 1));
+        assert!(dup.validate().unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn validate_rejects_misaligned_joins() {
+        // A splitting operator on one branch re-mints lineage ids: the
+        // join could never align its groups.
+        let mut splitter = diamond(1.0);
+        splitter.operators[1].fanout = 2.0;
+        assert!(splitter.validate().unwrap_err().contains("record-to-record"));
+        // Two independent splitting forks feeding one join: equal volumes,
+        // but disjoint id sets — must anchor at one fork.
+        let nested = PipelineSpec {
+            name: "nested".into(),
+            operators: vec![
+                mk_op(1.0),
+                mk_op(3.0),
+                mk_op(3.0),
+                mk_op(1.0),
+                mk_op(1.0),
+                mk_op(1.0),
+            ],
+            edges: vec![(0, 1), (0, 2), (1, 3), (1, 4), (2, 3), (2, 5)],
         };
-        let p = PipelineSpec { name: "t".into(), operators: vec![mk(10.0), mk(0.5), mk(1.0)] };
-        let (d, d_out) = p.amplification();
-        assert_eq!(d, vec![1.0, 10.0, 5.0]);
-        assert_eq!(d_out, 5.0);
+        assert!(nested.validate().unwrap_err().contains("anchor"));
     }
 
     #[test]

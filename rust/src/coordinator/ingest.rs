@@ -2,6 +2,13 @@
 //! the observation and adaptation layers, the Table-3 estimator lattice
 //! ([`EstimatorBank`]), BO probe evaluation, and the capacity estimates the
 //! scheduler consumes ([`Coordinator::current_rates`]).
+//!
+//! DAG note: on fork/join pipelines a join operator's window metrics fold
+//! its incomplete-group backlog into the queue signals (`queue_end`,
+//! per-instance `queue_len`), so reactive policies and the queue-trend
+//! features see branch-imbalance pressure; its observed attrs are the
+//! *merged* records (branch token loads summed), which is also what
+//! `probe_measure` evaluates candidate configs against.
 
 use std::collections::HashMap;
 use std::time::Instant;

@@ -86,18 +86,41 @@ pub struct Coordinator {
 
 /// Propagate a source item's mean attrs through the pipeline's child
 /// scalings to get nominal per-op attrs (used for the Static plan).
+///
+/// Runs over the DAG in topological order: an operator inherits its
+/// predecessor's scaled attrs; a join sees the merge of its branches
+/// (token loads accumulate, spatial extents take the max — mirroring the
+/// executor's `merge_group`).  For a chain this is the old sequential
+/// propagation.
 pub fn nominal_attrs(pipeline: &PipelineSpec, source: ItemAttrs) -> Vec<ItemAttrs> {
-    let mut cur = source;
-    let mut out = Vec::with_capacity(pipeline.n_ops());
-    for op in &pipeline.operators {
-        out.push(cur);
-        let s = op.child_scale;
-        cur = ItemAttrs {
-            tokens_in: cur.tokens_in * s[0],
-            tokens_out: cur.tokens_out * s[1],
-            pixels_m: cur.pixels_m * s[2],
-            frames: cur.frames * s[3],
-        };
+    let scale = |a: ItemAttrs, s: [f64; 4]| ItemAttrs {
+        tokens_in: a.tokens_in * s[0],
+        tokens_out: a.tokens_out * s[1],
+        pixels_m: a.pixels_m * s[2],
+        frames: a.frames * s[3],
+    };
+    let mut out = vec![source; pipeline.n_ops()];
+    for &v in &pipeline.topo_order() {
+        let preds = pipeline.in_edges(v);
+        match preds.len() {
+            0 => out[v] = source,
+            1 => {
+                let u = pipeline.edges[preds[0]].0;
+                out[v] = scale(out[u], pipeline.operators[u].child_scale);
+            }
+            _ => {
+                let mut merged: Option<ItemAttrs> = None;
+                for &e in &preds {
+                    let u = pipeline.edges[e].0;
+                    let a = scale(out[u], pipeline.operators[u].child_scale);
+                    merged = Some(match merged {
+                        None => a,
+                        Some(m) => m.merge(&a),
+                    });
+                }
+                out[v] = merged.unwrap();
+            }
+        }
     }
     out
 }
@@ -224,8 +247,9 @@ impl Coordinator {
             self.apply_placement(x);
         }
         if let Some(routes) = plan.routes {
-            for (i, m) in routes.into_iter().enumerate() {
-                self.sim.set_route(i, Some(m));
+            // Routing fractions are keyed by pipeline edge id.
+            for (edge, m) in routes.into_iter().enumerate() {
+                self.sim.set_route(edge, Some(m));
             }
         }
         match plan.transitions {

@@ -157,7 +157,8 @@ pub enum TransitionCmd {
 pub struct Plan {
     /// Target placement (`None` = keep the current deployment).
     pub placement: Option<Placement>,
-    /// Placement-aware routing fractions per op (Trident MILP only).
+    /// Placement-aware routing fractions keyed by pipeline edge id
+    /// (`PipelineSpec::edges` order; Trident MILP only).
     pub routes: Option<Vec<Vec<Vec<f64>>>>,
     pub transitions: TransitionCmd,
     /// Wall-clock of the MILP solve backing this plan, ms (RQ6).
@@ -253,6 +254,7 @@ pub fn milp_input(ctx: &PolicyCtx<'_>) -> MilpInput {
                 cur_x: ctx.placement[i].clone(),
             })
             .collect(),
+        edges: ctx.spec.edges.clone(),
         nodes: ctx.cluster.nodes.clone(),
         d_o,
         t_sched: ctx.cfg.t_sched_s,

@@ -64,8 +64,9 @@ impl Coordinator {
         };
         self.apply_placement(&x);
         if self.variant.policy == Policy::Trident && self.variant.placement_aware {
-            for (i, m) in plan.route.iter().enumerate() {
-                self.sim.set_route(i, Some(m.clone()));
+            // One routing matrix per pipeline edge (DAG-aware).
+            for (edge, m) in plan.route.iter().enumerate() {
+                self.sim.set_route(edge, Some(m.clone()));
             }
         }
         for (i, rs) in self.rolling.iter_mut().enumerate() {
@@ -180,12 +181,32 @@ impl Coordinator {
         }
         if !old.is_empty() && !self.invalidated[i] {
             self.estimators[i].invalidate();
+            self.invalidate_downstream_joins(i);
             self.invalidated[i] = true;
             self.transitions += 1;
             self.last_transition_t[i] = self.sim.now();
         }
         if !self.rolling[i].in_transition() {
             self.invalidated[i] = false;
+        }
+    }
+
+    /// Path ⑨, per-edge extension for DAGs: a transition at `i` also
+    /// invalidates the samples of any join fed directly by one of `i`'s
+    /// out-edges.  A join's window rates depend on how its branch arrivals
+    /// interleave, and the transition just changed that interleaving; on a
+    /// chain no operator is a join, so this is a no-op there.
+    fn invalidate_downstream_joins(&mut self, i: usize) {
+        let succs: Vec<usize> = self
+            .sim
+            .spec
+            .out_edges(i)
+            .into_iter()
+            .map(|e| self.sim.spec.edges[e].1)
+            .filter(|&v| self.sim.spec.is_join(v))
+            .collect();
+        for v in succs {
+            self.estimators[v].invalidate();
         }
     }
 
@@ -205,6 +226,7 @@ impl Coordinator {
                 }
                 self.rolling[i].apply_round(n_inst, n_inst);
                 self.estimators[i].invalidate();
+                self.invalidate_downstream_joins(i);
                 self.transitions += 1;
                 self.last_transition_t[i] = self.sim.now();
             }

@@ -1,7 +1,7 @@
 //! Trident CLI launcher.
 //!
 //! ```text
-//! trident run   --pipeline pdf|video --policy trident|static|raydata|ds2|conttune|scoot
+//! trident run   --pipeline pdf|video|speech --policy trident|static|raydata|ds2|conttune|scoot
 //!               [--duration 1800] [--nodes 8] [--seed 0] [--items 20000]
 //!               [--native-gp] [--config cfg.json]
 //! trident compare --pipeline pdf [--duration 1800] [--jobs J]   # all policies, parallel
@@ -17,7 +17,7 @@ use trident::coordinator::{Coordinator, Policy, Variant};
 use trident::harness::{self, Job};
 use trident::report::{f2, Table};
 use trident::sim::ItemAttrs;
-use trident::workload::{pdf, video, Trace};
+use trident::workload::{pdf, speech, video, Trace};
 
 struct Args {
     map: std::collections::HashMap<String, String>,
@@ -86,13 +86,18 @@ fn policy_of(s: &str) -> Policy {
     }
 }
 
+/// Strict: a typo'd pipeline name must not silently run a different
+/// workload (same contract as `policy_of`; the flag's absence still
+/// defaults to pdf upstream).
 fn pipeline_of(name: &str, items: u64) -> (trident::config::PipelineSpec, Box<dyn Trace>, ItemAttrs) {
-    if name == "video" {
-        let src = ItemAttrs { tokens_in: 5400.0, tokens_out: 480.0, pixels_m: 0.9, frames: 600.0 };
-        (video::pipeline(), Box::new(video::trace(items)), src)
-    } else {
-        let src = ItemAttrs { tokens_in: 36_000.0, tokens_out: 7_200.0, pixels_m: 12.0, frames: 12.0 };
-        (pdf::pipeline(), Box::new(pdf::trace(items)), src)
+    match name.trim().to_ascii_lowercase().as_str() {
+        "pdf" => (pdf::pipeline(), Box::new(pdf::trace(items)) as Box<dyn Trace>, pdf::src_attrs()),
+        "video" => (video::pipeline(), Box::new(video::trace(items)), video::src_attrs()),
+        "speech" => (speech::pipeline(), Box::new(speech::trace(items)), speech::src_attrs()),
+        other => {
+            eprintln!("unknown pipeline '{other}' (expected pdf|video|speech)");
+            std::process::exit(2);
+        }
     }
 }
 
@@ -265,7 +270,7 @@ fn main() {
         }
         "milp-bench" => {
             let nodes = args.f64("nodes", 8.0) as usize;
-            for pipeline in ["pdf", "video"] {
+            for pipeline in ["pdf", "video", "speech"] {
                 let (pl, _, src) = pipeline_of(pipeline, 1000);
                 let cluster = ClusterSpec::homogeneous(nodes, 256.0, 1024.0, 8, 65536.0, 12_500.0);
                 let nominal = trident::coordinator::nominal_attrs(&pl, src);
@@ -296,6 +301,7 @@ fn main() {
                             cur_x: vec![0; nodes],
                         })
                         .collect(),
+                    edges: pl.edges.clone(),
                     nodes: cluster.nodes,
                     d_o,
                     t_sched: 30.0,
@@ -318,7 +324,7 @@ fn main() {
         }
         _ => {
             println!(
-                "usage: trident <run|compare|sweep|milp-bench> [--pipeline pdf|video] [--policy ...] \
+                "usage: trident <run|compare|sweep|milp-bench> [--pipeline pdf|video|speech] [--policy ...] \
                  [--policies a,b,c] [--seeds N] [--jobs J] [--duration S] [--nodes N] [--seed S] [--native-gp]"
             );
         }

@@ -7,13 +7,34 @@
 //! constraints (Eqs. 18–19) put `w` in "instance units" on *both* sides of
 //! an edge, which forces `p_i = p_{i+1}` when read literally.  We model the
 //! same co-location objective with *rate-based* flow variables:
-//! per edge i and node k we track `l_{i,k}` (rate produced AND consumed on
-//! k), `e_{i,k}` (exported) and `m_{i,k}` (imported), with (i) total flow
-//! pinned to the throughput the edge must carry (`T · D_{i+1} / D_o`),
-//! (ii) per-node source/destination capacity bounds linear in `x`, and
-//! (iii) the egress expression (Eq. 20) minimized through `E_max`.  This is
-//! linear, O(nk) instead of O(nk²), and strictly more faithful to what the
-//! executor routes (rates, not instance-units).
+//! per pipeline edge `(u, v)` and node k we track `l_{e,k}` (rate produced
+//! AND consumed on k), `e_{e,k}` (exported) and `m_{e,k}` (imported), with
+//! (i) total flow pinned to the throughput the edge must carry
+//! (`T · D_v / D_o`), (ii) per-node source/destination capacity bounds
+//! linear in `x`, and (iii) the egress expression (Eq. 20) minimized
+//! through `E_max`.  This is linear, O(|E|k) instead of O(|E|k²), and
+//! strictly more faithful to what the executor routes (rates, not
+//! instance-units).
+//!
+//! **DAG topology.**  Flow conservation runs over the pipeline's explicit
+//! edge list, not over chain positions: a fork's outgoing edges each carry
+//! the full replicated volume `D_u · fanout_u`, and a join consumes one
+//! merged record per aligned group, so each of its incoming edges carries
+//! `D_v` — which is exactly `d_i[v]` from `PipelineSpec::amplification`,
+//! making the per-edge demand `T · D_v / D_o` uniform across topologies.
+//! A chain is the path-shaped special case and builds the identical
+//! problem (same variables, names, and coefficients) as the pre-DAG
+//! formulation.
+//!
+//! **Known join approximation.**  The relaxation treats a join's incoming
+//! edges independently, so a plan may land sibling partials of one group
+//! on different nodes; the executor then forwards the late partial to the
+//! group's holding instance over the egress link — traffic the `E_max`
+//! budget never saw.  The gap is second-order (holder affinity follows
+//! the same routing fractions, so most groups co-locate), but on
+//! link-bound plans realized throughput can fall below `t_pred`; a
+//! co-located-join-inflow constraint (tie the per-node consumption shares
+//! of a join's in-edges together) is the known fix if it ever dominates.
 
 use std::time::Duration;
 
@@ -52,6 +73,9 @@ pub struct OpSched {
 #[derive(Debug, Clone)]
 pub struct MilpInput {
     pub ops: Vec<OpSched>,
+    /// Pipeline dataflow edges `(from_op, to_op)`; flow/egress variables
+    /// are created per edge (`PipelineSpec::edges` order).
+    pub edges: Vec<(usize, usize)>,
     pub nodes: Vec<NodeSpec>,
     pub d_o: f64,
     /// Scheduling window T_sched (cold-start discount, Eq. 11).
@@ -76,7 +100,8 @@ pub struct SchedulePlan {
     pub x: Vec<Vec<u32>>,
     /// Rolling batch b_i (instances to switch this round).
     pub b: Vec<u32>,
-    /// Flow fractions per edge: route[i][k][l] (row-normalized).
+    /// Flow fractions per pipeline edge: route[e][k][l] (row-normalized,
+    /// indexed by `MilpInput::edges` order).
     pub route: Vec<Vec<Vec<f64>>>,
     /// Predicted pipeline throughput (input records/s).
     pub t_pred: f64,
@@ -223,34 +248,36 @@ pub fn solve(input: &MilpInput, budget: Duration) -> SchedulePlan {
     let _ = j_mig;
 
     // Rate-based flow + egress (replaces Eqs. 18–20; see module docs).
-    // Per edge i and node k: l = locally-consumed rate, e = exported,
-    // m = imported.  production_k = l+e, consumption_k = l+m.
+    // Per pipeline edge (u, v) and node k: l = locally-consumed rate,
+    // e = exported, m = imported.  production_k = l+e, consumption_k = l+m.
     let mut flow_v: Vec<Vec<(Var, Var, Var)>> = Vec::new();
-    if input.placement_aware && n > 1 {
-        for i in 0..n - 1 {
-            let d_next = input.ops[i + 1].d_i;
-            let fan = d_next / input.ops[i].d_i;
+    if input.placement_aware && !input.edges.is_empty() {
+        for (ei, &(u, v)) in input.edges.iter().enumerate() {
+            // D_v is the per-edge volume for forks (replication) and joins
+            // (aligned-group consumption) alike; see module docs.
+            let d_next = input.ops[v].d_i;
+            let fan = d_next / input.ops[u].d_i;
             // Capacity rates include the candidate config (a mid-rollout
             // operator can run faster than ut_cur).
             let rate_of = |o: &OpSched| o.ut_cur.max(o.ut_cand.unwrap_or(0.0)).max(1e-6);
-            let src_rate = rate_of(&input.ops[i]) * fan;
-            let dst_rate = rate_of(&input.ops[i + 1]);
+            let src_rate = rate_of(&input.ops[u]) * fan;
+            let dst_rate = rate_of(&input.ops[v]);
             let mut per_edge = Vec::with_capacity(k);
             for kk in 0..k {
-                let l = prob.cont(&format!("l_{i}_{kk}"), 0.0, f64::INFINITY, 0.0);
-                let e = prob.cont(&format!("e_{i}_{kk}"), 0.0, f64::INFINITY, 0.0);
-                let m = prob.cont(&format!("m_{i}_{kk}"), 0.0, f64::INFINITY, 0.0);
+                let l = prob.cont(&format!("l_{ei}_{kk}"), 0.0, f64::INFINITY, 0.0);
+                let e = prob.cont(&format!("e_{ei}_{kk}"), 0.0, f64::INFINITY, 0.0);
+                let m = prob.cont(&format!("m_{ei}_{kk}"), 0.0, f64::INFINITY, 0.0);
                 // production <= source capacity on k
                 prob.constrain(
-                    &format!("fsrc_{i}_{kk}"),
-                    vec![(l, 1.0), (e, 1.0), (x_v[i][kk], -src_rate)],
+                    &format!("fsrc_{ei}_{kk}"),
+                    vec![(l, 1.0), (e, 1.0), (x_v[u][kk], -src_rate)],
                     Cmp::Le,
                     0.0,
                 );
                 // consumption <= destination capacity on k
                 prob.constrain(
-                    &format!("fdst_{i}_{kk}"),
-                    vec![(l, 1.0), (m, 1.0), (x_v[i + 1][kk], -dst_rate)],
+                    &format!("fdst_{ei}_{kk}"),
+                    vec![(l, 1.0), (m, 1.0), (x_v[v][kk], -dst_rate)],
                     Cmp::Le,
                     0.0,
                 );
@@ -262,23 +289,24 @@ pub fn solve(input: &MilpInput, budget: Duration) -> SchedulePlan {
                 bal.push((e, 1.0));
                 bal.push((m, -1.0));
             }
-            prob.constrain(&format!("fbal_{i}"), bal, Cmp::Eq, 0.0);
+            prob.constrain(&format!("fbal_{ei}"), bal, Cmp::Eq, 0.0);
             // Total consumption equals the rate this edge must carry:
-            // sum_k (l+m) = T * D_{i+1} / D_o.
+            // sum_k (l+m) = T * D_v / D_o.
             let mut tot: Vec<(Var, f64)> = Vec::with_capacity(2 * k + 1);
             for &(l, _, m) in &per_edge {
                 tot.push((l, 1.0));
                 tot.push((m, 1.0));
             }
             tot.push((t, -d_next / input.d_o));
-            prob.constrain(&format!("ftot_{i}"), tot, Cmp::Eq, 0.0);
+            prob.constrain(&format!("ftot_{ei}"), tot, Cmp::Eq, 0.0);
             flow_v.push(per_edge);
         }
         // Egress (Eq. 20): per node, exported bytes <= E_max.
         for kk in 0..k {
             let mut c: Vec<(Var, f64)> = Vec::new();
-            for (i, per_edge) in flow_v.iter().enumerate() {
-                c.push((per_edge[kk].1, input.ops[i].out_mb));
+            for (ei, per_edge) in flow_v.iter().enumerate() {
+                let (u, _) = input.edges[ei];
+                c.push((per_edge[kk].1, input.ops[u].out_mb));
             }
             c.push((e_max, -1.0));
             prob.constrain(&format!("egress_{kk}"), c, Cmp::Le, 0.0);
@@ -533,16 +561,16 @@ fn warm_start(
     // Flows: local first, spillover spread by importer capacity.
     let mut e_val: f64 = 0.0;
     let mut egress_mb = vec![0.0; k];
-    for (edge, per_edge) in flow_v.iter().enumerate() {
-        let i = edge;
-        let d_next = input.ops[i + 1].d_i;
-        let fan = d_next / input.ops[i].d_i;
+    for (ei, per_edge) in flow_v.iter().enumerate() {
+        let (u, v) = input.edges[ei];
+        let d_next = input.ops[v].d_i;
+        let fan = d_next / input.ops[u].d_i;
         let rate_of = |o: &OpSched| o.ut_cur.max(o.ut_cand.unwrap_or(0.0)).max(1e-6);
-        let src_rate = rate_of(&input.ops[i]) * fan;
-        let dst_rate = rate_of(&input.ops[i + 1]);
+        let src_rate = rate_of(&input.ops[u]) * fan;
+        let dst_rate = rate_of(&input.ops[v]);
         let demand = t_val * d_next / input.d_o;
-        let scap: Vec<f64> = (0..k).map(|kk| x[i][kk] as f64 * src_rate).collect();
-        let dcap: Vec<f64> = (0..k).map(|kk| x[i + 1][kk] as f64 * dst_rate).collect();
+        let scap: Vec<f64> = (0..k).map(|kk| x[u][kk] as f64 * src_rate).collect();
+        let dcap: Vec<f64> = (0..k).map(|kk| x[v][kk] as f64 * dst_rate).collect();
         let s_tot: f64 = scap.iter().sum();
         let d_tot: f64 = dcap.iter().sum();
         if demand > s_tot + 1e-9 || demand > d_tot + 1e-9 {
@@ -559,7 +587,7 @@ fn warm_start(
             sol[lv.0] = l;
             sol[ev.0] = e;
             sol[mv.0] = m;
-            egress_mb[kk] += e * input.ops[i].out_mb;
+            egress_mb[kk] += e * input.ops[u].out_mb;
         }
     }
     for kk in 0..k {
@@ -597,6 +625,10 @@ mod tests {
         }
     }
 
+    fn chain_edges(n: usize) -> Vec<(usize, usize)> {
+        (1..n).map(|i| (i - 1, i)).collect()
+    }
+
     fn base_input(k: usize) -> MilpInput {
         MilpInput {
             ops: vec![
@@ -604,6 +636,7 @@ mod tests {
                 op("llm", 2.0, 8.0, 1, 1.0, 0.1, k),
                 op("cpu_b", 20.0, 1.0, 0, 1.0, 0.1, k),
             ],
+            edges: chain_edges(3),
             nodes: nodes(k),
             d_o: 1.0,
             t_sched: 30.0,
@@ -705,6 +738,7 @@ mod tests {
                 op("producer", 10.0, 4.0, 0, 1.0, 50.0, k), // 50 MB/record!
                 op("consumer", 10.0, 4.0, 0, 1.0, 0.1, k),
             ],
+            edges: chain_edges(2),
             nodes: nodes(k),
             d_o: 1.0,
             t_sched: 30.0,
@@ -778,6 +812,7 @@ mod tests {
         }
         let input = MilpInput {
             ops,
+            edges: chain_edges(9),
             nodes: nodes(k),
             d_o: 3.6,
             t_sched: 30.0,
@@ -796,6 +831,50 @@ mod tests {
         for kk in 0..k {
             let acc: u32 = (0..9).map(|i| plan.x[i][kk] * input.ops[i].accels).sum();
             assert!(acc <= 4);
+        }
+    }
+
+    #[test]
+    fn dag_flow_covers_every_edge() {
+        // Diamond: 0 -> {1 (accel), 2 (accel)} -> 3; both branches carry
+        // the full replicated volume, so the accel branch capacity binds T.
+        let k = 2;
+        let mut ops = vec![
+            op("decode", 10.0, 2.0, 0, 1.0, 1.0, k),
+            op("asr", 2.0, 8.0, 1, 1.0, 0.1, k),
+            op("caption", 2.0, 8.0, 1, 1.0, 0.1, k),
+            op("join", 40.0, 1.0, 0, 1.0, 0.1, k),
+        ];
+        for o in &mut ops {
+            o.cur_x = vec![0; k];
+        }
+        let input = MilpInput {
+            ops,
+            edges: vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+            nodes: nodes(k),
+            d_o: 1.0,
+            t_sched: 30.0,
+            lambda1: 1e-4,
+            lambda2: 1e-6,
+            b_max: 2,
+            placement_aware: true,
+            all_at_once: false,
+        };
+        let plan = solve(&input, Duration::from_secs(10));
+        assert!(matches!(plan.status, Status::Optimal | Status::Limit));
+        assert_eq!(plan.route.len(), 4, "one routing matrix per DAG edge");
+        // 8 devices split across the two accel branches: 4 + 4, T = 8.
+        assert_eq!(plan.p[1] + plan.p[2], 8, "both branches saturate the devices: {:?}", plan.p);
+        assert!((plan.t_pred - 8.0).abs() < 0.6, "T {}", plan.t_pred);
+        // Each branch must sustain the full replicated volume.
+        assert!(plan.p[1] as f64 * 2.0 >= plan.t_pred - 0.5);
+        assert!(plan.p[2] as f64 * 2.0 >= plan.t_pred - 0.5);
+        // Routing rows are normalized distributions.
+        for m in &plan.route {
+            for row in m {
+                let s: f64 = row.iter().sum();
+                assert!((s - 1.0).abs() < 1e-6, "row sums to {s}");
+            }
         }
     }
 }

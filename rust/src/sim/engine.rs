@@ -17,8 +17,9 @@ pub enum Ev {
     BatchDone(InstId),
     /// An instance finished starting / restarting.
     InstanceReady(InstId),
-    /// A cross-node transfer arrived at its destination instance.
-    TransferDone(InstId, crate::sim::items::Item),
+    /// A cross-node transfer arrived at its destination instance along the
+    /// given pipeline edge (joins need the edge to slot the partial).
+    TransferDone(InstId, usize, crate::sim::items::Item),
 }
 
 struct Entry {

@@ -17,6 +17,20 @@ pub struct ItemAttrs {
 }
 
 impl ItemAttrs {
+    /// Join-merge of two branch records' attrs: token loads accumulate
+    /// across branches, spatial extents take the maximum (both branches
+    /// observed the same underlying asset).  The single definition point
+    /// for join semantics — the executor's group merge and the
+    /// coordinator's nominal-attrs propagation must agree.
+    pub fn merge(&self, other: &ItemAttrs) -> ItemAttrs {
+        ItemAttrs {
+            tokens_in: self.tokens_in + other.tokens_in,
+            tokens_out: self.tokens_out + other.tokens_out,
+            pixels_m: self.pixels_m.max(other.pixels_m),
+            frames: self.frames.max(other.frames),
+        }
+    }
+
     /// Generic scalar cost used by CPU-stage service models.
     pub fn cost(&self, w: &crate::config::CostW) -> f64 {
         (w.tokens_in * self.tokens_in
@@ -48,6 +62,12 @@ impl ItemAttrs {
 /// One record in flight.
 #[derive(Debug, Clone, Copy)]
 pub struct Item {
+    /// Lineage id assigned by the simulator.  Fork edges replicate an item
+    /// with its id intact, and single-output operators preserve it, so a
+    /// join can align partial results from sibling branches.  Operators
+    /// that split an item into several children give each child a fresh
+    /// id (the children are new lineage roots).
+    pub id: u64,
     pub attrs: ItemAttrs,
     /// Serialized size of this record, MB (drives network cost).
     pub size_mb: f64,

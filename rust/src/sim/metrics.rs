@@ -182,6 +182,7 @@ mod tests {
 
     fn item(tin: f64) -> Item {
         Item {
+            id: 0,
             attrs: ItemAttrs { tokens_in: tin, tokens_out: 10.0, pixels_m: 0.0, frames: 1.0 },
             size_mb: 0.1,
             regime: 0,

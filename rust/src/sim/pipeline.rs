@@ -15,9 +15,20 @@
 //!   kills the instance for `cold_s`, with a short conservative-batch
 //!   recovery phase (vLLM-style preemption after recovery);
 //! * **network egress links** — one FIFO link per node; cross-node record
-//!   transfers serialize behind it, so placement decisions matter.
+//!   transfers serialize behind it, so placement decisions matter;
+//! * **DAG topology** — routing is indexed by pipeline *edge*, not by
+//!   operator position.  A fork (several out-edges) replicates each output
+//!   record onto every edge; a join (several in-edges) buffers partial
+//!   results per item id and enqueues one merged record once every branch
+//!   has delivered.  Join state is bounded (new groups need queue space,
+//!   so backpressure reaches the branches) and its bytes are tracked
+//!   against the hosting node ([`PipelineSim::join_state_mb`]).  Partials
+//!   of a group already buffered are always admitted — completing a group
+//!   frees space — which is what makes fork/join loops deadlock-free.
+//!   A linear chain is the path-shaped special case and reproduces the
+//!   pre-DAG executor event-for-event.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::config::{ClusterSpec, OperatorKind, PipelineSpec};
 use crate::rngx::Rng;
@@ -44,8 +55,12 @@ pub struct Instance {
     pub theta: Vec<f64>,
     pub state: InstState,
     pub queue: VecDeque<Item>,
-    /// Outputs finished but not yet admitted downstream (blocked sender).
-    pub pending_out: VecDeque<Item>,
+    /// Outputs finished but not yet admitted downstream (blocked sender),
+    /// tagged with the pipeline edge they travel on.
+    pub pending_out: VecDeque<(usize, Item)>,
+    /// Join state: partial results per item id, one slot per in-edge
+    /// (in-edge-list order).  Empty for non-join operators.
+    pub join_buf: BTreeMap<u64, Vec<Option<Item>>>,
     /// Items of the in-flight batch (empty = idle).
     pub batch: Vec<Item>,
     batch_service_s: f64,
@@ -59,6 +74,11 @@ pub struct Instance {
     pub config_gen: u32,
     /// Pending config to apply at the next idle point.
     reconfig: Option<Vec<f64>>,
+    /// True while a `try_place_outputs` frame for this instance is on the
+    /// stack (its pending_out is temporarily taken, so the instance looks
+    /// spuriously idle).  Join-completion cascades re-enter via
+    /// `wake_waiters`; the guard makes them defer instead.
+    placing: bool,
     // -- window accounting --
     pub win: InstWindow,
     win_start: f64,
@@ -68,13 +88,17 @@ pub struct Instance {
 
 impl Instance {
     fn occupancy(&self) -> usize {
-        self.queue.len() + self.reserved + self.batch.len() + self.pending_out.len()
+        self.queue.len()
+            + self.reserved
+            + self.batch.len()
+            + self.pending_out.len()
+            + self.join_buf.len()
     }
 
     fn has_space(&self, cap: usize) -> bool {
         self.state != InstState::Stopped
             && self.state != InstState::Draining
-            && self.queue.len() + self.reserved < cap
+            && self.queue.len() + self.reserved + self.join_buf.len() < cap
     }
 
     fn idle(&self) -> bool {
@@ -90,6 +114,9 @@ struct NodeState {
     /// Egress link busy-until timestamp.
     link_free: f64,
     egress_mb_window: f64,
+    /// Bytes of buffered join partials hosted on this node (the DAG
+    /// join-state memory, charged where the group is buffered).
+    join_mb: f64,
 }
 
 /// Waiter sentinel for the source.
@@ -105,10 +132,22 @@ pub struct PipelineSim {
     pub instances: Vec<Instance>,
     by_op: Vec<Vec<usize>>,
     nodes: Vec<NodeState>,
-    /// Optional flow routing per edge i -> i+1: fractions[from_node][to_node].
+    /// Optional flow routing per pipeline edge: fractions[from_node][to_node].
     route: Vec<Option<Vec<Vec<f64>>>>,
     /// Instances (or SOURCE) blocked on space in each operator's queues.
     waiters: Vec<Vec<usize>>,
+    /// Out-/in-edge ids per operator (edge-list order), cached from spec.
+    edges_out: Vec<Vec<usize>>,
+    edges_in: Vec<Vec<usize>>,
+    /// For each join op, which live instance buffers each item id's group.
+    join_affinity: Vec<BTreeMap<u64, usize>>,
+    /// Join groups stranded while an operator momentarily had no live
+    /// instance (e.g. its sole instance relocating between nodes): parked
+    /// here instead of dropped, and adopted by the next instance added,
+    /// so in-flight sibling partials are never orphaned.
+    parked_joins: Vec<BTreeMap<u64, Vec<Option<Item>>>>,
+    /// Next lineage id handed to a source item or a freshly split child.
+    next_item_id: u64,
     op_acc: Vec<OpWindowAcc>,
     /// Lifetime EMA of processed item attrs per op (capacity-oracle input).
     attr_ema: Vec<Option<ItemAttrs>>,
@@ -117,6 +156,11 @@ pub struct PipelineSim {
     pub d_o: f64,
     pub items_emitted: u64,
     pub out_records: u64,
+    /// Lifetime records processed per operator (conservation checks).
+    pub processed_total: Vec<u64>,
+    /// Lifetime records dispatched onto each pipeline edge (fork/join
+    /// conservation: replicas count once per edge).
+    pub edge_emitted: Vec<u64>,
     out_window: u64,
     win_start: f64,
     /// Cumulative OOM downtime per op, seconds (Table 6).
@@ -136,8 +180,17 @@ impl PipelineSim {
         trace: Box<dyn Trace>,
         seed: u64,
     ) -> Self {
+        // Unconditional: an invalid DAG would not panic the executor, it
+        // would silently wedge it (see PipelineSpec::validate), so reject
+        // it at construction in every build profile.
+        if let Err(e) = spec.validate() {
+            panic!("invalid pipeline spec '{}': {e}", spec.name);
+        }
         let n_ops = spec.n_ops();
+        let n_edges = spec.n_edges();
         let (d_i, d_o) = spec.amplification();
+        let edges_out: Vec<Vec<usize>> = (0..n_ops).map(|i| spec.out_edges(i)).collect();
+        let edges_in: Vec<Vec<usize>> = (0..n_ops).map(|i| spec.in_edges(i)).collect();
         let nodes = cluster
             .nodes
             .iter()
@@ -147,6 +200,7 @@ impl PipelineSim {
                 accel_booked: 0,
                 link_free: 0.0,
                 egress_mb_window: 0.0,
+                join_mb: 0.0,
             })
             .collect();
         let mut engine = Engine::new();
@@ -158,14 +212,21 @@ impl PipelineSim {
             instances: Vec::new(),
             by_op: vec![Vec::new(); n_ops],
             nodes,
-            route: vec![None; n_ops.saturating_sub(1)],
+            route: vec![None; n_edges],
             waiters: vec![Vec::new(); n_ops],
+            edges_out,
+            edges_in,
+            join_affinity: vec![BTreeMap::new(); n_ops],
+            parked_joins: vec![BTreeMap::new(); n_ops],
+            next_item_id: 0,
             op_acc: vec![OpWindowAcc::new(); n_ops],
             attr_ema: vec![None; n_ops],
             d_i,
             d_o,
             items_emitted: 0,
             out_records: 0,
+            processed_total: vec![0; n_ops],
+            edge_emitted: vec![0; n_edges],
             out_window: 0,
             win_start: 0.0,
             oom_downtime_s: vec![0.0; n_ops],
@@ -202,9 +263,15 @@ impl PipelineSim {
         x
     }
 
-    /// Set flow routing for edge `op -> op+1`.
-    pub fn set_route(&mut self, op: usize, fractions: Option<Vec<Vec<f64>>>) {
-        self.route[op] = fractions;
+    /// Set flow routing for a pipeline edge (id into `spec.edges`).
+    pub fn set_route(&mut self, edge: usize, fractions: Option<Vec<Vec<f64>>>) {
+        self.route[edge] = fractions;
+    }
+
+    /// How many pipeline edges currently carry a routing plan (tests pin
+    /// that a placement-aware plan covers every DAG edge).
+    pub fn n_routes_set(&self) -> usize {
+        self.route.iter().filter(|r| r.is_some()).count()
     }
 
     // ------------------------------------------------------------------
@@ -235,6 +302,7 @@ impl PipelineSim {
             state: InstState::Starting,
             queue: VecDeque::new(),
             pending_out: VecDeque::new(),
+            join_buf: BTreeMap::new(),
             batch: Vec::new(),
             batch_service_s: 0.0,
             reserved: 0,
@@ -242,12 +310,31 @@ impl PipelineSim {
             conservative: 0,
             config_gen: 0,
             reconfig: None,
+            placing: false,
             win: InstWindow::default(),
             win_start: now,
             down_since: Some(now),
             created_at: now,
         });
         self.by_op[op].push(id);
+        // Adopt any join groups parked while the operator had no live
+        // instance; groups completed in the meantime collapse straight
+        // into the queue (processed once this instance is ready).
+        if !self.parked_joins[op].is_empty() {
+            let parked: Vec<(u64, Vec<Option<Item>>)> =
+                std::mem::take(&mut self.parked_joins[op]).into_iter().collect();
+            for (gid, slots) in parked {
+                if slots.iter().all(Option::is_some) {
+                    let merged = merge_group(slots);
+                    self.instances[id].queue.push_back(merged);
+                } else {
+                    let mb: f64 = slots.iter().flatten().map(|it| it.size_mb).sum();
+                    self.nodes[node].join_mb += mb;
+                    self.instances[id].join_buf.insert(gid, slots);
+                    self.join_affinity[op].insert(gid, id);
+                }
+            }
+        }
         self.engine.after(o.start_s, Ev::InstanceReady(InstId(id)));
         Ok(id)
     }
@@ -319,8 +406,35 @@ impl PipelineSim {
                 let dest = peers[i % peers.len()];
                 self.instances[dest].queue.push_back(item);
             }
-            for p in peers {
-                self.try_start(p);
+            for p in &peers {
+                self.try_start(*p);
+            }
+        }
+        // Migrate buffered join groups (and their affinity) to a live
+        // peer; without peers they are parked for the operator's next
+        // instance to adopt (dropping them would orphan in-flight sibling
+        // partials and wedge the join forever).
+        if !self.instances[id].join_buf.is_empty() {
+            let groups: Vec<(u64, Vec<Option<Item>>)> =
+                std::mem::take(&mut self.instances[id].join_buf).into_iter().collect();
+            let dest = peers
+                .iter()
+                .copied()
+                .min_by_key(|&p| self.instances[p].occupancy());
+            for (gid, slots) in groups {
+                let mb: f64 = slots.iter().flatten().map(|it| it.size_mb).sum();
+                self.nodes[node].join_mb -= mb;
+                match dest {
+                    Some(d) => {
+                        self.nodes[self.instances[d].node].join_mb += mb;
+                        self.instances[d].join_buf.insert(gid, slots);
+                        self.join_affinity[op].insert(gid, d);
+                    }
+                    None => {
+                        self.join_affinity[op].remove(&gid);
+                        self.parked_joins[op].insert(gid, slots);
+                    }
+                }
             }
         }
         self.wake_waiters(op);
@@ -337,7 +451,7 @@ impl PipelineSim {
                 Ev::SourceEmit => self.try_source(),
                 Ev::InstanceReady(InstId(id)) => self.on_ready(id),
                 Ev::BatchDone(InstId(id)) => self.on_batch_done(id),
-                Ev::TransferDone(InstId(id), item) => self.on_transfer(id, item),
+                Ev::TransferDone(InstId(id), edge, item) => self.on_transfer(id, edge, item),
             }
         }
         self.engine.advance_to(t_end);
@@ -366,27 +480,111 @@ impl PipelineSim {
         }
     }
 
-    fn on_transfer(&mut self, id: usize, item: Item) {
+    fn on_transfer(&mut self, id: usize, edge: usize, item: Item) {
         let inst = &mut self.instances[id];
         inst.reserved = inst.reserved.saturating_sub(1);
         if inst.state == InstState::Stopped {
-            // Late arrival to a stopped instance: reroute.
-            let op = inst.op;
-            self.deliver_local_or_requeue(op, item);
+            // Late arrival to a stopped instance: reroute from the node
+            // the item physically landed on.
+            let (op, at_node) = (inst.op, inst.node);
+            self.redeliver(op, at_node, edge, item);
             return;
         }
-        inst.queue.push_back(item);
-        self.try_start(id);
+        self.deliver(id, edge, item);
     }
 
-    fn deliver_local_or_requeue(&mut self, op: usize, item: Item) {
+    /// Deliver an item that lost its destination (stopped instance) to a
+    /// live instance of `op`: the group-affinity holder for buffered join
+    /// ids (paying the network when the holder is on another node),
+    /// otherwise the least-occupied peer (directly — the legacy
+    /// late-arrival shortcut the chain executor has always used).
+    fn redeliver(&mut self, op: usize, at_node: usize, edge: usize, item: Item) {
+        if let Some(holder) = self.group_holder(op, item.id) {
+            self.route_to(at_node, holder, edge, item);
+            return;
+        }
         let peers = self.instances_of(op);
         if let Some(&dest) = peers.iter().min_by_key(|&&p| self.instances[p].occupancy()) {
-            self.instances[dest].queue.push_back(item);
-            self.try_start(dest);
+            self.deliver(dest, edge, item);
+            return;
         }
-        // else: dropped (no live instance — cannot happen under MILP plans
-        // which keep p_i >= 1).
+        // No live instance.  Join partials are parked (an in-flight
+        // sibling may already be buffered; dropping would wedge the group
+        // forever); non-join items keep the legacy drop — unreachable
+        // under plans that hold p_i >= 1.
+        let in_edges = &self.edges_in[op];
+        if in_edges.len() > 1 {
+            let slot = in_edges
+                .iter()
+                .position(|&e| e == edge)
+                .expect("redelivered edge must enter the destination operator");
+            let n_slots = in_edges.len();
+            let group = self.parked_joins[op]
+                .entry(item.id)
+                .or_insert_with(|| vec![None; n_slots]);
+            group[slot] = Some(item);
+        }
+    }
+
+    /// Hand an item arriving on `edge` to instance `id`: straight into the
+    /// queue for single-in-edge operators; into the join buffer for joins,
+    /// collapsing to one merged queue record when the group completes.
+    fn deliver(&mut self, id: usize, edge: usize, item: Item) {
+        let op = self.instances[id].op;
+        let in_edges = &self.edges_in[op];
+        if in_edges.len() <= 1 {
+            self.instances[id].queue.push_back(item);
+            self.try_start(id);
+            return;
+        }
+        let slot = in_edges
+            .iter()
+            .position(|&e| e == edge)
+            .expect("delivered edge must enter the destination operator");
+        let n_slots = in_edges.len();
+        let gid = item.id;
+        // Holder re-check at arrival time: a sibling partial may have
+        // opened this id's group at another instance while we were in
+        // flight (both branches dispatched before either landed).  All
+        // partials of a group must meet at one instance; a cross-node
+        // forward is a real transfer and pays the egress link.
+        if let Some(holder) = self.group_holder(op, gid) {
+            if holder != id {
+                let from = self.instances[id].node;
+                self.route_to(from, holder, edge, item);
+                return;
+            }
+        }
+        let node = self.instances[id].node;
+        let complete = {
+            let inst = &mut self.instances[id];
+            let group = inst
+                .join_buf
+                .entry(gid)
+                .or_insert_with(|| vec![None; n_slots]);
+            if group[slot].is_none() {
+                self.nodes[node].join_mb += item.size_mb;
+            } else {
+                // Duplicate partial on the same edge (redelivery race):
+                // replace, adjusting the accounting.
+                self.nodes[node].join_mb += item.size_mb - group[slot].as_ref().unwrap().size_mb;
+            }
+            group[slot] = Some(item);
+            group.iter().all(Option::is_some)
+        };
+        if complete {
+            let slots = self.instances[id].join_buf.remove(&gid).unwrap();
+            self.join_affinity[op].remove(&gid);
+            let mb: f64 = slots.iter().flatten().map(|it| it.size_mb).sum();
+            self.nodes[node].join_mb -= mb;
+            let merged = merge_group(slots);
+            self.instances[id].queue.push_back(merged);
+            // Consuming a group frees join space: upstream may proceed.
+            self.wake_waiters(op);
+            self.try_start(id);
+        } else {
+            self.join_affinity[op].insert(gid, id);
+        }
     }
 
     fn try_source(&mut self) {
@@ -408,7 +606,9 @@ impl PipelineSim {
                 return;
             };
             match self.trace.next_item(&mut self.rng) {
-                Some(item) => {
+                Some(mut item) => {
+                    item.id = self.next_item_id;
+                    self.next_item_id += 1;
                     self.items_emitted += 1;
                     self.instances[dest].queue.push_back(item);
                     self.try_start(dest);
@@ -430,6 +630,12 @@ impl PipelineSim {
         let now = self.engine.now();
         let inst = &self.instances[id];
         if inst.state != InstState::Running {
+            return;
+        }
+        // Mid-placement the pending_out check below would read the
+        // temporarily-taken (empty) deque and start a batch past the
+        // blocked-output backpressure bound; the frame's caller re-tries.
+        if inst.placing {
             return;
         }
         if !inst.batch.is_empty() || !inst.pending_out.is_empty() || inst.queue.is_empty() {
@@ -524,7 +730,7 @@ impl PipelineSim {
     fn on_batch_done(&mut self, id: usize) {
         let op_idx = self.instances[id].op;
         let op = self.spec.operators[op_idx].clone();
-        let is_last = op_idx + 1 == self.spec.n_ops();
+        let is_sink = self.edges_out[op_idx].is_empty();
 
         // Account the batch.
         let items: Vec<Item> = {
@@ -535,6 +741,7 @@ impl PipelineSim {
             inst.win.busy_s += inst.batch_service_s;
             items
         };
+        self.processed_total[op_idx] += items.len() as u64;
         self.op_acc[op_idx].records_in += items.len() as u64;
         for item in &items {
             let mut r = self.rng.fork(7);
@@ -553,7 +760,9 @@ impl PipelineSim {
             });
         }
 
-        // Fanout into children.
+        // Fanout into children.  A single child inherits its parent's
+        // lineage id (joins downstream align on it); a genuine split
+        // mints fresh ids — each child is a new lineage root.
         let mut outputs: Vec<Item> = Vec::new();
         {
             let inst = &mut self.instances[id];
@@ -561,10 +770,12 @@ impl PipelineSim {
                 inst.carry += op.fanout;
                 let k = inst.carry.floor() as usize;
                 inst.carry -= k as f64;
-                for _ in 0..k {
+                for c in 0..k {
                     let a = item.attrs;
                     let s = op.child_scale;
+                    let child_id = if k == 1 { item.id } else { self.next_item_id + c as u64 };
                     outputs.push(Item {
+                        id: child_id,
                         attrs: ItemAttrs {
                             tokens_in: a.tokens_in * s[0],
                             tokens_out: a.tokens_out * s[1],
@@ -575,15 +786,25 @@ impl PipelineSim {
                         regime: item.regime,
                     });
                 }
+                if k > 1 {
+                    self.next_item_id += k as u64;
+                }
             }
         }
 
-        if is_last {
+        if is_sink {
             self.out_records += outputs.len() as u64;
             self.out_window += outputs.len() as u64;
         } else {
+            // Replicate each child onto every out-edge (fork semantics;
+            // a chain op has exactly one out-edge).
             let inst = &mut self.instances[id];
-            inst.pending_out.extend(outputs);
+            for child in outputs {
+                for &e in &self.edges_out[op_idx] {
+                    inst.pending_out.push_back((e, child));
+                    self.edge_emitted[e] += 1;
+                }
+            }
         }
 
         // Space freed in our queue: wake upstream.
@@ -606,54 +827,75 @@ impl PipelineSim {
         self.try_start(id);
     }
 
-    /// Push pending outputs downstream; block on full queues.
+    /// Push pending outputs downstream; block per edge on full queues.
+    /// Per-edge (not head-of-line) blocking: a branch whose destination is
+    /// full must not starve its sibling branch, or a fork/join pair could
+    /// deadlock with the join waiting on exactly the starved branch.
     fn try_place_outputs(&mut self, id: usize) {
-        let op = self.instances[id].op;
-        if op + 1 >= self.spec.n_ops() {
+        if self.edges_out[self.instances[id].op].is_empty() {
             return;
         }
-        let next = op + 1;
-        let cap = self.spec.operators[next].queue_cap;
-        loop {
-            let Some(&item) = self.instances[id].pending_out.front() else {
-                break;
-            };
-            let from_node = self.instances[id].node;
-            let Some(dest) = self.choose_dest(op, from_node, cap) else {
-                if !self.waiters[next].contains(&id) {
-                    self.waiters[next].push(id);
+        if self.instances[id].placing {
+            // A frame for this instance is already on the stack (a join
+            // completion we triggered cascaded back here); it will finish
+            // the placement itself.
+            return;
+        }
+        self.instances[id].placing = true;
+        let from_node = self.instances[id].node;
+        let pending = std::mem::take(&mut self.instances[id].pending_out);
+        let mut kept: VecDeque<(usize, Item)> = VecDeque::new();
+        let mut blocked: Vec<usize> = Vec::new();
+        for (edge, item) in pending {
+            if blocked.contains(&edge) {
+                // The always-admit rule must still reach partials of
+                // already-buffered join groups even behind a blocked edge
+                // head — with several instances per branch running out of
+                // order, the group-completing partial can sit behind a
+                // no-holder one, and keeping it would wedge the join
+                // (overtaking is safe: joins order by id, not arrival).
+                let dst_op = self.spec.edges[edge].1;
+                if let Some(holder) = self.group_holder(dst_op, item.id) {
+                    self.dispatch(id, holder, edge, item);
+                    continue;
                 }
-                return;
-            };
-            self.instances[id].pending_out.pop_front();
-            let dest_node = self.instances[dest].node;
-            if dest_node == from_node {
-                self.instances[dest].queue.push_back(item);
-                self.try_start(dest);
-            } else {
-                // Cross-node: serialize behind the egress link.
-                let now = self.engine.now();
-                let rate = self.cluster.nodes[from_node].egress_mbps.max(1.0);
-                let ns = &mut self.nodes[from_node];
-                ns.egress_mb_window += item.size_mb;
-                let start = ns.link_free.max(now);
-                let arrive = start + item.size_mb / rate + self.net_latency;
-                ns.link_free = arrive;
-                self.instances[dest].reserved += 1;
-                self.engine.at(arrive, Ev::TransferDone(InstId(dest), item));
+                kept.push_back((edge, item));
+                continue;
+            }
+            let dst_op = self.spec.edges[edge].1;
+            let cap = self.spec.operators[dst_op].queue_cap;
+            match self.pick_dest(edge, from_node, cap, &item) {
+                Some(dest) => self.dispatch(id, dest, edge, item),
+                None => {
+                    blocked.push(edge);
+                    if !self.waiters[dst_op].contains(&id) {
+                        self.waiters[dst_op].push(id);
+                    }
+                    kept.push_back((edge, item));
+                }
             }
         }
+        self.instances[id].pending_out = kept;
+        self.instances[id].placing = false;
         // Fully drained: if a reconfig is pending and we're idle, apply it.
-        if self.instances[id].batch.is_empty() && self.instances[id].reconfig.is_some() {
+        if self.instances[id].pending_out.is_empty()
+            && self.instances[id].batch.is_empty()
+            && self.instances[id].reconfig.is_some()
+        {
             self.apply_reconfig(id);
         }
     }
 
-    /// Pick a destination instance for edge `op -> op+1` from `from_node`,
-    /// honouring the flow plan when present.
-    fn choose_dest(&mut self, op: usize, from_node: usize, cap: usize) -> Option<usize> {
-        let next = op + 1;
-        if let Some(w) = &self.route[op] {
+    /// Pick a destination instance for `edge` from `from_node`, honouring
+    /// the flow plan when present.  Partials of a join group already
+    /// buffered are pinned to the buffering instance and always admitted
+    /// (completing a group frees space — the deadlock-freedom rule).
+    fn pick_dest(&mut self, edge: usize, from_node: usize, cap: usize, item: &Item) -> Option<usize> {
+        let next = self.spec.edges[edge].1;
+        if let Some(holder) = self.group_holder(next, item.id) {
+            return Some(holder);
+        }
+        if let Some(w) = &self.route[edge] {
             let weights = &w[from_node];
             if weights.iter().sum::<f64>() > 1e-9 {
                 let l = self.rng.categorical(weights);
@@ -678,11 +920,67 @@ impl PipelineSim {
             })
     }
 
+    /// The join-group holder rule, single definition point: the live
+    /// instance already buffering `item_id`'s group at join `op`, if any.
+    /// Partials are always routed there and always admitted — completing
+    /// a group frees space (the deadlock-freedom rule).
+    fn group_holder(&self, op: usize, item_id: u64) -> Option<usize> {
+        if self.edges_in[op].len() <= 1 {
+            return None;
+        }
+        let &h = self.join_affinity[op].get(&item_id)?;
+        (self.instances[h].state != InstState::Stopped).then_some(h)
+    }
+
+    /// Move one item from `src` to destination instance `dest` along
+    /// `edge`: directly for same-node, serialized behind the egress link
+    /// for cross-node.
+    fn dispatch(&mut self, src: usize, dest: usize, edge: usize, item: Item) {
+        let from_node = self.instances[src].node;
+        self.route_to(from_node, dest, edge, item);
+    }
+
+    /// Physical routing from a node to a destination instance: direct
+    /// delivery on the same node, a real transfer (egress link + latency
+    /// + reservation) across nodes.
+    fn route_to(&mut self, from_node: usize, dest: usize, edge: usize, item: Item) {
+        if self.instances[dest].node == from_node {
+            self.deliver(dest, edge, item);
+        } else {
+            self.send(from_node, dest, edge, item);
+        }
+    }
+
+    /// Cross-node transfer: serialize behind `from_node`'s egress link and
+    /// reserve queue space at the destination.  Used both for planned
+    /// dispatches and for forwarding join partials to their group's
+    /// holding instance — a forward is a real transfer and pays the same
+    /// network cost.
+    fn send(&mut self, from_node: usize, dest: usize, edge: usize, item: Item) {
+        let now = self.engine.now();
+        let rate = self.cluster.nodes[from_node].egress_mbps.max(1.0);
+        let ns = &mut self.nodes[from_node];
+        ns.egress_mb_window += item.size_mb;
+        let start = ns.link_free.max(now);
+        let arrive = start + item.size_mb / rate + self.net_latency;
+        ns.link_free = arrive;
+        self.instances[dest].reserved += 1;
+        self.engine.at(arrive, Ev::TransferDone(InstId(dest), edge, item));
+    }
+
     fn wake_waiters(&mut self, op: usize) {
         let ws = std::mem::take(&mut self.waiters[op]);
         for w in ws {
             if w == SOURCE {
                 self.try_source();
+            } else if self.instances[w].placing {
+                // Mid-placement up the stack (we got here via one of its
+                // own dispatches): keep the registration — its pending_out
+                // is taken, so acting now would misread it as idle.  The
+                // consumer that freed this space will wake again.
+                if !self.waiters[op].contains(&w) {
+                    self.waiters[op].push(w);
+                }
             } else {
                 self.try_place_outputs(w);
                 if self.instances[w].state == InstState::Draining && self.instances[w].idle() {
@@ -731,7 +1029,8 @@ impl PipelineSim {
                 active += a;
                 peak_mem = peak_mem.max(inst.win.peak_mem_mb);
                 ooms += inst.win.oom_events;
-                q_end += inst.queue.len();
+                // Join backlog (incomplete groups) is queue pressure too.
+                q_end += inst.queue.len() + inst.join_buf.len();
                 q_sum += inst.win.q_sum;
                 q_n += inst.win.q_n;
                 if a > 0.0 {
@@ -745,7 +1044,7 @@ impl PipelineSim {
                     active_s: a,
                     peak_mem_mb: inst.win.peak_mem_mb,
                     oom_events: inst.win.oom_events,
-                    queue_len: inst.queue.len(),
+                    queue_len: inst.queue.len() + inst.join_buf.len(),
                     config_gen: inst.config_gen,
                 });
                 inst.win.reset();
@@ -815,17 +1114,40 @@ impl PipelineSim {
         (self.out_records as f64 / self.d_o) / self.now()
     }
 
-    /// True when the trace is exhausted and no work remains in flight.
+    /// True when the trace is exhausted and no work remains in flight —
+    /// queues, batches, blocked outputs, buffered join partials, and
+    /// records still crossing the network (`reserved` transfers).
     pub fn drained(&self) -> bool {
         self.source_done
-            && self
-                .instances
-                .iter()
-                .all(|i| i.state == InstState::Stopped || (i.idle() && i.queue.is_empty()))
+            && self.parked_joins.iter().all(BTreeMap::is_empty)
+            && self.instances.iter().all(|i| {
+                i.reserved == 0
+                    && (i.state == InstState::Stopped
+                        || (i.idle() && i.queue.is_empty() && i.join_buf.is_empty()))
+            })
     }
 
     /// Egress MB sent by each node in the current window (network metric).
     pub fn egress_window_mb(&self) -> Vec<f64> {
         self.nodes.iter().map(|n| n.egress_mb_window).collect()
     }
+
+    /// Bytes of join partials currently buffered per node (the DAG
+    /// join-state memory that counts against the node).
+    pub fn join_state_mb(&self) -> Vec<f64> {
+        self.nodes.iter().map(|n| n.join_mb).collect()
+    }
+}
+
+/// Merge a completed join group (one partial per in-edge, in-edge order)
+/// into the record the join operator processes: attrs merge per
+/// [`ItemAttrs::merge`], payload bytes add up, lineage id is preserved.
+fn merge_group(slots: Vec<Option<Item>>) -> Item {
+    let mut it = slots.into_iter().flatten();
+    let mut m = it.next().expect("completed join group has every slot filled");
+    for p in it {
+        m.attrs = m.attrs.merge(&p.attrs);
+        m.size_mb += p.size_mb;
+    }
+    m
 }

@@ -1,12 +1,14 @@
 //! Workload trace generators: synthetic equivalents of the paper's PDF
 //! (~200k documents, three types processed sequentially) and video
-//! (~410k clips, two categories) corpora.
+//! (~410k clips, two categories) corpora, plus the speech curation DAG
+//! (fork/join modality-parallel branches, three regimes).
 //!
 //! The regime *structure* — sequential type switches with distinct feature
 //! distributions — is what the observation/adaptation layers react to; item
 //! contents are irrelevant (DESIGN.md §Hardware-Adaptation).
 
 pub mod pdf;
+pub mod speech;
 pub mod video;
 
 use crate::rngx::Rng;
@@ -46,6 +48,8 @@ impl ItemDist {
     pub fn sample(&self, regime: u8, rng: &mut Rng) -> Item {
         let ln = |rng: &mut Rng, (mu, sigma): (f64, f64)| rng.lognormal(mu, sigma);
         Item {
+            // The simulator assigns lineage ids when the source emits.
+            id: 0,
             attrs: crate::sim::items::ItemAttrs {
                 tokens_in: ln(rng, self.tokens_in),
                 tokens_out: ln(rng, self.tokens_out),

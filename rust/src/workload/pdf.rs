@@ -8,7 +8,14 @@
 use crate::config::{
     ConfigSpace, CostW, FeatureExtractor, OperatorKind, OperatorSpec, PipelineSpec, ServiceModel,
 };
+use crate::sim::ItemAttrs;
 use crate::workload::{ItemDist, Phase, PhasedTrace};
+
+/// Nominal source-item attrs (first-regime means) used by the CLI,
+/// benches, and tests — the single definition point.
+pub fn src_attrs() -> ItemAttrs {
+    ItemAttrs { tokens_in: 36_000.0, tokens_out: 7_200.0, pixels_m: 12.0, frames: 12.0 }
+}
 
 fn cpu_op(
     name: &str,
@@ -106,7 +113,7 @@ pub fn pipeline() -> PipelineSpec {
             [56.4, 56.4, 1.0, 12.0]),
         cpu_op("write_out", 0.5, 1.0, 12.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 1.0, 2.0, no_scale),
     ];
-    PipelineSpec { name: "pdf".into(), operators: ops }
+    PipelineSpec::chain("pdf", ops)
 }
 
 /// Document distributions per type.  tokens_* are *document totals*; the

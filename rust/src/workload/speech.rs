@@ -1,0 +1,266 @@
+//! Speech curation pipeline + trace: the repo's first *branching* DAG
+//! workload.  A clip is demuxed and decoded into utterance segments, each
+//! segment **forks** into two accelerator branches — ASR transcription and
+//! visual captioning — whose partial results **join** back by segment id
+//! for transcript/caption alignment before a CPU quality filter:
+//!
+//! ```text
+//! demux -> decode --+--> asr -----+--> align_merge -> quality_filter
+//!                   +--> caption -+
+//! ```
+//!
+//! Both branches see every decoded segment (fork = replication), so the
+//! MILP must split the accelerator pool across two modality branches that
+//! each carry the full replicated volume, and the join's bounded buffer is
+//! where branch-rate imbalance turns into backpressure — the scheduling
+//! structure TCM-Serve/DIP-style modality parallelism exposes.
+//!
+//! Trace: three regimes processed sequentially — long-form podcasts
+//! (audio-heavy), recorded lectures (slide/visual-heavy), and short-form
+//! clips (light on both axes).
+
+use crate::config::{
+    ConfigSpace, CostW, FeatureExtractor, OperatorKind, OperatorSpec, PipelineSpec, ServiceModel,
+};
+use crate::sim::ItemAttrs;
+use crate::workload::{ItemDist, Phase, PhasedTrace};
+
+/// Nominal source-item attrs (first-regime means) used by the CLI,
+/// benches, and tests — the single definition point.
+pub fn src_attrs() -> ItemAttrs {
+    ItemAttrs { tokens_in: 14_000.0, tokens_out: 3_600.0, pixels_m: 0.25, frames: 900.0 }
+}
+
+fn cpu_op(
+    name: &str,
+    cpu: f64,
+    mem_gb: f64,
+    base_rate: f64,
+    cost: CostW,
+    ref_cost: f64,
+    fanout: f64,
+    out_mb: f64,
+    child_scale: [f64; 4],
+) -> OperatorSpec {
+    OperatorSpec {
+        name: name.into(),
+        kind: OperatorKind::CpuSync,
+        cpu,
+        mem_gb,
+        accels: 0,
+        fanout,
+        out_mb,
+        start_s: 2.0,
+        stop_s: 1.0,
+        cold_s: 4.0,
+        tunable: false,
+        config_space: ConfigSpace::default(),
+        service: ServiceModel::Cpu { base_rate, ref_cost, cost },
+        features: FeatureExtractor::Cost,
+        child_scale,
+        queue_cap: 256,
+    }
+}
+
+/// ASR transcription (whisper-class encoder/decoder on NPU): decode-heavy
+/// token generation over the audio-token stream.
+fn asr_op() -> OperatorSpec {
+    OperatorSpec {
+        name: "asr".into(),
+        kind: OperatorKind::AccelAsync,
+        cpu: 6.0,
+        mem_gb: 24.0,
+        accels: 1,
+        // Branches between the fork and the join must preserve item ids,
+        // so both accelerator branches are strictly record-to-record.
+        fanout: 1.0,
+        out_mb: 0.05,
+        start_s: 6.0,
+        stop_s: 2.0,
+        cold_s: 18.0,
+        tunable: true,
+        config_space: ConfigSpace::llm_engine(),
+        service: ServiceModel::Accel {
+            peak_tok_rate: 9000.0,
+            batch_half: 12.0,
+            decode_weight: 3.0,
+            prefix_share: 0.10,
+            mem_base_mb: 12000.0,
+            kv_mb_per_token: 0.02,
+            act_mb_per_token: 1.8,
+            mem_noise_sigma: 0.03,
+        },
+        features: FeatureExtractor::LlmTokens,
+        child_scale: [1.0; 4],
+        queue_cap: 384,
+    }
+}
+
+/// Visual captioning of the segment's sampled frames (VLM on NPU).
+fn caption_op() -> OperatorSpec {
+    OperatorSpec {
+        name: "caption".into(),
+        kind: OperatorKind::AccelAsync,
+        cpu: 6.0,
+        mem_gb: 24.0,
+        accels: 1,
+        fanout: 1.0,
+        out_mb: 0.05,
+        start_s: 6.0,
+        stop_s: 2.0,
+        cold_s: 15.0,
+        tunable: true,
+        config_space: ConfigSpace::llm_engine(),
+        service: ServiceModel::Accel {
+            peak_tok_rate: 16_000.0,
+            batch_half: 10.0,
+            decode_weight: 1.5,
+            prefix_share: 0.10,
+            mem_base_mb: 9000.0,
+            kv_mb_per_token: 0.015,
+            act_mb_per_token: 1.4,
+            mem_noise_sigma: 0.025,
+        },
+        features: FeatureExtractor::Vision,
+        child_scale: [1.0; 4],
+        queue_cap: 384,
+    }
+}
+
+/// The 6-operator speech curation DAG (fork after decode, join before the
+/// quality filter).
+pub fn pipeline() -> PipelineSpec {
+    let no_scale = [1.0; 4];
+    let seg = 1.0 / 3.0; // decode splits a clip into 3 utterance segments
+    let ops = vec![
+        // 0: container demux (cheap, record-at-a-time)
+        cpu_op("demux", 0.5, 1.0, 25.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 1.0, 8.0, no_scale),
+        // 1: audio/video decode + utterance segmentation — the fork point:
+        //    each segment is replicated onto both accelerator branches.
+        cpu_op("decode", 4.0, 8.0, 4.0, CostW { frames: 0.003, ..Default::default() }, 2.0, 3.0, 16.0,
+            [seg, seg, 1.0, seg]),
+        // 2: ASR branch (NPU)
+        asr_op(),
+        // 3: captioning branch (NPU)
+        caption_op(),
+        // 4: transcript/caption alignment — the join (in-degree 2)
+        cpu_op("align_merge", 1.0, 2.0, 60.0, CostW { tokens_out: 0.002, konst: 1.0, ..Default::default() }, 1.0, 1.0, 0.1, no_scale),
+        // 5: joint audio/visual quality filter
+        cpu_op("quality_filter", 1.0, 1.0, 80.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 0.9, 0.1, no_scale),
+    ];
+    PipelineSpec {
+        name: "speech".into(),
+        operators: ops,
+        edges: vec![(0, 1), (1, 2), (1, 3), (2, 4), (3, 4), (4, 5)],
+    }
+}
+
+fn ln(x: f64) -> f64 {
+    x.ln()
+}
+
+/// Long-form podcasts: dense speech, negligible visuals.  tokens_in is the
+/// audio-token load per clip (decode divides it per segment); tokens_out
+/// the transcript length.
+fn podcast() -> ItemDist {
+    ItemDist {
+        tokens_in: (ln(14_000.0), 0.20),
+        tokens_out: (ln(3_600.0), 0.20),
+        pixels_m: (ln(0.25), 0.25),
+        frames: (ln(900.0), 0.25),
+        size_mb: (ln(60.0), 0.4),
+    }
+}
+
+/// Recorded lectures: long, slide-heavy — the captioning branch carries
+/// the weight while speech stays moderate.
+fn lecture() -> ItemDist {
+    ItemDist {
+        tokens_in: (ln(9_000.0), 0.18),
+        tokens_out: (ln(2_200.0), 0.18),
+        pixels_m: (ln(2.2), 0.30),
+        frames: (ln(5_400.0), 0.25),
+        size_mb: (ln(220.0), 0.4),
+    }
+}
+
+/// Short-form clips: light on both branches.
+fn short_clip() -> ItemDist {
+    ItemDist {
+        tokens_in: (ln(1_800.0), 0.22),
+        tokens_out: (ln(450.0), 0.25),
+        pixels_m: (ln(0.9), 0.20),
+        frames: (ln(450.0), 0.30),
+        size_mb: (ln(25.0), 0.4),
+    }
+}
+
+/// The three-regime speech trace, scaled to `n_clips` total.
+pub fn trace(n_clips: u64) -> PhasedTrace {
+    let a = (n_clips as f64 * 0.40) as u64;
+    let b = (n_clips as f64 * 0.35) as u64;
+    PhasedTrace::new(vec![
+        Phase { regime: 0, count: a, sampler: podcast() },
+        Phase { regime: 1, count: b, sampler: lecture() },
+        Phase { regime: 2, count: n_clips - a - b, sampler: short_clip() },
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Trace;
+
+    #[test]
+    fn pipeline_is_a_fork_join_dag() {
+        let p = pipeline();
+        assert_eq!(p.n_ops(), 6);
+        assert!(p.validate().is_ok(), "{:?}", p.validate());
+        assert_eq!(p.out_edges(1).len(), 2, "decode forks into two branches");
+        assert!(p.is_join(4), "align_merge joins the branches");
+        assert_eq!(p.sinks(), vec![5]);
+        let npu: Vec<_> = p.operators.iter().filter(|o| o.accels > 0).collect();
+        assert_eq!(npu.len(), 2, "ASR + captioning on NPU");
+        assert!(npu.iter().all(|o| o.tunable));
+        // Branch operators must preserve lineage ids for the join.
+        assert_eq!(p.operators[2].fanout, 1.0);
+        assert_eq!(p.operators[3].fanout, 1.0);
+    }
+
+    #[test]
+    fn amplification_replicates_then_aligns() {
+        let p = pipeline();
+        let (d, d_o) = p.amplification();
+        // 3 segments per clip on BOTH branches; the join consumes one
+        // merged record per aligned pair.
+        assert_eq!(d, vec![1.0, 1.0, 3.0, 3.0, 3.0, 3.0]);
+        assert!((d_o - 2.7).abs() < 1e-9, "3 segments x 0.9 filter pass: {d_o}");
+        let vols = p.edge_volumes();
+        assert_eq!(vols, vec![1.0, 3.0, 3.0, 3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn regimes_load_opposite_branches() {
+        let po = podcast();
+        let le = lecture();
+        let sh = short_clip();
+        // Podcasts dominate the ASR branch, lectures the caption branch.
+        assert!(po.mean_tokens_in() > 1.4 * le.mean_tokens_in());
+        assert!(le.pixels_m.0 > po.pixels_m.0 + 1.5);
+        assert!(po.mean_tokens_in() > 5.0 * sh.mean_tokens_in());
+    }
+
+    #[test]
+    fn trace_three_sequential_regimes() {
+        let mut t = trace(200);
+        assert_eq!(t.n_regimes(), 3);
+        assert_eq!(t.total(), 200);
+        let mut rng = crate::rngx::Rng::new(0);
+        let mut seen = Vec::new();
+        while let Some(i) = t.next_item(&mut rng) {
+            seen.push(i.regime);
+        }
+        assert_eq!(seen.len(), 200);
+        assert!(seen.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

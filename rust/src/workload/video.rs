@@ -6,7 +6,14 @@
 use crate::config::{
     ConfigSpace, CostW, FeatureExtractor, OperatorKind, OperatorSpec, PipelineSpec, ServiceModel,
 };
+use crate::sim::ItemAttrs;
 use crate::workload::{ItemDist, Phase, PhasedTrace};
+
+/// Nominal source-item attrs (first-regime means) used by the CLI,
+/// benches, and tests — the single definition point.
+pub fn src_attrs() -> ItemAttrs {
+    ItemAttrs { tokens_in: 5_400.0, tokens_out: 480.0, pixels_m: 0.9, frames: 600.0 }
+}
 
 fn cpu_op(
     name: &str,
@@ -122,7 +129,7 @@ pub fn pipeline() -> PipelineSpec {
         },
         cpu_op("package", 0.5, 1.0, 40.0, CostW { konst: 1.0, ..Default::default() }, 1.0, 1.0, 1.0, no_scale),
     ];
-    PipelineSpec { name: "video".into(), operators: ops }
+    PipelineSpec::chain("video", ops)
 }
 
 fn ln(x: f64) -> f64 {

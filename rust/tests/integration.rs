@@ -139,6 +139,7 @@ fn milp_plans_always_feasible() {
             .collect();
         let input = MilpInput {
             ops,
+            edges: (1..n).map(|i| (i - 1, i)).collect(),
             nodes,
             d_o: rng.uniform(0.5, 5.0),
             t_sched: 90.0,

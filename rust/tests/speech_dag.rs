@@ -1,0 +1,97 @@
+//! Fork/join DAG integration: every scheduling policy drives the speech
+//! pipeline (decode -> {ASR, caption} -> align-join -> filter) through the
+//! full closed loop to completion, with conserved item counts across the
+//! fork/join and no deadlock under bounded queues + join state.
+
+use trident::config::{ClusterSpec, TridentConfig};
+use trident::coordinator::{Coordinator, Policy, Variant};
+use trident::harness;
+use trident::workload::speech;
+
+fn mk(variant: &Variant, seed: u64, clips: u64) -> Coordinator {
+    let mut cfg = TridentConfig::default();
+    cfg.native_gp = true;
+    cfg.milp_time_budget_ms = 800;
+    cfg.tune_trigger = 32;
+    cfg.bo_budget = 8;
+    cfg.bo_init = 3;
+    Coordinator::new(
+        speech::pipeline(),
+        ClusterSpec::homogeneous(2, 128.0, 512.0, 4, 65536.0, 2500.0),
+        Box::new(speech::trace(clips)),
+        cfg,
+        variant.clone(),
+        speech::src_attrs(),
+        seed,
+    )
+}
+
+fn all_policies() -> Vec<(&'static str, Variant)> {
+    let scoot = harness::scoot_variant(&speech::pipeline(), speech::src_attrs());
+    vec![
+        ("Static", Variant::baseline(Policy::Static)),
+        ("Ray Data", Variant::baseline(Policy::RayData)),
+        ("DS2", Variant::baseline(Policy::Ds2)),
+        ("ContTune", Variant::baseline(Policy::ContTune)),
+        ("SCOOT", scoot),
+        ("Trident", Variant::trident()),
+    ]
+}
+
+/// Items out of the join == items into the fork, per policy, at drain:
+/// the fork edge counts match (replication), the branch edges deliver
+/// everything (branches are record-to-record), and the join processed one
+/// merged record per forked segment.
+#[test]
+fn all_policies_complete_the_speech_dag_with_conservation() {
+    for (name, variant) in all_policies() {
+        let mut c = mk(&variant, 5, 250);
+        let r = c.run_to_completion(4.0 * 3600.0);
+        assert!(
+            c.sim.drained(),
+            "{name}: speech DAG must drain (no fork/join deadlock), \
+             processed {:?} of {} emitted",
+            c.sim.processed_total,
+            c.sim.items_emitted
+        );
+        assert!(r.throughput > 0.0, "{name} must make progress");
+        // Edge ids follow speech::pipeline(): 0 demux->decode,
+        // 1 decode->asr, 2 decode->caption, 3 asr->join, 4 caption->join,
+        // 5 join->filter.
+        let e = &c.sim.edge_emitted;
+        assert_eq!(e[1], e[2], "{name}: fork replicates onto both branches");
+        assert_eq!(e[1], e[3], "{name}: ASR branch conserves records");
+        assert_eq!(e[2], e[4], "{name}: caption branch conserves records");
+        assert_eq!(
+            c.sim.processed_total[4], e[1],
+            "{name}: join merges exactly one record per forked segment"
+        );
+        assert_eq!(
+            e[5], e[1],
+            "{name}: items out of the join == items into the fork"
+        );
+        // All join state consumed by the end.
+        for mb in c.sim.join_state_mb() {
+            assert!(mb.abs() < 1e-6, "{name}: leaked join memory: {mb} MB");
+        }
+    }
+}
+
+/// The MILP must route flow over all six DAG edges (one matrix per edge)
+/// and both accelerator branches must actually get devices.
+#[test]
+fn trident_plans_cover_dag_edges_and_both_branches() {
+    let mut c = mk(&Variant::trident(), 7, 300);
+    let r = c.run(600.0);
+    assert!(!r.milp_ms.is_empty(), "Trident re-solves the MILP");
+    assert!(r.throughput > 0.0);
+    assert_eq!(
+        c.sim.n_routes_set(),
+        c.sim.spec.n_edges(),
+        "placement-aware plan must carry a routing matrix for every DAG edge"
+    );
+    let asr = c.sim.instances_of(2);
+    let cap = c.sim.instances_of(3);
+    assert!(!asr.is_empty(), "ASR branch placed");
+    assert!(!cap.is_empty(), "caption branch placed");
+}
