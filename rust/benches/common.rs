@@ -12,7 +12,7 @@
 
 #![allow(dead_code)] // each bench includes this module and uses a subset
 
-use trident::config::{ClusterSpec, TridentConfig};
+use trident::config::{ClusterSpec, Tenancy, TenantSpec, TridentConfig};
 use trident::coordinator::{Coordinator, RunReport, Variant};
 use trident::harness::{self, Job};
 use trident::sim::ItemAttrs;
@@ -81,11 +81,55 @@ pub fn workload(name: &str) -> Workload {
     }
 }
 
+/// Multi-tenant bench workloads are named `A+B` (e.g. "PDF+Speech"): each
+/// part runs as one tenant on the shared 8-node cluster, at half its
+/// single-tenant item count (the cluster is shared).
+pub fn tenancy_for(wname: &str) -> (Tenancy, Vec<Box<dyn Trace>>, Vec<ItemAttrs>) {
+    let mut tenants = Vec::new();
+    let mut traces: Vec<Box<dyn Trace>> = Vec::new();
+    let mut srcs = Vec::new();
+    for part in wname.split('+') {
+        let w = match part {
+            "PDF" => pdf_workload(items_for(part) / 2),
+            "Video" => video_workload(items_for(part) / 2),
+            "Speech" => speech_workload(items_for(part) / 2),
+            other => panic!("unknown bench workload '{other}' (expected PDF|Video|Speech)"),
+        };
+        tenants.push(TenantSpec {
+            id: w.pipeline.name.clone(),
+            pipeline: w.pipeline,
+            weight: 1.0,
+            source_rate: 0.0,
+        });
+        traces.push(w.trace);
+        srcs.push(w.src);
+    }
+    (Tenancy { tenants }, traces, srcs)
+}
+
+/// SCOOT variant for a bench workload name, tenant-aware for `A+B` names.
+pub fn scoot_variant_for(wname: &str) -> Variant {
+    if wname.contains('+') {
+        let (tenancy, _, srcs) = tenancy_for(wname);
+        let (spec, view) = tenancy.merged().expect("bench tenancy is valid");
+        harness::scoot_variant_merged(&spec, &view, &srcs)
+    } else {
+        let w = workload(wname);
+        harness::scoot_variant(&w.pipeline, w.src)
+    }
+}
+
 fn coordinator_for(wname: &str, variant: Variant, seed: u64, collect_mape: bool) -> Coordinator {
-    let w = workload(wname);
     let mut cfg = TridentConfig::default();
     cfg.native_gp = std::env::var("TRIDENT_NATIVE_GP").map(|v| v == "1").unwrap_or(false);
-    let mut coord = Coordinator::new(w.pipeline, cluster(8), w.trace, cfg, variant, w.src, seed);
+    let mut coord = if wname.contains('+') {
+        let (tenancy, traces, srcs) = tenancy_for(wname);
+        Coordinator::new_tenancy(tenancy, cluster(8), traces, cfg, variant, srcs, seed)
+            .expect("bench tenancy is valid")
+    } else {
+        let w = workload(wname);
+        Coordinator::new(w.pipeline, cluster(8), w.trace, cfg, variant, w.src, seed)
+    };
     coord.collect_mape = collect_mape;
     coord
 }

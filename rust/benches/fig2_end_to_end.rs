@@ -3,9 +3,10 @@
 //! Paper: Trident 2.01x/1.88x > SCOOT 1.21x/1.17x > RayData 1.12x/1.18x >
 //! ContTune 1.04x/0.96x > DS2 0.87x/0.79x.
 //!
-//! The 18 (method, workload) cells are independent runs; they fan out
+//! The 24 (method, workload) cells are independent runs; they fan out
 //! across cores through the experiment harness.  (Speech is this repo's
-//! fork/join DAG extension; the paper reports PDF and Video only.)
+//! fork/join DAG extension, and PDF+Speech its two-tenant shared-cluster
+//! scenario; the paper reports single-tenant PDF and Video only.)
 
 #[path = "common.rs"]
 mod common;
@@ -13,22 +14,21 @@ mod common;
 use trident::coordinator::{Policy, Variant};
 use trident::report::{f2, Table};
 
-const WORKLOADS: [&str; 3] = ["PDF", "Video", "Speech"];
+const WORKLOADS: [&str; 4] = ["PDF", "Video", "Speech", "PDF+Speech"];
 
 fn main() {
-    let methods: Vec<(&str, Box<dyn Fn(&common::Workload) -> Variant>)> = vec![
+    let methods: Vec<(&str, Box<dyn Fn(&str) -> Variant>)> = vec![
         ("Static", Box::new(|_| Variant::baseline(Policy::Static))),
         ("Ray Data", Box::new(|_| Variant::baseline(Policy::RayData))),
         ("DS2", Box::new(|_| Variant::baseline(Policy::Ds2))),
         ("ContTune", Box::new(|_| Variant::baseline(Policy::ContTune))),
-        ("SCOOT", Box::new(|w| common::scoot_variant(&w.pipeline, w.src))),
+        ("SCOOT", Box::new(common::scoot_variant_for)),
         ("Trident", Box::new(|_| Variant::trident())),
     ];
     let mut cells = Vec::new();
     for (name, mk) in &methods {
         for wname in WORKLOADS {
-            let w = common::workload(wname);
-            cells.push(common::Cell::new(format!("{name}/{wname}"), wname, mk(&w), 7));
+            cells.push(common::Cell::new(format!("{name}/{wname}"), wname, mk(wname), 7));
         }
     }
     let reports = common::run_cells(&cells);
@@ -43,6 +43,8 @@ fn main() {
             "Video speedup",
             "Speech items/s",
             "Speech speedup",
+            "PDF+Speech items/s",
+            "PDF+Speech speedup",
         ],
     );
     let mut rows: Vec<(String, Vec<f64>)> = Vec::new();

@@ -7,17 +7,29 @@
 mod common;
 
 use std::time::{Duration, Instant};
-use trident::coordinator::{nominal_attrs, Variant};
+use trident::config::TenancyView;
+use trident::coordinator::{nominal_attrs_rooted, Variant};
 use trident::report::Table;
-use trident::scheduling::{solve, MilpInput, OpSched};
+use trident::scheduling::{solve, MilpInput, MilpTenant, OpSched};
+use trident::sim::ItemAttrs;
 
+/// MILP instance for a bench workload; `A+B` names build the joint
+/// multi-tenant problem (union of operators, weighted max-min objective).
 fn milp_input(wname: &str, nodes: usize) -> MilpInput {
-    let w = common::workload(wname);
-    let nominal = nominal_attrs(&w.pipeline, w.src);
-    let (d_i, d_o) = w.pipeline.amplification();
+    let (spec, view, srcs) = if wname.contains('+') {
+        let (tenancy, _, srcs) = common::tenancy_for(wname);
+        let (spec, view) = tenancy.merged().expect("bench tenancy is valid");
+        (spec, view, srcs)
+    } else {
+        let w = common::workload(wname);
+        let view = TenancyView::single_for(&w.pipeline);
+        (w.pipeline, view, vec![w.src])
+    };
+    let roots: Vec<(usize, ItemAttrs)> = view.sources.iter().copied().zip(srcs).collect();
+    let nominal = nominal_attrs_rooted(&spec, &roots);
+    let (d_i, d_o) = spec.amplification();
     MilpInput {
-        ops: w
-            .pipeline
+        ops: spec
             .operators
             .iter()
             .enumerate()
@@ -42,14 +54,17 @@ fn milp_input(wname: &str, nodes: usize) -> MilpInput {
                 cur_x: vec![0; nodes],
             })
             .collect(),
-        edges: w.pipeline.edges.clone(),
+        edges: spec.edges.clone(),
         nodes: common::cluster(nodes).nodes,
         d_o,
+        tenants: MilpTenant::from_view(&view),
+        op_tenant: view.op_tenant.clone(),
         t_sched: 90.0,
         lambda1: 1e-4,
         lambda2: 1e-6,
         b_max: 8,
         placement_aware: true,
+        join_colocate: false,
         all_at_once: false,
     }
 }
@@ -75,8 +90,9 @@ fn main() {
     table.row(vec!["Adaptation layer / invocation".into(), format!("{:.2} ms", r.adapt_overhead_ms)]);
 
     for nodes in [8usize, 16] {
-        // Speech exercises the DAG (fork/join) edge-list formulation.
-        for wname in ["PDF", "Video", "Speech"] {
+        // Speech exercises the DAG (fork/join) edge-list formulation;
+        // PDF+Speech the joint multi-tenant (weighted max-min) problem.
+        for wname in ["PDF", "Video", "Speech", "PDF+Speech"] {
             let input = milp_input(wname, nodes);
             // median of 5 solves
             // The scheduler consumes the incumbent at its solve budget

@@ -4,8 +4,9 @@
 //! Paper: Trident 2.01x/1.88x > Trident(all-at-once) 1.92x/1.79x >
 //! ContTune 1.42x/1.36x > DS2 1.38x/1.25x > RayData 1.22x/1.30x.
 //!
-//! The 18 (method, workload) cells fan out across cores (Speech is this
-//! repo's fork/join DAG extension; the paper reports PDF and Video only).
+//! The 24 (method, workload) cells fan out across cores (Speech is this
+//! repo's fork/join DAG extension and PDF+Speech its two-tenant
+//! shared-cluster scenario; the paper reports PDF and Video only).
 
 #[path = "common.rs"]
 mod common;
@@ -13,7 +14,7 @@ mod common;
 use trident::coordinator::{Policy, Variant};
 use trident::report::Table;
 
-const WORKLOADS: [&str; 3] = ["PDF", "Video", "Speech"];
+const WORKLOADS: [&str; 4] = ["PDF", "Video", "Speech", "PDF+Speech"];
 
 fn main() {
     let methods: Vec<(&str, Variant)> = vec![
@@ -38,7 +39,7 @@ fn main() {
 
     let mut table = Table::new(
         "Table 2: scheduling under shared Observation+Adaptation (vs Static)",
-        &["Method", "PDF", "Video", "Speech"],
+        &["Method", "PDF", "Video", "Speech", "PDF+Speech"],
     );
     let mut base = vec![1.0; WORKLOADS.len()];
     let mut rows = Vec::new();

@@ -5,5 +5,5 @@ pub mod spec;
 pub use json::Json;
 pub use spec::{
     ClusterSpec, ConfigParam, ConfigSpace, CostW, FeatureExtractor, NodeSpec, OperatorKind,
-    OperatorSpec, PipelineSpec, ServiceModel, TridentConfig,
+    OperatorSpec, PipelineSpec, ServiceModel, TenancyView, Tenancy, TenantSpec, TridentConfig,
 };

@@ -370,6 +370,13 @@ impl PipelineSpec {
     /// it (incomplete join groups pile up until backpressure stops the
     /// pipeline), so they are rejected here instead.
     pub fn validate(&self) -> Result<(), String> {
+        self.validate_with_sources(&[0])
+    }
+
+    /// [`validate`](Self::validate), generalized to a DAG whose roots are
+    /// exactly `sources` — a merged multi-tenant union has one root per
+    /// tenant; a standalone pipeline has the single root 0.
+    pub fn validate_with_sources(&self, sources: &[usize]) -> Result<(), String> {
         let n = self.operators.len();
         for (ei, &(u, v)) in self.edges.iter().enumerate() {
             if u >= n || v >= n {
@@ -382,13 +389,14 @@ impl PipelineSpec {
                 return Err(format!("duplicate edge ({u}, {v})"));
             }
         }
-        for i in 1..n {
-            if self.in_degree(i) == 0 {
+        for i in 0..n {
+            let root = sources.contains(&i);
+            if root && self.in_degree(i) != 0 {
+                return Err(format!("operator {i} must be a source (no incoming edges)"));
+            }
+            if !root && self.in_degree(i) == 0 {
                 return Err(format!("operator {i} is unreachable (no incoming edges)"));
             }
-        }
-        if n > 0 && self.in_degree(0) != 0 {
-            return Err("operator 0 must be the source (no incoming edges)".into());
         }
         // Cycle check (shared Kahn scan with topo_order).
         self.try_topo_order()?;
@@ -488,6 +496,154 @@ impl PipelineSpec {
     }
 }
 
+/// One tenant in a multi-tenant deployment: a pipeline DAG plus its
+/// scheduling weight and offered load, sharing the cluster with every
+/// other tenant.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Unique tenant id (namespaces operator names in the merged DAG).
+    pub id: String,
+    pub pipeline: PipelineSpec,
+    /// Weight w_t in the scheduler's weighted max-min throughput
+    /// objective (must be > 0).
+    pub weight: f64,
+    /// Offered source rate, items/s.  0 = unpaced: the source emits as
+    /// fast as downstream admission allows (the offline paradigm).
+    pub source_rate: f64,
+}
+
+/// N pipelines sharing one fixed-resource cluster.  The single-tenant
+/// tenancy ([`Tenancy::single`]) reproduces the classic one-pipeline
+/// deployment exactly.
+#[derive(Debug, Clone)]
+pub struct Tenancy {
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl Tenancy {
+    /// The trivial tenancy: one pipeline owning the whole cluster
+    /// (weight 1, unpaced source, id = pipeline name).
+    pub fn single(pipeline: PipelineSpec) -> Self {
+        let id = pipeline.name.clone();
+        Tenancy { tenants: vec![TenantSpec { id, pipeline, weight: 1.0, source_rate: 0.0 }] }
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Per-tenant validation: non-empty, unique non-empty ids, positive
+    /// weights, non-negative source rates, and every pipeline DAG valid.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tenants.is_empty() {
+            return Err("tenancy has no tenants".into());
+        }
+        for (ti, t) in self.tenants.iter().enumerate() {
+            if t.id.is_empty() {
+                return Err(format!("tenant {ti} has an empty id"));
+            }
+            if self.tenants[..ti].iter().any(|o| o.id == t.id) {
+                return Err(format!("duplicate tenant id '{}'", t.id));
+            }
+            if !(t.weight > 0.0) {
+                return Err(format!("tenant '{}' has non-positive weight {}", t.id, t.weight));
+            }
+            if t.source_rate < 0.0 {
+                return Err(format!("tenant '{}' has negative source_rate {}", t.id, t.source_rate));
+            }
+            t.pipeline.validate().map_err(|e| format!("tenant '{}': {e}", t.id))?;
+        }
+        Ok(())
+    }
+
+    /// Merge the tenants' disjoint DAGs into one operator/edge list over
+    /// shared nodes, plus the [`TenancyView`] mapping the union back to
+    /// its tenants.  Single-tenant: the merged spec IS the tenant's
+    /// pipeline, name and operator names untouched (exact pre-tenancy
+    /// behavior).  Multi-tenant: operator names are namespaced `id:name`
+    /// and the merged pipeline name joins the tenant ids with '+'.
+    pub fn merged(&self) -> Result<(PipelineSpec, TenancyView), String> {
+        self.validate()?;
+        let ids: Vec<String> = self.tenants.iter().map(|t| t.id.clone()).collect();
+        let weights: Vec<f64> = self.tenants.iter().map(|t| t.weight).collect();
+        let source_rates: Vec<f64> = self.tenants.iter().map(|t| t.source_rate).collect();
+        let d_o: Vec<f64> = self.tenants.iter().map(|t| t.pipeline.amplification().1).collect();
+        if self.tenants.len() == 1 {
+            let pipeline = self.tenants[0].pipeline.clone();
+            let view = TenancyView {
+                ids,
+                weights,
+                source_rates,
+                d_o,
+                sources: vec![0],
+                op_tenant: vec![0; pipeline.n_ops()],
+            };
+            return Ok((pipeline, view));
+        }
+        let mut operators = Vec::new();
+        let mut edges = Vec::new();
+        let mut sources = Vec::new();
+        let mut op_tenant = Vec::new();
+        for (ti, t) in self.tenants.iter().enumerate() {
+            let base = operators.len();
+            sources.push(base);
+            for o in &t.pipeline.operators {
+                let mut o = o.clone();
+                o.name = format!("{}:{}", t.id, o.name);
+                operators.push(o);
+                op_tenant.push(ti);
+            }
+            for &(u, v) in &t.pipeline.edges {
+                edges.push((base + u, base + v));
+            }
+        }
+        let name = ids.join("+");
+        let view = TenancyView { ids, weights, source_rates, d_o, sources, op_tenant };
+        Ok((PipelineSpec { name, operators, edges }, view))
+    }
+}
+
+/// Resolved tenant structure of a merged multi-pipeline DAG: which tenant
+/// each operator belongs to, where each tenant's source sits, and the
+/// per-tenant amplification / weights the executor and scheduler need.
+#[derive(Debug, Clone)]
+pub struct TenancyView {
+    pub ids: Vec<String>,
+    /// Weight w_t per tenant (weighted max-min objective).
+    pub weights: Vec<f64>,
+    /// Offered source rate per tenant, items/s (0 = unpaced).
+    pub source_rates: Vec<f64>,
+    /// Per-tenant output amplification D_o^t.
+    pub d_o: Vec<f64>,
+    /// Global operator index of each tenant's source.
+    pub sources: Vec<usize>,
+    /// Tenant index per merged operator.
+    pub op_tenant: Vec<usize>,
+}
+
+impl TenancyView {
+    /// The trivial view of a single pipeline (tenant 0 owns every op).
+    pub fn single_for(spec: &PipelineSpec) -> TenancyView {
+        TenancyView {
+            ids: vec![spec.name.clone()],
+            weights: vec![1.0],
+            source_rates: vec![0.0],
+            d_o: vec![spec.amplification().1],
+            sources: vec![0],
+            op_tenant: vec![0; spec.n_ops()],
+        }
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Operator indices belonging to tenant `t`.
+    pub fn ops_of(&self, t: usize) -> Vec<usize> {
+        (0..self.op_tenant.len()).filter(|&i| self.op_tenant[i] == t).collect()
+    }
+}
+
 /// Controller hyper-parameters (paper defaults in parentheses).
 #[derive(Debug, Clone)]
 pub struct TridentConfig {
@@ -530,6 +686,11 @@ pub struct TridentConfig {
     pub b_max: usize,
     /// MILP solver wall-clock budget.
     pub milp_time_budget_ms: u64,
+    /// Tie each join's in-edge consumption together per node in the MILP
+    /// flow relaxation, so the egress budget sees the sibling-partial
+    /// forwarding the executor actually pays (off by default; see
+    /// `scheduling/milp_model.rs` module docs).
+    pub milp_join_colocation: bool,
     /// Use the native Rust GP instead of PJRT artifacts.
     pub native_gp: bool,
 }
@@ -557,6 +718,7 @@ impl Default for TridentConfig {
             bo_eval_s: 20.0,
             b_max: 8,
             milp_time_budget_ms: 600,
+            milp_join_colocation: false,
             native_gp: std::env::var("TRIDENT_NATIVE_GP").map(|v| v == "1").unwrap_or(false),
         }
     }
@@ -639,6 +801,10 @@ impl TridentConfig {
             bo_eval_s: j.f64_or("bo_eval_s", d.bo_eval_s),
             b_max: j.f64_or("b_max", d.b_max as f64) as usize,
             milp_time_budget_ms: j.f64_or("milp_time_budget_ms", d.milp_time_budget_ms as f64) as u64,
+            milp_join_colocation: j
+                .get("milp_join_colocation")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.milp_join_colocation),
             native_gp: j.get("native_gp").and_then(Json::as_bool).unwrap_or(d.native_gp),
         }
     }
@@ -787,6 +953,72 @@ mod tests {
         assert_eq!(c2.nodes.len(), 3);
         assert_eq!(c2.nodes[1].accels, 8);
         assert_eq!(c2.total_cpus(), 768.0);
+    }
+
+    fn named_chain(name: &str, n: usize) -> PipelineSpec {
+        PipelineSpec::chain(name, (0..n).map(|_| mk_op(1.0)).collect())
+    }
+
+    #[test]
+    fn tenancy_single_merges_to_identity() {
+        let t = Tenancy::single(named_chain("pdf", 3));
+        assert!(t.validate().is_ok());
+        let (spec, view) = t.merged().unwrap();
+        assert_eq!(spec.name, "pdf");
+        assert_eq!(spec.operators[0].name, "op", "single-tenant names untouched");
+        assert_eq!(view.n_tenants(), 1);
+        assert_eq!(view.sources, vec![0]);
+        assert_eq!(view.op_tenant, vec![0, 0, 0]);
+        assert_eq!(view.d_o, vec![1.0]);
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn tenancy_merges_disjoint_dags_with_namespacing() {
+        let t = Tenancy {
+            tenants: vec![
+                TenantSpec { id: "a".into(), pipeline: named_chain("a", 2), weight: 2.0, source_rate: 0.0 },
+                TenantSpec { id: "b".into(), pipeline: diamond(3.0), weight: 1.0, source_rate: 5.0 },
+            ],
+        };
+        let (spec, view) = t.merged().unwrap();
+        assert_eq!(spec.name, "a+b");
+        assert_eq!(spec.n_ops(), 7);
+        assert_eq!(spec.operators[0].name, "a:op");
+        assert_eq!(spec.operators[2].name, "b:op");
+        assert_eq!(view.sources, vec![0, 2]);
+        assert_eq!(view.op_tenant, vec![0, 0, 1, 1, 1, 1, 1]);
+        assert_eq!(view.weights, vec![2.0, 1.0]);
+        assert_eq!(view.source_rates, vec![0.0, 5.0]);
+        assert_eq!(view.d_o, vec![1.0, 3.0]);
+        assert_eq!(view.ops_of(1), vec![2, 3, 4, 5, 6]);
+        // edges offset into the union
+        assert_eq!(spec.edges[0], (0, 1));
+        assert_eq!(spec.edges[1], (2, 3));
+        // single-source validation rejects the union, multi-source accepts
+        assert!(spec.validate().is_err());
+        assert!(spec.validate_with_sources(&view.sources).is_ok());
+    }
+
+    #[test]
+    fn tenancy_validation_rejects_bad_specs() {
+        let dup = Tenancy {
+            tenants: vec![
+                TenantSpec { id: "x".into(), pipeline: named_chain("x", 2), weight: 1.0, source_rate: 0.0 },
+                TenantSpec { id: "x".into(), pipeline: named_chain("y", 2), weight: 1.0, source_rate: 0.0 },
+            ],
+        };
+        assert!(dup.validate().unwrap_err().contains("duplicate tenant id"));
+        let bad_w = Tenancy {
+            tenants: vec![TenantSpec {
+                id: "x".into(),
+                pipeline: named_chain("x", 2),
+                weight: 0.0,
+                source_rate: 0.0,
+            }],
+        };
+        assert!(bad_w.validate().unwrap_err().contains("weight"));
+        assert!(Tenancy { tenants: vec![] }.validate().is_err());
     }
 
     #[test]

@@ -34,12 +34,12 @@ mod transition;
 mod tests;
 
 pub use policy::{Plan, Policy, PolicyCtx, SchedulingPolicy, TransitionCmd, Variant};
-pub use report::RunReport;
+pub use report::{RunReport, TenantReport};
 
 use std::collections::HashMap;
 
 use crate::adaptation::OperatorAdaptation;
-use crate::config::{ClusterSpec, PipelineSpec, TridentConfig};
+use crate::config::{ClusterSpec, PipelineSpec, Tenancy, TridentConfig};
 use crate::observation::{CapacityEstimator, ObsConfig, UsefulTimeEstimator};
 use crate::runtime::GpBackend;
 use crate::scheduling::RollingState;
@@ -93,17 +93,37 @@ pub struct Coordinator {
 /// executor's `merge_group`).  For a chain this is the old sequential
 /// propagation.
 pub fn nominal_attrs(pipeline: &PipelineSpec, source: ItemAttrs) -> Vec<ItemAttrs> {
+    nominal_attrs_rooted(pipeline, &[(0, source)])
+}
+
+/// Multi-root variant of [`nominal_attrs`] for merged tenancies: each
+/// tenant's source operator gets its own nominal source attrs, and the
+/// propagation stays within each tenant's (disjoint) DAG.
+pub fn nominal_attrs_rooted(
+    pipeline: &PipelineSpec,
+    roots: &[(usize, ItemAttrs)],
+) -> Vec<ItemAttrs> {
     let scale = |a: ItemAttrs, s: [f64; 4]| ItemAttrs {
         tokens_in: a.tokens_in * s[0],
         tokens_out: a.tokens_out * s[1],
         pixels_m: a.pixels_m * s[2],
         frames: a.frames * s[3],
     };
-    let mut out = vec![source; pipeline.n_ops()];
+    let fallback = roots
+        .first()
+        .map(|&(_, a)| a)
+        .unwrap_or(ItemAttrs { tokens_in: 512.0, tokens_out: 64.0, pixels_m: 1.0, frames: 1.0 });
+    let mut out = vec![fallback; pipeline.n_ops()];
     for &v in &pipeline.topo_order() {
         let preds = pipeline.in_edges(v);
         match preds.len() {
-            0 => out[v] = source,
+            0 => {
+                out[v] = roots
+                    .iter()
+                    .find(|&&(r, _)| r == v)
+                    .map(|&(_, a)| a)
+                    .unwrap_or(fallback)
+            }
             1 => {
                 let u = pipeline.edges[preds[0]].0;
                 out[v] = scale(out[u], pipeline.operators[u].child_scale);
@@ -135,9 +155,50 @@ impl Coordinator {
         source_attrs: ItemAttrs,
         seed: u64,
     ) -> Self {
+        Self::new_tenancy(
+            Tenancy::single(pipeline),
+            cluster,
+            vec![trace],
+            cfg,
+            variant,
+            vec![source_attrs],
+            seed,
+        )
+        .unwrap_or_else(|e| panic!("invalid pipeline spec: {e}"))
+    }
+
+    /// Multi-tenant constructor: N pipelines (`tenancy`) sharing `cluster`,
+    /// one trace + nominal source attrs per tenant.  A single-tenant
+    /// tenancy reproduces [`Coordinator::new`] event-for-event.
+    pub fn new_tenancy(
+        tenancy: Tenancy,
+        cluster: ClusterSpec,
+        traces: Vec<Box<dyn Trace>>,
+        cfg: TridentConfig,
+        variant: Variant,
+        source_attrs: Vec<ItemAttrs>,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let (pipeline, view) = tenancy.merged()?;
+        if traces.len() != view.n_tenants() {
+            return Err(format!(
+                "{} traces for {} tenants",
+                traces.len(),
+                view.n_tenants()
+            ));
+        }
+        if source_attrs.len() != view.n_tenants() {
+            return Err(format!(
+                "{} source-attr entries for {} tenants",
+                source_attrs.len(),
+                view.n_tenants()
+            ));
+        }
         let backend = if cfg.native_gp { GpBackend::Native } else { GpBackend::from_env() };
         let n = pipeline.n_ops();
-        let nominal = nominal_attrs(&pipeline, source_attrs);
+        let roots: Vec<(usize, ItemAttrs)> =
+            view.sources.iter().copied().zip(source_attrs).collect();
+        let nominal = nominal_attrs_rooted(&pipeline, &roots);
         let estimators = pipeline
             .operators
             .iter()
@@ -183,8 +244,8 @@ impl Coordinator {
             })
             .collect();
         let policy = variant.policy.build();
-        let sim = PipelineSim::new(pipeline, cluster, trace, seed);
-        Coordinator {
+        let sim = PipelineSim::new_tenancy(pipeline, view, cluster, traces, seed);
+        Ok(Coordinator {
             sim,
             cfg,
             variant,
@@ -209,7 +270,7 @@ impl Coordinator {
             last_metrics: None,
             last_throughput: 0.0,
             last_transition_t: vec![f64::NEG_INFINITY; n],
-        }
+        })
     }
 
     /// One scheduling round (Algorithm 2): estimate rates, forward
@@ -235,6 +296,7 @@ impl Coordinator {
                 cur_p: &cur_p,
                 placement: &placement,
                 rolling: &self.rolling,
+                tenancy: &self.sim.tenancy,
                 last_throughput: self.last_throughput,
                 now: self.sim.now(),
             };
@@ -291,8 +353,15 @@ impl Coordinator {
         while t < end && !(until_drained && self.sim.drained()) {
             t = (t + self.cfg.metrics_interval_s).min(end);
             self.sim.run_until(t);
-            let (metrics, out) = self.sim.flush_metrics();
-            let thr = out as f64 / self.sim.d_o / self.cfg.metrics_interval_s;
+            let (metrics, outs) = self.sim.flush_metrics();
+            // Aggregate windowed throughput: per-tenant outputs scaled to
+            // input items each (a single-element sum for one tenant).
+            let thr = outs
+                .iter()
+                .zip(&self.sim.tenancy.d_o)
+                .map(|(&o, &d)| o as f64 / d)
+                .sum::<f64>()
+                / self.cfg.metrics_interval_s;
             self.series.push((t, thr));
             self.ingest_window(&metrics);
             self.last_metrics = Some(metrics);

@@ -12,8 +12,8 @@ use std::time::{Duration, Instant};
 
 use crate::adaptation::Strategy;
 use crate::baselines::Placement;
-use crate::config::{ClusterSpec, PipelineSpec, TridentConfig};
-use crate::scheduling::{self, MilpInput, OpSched, RollingState};
+use crate::config::{ClusterSpec, PipelineSpec, TenancyView, TridentConfig};
+use crate::scheduling::{self, MilpInput, MilpTenant, OpSched, RollingState};
 use crate::sim::OpMetrics;
 
 /// Full experiment variant: policy + layer toggles (RQ2 sharing, RQ5
@@ -133,6 +133,9 @@ pub struct PolicyCtx<'a> {
     pub placement: &'a [Vec<u32>],
     /// Rolling-update state per operator (candidate config, n_old/n_new).
     pub rolling: &'a [RollingState],
+    /// Tenant structure of the (merged) spec: op → tenant map, per-tenant
+    /// weights and output amplification.  Trivial for one tenant.
+    pub tenancy: &'a TenancyView,
     /// Pipeline throughput observed over the previous round.
     pub last_throughput: f64,
     /// Simulation clock, seconds.
@@ -257,11 +260,14 @@ pub fn milp_input(ctx: &PolicyCtx<'_>) -> MilpInput {
         edges: ctx.spec.edges.clone(),
         nodes: ctx.cluster.nodes.clone(),
         d_o,
+        tenants: MilpTenant::from_view(ctx.tenancy),
+        op_tenant: ctx.tenancy.op_tenant.clone(),
         t_sched: ctx.cfg.t_sched_s,
         lambda1: ctx.cfg.lambda1,
         lambda2: ctx.cfg.lambda2,
         b_max: ctx.cfg.b_max as u32,
         placement_aware: ctx.variant.placement_aware,
+        join_colocate: ctx.cfg.milp_join_colocation,
         all_at_once: !ctx.variant.rolling,
     }
 }

@@ -5,14 +5,32 @@ use std::collections::HashMap;
 
 use super::Coordinator;
 
+/// Per-tenant section of a [`RunReport`] (a single entry for classic
+/// one-pipeline runs).
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub id: String,
+    /// Weight w_t in the scheduler's weighted max-min objective.
+    pub weight: f64,
+    /// Tenant throughput, in its own input records/s.
+    pub throughput: f64,
+    /// Records out of the tenant's sinks.
+    pub items_processed: u64,
+    /// Source items admitted for this tenant.
+    pub items_admitted: u64,
+}
+
 /// Run outcome for reports and benches.
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub pipeline: String,
     pub variant: String,
     pub duration_s: f64,
-    /// Average pipeline throughput, input records/s.
+    /// Aggregate throughput, input records/s (sum of per-tenant
+    /// throughputs; identical to the classic value for one tenant).
     pub throughput: f64,
+    /// Per-tenant breakdown (one entry per tenant, in tenancy order).
+    pub tenants: Vec<TenantReport>,
     /// (time, windowed throughput) series.
     pub series: Vec<(f64, f64)>,
     pub oom_events: u32,
@@ -39,11 +57,21 @@ impl Coordinator {
                 v.iter().sum::<f64>() / v.len() as f64
             }
         };
+        let view = &self.sim.tenancy;
         RunReport {
             pipeline: self.sim.spec.name.clone(),
             variant: self.variant.policy.name().to_string(),
             duration_s,
             throughput: self.sim.avg_throughput(),
+            tenants: (0..view.n_tenants())
+                .map(|t| TenantReport {
+                    id: view.ids[t].clone(),
+                    weight: view.weights[t],
+                    throughput: self.sim.tenant_throughput(t),
+                    items_processed: self.sim.out_records_t[t],
+                    items_admitted: self.sim.items_emitted_t[t],
+                })
+                .collect(),
             series: self.series.clone(),
             oom_events: self.sim.oom_events_total.iter().sum(),
             oom_downtime_s: self.sim.oom_downtime_s.iter().sum(),

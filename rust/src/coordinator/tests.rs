@@ -62,6 +62,78 @@ fn ds2_runs() {
     assert!(r.throughput > 0.0);
 }
 
+/// Path ⑨ under multi-tenancy: a rolling transition on one tenant's
+/// branch operator invalidates that operator's samples and its downstream
+/// join's — and touches nothing in the other tenant.
+#[test]
+fn join_transition_invalidates_only_its_tenant() {
+    use crate::config::{Tenancy, TenantSpec};
+    use crate::workload::speech;
+    let tenancy = Tenancy {
+        tenants: vec![
+            TenantSpec { id: "pdf".into(), pipeline: pdf::pipeline(), weight: 1.0, source_rate: 0.0 },
+            TenantSpec {
+                id: "speech".into(),
+                pipeline: speech::pipeline(),
+                weight: 1.0,
+                source_rate: 0.0,
+            },
+        ],
+    };
+    let mut cfg = TridentConfig::default();
+    cfg.native_gp = true;
+    cfg.milp_time_budget_ms = 1500;
+    let src = crate::sim::ItemAttrs {
+        tokens_in: 36_000.0,
+        tokens_out: 7_200.0,
+        pixels_m: 12.0,
+        frames: 12.0,
+    };
+    let mut c = Coordinator::new_tenancy(
+        tenancy,
+        mini_cluster(),
+        vec![
+            Box::new(pdf::trace(2000)) as Box<dyn crate::workload::Trace>,
+            Box::new(speech::trace(2000)),
+        ],
+        cfg,
+        Variant::baseline(Policy::Static),
+        vec![src, speech::src_attrs()],
+        3,
+    )
+    .expect("two-tenant tenancy is valid");
+    c.run(200.0); // deploy + settle; Static never transitions on its own
+    let n_pdf = pdf::pipeline().n_ops();
+    let asr = n_pdf + 2; // speech ASR branch (feeds the join)
+    let join = n_pdf + 4; // speech align_merge (in-degree 2)
+    assert!(c.sim.spec.is_join(join), "merged indexing: op {join} is the join");
+    assert!(
+        !c.sim.instances_of(asr).is_empty(),
+        "speech ASR branch must be deployed"
+    );
+    let before: Vec<u64> =
+        (0..c.sim.spec.n_ops()).map(|i| c.estimators[i].stats.invalidations).collect();
+    // Hand the branch op a candidate config and start one rolling step.
+    let mut cand = c.sim.spec.operators[asr].config_space.default_config();
+    cand[0] = (cand[0] * 2.0).min(128.0);
+    assert!(c.rolling[asr].offer(cand, 10.0), "candidate accepted");
+    c.start_transition(asr, 1);
+    assert!(
+        c.estimators[asr].stats.invalidations > before[asr],
+        "transitioned op's samples invalidated"
+    );
+    assert!(
+        c.estimators[join].stats.invalidations > before[join],
+        "downstream join's samples invalidated (path ⑨)"
+    );
+    for i in 0..n_pdf {
+        assert_eq!(
+            c.estimators[i].stats.invalidations, before[i],
+            "pdf tenant untouched by a speech transition (op {i})"
+        );
+    }
+}
+
 #[test]
 fn nominal_attrs_propagate_scaling() {
     let pl = pdf::pipeline();

@@ -49,6 +49,7 @@ impl Coordinator {
                 cur_p: &cur_p,
                 placement: &placement,
                 rolling: &self.rolling,
+                tenancy: &self.sim.tenancy,
                 last_throughput: 0.0,
                 now: self.sim.now(),
             };
@@ -58,9 +59,20 @@ impl Coordinator {
         let x = if plan.t_pred > 0.0 {
             plan.x
         } else {
-            // Fallback: greedy pack of a waterfall plan.
-            let p = crate::baselines::waterfall(&self.sim.spec, &self.sim.cluster, &rates, 1.1);
-            pack(&self.sim.spec, &self.sim.cluster, &p)
+            // Fallback: greedy pack of a (tenant-aware) waterfall plan;
+            // multi-tenant packs fairly so no tenant's op is zeroed out.
+            let p = crate::baselines::waterfall_t(
+                &self.sim.spec,
+                &self.sim.tenancy,
+                &self.sim.cluster,
+                &rates,
+                1.1,
+            );
+            if self.sim.tenancy.n_tenants() > 1 {
+                crate::baselines::pack_fair(&self.sim.spec, &self.sim.cluster, &p)
+            } else {
+                pack(&self.sim.spec, &self.sim.cluster, &p)
+            }
         };
         self.apply_placement(&x);
         if self.variant.policy == Policy::Trident && self.variant.placement_aware {

@@ -185,8 +185,25 @@ pub fn summarize(jobs: &[Job], reports: &[RunReport]) -> Vec<Summary> {
 /// `benches/common.rs` so the CLI sweep can run SCOOT too; constants are
 /// unchanged, so bench results are unchanged.)
 pub fn scoot_variant(pipeline: &PipelineSpec, src: ItemAttrs) -> Variant {
+    scoot_variant_rooted(pipeline, &[(0, src)])
+}
+
+/// SCOOT offline tuning over a merged tenancy: each tenant's operators
+/// are tuned against that tenant's own nominal attrs (multi-root
+/// propagation), producing initial configs indexed by merged op.
+pub fn scoot_variant_merged(
+    spec: &PipelineSpec,
+    view: &crate::config::TenancyView,
+    srcs: &[ItemAttrs],
+) -> Variant {
+    let roots: Vec<(usize, ItemAttrs)> =
+        view.sources.iter().copied().zip(srcs.iter().copied()).collect();
+    scoot_variant_rooted(spec, &roots)
+}
+
+fn scoot_variant_rooted(pipeline: &PipelineSpec, roots: &[(usize, ItemAttrs)]) -> Variant {
     let backend = GpBackend::from_env();
-    let nominal = crate::coordinator::nominal_attrs(pipeline, src);
+    let nominal = crate::coordinator::nominal_attrs_rooted(pipeline, roots);
     let mut rng = crate::rngx::Rng::new(99);
     let configs: Vec<Option<Vec<f64>>> = pipeline
         .operators
@@ -251,6 +268,7 @@ mod tests {
             variant: "v".into(),
             duration_s: 1.0,
             throughput: thr,
+            tenants: vec![],
             series: vec![],
             oom_events: 0,
             oom_downtime_s: 0.0,

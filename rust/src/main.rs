@@ -4,15 +4,22 @@
 //! trident run   --pipeline pdf|video|speech --policy trident|static|raydata|ds2|conttune|scoot
 //!               [--duration 1800] [--nodes 8] [--seed 0] [--items 20000]
 //!               [--native-gp] [--config cfg.json]
+//! trident run   --pipelines pdf,speech [--weights 2,1]          # multi-tenant shared cluster
+//! trident run   --tenancy tenancy.json                          # full tenant control
 //! trident compare --pipeline pdf [--duration 1800] [--jobs J]   # all policies, parallel
+//! trident compare --pipelines pdf,speech                        # multi-tenant comparison
 //! trident sweep --pipeline pdf --seeds 4 --jobs 4 [--policies static,trident]
 //!               [--duration 1800] [--seed 0]      # variant × seed grid, mean ± std
 //! trident milp-bench [--nodes 8|16]               # RQ6 solve times
 //! ```
+//!
+//! A tenancy JSON file:
+//! `{"tenants": [{"pipeline": "pdf", "id": "heavy", "weight": 2.0,
+//!                "source_rate": 0.0, "items": 20000}, ...]}`
 
 use std::time::{Duration, Instant};
 
-use trident::config::{ClusterSpec, Json, TridentConfig};
+use trident::config::{ClusterSpec, Json, Tenancy, TenantSpec, TridentConfig};
 use trident::coordinator::{Coordinator, Policy, Variant};
 use trident::harness::{self, Job};
 use trident::report::{f2, Table};
@@ -111,18 +118,126 @@ fn build_cfg(args: &Args) -> TridentConfig {
     if args.flag("native-gp") {
         cfg.native_gp = true;
     }
+    if args.flag("join-colocate") {
+        cfg.milp_join_colocation = true;
+    }
     cfg
 }
 
+/// True when the invocation names more than one tenant (either flag).
+fn multi_tenant(args: &Args) -> bool {
+    args.map.contains_key("tenancy") || args.map.contains_key("pipelines")
+}
+
+/// `--weights 2,1` parallel to `--pipelines` (strict: counts must match,
+/// entries must parse).
+fn weights_of(args: &Args, n: usize) -> Vec<f64> {
+    match args.map.get("weights") {
+        None => vec![1.0; n],
+        Some(list) => {
+            let ws: Vec<f64> = list
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse().unwrap_or_else(|_| {
+                        eprintln!("invalid --weights entry '{s}' (expected a number)");
+                        std::process::exit(2);
+                    })
+                })
+                .collect();
+            if ws.len() != n {
+                eprintln!("--weights names {} entries for {} pipelines", ws.len(), n);
+                std::process::exit(2);
+            }
+            ws
+        }
+    }
+}
+
+/// Tenant list from the CLI: `--tenancy file.json` (full control) or
+/// `--pipelines a,b[,c]` (ids = pipeline names, weights from `--weights`).
+/// Strict, mirroring `--pipeline`: unknown pipeline names and duplicate
+/// tenant ids abort with exit code 2 rather than silently running a
+/// different tenancy.
+fn tenancy_of(args: &Args) -> (Tenancy, Vec<Box<dyn Trace>>, Vec<ItemAttrs>) {
+    let default_items = args.f64("items", 50_000.0) as u64;
+    let mut tenants = Vec::new();
+    let mut traces: Vec<Box<dyn Trace>> = Vec::new();
+    let mut srcs = Vec::new();
+    if let Some(path) = args.map.get("tenancy") {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("cannot read --tenancy file '{path}': {e}");
+            std::process::exit(2);
+        });
+        let j = Json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("cannot parse --tenancy json: {e}");
+            std::process::exit(2);
+        });
+        let Some(arr) = j.get("tenants").and_then(Json::as_arr) else {
+            eprintln!("--tenancy json must carry a tenants[] array");
+            std::process::exit(2);
+        };
+        for tj in arr {
+            let pname = tj.str_or("pipeline", "").to_string();
+            if pname.is_empty() {
+                eprintln!("--tenancy entry missing its pipeline name");
+                std::process::exit(2);
+            }
+            let items = tj.f64_or("items", default_items as f64) as u64;
+            let (pl, trace, src) = pipeline_of(&pname, items);
+            tenants.push(TenantSpec {
+                id: tj.str_or("id", &pname).to_string(),
+                pipeline: pl,
+                weight: tj.f64_or("weight", 1.0),
+                source_rate: tj.f64_or("source_rate", 0.0),
+            });
+            traces.push(trace);
+            srcs.push(src);
+        }
+    } else {
+        let list = args.get("pipelines", "");
+        let names: Vec<&str> =
+            list.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+        if names.is_empty() {
+            eprintln!("--pipelines must name at least one pipeline (e.g. --pipelines pdf,speech)");
+            std::process::exit(2);
+        }
+        let weights = weights_of(args, names.len());
+        for (name, w) in names.iter().zip(weights) {
+            let (pl, trace, src) = pipeline_of(name, default_items);
+            tenants.push(TenantSpec { id: pl.name.clone(), pipeline: pl, weight: w, source_rate: 0.0 });
+            traces.push(trace);
+            srcs.push(src);
+        }
+    }
+    let tenancy = Tenancy { tenants };
+    if let Err(e) = tenancy.validate() {
+        eprintln!("invalid tenancy: {e}");
+        std::process::exit(2);
+    }
+    (tenancy, traces, srcs)
+}
+
 /// Variant for a CLI-selected policy (SCOOT gets its offline-tuned
-/// initial configs).
+/// initial configs; under a multi-tenant invocation they are tuned per
+/// merged operator against each tenant's own nominal attrs).
 fn variant_of(args: &Args, policy: Policy) -> Variant {
     match policy {
         Policy::Trident => Variant::trident(),
         Policy::Scoot => {
-            let items = args.f64("items", 50_000.0) as u64;
-            let (pl, _, src) = pipeline_of(&args.get("pipeline", "pdf"), items);
-            harness::scoot_variant(&pl, src)
+            if multi_tenant(args) {
+                let (tenancy, _, srcs) = tenancy_of(args);
+                let (spec, view) = tenancy.merged().unwrap_or_else(|e| {
+                    eprintln!("invalid tenancy: {e}");
+                    std::process::exit(2);
+                });
+                harness::scoot_variant_merged(&spec, &view, &srcs)
+            } else {
+                let items = args.f64("items", 50_000.0) as u64;
+                let (pl, _, src) = pipeline_of(&args.get("pipeline", "pdf"), items);
+                harness::scoot_variant(&pl, src)
+            }
         }
         p => Variant::baseline(p),
     }
@@ -131,11 +246,20 @@ fn variant_of(args: &Args, policy: Policy) -> Variant {
 /// Build a coordinator from the CLI flags for one (variant, seed) cell.
 fn build_coordinator(args: &Args, variant: Variant, seed: u64) -> Coordinator {
     let nodes = args.f64("nodes", 8.0) as usize;
-    let items = args.f64("items", 50_000.0) as u64;
-    let (pl, trace, src) = pipeline_of(&args.get("pipeline", "pdf"), items);
     let cluster = ClusterSpec::homogeneous(nodes, 256.0, 1024.0, 8, 65536.0, 12_500.0);
     let cfg = build_cfg(args);
-    Coordinator::new(pl, cluster, trace, cfg, variant, src, seed)
+    if multi_tenant(args) {
+        let (tenancy, traces, srcs) = tenancy_of(args);
+        Coordinator::new_tenancy(tenancy, cluster, traces, cfg, variant, srcs, seed)
+            .unwrap_or_else(|e| {
+                eprintln!("invalid tenancy: {e}");
+                std::process::exit(2);
+            })
+    } else {
+        let items = args.f64("items", 50_000.0) as u64;
+        let (pl, trace, src) = pipeline_of(&args.get("pipeline", "pdf"), items);
+        Coordinator::new(pl, cluster, trace, cfg, variant, src, seed)
+    }
 }
 
 fn run_one(args: &Args, policy: Policy) -> trident::coordinator::RunReport {
@@ -170,6 +294,14 @@ fn main() {
                 r.pipeline, r.variant, r.throughput, r.duration_s, r.items_processed,
                 r.oom_events, r.oom_downtime_s, r.config_transitions
             );
+            if r.tenants.len() > 1 {
+                for t in &r.tenants {
+                    println!(
+                        "  tenant {} (w={}): {:.3} items/s ({} records out, {} admitted)",
+                        t.id, t.weight, t.throughput, t.items_processed, t.items_admitted
+                    );
+                }
+            }
             if !r.milp_ms.is_empty() {
                 let mean = r.milp_ms.iter().sum::<f64>() / r.milp_ms.len() as f64;
                 println!("MILP solves: {} (mean {:.0} ms)", r.milp_ms.len(), mean);
@@ -208,6 +340,20 @@ fn main() {
                 eprintln!("done: {}", policy.name());
             }
             table.emit("cli_compare");
+            // Multi-tenant invocation: per-tenant breakdown per policy.
+            if reports.first().map(|r| r.tenants.len() > 1).unwrap_or(false) {
+                let ids: Vec<String> =
+                    reports[0].tenants.iter().map(|t| format!("{} items/s", t.id)).collect();
+                let mut cols: Vec<&str> = vec!["Method"];
+                cols.extend(ids.iter().map(String::as_str));
+                let mut tt = Table::new("Per-tenant throughput", &cols);
+                for (policy, r) in order.iter().zip(&reports) {
+                    let mut row = vec![policy.name().to_string()];
+                    row.extend(r.tenants.iter().map(|t| f2(t.throughput)));
+                    tt.row(row);
+                }
+                tt.emit("cli_compare_tenants");
+            }
         }
         "sweep" => {
             let duration = args.f64("duration", 1800.0);
@@ -304,11 +450,14 @@ fn main() {
                     edges: pl.edges.clone(),
                     nodes: cluster.nodes,
                     d_o,
+                    tenants: Vec::new(),
+                    op_tenant: Vec::new(),
                     t_sched: 30.0,
                     lambda1: 1e-4,
                     lambda2: 1e-6,
                     b_max: 2,
                     placement_aware: true,
+                    join_colocate: false,
                     all_at_once: false,
                 };
                 let t0 = std::time::Instant::now();
@@ -321,11 +470,81 @@ fn main() {
                     plan.stats.nodes
                 );
             }
+            // The joint two-tenant MILP (union of pdf + speech operators,
+            // weighted max-min objective over shared nodes).
+            {
+                let tenancy = Tenancy {
+                    tenants: vec![
+                        TenantSpec { id: "pdf".into(), pipeline: pdf::pipeline(), weight: 1.0, source_rate: 0.0 },
+                        TenantSpec { id: "speech".into(), pipeline: speech::pipeline(), weight: 1.0, source_rate: 0.0 },
+                    ],
+                };
+                let (spec, view) = tenancy.merged().expect("pdf+speech tenancy is valid");
+                let cluster = ClusterSpec::homogeneous(nodes, 256.0, 1024.0, 8, 65536.0, 12_500.0);
+                let roots: Vec<(usize, ItemAttrs)> = view
+                    .sources
+                    .iter()
+                    .copied()
+                    .zip(vec![pdf::src_attrs(), speech::src_attrs()])
+                    .collect();
+                let nominal = trident::coordinator::nominal_attrs_rooted(&spec, &roots);
+                let (d_i, d_o) = spec.amplification();
+                let input = trident::scheduling::MilpInput {
+                    ops: spec
+                        .operators
+                        .iter()
+                        .enumerate()
+                        .map(|(i, o)| trident::scheduling::OpSched {
+                            name: o.name.clone(),
+                            ut_cur: trident::sim::service::true_unit_rate(
+                                &o.service,
+                                &o.config_space.default_config(),
+                                &nominal[i],
+                            ),
+                            ut_cand: None,
+                            n_new: 0,
+                            n_old: 0,
+                            cpu: o.cpu,
+                            mem_gb: o.mem_gb,
+                            accels: o.accels,
+                            out_mb: o.out_mb,
+                            d_i: d_i[i],
+                            h_start: o.start_s,
+                            h_stop: o.stop_s,
+                            h_cold: o.cold_s,
+                            cur_x: vec![0; nodes],
+                        })
+                        .collect(),
+                    edges: spec.edges.clone(),
+                    nodes: cluster.nodes,
+                    d_o,
+                    tenants: trident::scheduling::MilpTenant::from_view(&view),
+                    op_tenant: view.op_tenant.clone(),
+                    t_sched: 30.0,
+                    lambda1: 1e-4,
+                    lambda2: 1e-6,
+                    b_max: 2,
+                    placement_aware: true,
+                    join_colocate: false,
+                    all_at_once: false,
+                };
+                let t0 = std::time::Instant::now();
+                let plan = trident::scheduling::solve(&input, Duration::from_secs(10));
+                println!(
+                    "pdf+speech @ {nodes} nodes: {:.0} ms, T={:?}, status {:?} ({} B&B nodes)",
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    plan.t_tenant.iter().map(|t| (t * 100.0).round() / 100.0).collect::<Vec<_>>(),
+                    plan.status,
+                    plan.stats.nodes
+                );
+            }
         }
         _ => {
             println!(
-                "usage: trident <run|compare|sweep|milp-bench> [--pipeline pdf|video|speech] [--policy ...] \
-                 [--policies a,b,c] [--seeds N] [--jobs J] [--duration S] [--nodes N] [--seed S] [--native-gp]"
+                "usage: trident <run|compare|sweep|milp-bench> [--pipeline pdf|video|speech] \
+                 [--pipelines pdf,speech [--weights 2,1]] [--tenancy file.json] [--policy ...] \
+                 [--policies a,b,c] [--seeds N] [--jobs J] [--duration S] [--nodes N] [--seed S] \
+                 [--native-gp] [--join-colocate]"
             );
         }
     }

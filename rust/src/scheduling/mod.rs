@@ -4,5 +4,5 @@
 pub mod milp_model;
 pub mod rolling;
 
-pub use milp_model::{solve, MilpInput, OpSched, SchedulePlan};
+pub use milp_model::{solve, MilpInput, MilpTenant, OpSched, SchedulePlan};
 pub use rolling::RollingState;

@@ -11,8 +11,9 @@ pub struct InstId(pub usize);
 /// Typed simulator events.
 #[derive(Debug, Clone)]
 pub enum Ev {
-    /// The source attempts to emit the next input item(s).
-    SourceEmit,
+    /// Tenant `t`'s source attempts to emit the next input item(s)
+    /// (tenant 0 is the only tenant of a single-pipeline deployment).
+    SourceEmit(u32),
     /// An instance finished its current batch.
     BatchDone(InstId),
     /// An instance finished starting / restarting.
@@ -118,7 +119,7 @@ mod tests {
     #[test]
     fn time_ordering_and_fifo_ties() {
         let mut e = Engine::new();
-        e.at(2.0, Ev::SourceEmit);
+        e.at(2.0, Ev::SourceEmit(0));
         e.at(1.0, Ev::BatchDone(InstId(1)));
         e.at(1.0, Ev::BatchDone(InstId(2)));
         match e.next_before(10.0).unwrap() {
@@ -131,7 +132,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         match e.next_before(10.0).unwrap() {
-            Ev::SourceEmit => {}
+            Ev::SourceEmit(0) => {}
             other => panic!("{other:?}"),
         }
         assert!(e.next_before(10.0).is_none());
@@ -140,7 +141,7 @@ mod tests {
     #[test]
     fn respects_horizon() {
         let mut e = Engine::new();
-        e.at(5.0, Ev::SourceEmit);
+        e.at(5.0, Ev::SourceEmit(0));
         assert!(e.next_before(4.0).is_none());
         assert_eq!(e.now(), 4.0);
         assert!(e.next_before(5.0).is_some());
@@ -150,9 +151,9 @@ mod tests {
     #[test]
     fn past_events_clamped_to_now() {
         let mut e = Engine::new();
-        e.at(3.0, Ev::SourceEmit);
+        e.at(3.0, Ev::SourceEmit(0));
         e.next_before(10.0);
-        e.at(1.0, Ev::SourceEmit); // in the past -> fires at now
+        e.at(1.0, Ev::SourceEmit(0)); // in the past -> fires at now
         assert!(e.next_before(10.0).is_some());
         assert_eq!(e.now(), 3.0);
     }

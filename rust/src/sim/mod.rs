@@ -52,6 +52,7 @@ mod tests {
         sim.add_instance(1, 0, theta).unwrap();
         sim.run_until(120.0);
         let (ms, out) = sim.flush_metrics();
+        let out: u64 = out.iter().sum();
         assert!(out > 50, "pipeline must produce output, got {out}");
         assert!(ms[0].records_out > 0 && ms[1].records_out > 0);
         assert!(ms[1].utilization > 0.3, "LLM op should be busy: {}", ms[1].utilization);
@@ -397,6 +398,104 @@ mod tests {
             j.tokens_in,
             b.tokens_in
         );
+    }
+
+    /// Satellite for the tentpole refactor: a join's parked-group path
+    /// composed with a rolling update.  While one branch instance is
+    /// mid-rolling-restart, the join's sole instance stops with partials
+    /// buffered — the groups must be parked (not dropped), adopted by the
+    /// replacement instance, and the DAG must still drain with exact
+    /// conservation.
+    #[test]
+    fn parked_join_groups_survive_branch_rolling_update() {
+        use crate::config::{
+            ConfigSpace, CostW, FeatureExtractor, OperatorKind, OperatorSpec, PipelineSpec,
+            ServiceModel,
+        };
+        use crate::workload::{Phase, PhasedTrace};
+
+        let cpu = |name: &str, base_rate: f64, queue_cap: usize| OperatorSpec {
+            name: name.into(),
+            kind: OperatorKind::CpuSync,
+            cpu: 1.0,
+            mem_gb: 1.0,
+            accels: 0,
+            fanout: 1.0,
+            out_mb: 0.2,
+            start_s: 0.5,
+            stop_s: 0.5,
+            cold_s: 2.0,
+            tunable: false,
+            config_space: ConfigSpace::default(),
+            service: ServiceModel::Cpu {
+                base_rate,
+                ref_cost: 1.0,
+                cost: CostW { konst: 1.0, ..Default::default() },
+            },
+            features: FeatureExtractor::Cost,
+            child_scale: [1.0; 4],
+            queue_cap,
+        };
+        let spec = PipelineSpec {
+            name: "diamond".into(),
+            operators: vec![
+                cpu("fork", 50.0, 64),
+                cpu("fast", 40.0, 8),
+                cpu("slow", 4.0, 8), // 10x slower: join groups pile up
+                cpu("join", 50.0, 8),
+            ],
+            edges: vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+        };
+        let n_items = 60u64;
+        let trace = PhasedTrace::new(vec![Phase {
+            regime: 0,
+            count: n_items,
+            sampler: llm_dist(),
+        }]);
+        let mut sim = PipelineSim::new(spec, small_cluster(), Box::new(trace), 17);
+        for op in 0..4 {
+            sim.add_instance(op, 0, vec![]).unwrap();
+        }
+        let fast_inst = 1usize;
+        let join_inst = 3usize;
+        // Run until the join holds incomplete groups at a moment where its
+        // queue/batch are empty (so a stop cannot drop queued records).
+        let mut t = 20.0;
+        sim.run_until(t);
+        while t < 300.0 {
+            let j = &sim.instances[join_inst];
+            if !j.join_buf.is_empty() && j.queue.is_empty() && j.batch.is_empty() {
+                break;
+            }
+            t += 0.5;
+            sim.run_until(t);
+        }
+        assert!(
+            !sim.instances[join_inst].join_buf.is_empty(),
+            "test setup: join must hold incomplete groups"
+        );
+        // One branch instance enters a rolling config restart mid-flight...
+        sim.restart_with_config(fast_inst, vec![]);
+        // ...and the join's only instance stops while buffering partials:
+        // its groups are parked for the operator's next instance.
+        sim.stop_instance(join_inst);
+        sim.run_until(t + 5.0);
+        // The replacement (on the other node) adopts the parked groups.
+        sim.add_instance(3, 1, vec![]).unwrap();
+        for _ in 0..100 {
+            sim.run_until(sim.now() + 10.0);
+            if sim.drained() {
+                break;
+            }
+        }
+        assert!(sim.drained(), "parked join groups must be adopted, not wedged");
+        assert_eq!(sim.instances[fast_inst].config_gen, 1, "branch rolled its config");
+        assert_eq!(sim.items_emitted, n_items);
+        assert_eq!(sim.processed_total[3], n_items, "join merges every pair exactly once");
+        assert_eq!(sim.out_records, n_items);
+        for mb in sim.join_state_mb() {
+            assert!(mb.abs() < 1e-9, "join memory fully released: {mb} MB");
+        }
     }
 
     #[test]

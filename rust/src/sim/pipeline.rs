@@ -30,7 +30,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
-use crate::config::{ClusterSpec, OperatorKind, PipelineSpec};
+use crate::config::{ClusterSpec, OperatorKind, PipelineSpec, TenancyView};
 use crate::rngx::Rng;
 use crate::sim::engine::{Engine, Ev, InstId};
 use crate::sim::items::{Item, ItemAttrs};
@@ -119,16 +119,29 @@ struct NodeState {
     join_mb: f64,
 }
 
-/// Waiter sentinel for the source.
+/// Waiter sentinel for tenant 0's source; tenant t's sentinel is
+/// `SOURCE - t` (instance ids never reach that range).
 const SOURCE: usize = usize::MAX;
 
-/// The discrete-event pipeline simulator.
+fn source_waiter(tenant: usize) -> usize {
+    SOURCE - tenant
+}
+
+/// The discrete-event pipeline simulator.  Hosts the disjoint per-tenant
+/// DAGs of a [`TenancyView`] on shared nodes: memory, accelerator slots,
+/// CPU contention, and the per-node egress-link FIFO are contended across
+/// tenants, while records never cross tenant DAGs (edge lists are
+/// disjoint).  A single-tenant view reproduces the classic one-pipeline
+/// executor event-for-event.
 pub struct PipelineSim {
     pub engine: Engine,
     pub spec: PipelineSpec,
     pub cluster: ClusterSpec,
+    /// Tenant structure of `spec` (trivial for [`PipelineSim::new`]).
+    pub tenancy: TenancyView,
     rng: Rng,
-    trace: Box<dyn Trace>,
+    /// One input trace per tenant.
+    traces: Vec<Box<dyn Trace>>,
     pub instances: Vec<Instance>,
     by_op: Vec<Vec<usize>>,
     nodes: Vec<NodeState>,
@@ -151,24 +164,30 @@ pub struct PipelineSim {
     op_acc: Vec<OpWindowAcc>,
     /// Lifetime EMA of processed item attrs per op (capacity-oracle input).
     attr_ema: Vec<Option<ItemAttrs>>,
-    /// Amplification factors D_i and D_o.
+    /// Amplification factors D_i and D_o.  `d_o` is the merged-spec value
+    /// (sums sinks across tenants); per-tenant throughput accounting uses
+    /// `tenancy.d_o` instead.
     pub d_i: Vec<f64>,
     pub d_o: f64,
     pub items_emitted: u64,
+    /// Source items admitted per tenant.
+    pub items_emitted_t: Vec<u64>,
     pub out_records: u64,
+    /// Records out of each tenant's sinks.
+    pub out_records_t: Vec<u64>,
     /// Lifetime records processed per operator (conservation checks).
     pub processed_total: Vec<u64>,
     /// Lifetime records dispatched onto each pipeline edge (fork/join
     /// conservation: replicas count once per edge).
     pub edge_emitted: Vec<u64>,
-    out_window: u64,
+    out_window_t: Vec<u64>,
     win_start: f64,
     /// Cumulative OOM downtime per op, seconds (Table 6).
     pub oom_downtime_s: Vec<f64>,
     pub oom_events_total: Vec<u32>,
     /// Network transfer latency floor, s.
     net_latency: f64,
-    source_done: bool,
+    source_done: Vec<bool>,
     /// Previous window's queue-end per op (queue-trend signal).
     prev_q_end: Vec<usize>,
 }
@@ -186,6 +205,34 @@ impl PipelineSim {
         if let Err(e) = spec.validate() {
             panic!("invalid pipeline spec '{}': {e}", spec.name);
         }
+        let view = TenancyView::single_for(&spec);
+        Self::new_validated(spec, view, cluster, vec![trace], seed)
+    }
+
+    /// Multi-tenant constructor: host the merged spec's disjoint per-tenant
+    /// DAGs (`view`) on shared nodes, one input trace per tenant.
+    pub fn new_tenancy(
+        spec: PipelineSpec,
+        view: TenancyView,
+        cluster: ClusterSpec,
+        traces: Vec<Box<dyn Trace>>,
+        seed: u64,
+    ) -> Self {
+        if let Err(e) = spec.validate_with_sources(&view.sources) {
+            panic!("invalid merged tenancy spec '{}': {e}", spec.name);
+        }
+        assert_eq!(traces.len(), view.n_tenants(), "one trace per tenant");
+        Self::new_validated(spec, view, cluster, traces, seed)
+    }
+
+    fn new_validated(
+        spec: PipelineSpec,
+        view: TenancyView,
+        cluster: ClusterSpec,
+        traces: Vec<Box<dyn Trace>>,
+        seed: u64,
+    ) -> Self {
+        let n_tenants = view.n_tenants();
         let n_ops = spec.n_ops();
         let n_edges = spec.n_edges();
         let (d_i, d_o) = spec.amplification();
@@ -204,11 +251,14 @@ impl PipelineSim {
             })
             .collect();
         let mut engine = Engine::new();
-        engine.at(0.0, Ev::SourceEmit);
+        for t in 0..n_tenants {
+            engine.at(0.0, Ev::SourceEmit(t as u32));
+        }
         PipelineSim {
             engine,
             rng: Rng::new(seed),
-            trace,
+            traces,
+            tenancy: view,
             instances: Vec::new(),
             by_op: vec![Vec::new(); n_ops],
             nodes,
@@ -224,15 +274,17 @@ impl PipelineSim {
             d_i,
             d_o,
             items_emitted: 0,
+            items_emitted_t: vec![0; n_tenants],
             out_records: 0,
+            out_records_t: vec![0; n_tenants],
             processed_total: vec![0; n_ops],
             edge_emitted: vec![0; n_edges],
-            out_window: 0,
+            out_window_t: vec![0; n_tenants],
             win_start: 0.0,
             oom_downtime_s: vec![0.0; n_ops],
             oom_events_total: vec![0; n_ops],
             net_latency: 1e-3,
-            source_done: false,
+            source_done: vec![false; n_tenants],
             prev_q_end: vec![0; n_ops],
             spec,
             cluster,
@@ -448,7 +500,7 @@ impl PipelineSim {
     pub fn run_until(&mut self, t_end: f64) {
         while let Some(ev) = self.engine.next_before(t_end) {
             match ev {
-                Ev::SourceEmit => self.try_source(),
+                Ev::SourceEmit(t) => self.try_source(t as usize),
                 Ev::InstanceReady(InstId(id)) => self.on_ready(id),
                 Ev::BatchDone(InstId(id)) => self.on_batch_done(id),
                 Ev::TransferDone(InstId(id), edge, item) => self.on_transfer(id, edge, item),
@@ -587,34 +639,46 @@ impl PipelineSim {
         }
     }
 
-    fn try_source(&mut self) {
-        if self.source_done {
+    /// Tenant `t`'s source: emit into its source operator's instances.
+    /// Unpaced tenants (`source_rate == 0`) emit greedily until admission
+    /// blocks (the offline paradigm); paced tenants emit one item per
+    /// `1/source_rate` tick.
+    fn try_source(&mut self, t: usize) {
+        if self.source_done[t] {
             return;
         }
-        let cap = self.spec.operators[0].queue_cap;
+        let src_op = self.tenancy.sources[t];
+        let cap = self.spec.operators[src_op].queue_cap;
+        let rate = self.tenancy.source_rates[t];
         loop {
-            // Find an op-0 instance with space.
-            let dest = self.by_op[0]
+            // Find a source-op instance with space.
+            let dest = self.by_op[src_op]
                 .iter()
                 .copied()
                 .filter(|&i| self.instances[i].has_space(cap))
                 .min_by_key(|&i| self.instances[i].occupancy());
             let Some(dest) = dest else {
-                if !self.waiters[0].contains(&SOURCE) {
-                    self.waiters[0].push(SOURCE);
+                let w = source_waiter(t);
+                if !self.waiters[src_op].contains(&w) {
+                    self.waiters[src_op].push(w);
                 }
                 return;
             };
-            match self.trace.next_item(&mut self.rng) {
+            match self.traces[t].next_item(&mut self.rng) {
                 Some(mut item) => {
                     item.id = self.next_item_id;
                     self.next_item_id += 1;
                     self.items_emitted += 1;
+                    self.items_emitted_t[t] += 1;
                     self.instances[dest].queue.push_back(item);
                     self.try_start(dest);
+                    if rate > 0.0 {
+                        self.engine.after(1.0 / rate, Ev::SourceEmit(t as u32));
+                        return;
+                    }
                 }
                 None => {
-                    self.source_done = true;
+                    self.source_done[t] = true;
                     return;
                 }
             }
@@ -793,8 +857,10 @@ impl PipelineSim {
         }
 
         if is_sink {
+            let tenant = self.tenancy.op_tenant[op_idx];
             self.out_records += outputs.len() as u64;
-            self.out_window += outputs.len() as u64;
+            self.out_records_t[tenant] += outputs.len() as u64;
+            self.out_window_t[tenant] += outputs.len() as u64;
         } else {
             // Replicate each child onto every out-edge (fork semantics;
             // a chain op has exactly one out-edge).
@@ -971,8 +1037,9 @@ impl PipelineSim {
     fn wake_waiters(&mut self, op: usize) {
         let ws = std::mem::take(&mut self.waiters[op]);
         for w in ws {
-            if w == SOURCE {
-                self.try_source();
+            if SOURCE - w < self.traces.len() {
+                // A blocked tenant source (sentinel `SOURCE - t`).
+                self.try_source(SOURCE - w);
             } else if self.instances[w].placing {
                 // Mid-placement up the stack (we got here via one of its
                 // own dispatches): keep the registration — its pending_out
@@ -996,9 +1063,9 @@ impl PipelineSim {
     // Metrics & oracles
     // ------------------------------------------------------------------
 
-    /// Flush the metrics window: per-operator snapshots + pipeline output
-    /// records this window.  Resets window accumulators.
-    pub fn flush_metrics(&mut self) -> (Vec<OpMetrics>, u64) {
+    /// Flush the metrics window: per-operator snapshots + per-tenant
+    /// output records this window.  Resets window accumulators.
+    pub fn flush_metrics(&mut self) -> (Vec<OpMetrics>, Vec<u64>) {
         let now = self.engine.now();
         let window_s = (now - self.win_start).max(1e-9);
         let mut out = Vec::with_capacity(self.spec.n_ops());
@@ -1082,8 +1149,7 @@ impl PipelineSim {
         for ns in &mut self.nodes {
             ns.egress_mb_window = 0.0;
         }
-        let w = self.out_window;
-        self.out_window = 0;
+        let w = std::mem::replace(&mut self.out_window_t, vec![0; self.tenancy.n_tenants()]);
         self.win_start = now;
         (out, w)
     }
@@ -1106,24 +1172,52 @@ impl PipelineSim {
         self.attr_ema[op]
     }
 
-    /// Pipeline throughput in original-input records/s over the whole run.
+    /// Aggregate throughput in original-input records/s over the whole
+    /// run: the sum of per-tenant throughputs (identical to the classic
+    /// `out_records / D_o / t` for a single tenant).
     pub fn avg_throughput(&self) -> f64 {
         if self.now() <= 0.0 {
             return 0.0;
         }
-        (self.out_records as f64 / self.d_o) / self.now()
+        (0..self.tenancy.n_tenants()).map(|t| self.tenant_throughput(t)).sum()
     }
 
-    /// True when the trace is exhausted and no work remains in flight —
+    /// Tenant `t`'s throughput in its own input records/s.
+    pub fn tenant_throughput(&self, t: usize) -> f64 {
+        if self.now() <= 0.0 {
+            return 0.0;
+        }
+        (self.out_records_t[t] as f64 / self.tenancy.d_o[t]) / self.now()
+    }
+
+    /// True when every trace is exhausted and no work remains in flight —
     /// queues, batches, blocked outputs, buffered join partials, and
     /// records still crossing the network (`reserved` transfers).
     pub fn drained(&self) -> bool {
-        self.source_done
+        self.source_done.iter().all(|&d| d)
             && self.parked_joins.iter().all(BTreeMap::is_empty)
             && self.instances.iter().all(|i| {
                 i.reserved == 0
                     && (i.state == InstState::Stopped
                         || (i.idle() && i.queue.is_empty() && i.join_buf.is_empty()))
+            })
+    }
+
+    /// Per-tenant [`drained`](Self::drained): tenant `t`'s trace is
+    /// exhausted and none of *its* operators hold in-flight work (other
+    /// tenants may still be running).
+    pub fn tenant_drained(&self, t: usize) -> bool {
+        self.source_done[t]
+            && self
+                .parked_joins
+                .iter()
+                .enumerate()
+                .all(|(op, p)| self.tenancy.op_tenant[op] != t || p.is_empty())
+            && self.instances.iter().all(|i| {
+                self.tenancy.op_tenant[i.op] != t
+                    || (i.reserved == 0
+                        && (i.state == InstState::Stopped
+                            || (i.idle() && i.queue.is_empty() && i.join_buf.is_empty())))
             })
     }
 

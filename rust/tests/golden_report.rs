@@ -1,0 +1,99 @@
+//! Golden `RunReport` snapshot (ROADMAP open item): per-policy outcome
+//! constants at a fixed seed/config, pinned across commits.
+//!
+//! `tests/policy_parity.rs` compares the current build against itself, so
+//! a change that perturbs both sides identically (e.g. an extra RNG draw
+//! in the executor) passes parity silently.  This test closes that gap by
+//! asserting against *recorded* constants in `tests/golden_report.txt`.
+//!
+//! Workflow:
+//!   * regenerate (after an intentional behavior change):
+//!     `TRIDENT_BLESS=1 cargo test --test golden_report` — inspect the
+//!     diff of `tests/golden_report.txt` and commit it;
+//!   * fresh checkout before the first bless: the fixture is absent, the
+//!     test prints the bless instructions and passes (it cannot invent
+//!     the constants; CI blesses then re-asserts to pin cross-process
+//!     determinism until a blessed fixture is committed).
+//!
+//! The config mirrors `policy_parity::mk_det`: the mini 2-node instance
+//! reaches `Status::Optimal` within the generous MILP budget, so every
+//! run of this grid is deterministic.
+
+use std::fmt::Write as _;
+
+use trident::config::{ClusterSpec, TridentConfig};
+use trident::coordinator::{Coordinator, Policy, Variant};
+use trident::harness;
+use trident::sim::ItemAttrs;
+use trident::workload::pdf;
+
+const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden_report.txt");
+
+fn mk(variant: &Variant, seed: u64) -> Coordinator {
+    let mut cfg = TridentConfig::default();
+    cfg.native_gp = true;
+    cfg.milp_time_budget_ms = 10_000;
+    cfg.tune_trigger = 32;
+    cfg.bo_budget = 8;
+    cfg.bo_init = 3;
+    Coordinator::new(
+        pdf::pipeline(),
+        ClusterSpec::homogeneous(2, 128.0, 512.0, 4, 65536.0, 2500.0),
+        Box::new(pdf::trace(50_000)),
+        cfg,
+        variant.clone(),
+        ItemAttrs { tokens_in: 36_000.0, tokens_out: 7_200.0, pixels_m: 12.0, frames: 12.0 },
+        seed,
+    )
+}
+
+fn all_policies() -> Vec<(&'static str, Variant)> {
+    vec![
+        ("Static", Variant::baseline(Policy::Static)),
+        ("RayData", Variant::baseline(Policy::RayData)),
+        ("DS2", Variant::baseline(Policy::Ds2)),
+        ("ContTune", Variant::baseline(Policy::ContTune)),
+        ("SCOOT", harness::scoot_variant(
+            &pdf::pipeline(),
+            ItemAttrs { tokens_in: 36_000.0, tokens_out: 7_200.0, pixels_m: 12.0, frames: 12.0 },
+        )),
+        ("Trident", Variant::trident()),
+    ]
+}
+
+#[test]
+fn run_reports_match_golden_constants() {
+    let mut lines = String::new();
+    for (name, variant) in all_policies() {
+        let r = mk(&variant, 5).run(300.0);
+        writeln!(
+            lines,
+            "{name} throughput_bits={:016x} items={} ooms={} transitions={} milp_solves={} # {:.6} items/s",
+            r.throughput.to_bits(),
+            r.items_processed,
+            r.oom_events,
+            r.config_transitions,
+            r.milp_ms.len(),
+            r.throughput,
+        )
+        .unwrap();
+    }
+    if std::env::var("TRIDENT_BLESS").map(|v| v == "1").unwrap_or(false) {
+        std::fs::write(GOLDEN, &lines).expect("write golden fixture");
+        eprintln!("blessed {GOLDEN}:\n{lines}");
+        return;
+    }
+    match std::fs::read_to_string(GOLDEN) {
+        Ok(want) => assert_eq!(
+            lines, want,
+            "RunReport drifted from the golden snapshot; if the change is \
+             intentional, re-bless with TRIDENT_BLESS=1 cargo test --test \
+             golden_report and commit the fixture diff"
+        ),
+        Err(_) => eprintln!(
+            "golden fixture missing ({GOLDEN}); record it with \
+             TRIDENT_BLESS=1 cargo test --test golden_report and commit it.\n\
+             current constants:\n{lines}"
+        ),
+    }
+}

@@ -142,11 +142,14 @@ fn milp_plans_always_feasible() {
             edges: (1..n).map(|i| (i - 1, i)).collect(),
             nodes,
             d_o: rng.uniform(0.5, 5.0),
+            tenants: Vec::new(),
+            op_tenant: Vec::new(),
             t_sched: 90.0,
             lambda1: 1e-4,
             lambda2: 1e-6,
             b_max: 4,
             placement_aware: rng.bool(0.7),
+            join_colocate: rng.bool(0.3),
             all_at_once: rng.bool(0.3),
         };
         let plan = solve(&input, Duration::from_secs(3));

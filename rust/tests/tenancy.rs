@@ -1,0 +1,295 @@
+//! Multi-tenant scheduling integration (the tentpole refactor's contract):
+//!
+//! * a single-tenant `Tenancy` is **bit-identical** to the classic
+//!   single-pipeline constructor for every policy (the refactor is pure
+//!   structure — `tests/policy_parity.rs` continues to pin the classic
+//!   path against the harness);
+//! * a two-tenant `pdf+speech` run shares one fixed-resource cluster with
+//!   per-tenant conservation (each tenant's sink output matches what it
+//!   admitted), drains both tenants, and reports per-tenant + aggregate
+//!   throughput in `RunReport`.
+
+use trident::config::{ClusterSpec, Tenancy, TenantSpec, TridentConfig};
+use trident::coordinator::{Coordinator, Policy, RunReport, Variant};
+use trident::harness;
+use trident::sim::ItemAttrs;
+use trident::workload::{pdf, speech, Trace};
+
+fn mini_cfg() -> TridentConfig {
+    let mut cfg = TridentConfig::default();
+    cfg.native_gp = true;
+    // Generous budget: the mini 2-node MILP reaches Optimal, so Trident
+    // plans are deterministic under parallel test execution.
+    cfg.milp_time_budget_ms = 10_000;
+    cfg.tune_trigger = 32;
+    cfg.bo_budget = 8;
+    cfg.bo_init = 3;
+    cfg
+}
+
+fn cluster() -> ClusterSpec {
+    ClusterSpec::homogeneous(2, 128.0, 512.0, 4, 65536.0, 2500.0)
+}
+
+fn pdf_src() -> ItemAttrs {
+    ItemAttrs { tokens_in: 36_000.0, tokens_out: 7_200.0, pixels_m: 12.0, frames: 12.0 }
+}
+
+/// The classic single-pipeline constructor (pre-tenancy API).
+fn classic(variant: &Variant, seed: u64) -> Coordinator {
+    Coordinator::new(
+        pdf::pipeline(),
+        cluster(),
+        Box::new(pdf::trace(50_000)),
+        mini_cfg(),
+        variant.clone(),
+        pdf_src(),
+        seed,
+    )
+}
+
+/// The same deployment expressed as a one-tenant tenancy.
+fn singleton(variant: &Variant, seed: u64) -> Coordinator {
+    Coordinator::new_tenancy(
+        Tenancy::single(pdf::pipeline()),
+        cluster(),
+        vec![Box::new(pdf::trace(50_000)) as Box<dyn Trace>],
+        mini_cfg(),
+        variant.clone(),
+        vec![pdf_src()],
+        seed,
+    )
+    .expect("single-tenant tenancy is valid")
+}
+
+fn two_tenant(variant: &Variant, seed: u64) -> Coordinator {
+    let tenancy = Tenancy {
+        tenants: vec![
+            TenantSpec { id: "pdf".into(), pipeline: pdf::pipeline(), weight: 1.0, source_rate: 0.0 },
+            TenantSpec {
+                id: "speech".into(),
+                pipeline: speech::pipeline(),
+                weight: 1.0,
+                source_rate: 0.0,
+            },
+        ],
+    };
+    Coordinator::new_tenancy(
+        tenancy,
+        cluster(),
+        vec![
+            Box::new(pdf::trace(300)) as Box<dyn Trace>,
+            Box::new(speech::trace(120)) as Box<dyn Trace>,
+        ],
+        mini_cfg(),
+        variant.clone(),
+        vec![pdf_src(), speech::src_attrs()],
+        seed,
+    )
+    .expect("two-tenant tenancy is valid")
+}
+
+fn all_policies() -> Vec<(&'static str, Variant)> {
+    vec![
+        ("Static", Variant::baseline(Policy::Static)),
+        ("Ray Data", Variant::baseline(Policy::RayData)),
+        ("DS2", Variant::baseline(Policy::Ds2)),
+        ("ContTune", Variant::baseline(Policy::ContTune)),
+        ("SCOOT", harness::scoot_variant(&pdf::pipeline(), pdf_src())),
+        ("Trident", Variant::trident()),
+    ]
+}
+
+/// Outcome key compared at the bit level (as in `policy_parity`).
+fn key(r: &RunReport) -> (u64, u64, u32, u64, usize) {
+    (
+        r.throughput.to_bits(),
+        r.items_processed,
+        r.oom_events,
+        r.config_transitions,
+        r.milp_ms.len(),
+    )
+}
+
+/// Acceptance criterion 1: `Tenancy::single` is bit-identical to the
+/// classic build for all six policies.
+#[test]
+fn single_tenant_tenancy_is_bit_identical_for_all_policies() {
+    for (name, variant) in all_policies() {
+        let a = classic(&variant, 5).run(300.0);
+        let b = singleton(&variant, 5).run(300.0);
+        assert_eq!(key(&a), key(&b), "policy {name} diverged under Tenancy::single");
+        assert!(a.throughput > 0.0, "{name} must make progress");
+        // The singleton per-tenant section mirrors the aggregate exactly.
+        assert_eq!(b.tenants.len(), 1);
+        assert_eq!(b.tenants[0].id, "pdf");
+        assert_eq!(
+            b.tenants[0].throughput.to_bits(),
+            b.throughput.to_bits(),
+            "{name}: single-tenant aggregate == tenant throughput"
+        );
+    }
+}
+
+/// Acceptance criterion 2: a two-tenant pdf+speech run drains both
+/// tenants on the shared cluster with per-tenant conservation and
+/// per-tenant + aggregate reporting.
+#[test]
+fn two_tenant_run_conserves_per_tenant_and_reports() {
+    for (name, variant) in [
+        ("Static", Variant::baseline(Policy::Static)),
+        ("DS2", Variant::baseline(Policy::Ds2)),
+        ("Trident", Variant::trident()),
+    ] {
+        let mut c = two_tenant(&variant, 5);
+        let r = c.run_to_completion(4.0 * 3600.0);
+        assert!(c.sim.drained(), "{name}: both tenants must drain");
+        assert!(c.sim.tenant_drained(0) && c.sim.tenant_drained(1), "{name}");
+
+        // Per-tenant admission recorded.
+        assert_eq!(c.sim.items_emitted_t[0], 300, "{name}: pdf trace fully admitted");
+        assert_eq!(c.sim.items_emitted_t[1], 120, "{name}: speech trace fully admitted");
+        assert_eq!(
+            c.sim.items_emitted,
+            c.sim.items_emitted_t.iter().sum::<u64>(),
+            "{name}"
+        );
+
+        // Speech-tenant conservation is exact across its fork/join: edge
+        // ids are offset by the pdf tenant's edge count in the merged DAG.
+        let n_pdf_ops = pdf::pipeline().n_ops();
+        let off = pdf::pipeline().n_edges();
+        let e = &c.sim.edge_emitted;
+        assert_eq!(e[off + 1], e[off + 2], "{name}: fork replicates onto both branches");
+        assert_eq!(e[off + 1], e[off + 3], "{name}: ASR branch conserves records");
+        assert_eq!(e[off + 2], e[off + 4], "{name}: caption branch conserves records");
+        assert_eq!(
+            c.sim.processed_total[n_pdf_ops + 4],
+            e[off + 1],
+            "{name}: join merges one record per forked segment"
+        );
+
+        // Per-tenant sink conservation: everything each tenant admitted
+        // comes out of its own sinks, scaled by its own D_o (fractional
+        // fanout carries leave at most a few records per instance).
+        for t in 0..2 {
+            let d_o = c.sim.tenancy.d_o[t];
+            let expect = c.sim.items_emitted_t[t] as f64 * d_o;
+            let got = c.sim.out_records_t[t] as f64;
+            assert!(
+                (got - expect).abs() <= 0.05 * expect + 16.0,
+                "{name}: tenant {t} sink output {got} vs admitted*D_o {expect}"
+            );
+        }
+        assert_eq!(
+            c.sim.out_records,
+            c.sim.out_records_t.iter().sum::<u64>(),
+            "{name}: tenant outputs partition the total"
+        );
+
+        // RunReport: per-tenant + aggregate sections.
+        assert_eq!(r.tenants.len(), 2, "{name}");
+        assert_eq!(r.tenants[0].id, "pdf");
+        assert_eq!(r.tenants[1].id, "speech");
+        for t in &r.tenants {
+            assert!(t.throughput > 0.0, "{name}: tenant {} made progress", t.id);
+            assert!(t.items_processed > 0, "{name}");
+        }
+        let sum: f64 = r.tenants.iter().map(|t| t.throughput).sum();
+        assert!(
+            (sum - r.throughput).abs() < 1e-9,
+            "{name}: aggregate is the per-tenant sum"
+        );
+    }
+}
+
+/// The shared cluster is respected: at every accel op placement, the
+/// union of both tenants' instances fits the per-node device count.
+#[test]
+fn two_tenant_trident_respects_shared_capacity() {
+    let mut c = two_tenant(&Variant::trident(), 7);
+    let r = c.run(600.0);
+    assert!(!r.milp_ms.is_empty(), "Trident re-solves the joint MILP");
+    assert!(r.throughput > 0.0);
+    let spec = &c.sim.spec;
+    let x = c.sim.placement();
+    for node in 0..2 {
+        let acc: u32 = (0..spec.n_ops())
+            .map(|i| x[i][node] * spec.operators[i].accels)
+            .sum();
+        assert!(acc <= 4, "node {node} over-packed across tenants: {acc}");
+    }
+    // Both tenants' accelerator branches are live on the shared pool.
+    let n_pdf_ops = pdf::pipeline().n_ops();
+    assert!(
+        !c.sim.instances_of(9).is_empty() || !c.sim.instances_of(10).is_empty(),
+        "pdf OCR ops placed"
+    );
+    assert!(
+        !c.sim.instances_of(n_pdf_ops + 2).is_empty(),
+        "speech ASR placed alongside pdf"
+    );
+}
+
+/// Strictness: tenancy validation fails loudly on duplicate ids and bad
+/// weights (the CLI surfaces these as exit-code-2 errors).
+#[test]
+fn tenancy_validation_is_strict() {
+    let dup = Tenancy {
+        tenants: vec![
+            TenantSpec { id: "pdf".into(), pipeline: pdf::pipeline(), weight: 1.0, source_rate: 0.0 },
+            TenantSpec { id: "pdf".into(), pipeline: speech::pipeline(), weight: 1.0, source_rate: 0.0 },
+        ],
+    };
+    assert!(dup.validate().unwrap_err().contains("duplicate tenant id"));
+    let coord = Coordinator::new_tenancy(
+        dup,
+        cluster(),
+        vec![
+            Box::new(pdf::trace(10)) as Box<dyn Trace>,
+            Box::new(speech::trace(10)) as Box<dyn Trace>,
+        ],
+        mini_cfg(),
+        Variant::baseline(Policy::Static),
+        vec![pdf_src(), speech::src_attrs()],
+        0,
+    );
+    assert!(coord.is_err(), "duplicate ids must be rejected at construction");
+}
+
+/// A paced tenant (finite `source_rate`) is admission-limited at its
+/// offered load instead of running closed-loop.
+#[test]
+fn paced_source_rate_caps_admission() {
+    let tenancy = Tenancy {
+        tenants: vec![TenantSpec {
+            id: "pdf".into(),
+            pipeline: pdf::pipeline(),
+            weight: 1.0,
+            source_rate: 0.5, // one document every 2 s
+        }],
+    };
+    let mut c = Coordinator::new_tenancy(
+        tenancy,
+        cluster(),
+        vec![Box::new(pdf::trace(50_000)) as Box<dyn Trace>],
+        mini_cfg(),
+        Variant::baseline(Policy::Static),
+        vec![pdf_src()],
+        5,
+    )
+    .expect("valid");
+    c.run(400.0);
+    // 400 s at 0.5 items/s -> ~200 admissions (exact pacing modulo the
+    // t=0 tick), far below what the unpaced closed loop admits.
+    assert!(
+        c.sim.items_emitted <= 202,
+        "paced source over-admitted: {}",
+        c.sim.items_emitted
+    );
+    assert!(
+        c.sim.items_emitted >= 150,
+        "paced source under-admitted: {}",
+        c.sim.items_emitted
+    );
+}
