@@ -110,7 +110,7 @@ impl Policy {
             Policy::RayData => Box::new(crate::baselines::RayDataAutoscaler::default()),
             Policy::Ds2 => Box::new(crate::baselines::Ds2::default()),
             Policy::ContTune => Box::new(crate::baselines::ContTune::default()),
-            Policy::Trident => Box::new(TridentPolicy),
+            Policy::Trident => Box::new(TridentPolicy::default()),
         }
     }
 }
@@ -193,13 +193,26 @@ impl SchedulingPolicy for StaticPolicy {
 
 /// The full Trident MILP (paper §6, Algorithm 2): joint parallelism /
 /// placement / transition planning on the observation-layer estimates.
-pub struct TridentPolicy;
+///
+/// Holds the cross-round [`scheduling::BasisCache`]: round r+1's MILP has
+/// the same shape as round r's (same operators, nodes, edges — only the
+/// estimated coefficients drift), so the incumbent root basis warm-starts
+/// the next solve and online re-optimization stays cheap.  A shape change
+/// (tenant set, topology, or cluster size) drops the entry automatically.
+#[derive(Default)]
+pub struct TridentPolicy {
+    cache: scheduling::BasisCache,
+}
 
 impl SchedulingPolicy for TridentPolicy {
     fn plan(&mut self, ctx: &PolicyCtx<'_>) -> Plan {
         let input = milp_input(ctx);
         let t0 = Instant::now();
-        let plan = scheduling::solve(&input, Duration::from_millis(ctx.cfg.milp_time_budget_ms));
+        let plan = scheduling::solve_cached(
+            &input,
+            Duration::from_millis(ctx.cfg.milp_time_budget_ms),
+            &mut self.cache,
+        );
         let ms = t0.elapsed().as_secs_f64() * 1e3;
         if plan.t_pred <= 0.0 {
             // Keep the previous feasible plan (paper §7).

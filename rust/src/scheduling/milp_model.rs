@@ -52,7 +52,7 @@
 use std::time::Duration;
 
 use crate::config::NodeSpec;
-use crate::solver::{Cmp, MilpStats, Problem, Status, Var};
+use crate::solver::{BasisSnapshot, Cmp, MilpOptions, MilpStats, Problem, Status, Var};
 
 /// Per-operator scheduler inputs for one round.
 #[derive(Debug, Clone)]
@@ -193,8 +193,93 @@ pub struct SchedulePlan {
     pub stats: MilpStats,
 }
 
-/// Build + solve the round's MILP.
+/// Cross-round warm-start cache for the scheduling MILP.
+///
+/// Round r+1's constraint matrix differs from round r's only in drifted
+/// rate/memory coefficients (same operators, nodes, edges → same
+/// variables and rows), so round r's optimal root basis is
+/// primal-feasible-or-near for round r+1 and the revised simplex
+/// converges in a few pivots instead of a full two-phase solve.
+/// Invalidation rule: **shape change ⇒ drop** — the cache is keyed by a
+/// structural hash of the problem (variable count, integrality,
+/// per-row comparison operators and coefficient sparsity pattern;
+/// coefficient *values* excluded, since tolerating their drift is the
+/// point), and a mismatched key simply cold-starts and re-caches.
+#[derive(Debug, Default)]
+pub struct BasisCache {
+    key: Option<u64>,
+    basis: Option<BasisSnapshot>,
+}
+
+impl BasisCache {
+    pub fn new() -> BasisCache {
+        BasisCache::default()
+    }
+
+    /// True when a basis for `key` is available.
+    fn lookup(&self, key: u64) -> Option<&BasisSnapshot> {
+        if self.key == Some(key) {
+            self.basis.as_ref()
+        } else {
+            None
+        }
+    }
+}
+
+/// Structural (shape-only) FNV-1a hash of a problem: anything that would
+/// change variable/row indexing perturbs the key; coefficient values do
+/// not.
+fn shape_key(p: &Problem) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(FNV_PRIME);
+    };
+    mix(p.n_vars() as u64);
+    for (j, &int) in p.integer.iter().enumerate() {
+        if int {
+            mix(j as u64 | (1u64 << 63));
+        }
+    }
+    mix(p.rows.len() as u64);
+    for row in &p.rows {
+        mix(match row.cmp {
+            Cmp::Le => 1,
+            Cmp::Ge => 2,
+            Cmp::Eq => 3,
+        });
+        mix(row.coeffs.len() as u64);
+        for &(j, _) in &row.coeffs {
+            mix(j as u64);
+        }
+    }
+    h
+}
+
+/// Build + solve the round's MILP (one-shot: no cross-round cache).
 pub fn solve(input: &MilpInput, budget: Duration) -> SchedulePlan {
+    solve_cached(input, budget, &mut BasisCache::new())
+}
+
+/// Build + solve the round's MILP, warm-starting the root LP from
+/// `cache` when the problem shape matches the previous round, and
+/// re-caching the new root basis for the next one.
+pub fn solve_cached(input: &MilpInput, budget: Duration, cache: &mut BasisCache) -> SchedulePlan {
+    solve_with_options(input, budget, cache, &MilpOptions::default())
+}
+
+/// [`solve_cached`] with explicit branch-and-bound options — how
+/// `milp-bench` runs the identical scheduling MILP through the dense
+/// baseline and the warm-started revised backend at a deterministic node
+/// cap, so pivot counts are comparable across machines.
+pub fn solve_with_options(
+    input: &MilpInput,
+    budget: Duration,
+    cache: &mut BasisCache,
+    opts: &MilpOptions,
+) -> SchedulePlan {
     let n = input.ops.len();
     let k = input.nodes.len();
     let mut prob = Problem::new();
@@ -462,7 +547,14 @@ pub fn solve(input: &MilpInput, budget: Duration) -> SchedulePlan {
     // first node and Limit statuses still carry a usable incumbent.
     let warm = warm_start(input, &prob, p_v.len(), &p_v, &x_v, &b_v, &flow_v, &t_v, t_min, e_max, j_mig);
 
-    let (sol, stats) = crate::solver::solve_milp_from(&prob, budget, warm);
+    let key = shape_key(&prob);
+    let (sol, stats, root_basis) =
+        crate::solver::solve_milp_opts(&prob, budget, warm, cache.lookup(key), opts);
+    // Re-cache for the next round (shape change ⇒ the stale entry is
+    // overwritten here; a failed root solve drops the entry so a bad
+    // basis is never replayed).
+    cache.key = Some(key);
+    cache.basis = root_basis;
     decode(input, sol, stats, &t_v, &p_v, &x_v, &b_v, &flow_v)
 }
 
@@ -1158,6 +1250,60 @@ mod tests {
             all_at_once: false,
         };
         solve(&input, Duration::from_secs(10))
+    }
+
+    /// Cross-round warm start: a second solve of the same-shape problem
+    /// with drifted coefficients must take the cached-basis path and
+    /// reach the same plan a cold solve does.
+    #[test]
+    fn cross_round_cache_warm_starts_and_preserves_plan() {
+        let input = base_input(2);
+        let mut cache = BasisCache::new();
+        let p1 = solve_cached(&input, Duration::from_secs(10), &mut cache);
+        assert!(p1.t_pred > 0.0);
+        // Drift the rates the way a new metrics window would.
+        let mut input2 = input.clone();
+        for o in &mut input2.ops {
+            o.ut_cur *= 1.03;
+        }
+        let p2 = solve_cached(&input2, Duration::from_secs(10), &mut cache);
+        assert!(
+            p2.stats.root_warm,
+            "round 2 must warm start from the cached basis: {:?}",
+            p2.stats
+        );
+        // Objective-level equality is the warm-start contract (exact
+        // plan equality can differ across exploration orders on
+        // degenerate optima within the B&B pruning gap).
+        let cold = solve(&input2, Duration::from_secs(10));
+        if p2.status == Status::Optimal && cold.status == Status::Optimal {
+            assert!(
+                (p2.t_pred - cold.t_pred).abs() <= 1e-3 * (1.0 + cold.t_pred.abs()),
+                "warm {} vs cold {}",
+                p2.t_pred,
+                cold.t_pred
+            );
+        }
+    }
+
+    /// Shape change ⇒ drop: a different topology must not reuse the
+    /// cached basis (it cold-starts and re-caches instead of panicking
+    /// or replaying a stale basis).
+    #[test]
+    fn cache_invalidates_on_shape_change() {
+        let mut cache = BasisCache::new();
+        let p1 = solve_cached(&base_input(2), Duration::from_secs(10), &mut cache);
+        assert!(p1.t_pred > 0.0);
+        // 3 nodes instead of 2: different variables and rows.
+        let mut input2 = base_input(3);
+        input2.ops[0].ut_cur *= 1.01;
+        let p2 = solve_cached(&input2, Duration::from_secs(10), &mut cache);
+        assert!(p2.t_pred > 0.0, "{:?}", p2.status);
+        assert!(
+            !p2.stats.root_warm,
+            "shape change must not warm start the root: {:?}",
+            p2.stats
+        );
     }
 
     #[test]

@@ -4,5 +4,8 @@
 pub mod milp_model;
 pub mod rolling;
 
-pub use milp_model::{solve, MilpInput, MilpTenant, OpSched, SchedulePlan};
+pub use milp_model::{
+    solve, solve_cached, solve_with_options, BasisCache, MilpInput, MilpTenant, OpSched,
+    SchedulePlan,
+};
 pub use rolling::RollingState;

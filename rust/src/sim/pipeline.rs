@@ -712,8 +712,9 @@ impl PipelineSim {
         let qlen = inst.queue.len();
 
         // Form the batch.  A post-OOM recovery phase runs with a halved
-        // config (vLLM-style preemption/recompute after an OOM abort).
-        let theta_eff: Vec<f64> = if inst.conservative > 0 {
+        // config (vLLM-style preemption/recompute after an OOM abort);
+        // the common path borrows θ in place — no per-batch clone.
+        let halved: Option<Vec<f64>> = (inst.conservative > 0).then(|| {
             let mut t = inst.theta.clone();
             if !t.is_empty() {
                 t[0] = (t[0] / 2.0).max(1.0);
@@ -722,13 +723,12 @@ impl PipelineSim {
                 t[1] = (t[1] / 2.0).max(256.0);
             }
             t
-        } else {
-            inst.theta.clone()
-        };
+        });
+        let theta_eff: &[f64] = halved.as_deref().unwrap_or(&inst.theta);
         let batch_n = match op.kind {
             OperatorKind::CpuSync => 1,
             OperatorKind::AccelAsync => {
-                service::accel_eff_batch(&theta_eff).min(inst.queue.len()).max(1)
+                service::accel_eff_batch(theta_eff).min(inst.queue.len()).max(1)
             }
         };
 
@@ -740,8 +740,11 @@ impl PipelineSim {
             inst.conservative -= 1;
         }
 
-        // Service time + memory check.
-        let (service_s, oom) = match op.kind {
+        // Service time + memory check (θ re-borrowed after the queue
+        // drain; `halved` is an owned local, so it survives).
+        let inst = &self.instances[id];
+        let theta_eff: &[f64] = halved.as_deref().unwrap_or(&inst.theta);
+        let (service_s, oom, peak_mem) = match op.kind {
             OperatorKind::CpuSync => {
                 let contention = {
                     let node = &self.nodes[inst.node];
@@ -750,21 +753,20 @@ impl PipelineSim {
                 };
                 let t = service::cpu_record_time(&op.service, &items[0].attrs, &mut self.rng)
                     / contention;
-                (t, false)
+                (t, false, None)
             }
             OperatorKind::AccelAsync => {
                 let stats = service::BatchStats::of(
                     &items.iter().map(|i| i.attrs).collect::<Vec<_>>(),
                 );
-                let mem = service::accel_batch_mem(&op.service, &theta_eff, stats, &mut self.rng);
-                let inst = &mut self.instances[id];
-                inst.win.peak_mem_mb = inst.win.peak_mem_mb.max(mem);
+                let mem = service::accel_batch_mem(&op.service, theta_eff, stats, &mut self.rng);
                 if mem > cap_mem_mb {
-                    (0.0, true)
+                    (0.0, true, Some(mem))
                 } else {
                     (
-                        service::accel_batch_time(&op.service, &theta_eff, stats, &mut self.rng),
+                        service::accel_batch_time(&op.service, theta_eff, stats, &mut self.rng),
                         false,
+                        Some(mem),
                     )
                 }
             }
@@ -772,6 +774,9 @@ impl PipelineSim {
 
         let cold = op.cold_s;
         let inst = &mut self.instances[id];
+        if let Some(mem) = peak_mem {
+            inst.win.peak_mem_mb = inst.win.peak_mem_mb.max(mem);
+        }
         if oom {
             // OOM: items return to the queue; instance restarts cold.
             for item in items.into_iter().rev() {
@@ -793,7 +798,13 @@ impl PipelineSim {
 
     fn on_batch_done(&mut self, id: usize) {
         let op_idx = self.instances[id].op;
-        let op = self.spec.operators[op_idx].clone();
+        // Hot path (runs once per finished batch): copy the four scalar
+        // fields used below instead of cloning the whole OperatorSpec
+        // (name, config space, service model, …).
+        let (features, fanout, child_scale, out_mb) = {
+            let o = &self.spec.operators[op_idx];
+            (o.features, o.fanout, o.child_scale, o.out_mb)
+        };
         let is_sink = self.edges_out[op_idx].is_empty();
 
         // Account the batch.
@@ -809,7 +820,7 @@ impl PipelineSim {
         self.op_acc[op_idx].records_in += items.len() as u64;
         for item in &items {
             let mut r = self.rng.fork(7);
-            self.op_acc[op_idx].observe(item, op.features, &mut r);
+            self.op_acc[op_idx].observe(item, features, &mut r);
             // Lifetime attr EMA (capacity-oracle input).
             let ema = &mut self.attr_ema[op_idx];
             let a = item.attrs;
@@ -831,12 +842,12 @@ impl PipelineSim {
         {
             let inst = &mut self.instances[id];
             for item in &items {
-                inst.carry += op.fanout;
+                inst.carry += fanout;
                 let k = inst.carry.floor() as usize;
                 inst.carry -= k as f64;
                 for c in 0..k {
                     let a = item.attrs;
-                    let s = op.child_scale;
+                    let s = child_scale;
                     let child_id = if k == 1 { item.id } else { self.next_item_id + c as u64 };
                     outputs.push(Item {
                         id: child_id,
@@ -846,7 +857,7 @@ impl PipelineSim {
                             pixels_m: a.pixels_m * s[2],
                             frames: a.frames * s[3],
                         },
-                        size_mb: op.out_mb * self.rng.lognormal(0.0, 0.15),
+                        size_mb: out_mb * self.rng.lognormal(0.0, 0.15),
                         regime: item.regime,
                     });
                 }

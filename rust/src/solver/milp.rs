@@ -1,27 +1,69 @@
 //! Branch & bound for mixed-integer linear programs.
 //!
-//! Best-first search over LP relaxations (`simplex::solve_lp`), branching on
-//! the most fractional integer variable, with:
-//! * a rounding heuristic at every node to find incumbents early,
-//! * bound-based pruning against the incumbent,
+//! Best-first search over LP relaxations, branching on the most
+//! fractional integer variable, with:
+//! * **basis warm starts** — a child node inherits its parent's optimal
+//!   basis ([`revised::BasisSnapshot`]) and re-optimizes with a handful
+//!   of dual pivots after the single bound change, instead of re-running
+//!   a two-phase solve from scratch.  Nodes carry bound *deltas* from the
+//!   root (one `(var, side, value)` triple per branch), reconstructed
+//!   into full bound vectors on pop — no per-node `lo`/`up` clones;
+//! * a rounding heuristic at every node to find incumbents early;
+//! * bound-based pruning against the incumbent;
 //! * a wall-clock budget (the scheduler runs re-optimization off the
-//!   critical path, but Algorithm 2 still wants an answer per round).
+//!   critical path, but Algorithm 2 still wants an answer per round) and
+//!   an optional deterministic node cap for machine-independent benches;
+//! * a selectable LP backend: the sparse revised solver (default) or the
+//!   dense tableau reference (`milp-bench`'s pivot baseline).  Revised
+//!   solves that fail numerically or return an infeasible point fall
+//!   back to the dense solver per node, so results never degrade.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::rc::Rc;
 use std::time::{Duration, Instant};
 
-use super::model::{Problem, Solution, Status};
-use super::simplex::solve_lp;
+use super::model::{Cmp, Problem, Solution, Status};
+use super::revised::{outcome_to_solution, BasisSnapshot, LpSolver};
+use super::simplex;
 
 const INT_TOL: f64 = 1e-5;
 /// Relative optimality gap at which branches are pruned.
 const REL_GAP_TOL: f64 = 1e-4;
 
+/// Which LP solver backs the node relaxations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LpBackend {
+    /// Sparse revised simplex with dual warm starts (production path).
+    Revised,
+    /// Dense two-phase tableau (reference / pivot-count baseline).
+    Dense,
+}
+
+/// Branch-and-bound knobs beyond the wall-clock budget.
+#[derive(Debug, Clone)]
+pub struct MilpOptions {
+    pub backend: LpBackend,
+    /// Let children inherit the parent basis (Revised backend only).
+    pub warm_basis: bool,
+    /// Deterministic node cap: stop after this many explored nodes
+    /// regardless of wall clock (benches compare backends at equal node
+    /// counts so pivot totals are machine-independent).
+    pub max_nodes: Option<usize>,
+}
+
+impl Default for MilpOptions {
+    fn default() -> Self {
+        MilpOptions { backend: LpBackend::Revised, warm_basis: true, max_nodes: None }
+    }
+}
+
 struct Node {
     bound: f64, // LP relaxation objective (upper bound for maximization)
-    lo: Vec<f64>,
-    up: Vec<f64>,
+    /// Bound changes relative to the root problem: (var, is_upper, value).
+    deltas: Vec<(u32, bool, f64)>,
+    /// Parent's optimal basis (shared by both children).
+    basis: Option<Rc<BasisSnapshot>>,
     depth: usize,
 }
 
@@ -43,20 +85,48 @@ impl Ord for Node {
     }
 }
 
-/// Statistics from a MILP solve (reported by the RQ6 overhead bench).
+/// Statistics from a MILP solve (reported by `milp-bench` and the RQ6
+/// overhead bench).
 #[derive(Debug, Clone, Default)]
 pub struct MilpStats {
     pub nodes: usize,
     pub lp_solves: usize,
     pub wall: Duration,
     pub gap: f64,
+    /// Total simplex pivots across all node LPs (the RQ6 cost driver).
+    pub pivots: usize,
+    /// Pivots spent restoring primal feasibility (phase-1 equivalent;
+    /// warm-started children should spend ~none here).
+    pub phase1_pivots: usize,
+    /// Node LPs that re-optimized from an inherited/cached basis.
+    pub warm_solves: usize,
+    /// Node LPs solved from scratch.
+    pub cold_solves: usize,
+    /// Revised-solver failures that fell back to the dense reference.
+    pub dense_fallbacks: usize,
+    /// Whether the *root* LP warm-started (the cross-round basis cache
+    /// hit, as opposed to parent→child inheritance inside the tree).
+    pub root_warm: bool,
+}
+
+impl MilpStats {
+    /// Fraction of node LPs that started from a warm basis.
+    pub fn warm_hit_rate(&self) -> f64 {
+        let total = self.warm_solves + self.cold_solves;
+        if total == 0 {
+            0.0
+        } else {
+            self.warm_solves as f64 / total as f64
+        }
+    }
 }
 
 /// Solve `p` as a MILP.  Returns the best integer-feasible solution found
 /// within `budget`, with `Status::Optimal` when the search tree was
 /// exhausted and `Status::Limit` when the budget expired first.
 pub fn solve_milp(p: &Problem, budget: Duration) -> (Solution, MilpStats) {
-    solve_milp_from(p, budget, None)
+    let (sol, stats, _) = solve_milp_opts(p, budget, None, None, &MilpOptions::default());
+    (sol, stats)
 }
 
 /// Like [`solve_milp`] but seeded with a feasible warm-start point, which
@@ -67,8 +137,32 @@ pub fn solve_milp_from(
     budget: Duration,
     warm: Option<Vec<f64>>,
 ) -> (Solution, MilpStats) {
+    let (sol, stats, _) = solve_milp_opts(p, budget, warm, None, &MilpOptions::default());
+    (sol, stats)
+}
+
+/// Full-control entry point: optional incumbent point, optional root LP
+/// basis (the cross-round warm start — round r+1's constraint matrix
+/// differs from round r only in drifted coefficients, so round r's root
+/// basis is primal-feasible-or-near and converges in few pivots), and
+/// [`MilpOptions`].  Returns the root LP's optimal basis for the caller
+/// to cache.
+pub fn solve_milp_opts(
+    p: &Problem,
+    budget: Duration,
+    warm: Option<Vec<f64>>,
+    root_basis: Option<&BasisSnapshot>,
+    opts: &MilpOptions,
+) -> (Solution, MilpStats, Option<BasisSnapshot>) {
     let start = Instant::now();
     let mut stats = MilpStats::default();
+    let n = p.n_vars();
+
+    let mut solver = match opts.backend {
+        LpBackend::Revised => Some(LpSolver::new(p)),
+        LpBackend::Dense => None,
+    };
+    let mut root_snapshot: Option<BasisSnapshot> = None;
 
     let mut incumbent: Option<Solution> = warm.and_then(|x| {
         if p.is_feasible(&x, 1e-6) {
@@ -79,13 +173,27 @@ pub fn solve_milp_from(
         }
     });
     let mut heap: BinaryHeap<Node> = BinaryHeap::new();
-    heap.push(Node { bound: f64::INFINITY, lo: p.lo.clone(), up: p.up.clone(), depth: 0 });
+    heap.push(Node {
+        bound: f64::INFINITY,
+        deltas: Vec::new(),
+        basis: root_basis.map(|b| Rc::new(b.clone())),
+        depth: 0,
+    });
+
+    let mut lo_buf = vec![0.0; n];
+    let mut up_buf = vec![0.0; n];
 
     let mut exhausted = true;
     while let Some(node) = heap.pop() {
         if start.elapsed() > budget {
             exhausted = false;
             break;
+        }
+        if let Some(cap) = opts.max_nodes {
+            if stats.nodes >= cap {
+                exhausted = false;
+                break;
+            }
         }
         if let Some(inc) = &incumbent {
             // Prune on absolute or small relative gap: the scheduler does
@@ -94,17 +202,30 @@ pub fn solve_milp_from(
                 continue;
             }
         }
-        // Solve the node LP.
-        let mut sub = p.clone();
-        sub.lo = node.lo.clone();
-        sub.up = node.up.clone();
+        // Reconstruct this node's bounds: root bounds + branch deltas.
+        lo_buf.copy_from_slice(&p.lo);
+        up_buf.copy_from_slice(&p.up);
+        for &(j, is_up, v) in &node.deltas {
+            if is_up {
+                up_buf[j as usize] = v;
+            } else {
+                lo_buf[j as usize] = v;
+            }
+        }
         // Guard against crossed bounds introduced by branching.
-        if sub.lo.iter().zip(&sub.up).any(|(l, u)| l > u) {
+        if lo_buf.iter().zip(&up_buf).any(|(l, u)| l > u) {
             continue;
         }
         stats.lp_solves += 1;
         stats.nodes += 1;
-        let rel = solve_lp(&sub);
+        let warm_basis = if opts.warm_basis { node.basis.as_deref() } else { None };
+        let warm_before = stats.warm_solves;
+        let (rel, rel_basis) =
+            solve_node(p, &mut solver, &lo_buf, &up_buf, warm_basis, &mut stats);
+        if node.depth == 0 {
+            root_snapshot = rel_basis.clone();
+            stats.root_warm = stats.warm_solves > warm_before;
+        }
         match rel.status {
             Status::Infeasible => continue,
             Status::Unbounded => {
@@ -114,6 +235,7 @@ pub fn solve_milp_from(
                 return (
                     Solution { status: Status::Unbounded, obj: f64::INFINITY, x: vec![] },
                     stats,
+                    root_snapshot,
                 );
             }
             Status::Optimal | Status::Limit => {}
@@ -127,7 +249,7 @@ pub fn solve_milp_from(
         // Find most fractional integer variable.
         let mut branch: Option<(usize, f64)> = None;
         let mut best_frac = INT_TOL;
-        for j in 0..p.n_vars() {
+        for j in 0..n {
             if !p.integer[j] {
                 continue;
             }
@@ -149,7 +271,7 @@ pub fn solve_milp_from(
             Some((j, xj)) => {
                 // Rounding heuristic: snap all integer vars and re-check.
                 let mut rounded = rel.x.clone();
-                for k in 0..p.n_vars() {
+                for k in 0..n {
                     if p.integer[k] {
                         rounded[k] = rounded[k].round().clamp(p.lo[k], p.up[k]);
                     }
@@ -161,17 +283,29 @@ pub fn solve_milp_from(
                     }
                 }
 
-                // Branch j <= floor, j >= ceil.
+                // Branch j <= floor, j >= ceil; children share the parent
+                // basis (Rc) and extend the delta chain by one entry.
                 let (fl, ce) = (xj.floor(), xj.ceil());
-                let mut up_child = node.up.clone();
-                up_child[j] = fl;
-                if node.lo[j] <= fl {
-                    heap.push(Node { bound: rel.obj, lo: node.lo.clone(), up: up_child, depth: node.depth + 1 });
+                let child_basis = rel_basis.map(Rc::new);
+                if lo_buf[j] <= fl {
+                    let mut d = node.deltas.clone();
+                    d.push((j as u32, true, fl));
+                    heap.push(Node {
+                        bound: rel.obj,
+                        deltas: d,
+                        basis: child_basis.clone(),
+                        depth: node.depth + 1,
+                    });
                 }
-                let mut lo_child = node.lo.clone();
-                lo_child[j] = ce;
-                if ce <= node.up[j] {
-                    heap.push(Node { bound: rel.obj, lo: lo_child, up: node.up.clone(), depth: node.depth + 1 });
+                if ce <= up_buf[j] {
+                    let mut d = node.deltas.clone();
+                    d.push((j as u32, false, ce));
+                    heap.push(Node {
+                        bound: rel.obj,
+                        deltas: d,
+                        basis: child_basis,
+                        depth: node.depth + 1,
+                    });
                 }
             }
         }
@@ -180,18 +314,14 @@ pub fn solve_milp_from(
     stats.wall = start.elapsed();
     match incumbent {
         Some(mut sol) => {
-            let bound = heap
-                .peek()
-                .map(|n| n.bound)
-                .unwrap_or(sol.obj)
-                .max(sol.obj);
+            let bound = heap.peek().map(|n| n.bound).unwrap_or(sol.obj).max(sol.obj);
             stats.gap = if sol.obj.abs() > 1e-12 {
                 ((bound - sol.obj) / sol.obj.abs()).max(0.0)
             } else {
                 0.0
             };
             sol.status = if exhausted { Status::Optimal } else { Status::Limit };
-            (sol, stats)
+            (sol, stats, root_snapshot)
         }
         None => (
             Solution {
@@ -200,8 +330,77 @@ pub fn solve_milp_from(
                 x: vec![],
             },
             stats,
+            root_snapshot,
         ),
     }
+}
+
+/// Solve one node LP: the revised solver with an optional warm basis,
+/// falling back to the dense reference on numerical failure or a point
+/// that fails the feasibility re-check.
+fn solve_node(
+    p: &Problem,
+    solver: &mut Option<LpSolver>,
+    lo: &[f64],
+    up: &[f64],
+    warm: Option<&BasisSnapshot>,
+    stats: &mut MilpStats,
+) -> (Solution, Option<BasisSnapshot>) {
+    if let Some(s) = solver.as_mut() {
+        if let Some(out) = s.solve(lo, up, warm) {
+            let usable = match out.status {
+                Status::Optimal | Status::Limit => point_feasible(p, lo, up, &out.x),
+                _ => true,
+            };
+            if usable {
+                if out.warm {
+                    stats.warm_solves += 1;
+                } else {
+                    stats.cold_solves += 1;
+                }
+                stats.pivots += out.pivots;
+                stats.phase1_pivots += out.phase1_pivots;
+                let basis = out.basis.clone();
+                return (outcome_to_solution(p, out), basis);
+            }
+        }
+        stats.dense_fallbacks += 1;
+    }
+    let mut sub = p.clone();
+    sub.lo = lo.to_vec();
+    sub.up = up.to_vec();
+    let (sol, iters) = simplex::solve_lp_counted(&sub);
+    stats.pivots += iters;
+    stats.cold_solves += 1;
+    (sol, None)
+}
+
+/// Defensive feasibility re-check of a revised-solver point against the
+/// node bounds and all rows (scale-relative tolerance).  A false
+/// negative only costs one dense re-solve, so this errs conservative.
+fn point_feasible(p: &Problem, lo: &[f64], up: &[f64], x: &[f64]) -> bool {
+    if x.len() != p.n_vars() {
+        return false;
+    }
+    for j in 0..p.n_vars() {
+        let tol = 1e-6 * (1.0 + lo[j].abs().min(up[j].abs()));
+        if x[j] < lo[j] - tol || x[j] > up[j] + tol {
+            return false;
+        }
+    }
+    for row in &p.rows {
+        let lhs: f64 = row.coeffs.iter().map(|&(j, c)| c * x[j]).sum();
+        let tol = 1e-6 * (1.0 + lhs.abs().max(row.rhs.abs()));
+        let ok = match row.cmp {
+            Cmp::Le => lhs <= row.rhs + tol,
+            Cmp::Ge => lhs >= row.rhs - tol,
+            Cmp::Eq => (lhs - row.rhs).abs() <= tol,
+        };
+        if !ok {
+            return false;
+        }
+    }
+    true
 }
 
 #[cfg(test)]
@@ -352,5 +551,113 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The warm-started revised backend and the dense baseline must agree
+    /// on every random MILP (status; objective within the B&B pruning
+    /// gap; feasible points) — the solver-parity satellite, unit flavor.
+    #[test]
+    fn warm_and_dense_backends_agree_on_random_milps() {
+        let dense = MilpOptions {
+            backend: LpBackend::Dense,
+            warm_basis: false,
+            max_nodes: None,
+        };
+        let mut rng = Rng::new(1717);
+        for case in 0..30 {
+            let nv = 2 + rng.below(4);
+            let mut p = Problem::new();
+            let vars: Vec<_> = (0..nv)
+                .map(|i| {
+                    if i % 2 == 0 {
+                        p.int(&format!("v{i}"), 0.0, 6.0, rng.uniform(-2.0, 4.0))
+                    } else {
+                        p.cont(&format!("v{i}"), 0.0, rng.uniform(2.0, 8.0), rng.uniform(-1.0, 3.0))
+                    }
+                })
+                .collect();
+            let le: Vec<_> = vars.iter().map(|&v| (v, rng.uniform(0.2, 2.0))).collect();
+            p.constrain("le", le, Cmp::Le, rng.uniform(3.0, 15.0));
+            if case % 3 == 0 {
+                let ge: Vec<_> = vars.iter().map(|&v| (v, rng.uniform(0.2, 1.0))).collect();
+                p.constrain("ge", ge, Cmp::Ge, rng.uniform(0.2, 1.5));
+            }
+            let (sw, stw, _) = solve_milp_opts(&p, budget(), None, None, &MilpOptions::default());
+            let (sd, _, _) = solve_milp_opts(&p, budget(), None, None, &dense);
+            assert_eq!(sw.status, sd.status, "case {case}");
+            if sw.status == Status::Optimal {
+                let tol = 1e-6 + 2.0 * REL_GAP_TOL * sd.obj.abs();
+                assert!(
+                    (sw.obj - sd.obj).abs() <= tol,
+                    "case {case}: warm {} vs dense {}",
+                    sw.obj,
+                    sd.obj
+                );
+                assert!(p.is_feasible(&sw.x, 1e-5), "case {case}: warm point");
+                assert!(p.is_feasible(&sd.x, 1e-5), "case {case}: dense point");
+                // The revised backend must not silently live off the
+                // dense fallback.
+                assert!(
+                    stw.dense_fallbacks <= stw.lp_solves / 2,
+                    "case {case}: {} fallbacks / {} solves",
+                    stw.dense_fallbacks,
+                    stw.lp_solves
+                );
+            }
+        }
+    }
+
+    /// Children actually inherit bases: a branchy instance must report
+    /// warm-started node LPs, and a cached root basis must warm round 2.
+    #[test]
+    fn warm_starts_are_taken() {
+        // An assignment-like instance with a fractional LP optimum.
+        let w = [[5.0, 4.9, 2.0], [4.8, 5.0, 3.0], [1.0, 2.0, 4.1]];
+        let mut p = Problem::new();
+        let mut v = vec![];
+        for i in 0..3 {
+            for j in 0..3 {
+                v.push(p.int(&format!("x{i}{j}"), 0.0, 1.0, w[i][j]));
+            }
+        }
+        for i in 0..3 {
+            p.constrain(
+                &format!("r{i}"),
+                (0..3).map(|j| (v[i * 3 + j], 1.0)).collect(),
+                Cmp::Le,
+                1.0,
+            );
+            p.constrain(
+                &format!("c{i}"),
+                (0..3).map(|j| (v[j * 3 + i], 1.0)).collect(),
+                Cmp::Le,
+                1.0,
+            );
+        }
+        // Couple rows so the relaxation is fractional enough to branch.
+        p.constrain(
+            "budget",
+            v.iter().map(|&x| (x, 1.0)).collect(),
+            Cmp::Le,
+            2.5,
+        );
+        let (s, stats, root) =
+            solve_milp_opts(&p, budget(), None, None, &MilpOptions::default());
+        assert_eq!(s.status, Status::Optimal);
+        if stats.nodes > 1 {
+            assert!(
+                stats.warm_solves > 0,
+                "children must warm start: {stats:?}"
+            );
+        }
+        let root = root.expect("root basis returned for caching");
+        // Round 2 from the cached basis: the root LP itself is warm.
+        let (s2, stats2, _) =
+            solve_milp_opts(&p, budget(), None, Some(&root), &MilpOptions::default());
+        assert_eq!(s2.status, Status::Optimal);
+        assert!((s2.obj - s.obj).abs() < 1e-6);
+        assert!(stats2.warm_solves > 0, "cached root must warm start: {stats2:?}");
+        assert!(stats2.root_warm, "root warm flag must be set: {stats2:?}");
+        assert!(stats2.warm_hit_rate() > 0.0);
     }
 }

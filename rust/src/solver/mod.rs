@@ -1,12 +1,16 @@
-//! LP/MILP solver substrate: problem builder, bounded-variable two-phase
-//! simplex, and best-first branch & bound.  Built from scratch because the
+//! LP/MILP solver substrate: problem builder, sparse revised simplex with
+//! bounded variables and dual warm starts (the production LP core), the
+//! dense two-phase tableau kept as reference/fallback, and best-first
+//! branch & bound with basis inheritance.  Built from scratch because the
 //! offline environment has no solver crates; exactness on the scheduler's
-//! small instances (≲2k vars) is what matters.
+//! small instances (≲2k vars) is what matters, and warm restarts keep
+//! online re-optimization cheap at multi-tenant scale.
 
 pub mod milp;
 pub mod model;
+pub mod revised;
 pub mod simplex;
 
-pub use milp::{solve_milp, solve_milp_from, MilpStats};
+pub use milp::{solve_milp, solve_milp_from, solve_milp_opts, LpBackend, MilpOptions, MilpStats};
 pub use model::{Cmp, Problem, Solution, Status, Var};
-pub use simplex::solve_lp;
+pub use revised::{solve_lp, BasisSnapshot, LpOutcome, LpSolver};

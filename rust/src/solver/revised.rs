@@ -1,0 +1,1083 @@
+//! Sparse revised simplex with bounded variables — the LP core behind
+//! `solve_lp` and branch & bound.
+//!
+//! The Trident MILP's constraint matrix is ~95% zeros (capacity and
+//! egress rows touch only co-located variables), so the matrix lives in a
+//! CSC-style column store and every pivot does work proportional to
+//! nonzeros plus one O(m²) explicit-inverse update — not the O(m·n) dense
+//! row elimination of the old tableau.  Two solve modes share the basis
+//! machinery:
+//!
+//! * **primal** (Dantzig pricing, bounded-variable ratio test with bound
+//!   flips, Bland fallback against cycling) — phase 2 and post-restore
+//!   cleanup;
+//! * **dual** (max-violation row, bounded dual ratio test) — the warm
+//!   restart workhorse: a branch-and-bound child inherits its parent's
+//!   optimal basis, whose reduced costs stay dual feasible after a bound
+//!   change, so a handful of dual pivots re-optimize what a cold solve
+//!   pays a full two-phase run for.  With a zero cost vector the same
+//!   loop is a feasibility restorer (reduced costs identically zero are
+//!   trivially dual feasible), which is how cold solves and cross-round
+//!   cached bases reach primal feasibility without artificial variables.
+//!
+//! Logical (slack) variables close the formulation: row `a·x + s = rhs`
+//! with `s ∈ [0, ∞)` for `Le`, `s ∈ (-∞, 0]` for `Ge`, `s ∈ [0, 0]` for
+//! `Eq`.  The all-logical basis is the identity, so a cold start never
+//! factorizes.  Numerical failures (singular warm basis, zero pivots,
+//! iteration caps) are reported as `None` and the caller falls back to
+//! the dense two-phase solver (`simplex.rs`), which stays the reference
+//! implementation — parity is pinned by the unit suite here and by
+//! `tests/solver_parity.rs`.
+
+use super::model::{Cmp, Problem, Solution, Status};
+
+const EPS: f64 = 1e-9;
+/// Reduced-cost (dual feasibility) tolerance.
+const DUAL_TOL: f64 = 1e-7;
+/// Bound-violation (primal feasibility) tolerance.
+const PRIMAL_TOL: f64 = 1e-7;
+/// Smallest acceptable pivot magnitude.
+const PIVOT_TOL: f64 = 1e-8;
+/// Hard per-loop iteration cap (failure, not `Status::Limit`: the caller
+/// falls back to the dense solver so results never degrade).
+const MAX_ITERS: usize = 200_000;
+/// Refactorize the explicit inverse every this many pivots.
+const REFACTOR_EVERY: usize = 120;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum VStat {
+    Lower,
+    Upper,
+    Basic,
+}
+
+/// A saved basis: which variable sits in each row plus every variable's
+/// nonbasic side.  Compact (one `u32` per row, one byte per column), so
+/// branch-and-bound nodes and the cross-round cache share them freely.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BasisSnapshot {
+    basis: Vec<u32>,
+    stat: Vec<u8>, // 0 = Lower, 1 = Upper, 2 = Basic
+}
+
+/// Result of one LP solve through [`LpSolver`].
+#[derive(Debug, Clone)]
+pub struct LpOutcome {
+    pub status: Status,
+    pub obj: f64,
+    /// Structural variable values (empty when infeasible/unbounded).
+    pub x: Vec<f64>,
+    /// Final basis for warm-starting descendants (optimal solves only).
+    pub basis: Option<BasisSnapshot>,
+    pub pivots: usize,
+    /// Pivots spent restoring primal feasibility (phase 1 equivalent).
+    pub phase1_pivots: usize,
+    /// True when the solve started from a caller-provided basis.
+    pub warm: bool,
+}
+
+/// Reusable solve context: the sparse column store is built once per
+/// `Problem` shape; `solve` is then called per bound set (every B&B node
+/// re-uses the store, and the scheduling layer re-uses it across rounds
+/// via [`BasisSnapshot`]s).
+pub struct LpSolver {
+    m: usize,
+    ns: usize,
+    n: usize, // ns structural + m logical
+    cols: Vec<Vec<(u32, f64)>>,
+    rhs: Vec<f64>,
+    obj: Vec<f64>,
+    log_lo: Vec<f64>,
+    log_up: Vec<f64>,
+    // Working state (valid between solves; `basis_current` says whether
+    // `binv` matches `basis`, letting a child that continues its parent's
+    // basis skip the O(m³) refactorization).
+    lo: Vec<f64>,
+    up: Vec<f64>,
+    basis: Vec<usize>,
+    stat: Vec<VStat>,
+    binv: Vec<f64>, // m × m row-major
+    xb: Vec<f64>,
+    rc: Vec<f64>,
+    binv_current: bool,
+    pivots_since_factor: usize,
+}
+
+impl LpSolver {
+    /// Build the sparse column store for `p`.  Bounds are *not* baked in:
+    /// they are inputs to [`LpSolver::solve`], which is what makes B&B
+    /// bound changes free.
+    pub fn new(p: &Problem) -> LpSolver {
+        let ns = p.n_vars();
+        let m = p.rows.len();
+        let n = ns + m;
+        let mut cols: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+        let mut rhs = vec![0.0; m];
+        let mut log_lo = vec![0.0; m];
+        let mut log_up = vec![0.0; m];
+        for (i, row) in p.rows.iter().enumerate() {
+            rhs[i] = row.rhs;
+            for &(j, c) in &row.coeffs {
+                if c != 0.0 {
+                    cols[j].push((i as u32, c));
+                }
+            }
+            cols[ns + i].push((i as u32, 1.0));
+            let (l, u) = match row.cmp {
+                Cmp::Le => (0.0, f64::INFINITY),
+                Cmp::Ge => (f64::NEG_INFINITY, 0.0),
+                Cmp::Eq => (0.0, 0.0),
+            };
+            log_lo[i] = l;
+            log_up[i] = u;
+        }
+        let mut obj = vec![0.0; n];
+        obj[..ns].copy_from_slice(&p.obj);
+        LpSolver {
+            m,
+            ns,
+            n,
+            cols,
+            rhs,
+            obj,
+            log_lo,
+            log_up,
+            lo: vec![0.0; n],
+            up: vec![0.0; n],
+            basis: Vec::new(),
+            stat: Vec::new(),
+            binv: vec![0.0; m * m],
+            xb: vec![0.0; m],
+            rc: vec![0.0; n],
+            binv_current: false,
+            pivots_since_factor: 0,
+        }
+    }
+
+    pub fn n_struct(&self) -> usize {
+        self.ns
+    }
+
+    /// Solve with structural bounds `lo/up` (length `n_struct`), warm
+    /// starting from `warm` when given.  `None` signals a numerical
+    /// failure — the caller should fall back to the dense solver; LP
+    /// status outcomes (optimal / infeasible / unbounded / limit) are all
+    /// `Some`.
+    pub fn solve(
+        &mut self,
+        lo_s: &[f64],
+        up_s: &[f64],
+        warm: Option<&BasisSnapshot>,
+    ) -> Option<LpOutcome> {
+        debug_assert_eq!(lo_s.len(), self.ns);
+        self.lo[..self.ns].copy_from_slice(lo_s);
+        self.up[..self.ns].copy_from_slice(up_s);
+        self.lo[self.ns..].copy_from_slice(&self.log_lo);
+        self.up[self.ns..].copy_from_slice(&self.log_up);
+
+        if let Some(snap) = warm {
+            if snap.basis.len() == self.m && snap.stat.len() == self.n {
+                if let Some(out) = self.attempt(Some(snap)) {
+                    return Some(out);
+                }
+            }
+        }
+        // Cold attempt (all-logical basis).
+        self.attempt(None)
+    }
+
+    /// One solve attempt from a given (or the all-logical) basis.
+    fn attempt(&mut self, snap: Option<&BasisSnapshot>) -> Option<LpOutcome> {
+        let warm = snap.is_some();
+        match snap {
+            Some(s) => {
+                // Skip the O(m³) refactorization when the requested basis
+                // is the one the inverse already represents (the common
+                // parent→child case in best-first B&B).
+                let same = self.binv_current
+                    && self.basis.len() == self.m
+                    && self.stat.len() == self.n
+                    && self
+                        .basis
+                        .iter()
+                        .zip(&s.basis)
+                        .all(|(&a, &b)| a == b as usize)
+                    && self
+                        .stat
+                        .iter()
+                        .zip(&s.stat)
+                        .all(|(&a, &b)| a as u8 == b);
+                if !same {
+                    self.basis = s.basis.iter().map(|&v| v as usize).collect();
+                    self.stat = s
+                        .stat
+                        .iter()
+                        .map(|&v| match v {
+                            0 => VStat::Lower,
+                            1 => VStat::Upper,
+                            _ => VStat::Basic,
+                        })
+                        .collect();
+                    if !self.factorize() {
+                        self.binv_current = false;
+                        return None;
+                    }
+                }
+                // A nonbasic variable resting on an infinite bound (only
+                // possible if bounds changed side) would poison xb.
+                for j in 0..self.n {
+                    if self.stat[j] != VStat::Basic && !self.nb_val(j).is_finite() {
+                        self.binv_current = false;
+                        return None;
+                    }
+                }
+            }
+            None => {
+                self.basis = (self.ns..self.n).collect();
+                self.stat = vec![VStat::Lower; self.n];
+                for j in 0..self.n {
+                    if self.stat_default_upper(j) {
+                        self.stat[j] = VStat::Upper;
+                    }
+                }
+                for i in 0..self.m {
+                    self.stat[self.ns + i] = VStat::Basic;
+                }
+                // B = I: the inverse is the identity.
+                self.binv.fill(0.0);
+                for i in 0..self.m {
+                    self.binv[i * self.m + i] = 1.0;
+                }
+                self.pivots_since_factor = 0;
+            }
+        }
+        self.binv_current = true;
+        self.compute_xb();
+        self.price();
+
+        let mut pivots = 0usize;
+        let mut phase1 = 0usize;
+
+        // ---- restore primal feasibility -------------------------------
+        if self.max_violation().is_some() {
+            let dual_ok = self.dual_feasible();
+            let status = self.dual_loop(!dual_ok, &mut pivots)?;
+            phase1 = pivots;
+            if status == Status::Infeasible {
+                return Some(LpOutcome {
+                    status: Status::Infeasible,
+                    obj: f64::NEG_INFINITY,
+                    x: Vec::new(),
+                    basis: None,
+                    pivots,
+                    phase1_pivots: phase1,
+                    warm,
+                });
+            }
+            // Reduced costs after a zero-cost restore are for the zero
+            // objective; re-price for the real one.
+            self.price();
+        }
+
+        // ---- primal optimization --------------------------------------
+        let status = self.primal_loop(&mut pivots)?;
+        if status == Status::Unbounded {
+            return Some(LpOutcome {
+                status: Status::Unbounded,
+                obj: f64::INFINITY,
+                x: Vec::new(),
+                basis: None,
+                pivots,
+                phase1_pivots: phase1,
+                warm,
+            });
+        }
+
+        // Drift check: recompute basic values from scratch; a basis this
+        // far out of bounds means the inverse has degraded — refactorize
+        // and polish once.
+        self.compute_xb();
+        if status == Status::Optimal && self.max_violation().is_some() {
+            if !self.factorize() {
+                return None;
+            }
+            self.compute_xb();
+            self.price();
+            if self.max_violation().is_some() {
+                self.dual_loop(!self.dual_feasible(), &mut pivots)?;
+                self.price();
+            }
+            self.primal_loop(&mut pivots)?;
+            self.compute_xb();
+        }
+
+        let x = self.extract_x();
+        let obj = self.obj[..self.ns]
+            .iter()
+            .zip(&x)
+            .map(|(c, v)| c * v)
+            .sum();
+        let basis = (status == Status::Optimal).then(|| self.snapshot());
+        Some(LpOutcome {
+            status,
+            obj,
+            x,
+            basis,
+            pivots,
+            phase1_pivots: phase1,
+            warm,
+        })
+    }
+
+    fn snapshot(&self) -> BasisSnapshot {
+        BasisSnapshot {
+            basis: self.basis.iter().map(|&v| v as u32).collect(),
+            stat: self
+                .stat
+                .iter()
+                .map(|&s| match s {
+                    VStat::Lower => 0,
+                    VStat::Upper => 1,
+                    VStat::Basic => 2,
+                })
+                .collect(),
+        }
+    }
+
+    /// A variable with no finite lower bound must rest at its upper one.
+    fn stat_default_upper(&self, j: usize) -> bool {
+        !self.lo[j].is_finite() && self.up[j].is_finite()
+    }
+
+    /// Value of a nonbasic variable (free variables rest at 0).
+    fn nb_val(&self, j: usize) -> f64 {
+        let b = match self.stat[j] {
+            VStat::Lower => self.lo[j],
+            VStat::Upper => self.up[j],
+            VStat::Basic => unreachable!("nb_val of a basic variable"),
+        };
+        if b.is_finite() {
+            b
+        } else if self.lo[j].is_finite() {
+            self.lo[j]
+        } else if self.up[j].is_finite() {
+            self.up[j]
+        } else {
+            0.0
+        }
+    }
+
+    /// Rebuild the explicit inverse from the basis columns (Gauss-Jordan
+    /// with partial pivoting).  False on a (near-)singular basis.
+    fn factorize(&mut self) -> bool {
+        let m = self.m;
+        if m == 0 {
+            self.pivots_since_factor = 0;
+            return true;
+        }
+        let w = 2 * m;
+        let mut aug = vec![0.0; m * w];
+        for (r, &j) in self.basis.iter().enumerate() {
+            for &(i, v) in &self.cols[j] {
+                aug[i as usize * w + r] = v;
+            }
+        }
+        for i in 0..m {
+            aug[i * w + m + i] = 1.0;
+        }
+        for c in 0..m {
+            let mut piv_row = c;
+            let mut best = aug[c * w + c].abs();
+            for r in (c + 1)..m {
+                let a = aug[r * w + c].abs();
+                if a > best {
+                    best = a;
+                    piv_row = r;
+                }
+            }
+            if best < 1e-11 {
+                return false;
+            }
+            if piv_row != c {
+                for k in 0..w {
+                    aug.swap(piv_row * w + k, c * w + k);
+                }
+            }
+            let inv = 1.0 / aug[c * w + c];
+            for k in 0..w {
+                aug[c * w + k] *= inv;
+            }
+            for r in 0..m {
+                if r == c {
+                    continue;
+                }
+                let f = aug[r * w + c];
+                if f.abs() > 1e-14 {
+                    for k in 0..w {
+                        let v = aug[c * w + k];
+                        aug[r * w + k] -= f * v;
+                    }
+                    aug[r * w + c] = 0.0;
+                }
+            }
+        }
+        for r in 0..m {
+            self.binv[r * m..(r + 1) * m].copy_from_slice(&aug[r * w + m..r * w + w]);
+        }
+        self.pivots_since_factor = 0;
+        true
+    }
+
+    /// xb = B⁻¹ (rhs − N x_N).
+    fn compute_xb(&mut self) {
+        let m = self.m;
+        let mut b = self.rhs.clone();
+        for j in 0..self.n {
+            if self.stat[j] == VStat::Basic {
+                continue;
+            }
+            let v = self.nb_val(j);
+            if v != 0.0 {
+                for &(i, a) in &self.cols[j] {
+                    b[i as usize] -= a * v;
+                }
+            }
+        }
+        for r in 0..m {
+            let row = &self.binv[r * m..(r + 1) * m];
+            self.xb[r] = row.iter().zip(&b).map(|(x, y)| x * y).sum();
+        }
+    }
+
+    /// Reduced costs rc = c − (c_B B⁻¹) A for the real objective.
+    fn price(&mut self) {
+        let m = self.m;
+        let mut y = vec![0.0; m];
+        for r in 0..m {
+            let cb = self.obj[self.basis[r]];
+            if cb != 0.0 {
+                let row = &self.binv[r * m..(r + 1) * m];
+                for (yi, &bv) in y.iter_mut().zip(row) {
+                    *yi += cb * bv;
+                }
+            }
+        }
+        for j in 0..self.n {
+            if self.stat[j] == VStat::Basic {
+                self.rc[j] = 0.0;
+                continue;
+            }
+            let mut v = self.obj[j];
+            for &(i, a) in &self.cols[j] {
+                v -= y[i as usize] * a;
+            }
+            self.rc[j] = v;
+        }
+    }
+
+    /// Maximization dual feasibility: rc ≤ tol at lower, rc ≥ −tol at
+    /// upper (range-0 variables are feasible on either side).
+    fn dual_feasible(&self) -> bool {
+        for j in 0..self.n {
+            let fixed = self.up[j] - self.lo[j] <= EPS;
+            match self.stat[j] {
+                VStat::Basic => {}
+                VStat::Lower => {
+                    if self.rc[j] > DUAL_TOL && !fixed {
+                        return false;
+                    }
+                }
+                VStat::Upper => {
+                    if self.rc[j] < -DUAL_TOL && !fixed {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Worst bound violation among basic variables: (row, signed size)
+    /// where positive means below lower.
+    fn max_violation(&self) -> Option<(usize, f64)> {
+        let mut worst: Option<(usize, f64)> = None;
+        for r in 0..self.m {
+            let j = self.basis[r];
+            let below = self.lo[j] - self.xb[r];
+            let above = self.xb[r] - self.up[j];
+            let v = below.max(above);
+            if v > PRIMAL_TOL && worst.map(|(_, w)| v > w).unwrap_or(true) {
+                worst = Some((r, v));
+            }
+        }
+        worst
+    }
+
+    /// w = B⁻¹ a_q.
+    fn ftran(&self, q: usize, out: &mut Vec<f64>) {
+        let m = self.m;
+        out.clear();
+        out.resize(m, 0.0);
+        for &(i, a) in &self.cols[q] {
+            let ci = i as usize;
+            for r in 0..m {
+                out[r] += a * self.binv[r * m + ci];
+            }
+        }
+    }
+
+    /// B⁻¹ ← E_r B⁻¹ after `q` entered the basis in row `r` with pivot
+    /// column `w` (= B⁻¹ a_q).
+    fn update_binv(&mut self, r: usize, w: &[f64]) {
+        let m = self.m;
+        let inv = 1.0 / w[r];
+        let (before, rest) = self.binv.split_at_mut(r * m);
+        let (row_r, after) = rest.split_at_mut(m);
+        for v in row_r.iter_mut() {
+            *v *= inv;
+        }
+        for (i, chunk) in before.chunks_exact_mut(m).enumerate() {
+            let f = w[i];
+            if f.abs() > 1e-14 {
+                for (x, &pr) in chunk.iter_mut().zip(row_r.iter()) {
+                    *x -= f * pr;
+                }
+            }
+        }
+        for (k, chunk) in after.chunks_exact_mut(m).enumerate() {
+            let f = w[r + 1 + k];
+            if f.abs() > 1e-14 {
+                for (x, &pr) in chunk.iter_mut().zip(row_r.iter()) {
+                    *x -= f * pr;
+                }
+            }
+        }
+        self.pivots_since_factor += 1;
+    }
+
+    fn maybe_refactor(&mut self) -> Option<()> {
+        if self.pivots_since_factor >= REFACTOR_EVERY {
+            if !self.factorize() {
+                self.binv_current = false;
+                return None;
+            }
+            self.compute_xb();
+            self.price();
+        }
+        Some(())
+    }
+
+    /// Primal simplex on the real objective from a primal-feasible basis.
+    /// `Some(status)` is Optimal / Unbounded / Limit; `None` = numerical
+    /// failure.
+    fn primal_loop(&mut self, pivots: &mut usize) -> Option<Status> {
+        let bland_after = 20 * (self.m + self.n);
+        let mut iters = 0usize;
+        let mut degenerate_retries = 0u32;
+        let mut w: Vec<f64> = Vec::new();
+        loop {
+            if iters > MAX_ITERS {
+                return Some(Status::Limit);
+            }
+            let bland = iters > bland_after;
+            iters += 1;
+
+            // Entering variable.
+            let mut enter: Option<(usize, f64)> = None;
+            let mut best = DUAL_TOL;
+            for j in 0..self.n {
+                if self.up[j] - self.lo[j] <= EPS {
+                    continue; // fixed: cannot move
+                }
+                let (dir, score) = match self.stat[j] {
+                    VStat::Basic => continue,
+                    VStat::Lower => (1.0, self.rc[j]),
+                    VStat::Upper => (-1.0, -self.rc[j]),
+                };
+                if score > best {
+                    enter = Some((j, dir));
+                    if bland {
+                        break;
+                    }
+                    best = score;
+                }
+            }
+            let Some((q, dir)) = enter else {
+                return Some(Status::Optimal);
+            };
+
+            self.ftran(q, &mut w);
+
+            // Bounded ratio test: x_q moves by t·dir, basics by −t·dir·w.
+            let range_q = self.up[q] - self.lo[q];
+            let mut t_max = if range_q.is_finite() { range_q } else { f64::INFINITY };
+            let mut leave: Option<(usize, VStat)> = None;
+            for r in 0..self.m {
+                let d = dir * w[r];
+                let bi = self.basis[r];
+                if d > EPS {
+                    if self.lo[bi].is_finite() {
+                        let t = (self.xb[r] - self.lo[bi]) / d;
+                        if t < t_max - EPS
+                            || (t < t_max + EPS
+                                && leave
+                                    .map(|(lr, _)| w[lr].abs() < w[r].abs())
+                                    .unwrap_or(true))
+                        {
+                            t_max = t.max(0.0);
+                            leave = Some((r, VStat::Lower));
+                        }
+                    }
+                } else if d < -EPS && self.up[bi].is_finite() {
+                    let t = (self.up[bi] - self.xb[r]) / (-d);
+                    if t < t_max - EPS
+                        || (t < t_max + EPS
+                            && leave
+                                .map(|(lr, _)| w[lr].abs() < w[r].abs())
+                                .unwrap_or(true))
+                    {
+                        t_max = t.max(0.0);
+                        leave = Some((r, VStat::Upper));
+                    }
+                }
+            }
+            if t_max.is_infinite() {
+                return Some(Status::Unbounded);
+            }
+            let t = t_max;
+
+            match leave {
+                None => {
+                    // Bound flip.
+                    for r in 0..self.m {
+                        self.xb[r] -= t * dir * w[r];
+                    }
+                    self.stat[q] = if dir > 0.0 { VStat::Upper } else { VStat::Lower };
+                }
+                Some((r, to)) => {
+                    if w[r].abs() < PIVOT_TOL {
+                        // Degenerate pivot element: refactorize and retry
+                        // a bounded number of times, else give up to the
+                        // dense fallback (an unbounded retry would re-pay
+                        // the O(m³) factorization on every pass).
+                        degenerate_retries += 1;
+                        if degenerate_retries > 2 || !self.factorize() {
+                            self.binv_current = false;
+                            return None;
+                        }
+                        self.compute_xb();
+                        self.price();
+                        continue;
+                    }
+                    degenerate_retries = 0;
+                    let new_val = self.nb_val(q) + t * dir;
+                    let leaving = self.basis[r];
+                    for i in 0..self.m {
+                        self.xb[i] -= t * dir * w[i];
+                    }
+                    self.stat[leaving] = to;
+                    self.stat[q] = VStat::Basic;
+                    self.basis[r] = q;
+                    self.xb[r] = new_val;
+                    self.update_binv(r, &w);
+                    *pivots += 1;
+                    self.price();
+                    self.maybe_refactor()?;
+                }
+            }
+        }
+    }
+
+    /// Dual simplex until primal feasible.  With `zero_cost` the reduced
+    /// costs are treated as identically zero (trivially dual feasible) —
+    /// the feasibility-restoration mode; otherwise `self.rc` must be dual
+    /// feasible for the real objective (warm restart after bound
+    /// changes).  `Some(Optimal)` = primal feasible; `Some(Infeasible)` =
+    /// certified infeasible; `None` = numerical failure / stall.
+    fn dual_loop(&mut self, zero_cost: bool, pivots: &mut usize) -> Option<Status> {
+        let bland_after = 20 * (self.m + self.n);
+        let mut iters = 0usize;
+        let mut degenerate_retries = 0u32;
+        let mut w: Vec<f64> = Vec::new();
+        let mut rho: Vec<f64> = Vec::new();
+        loop {
+            if iters > MAX_ITERS {
+                return None;
+            }
+            let bland = iters > bland_after;
+            iters += 1;
+
+            // Leaving row: worst violation (Bland: lowest row index).
+            let leaving = if bland {
+                (0..self.m).find(|&r| {
+                    let j = self.basis[r];
+                    self.lo[j] - self.xb[r] > PRIMAL_TOL || self.xb[r] - self.up[j] > PRIMAL_TOL
+                })
+            } else {
+                self.max_violation().map(|(r, _)| r)
+            };
+            let Some(r) = leaving else {
+                return Some(Status::Optimal);
+            };
+            let bl = self.basis[r];
+            let below = self.xb[r] < self.lo[bl];
+            let target = if below { self.lo[bl] } else { self.up[bl] };
+
+            // Row r of B⁻¹A over nonbasic columns.
+            rho.clear();
+            rho.extend_from_slice(&self.binv[r * self.m..(r + 1) * self.m]);
+            // Entering candidate: min |rc|/|α| over the sign-eligible set
+            // (zero-cost mode: all ratios are 0 — pick the largest |α|).
+            // Two tiers: a fixed (lo == up) column — an Eq-row slack —
+            // entering the basis necessarily leaves its bound, creating a
+            // fresh violation to repair, so prefer any movable column and
+            // fall back to fixed ones only when nothing else is eligible
+            // (excluding them outright would break the infeasibility
+            // certificate below).
+            let mut best: Option<(usize, f64, f64)> = None; // (col, alpha, ratio)
+            let mut best_fixed: Option<(usize, f64, f64)> = None;
+            for j in 0..self.n {
+                if self.stat[j] == VStat::Basic {
+                    continue;
+                }
+                let mut alpha = 0.0;
+                for &(i, a) in &self.cols[j] {
+                    alpha += rho[i as usize] * a;
+                }
+                let eligible = if below {
+                    (self.stat[j] == VStat::Lower && alpha < -PIVOT_TOL)
+                        || (self.stat[j] == VStat::Upper && alpha > PIVOT_TOL)
+                } else {
+                    (self.stat[j] == VStat::Lower && alpha > PIVOT_TOL)
+                        || (self.stat[j] == VStat::Upper && alpha < -PIVOT_TOL)
+                };
+                if !eligible {
+                    continue;
+                }
+                let fixed = self.up[j] - self.lo[j] <= EPS;
+                if bland && !fixed {
+                    best = Some((j, alpha, 0.0));
+                    break;
+                }
+                let ratio = if zero_cost || bland {
+                    0.0
+                } else {
+                    (self.rc[j].abs() / alpha.abs()).max(0.0)
+                };
+                let slot = if fixed { &mut best_fixed } else { &mut best };
+                let better = match *slot {
+                    None => true,
+                    Some((_, ba, br)) => {
+                        ratio < br - 1e-12 || (ratio < br + 1e-12 && alpha.abs() > ba.abs())
+                    }
+                };
+                if better {
+                    *slot = Some((j, alpha, ratio));
+                }
+            }
+            let Some((q, alpha_rq, _)) = best.or(best_fixed) else {
+                // No column can repair the row: primal infeasible.
+                return Some(Status::Infeasible);
+            };
+
+            self.ftran(q, &mut w);
+            // Recompute the pivot from the fresh FTRAN (more accurate
+            // than the row product); bail out if it collapsed.
+            let piv = w[r];
+            if piv.abs() < PIVOT_TOL || piv.signum() != alpha_rq.signum() {
+                degenerate_retries += 1;
+                if degenerate_retries > 2 || !self.factorize() {
+                    self.binv_current = false;
+                    return None;
+                }
+                self.compute_xb();
+                self.price();
+                continue;
+            }
+            degenerate_retries = 0;
+            let t = (self.xb[r] - target) / piv;
+            let new_val = self.nb_val(q) + t;
+            for i in 0..self.m {
+                self.xb[i] -= t * w[i];
+            }
+            self.stat[bl] = if below { VStat::Lower } else { VStat::Upper };
+            self.stat[q] = VStat::Basic;
+            self.basis[r] = q;
+            self.xb[r] = new_val;
+            self.update_binv(r, &w);
+            *pivots += 1;
+            self.price();
+            self.maybe_refactor()?;
+        }
+    }
+
+    /// Structural solution vector from the current basis.
+    fn extract_x(&self) -> Vec<f64> {
+        let mut x = vec![0.0; self.ns];
+        for j in 0..self.ns {
+            if self.stat[j] != VStat::Basic {
+                x[j] = self.nb_val(j);
+            }
+        }
+        for (r, &j) in self.basis.iter().enumerate() {
+            if j < self.ns {
+                x[j] = self.xb[r];
+            }
+        }
+        x
+    }
+}
+
+/// Solve the LP relaxation of `p` (integrality ignored) with the sparse
+/// revised simplex; falls back to the dense two-phase reference solver on
+/// numerical failure.  Public contract identical to the historic dense
+/// `solve_lp`.
+pub fn solve_lp(p: &Problem) -> Solution {
+    let mut s = LpSolver::new(p);
+    match s.solve(&p.lo, &p.up, None) {
+        Some(out) => outcome_to_solution(p, out),
+        None => super::simplex::solve_lp(p),
+    }
+}
+
+/// Convert an [`LpOutcome`] into the public [`Solution`] shape.
+pub fn outcome_to_solution(p: &Problem, out: LpOutcome) -> Solution {
+    match out.status {
+        Status::Infeasible => Solution {
+            status: Status::Infeasible,
+            obj: f64::NEG_INFINITY,
+            x: vec![],
+        },
+        Status::Unbounded => Solution {
+            status: Status::Unbounded,
+            obj: f64::INFINITY,
+            x: vec![],
+        },
+        _ => {
+            let obj = p.eval_obj(&out.x);
+            Solution {
+                status: out.status,
+                obj,
+                x: out.x,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::model::{Cmp, Problem};
+    use crate::solver::simplex;
+
+    fn assert_opt(sol: &Solution, obj: f64, tol: f64) {
+        assert_eq!(sol.status, Status::Optimal, "{sol:?}");
+        assert!((sol.obj - obj).abs() < tol, "obj={} expect={}", sol.obj, obj);
+    }
+
+    /// The dense two-phase solver is the reference: on every unit LP both
+    /// paths must agree on status and objective.
+    fn assert_dense_parity(p: &Problem) {
+        let dense = simplex::solve_lp(p);
+        let rev = solve_lp(p);
+        assert_eq!(rev.status, dense.status, "status parity");
+        if dense.status == Status::Optimal {
+            assert!(
+                (rev.obj - dense.obj).abs() < 1e-6 * (1.0 + dense.obj.abs()),
+                "objective parity: revised {} vs dense {}",
+                rev.obj,
+                dense.obj
+            );
+            assert!(p.is_feasible(&rev.x, 1e-6), "revised point feasible");
+        }
+    }
+
+    #[test]
+    fn basic_2d() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, f64::INFINITY, 3.0);
+        let y = p.cont("y", 0.0, f64::INFINITY, 2.0);
+        p.constrain("c1", vec![(x, 1.0), (y, 1.0)], Cmp::Le, 4.0);
+        p.constrain("c2", vec![(x, 1.0), (y, 3.0)], Cmp::Le, 6.0);
+        assert_opt(&solve_lp(&p), 12.0, 1e-6);
+        assert_dense_parity(&p);
+    }
+
+    #[test]
+    fn upper_bounds_implicit() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, 2.0, 1.0);
+        let y = p.cont("y", 0.0, 3.0, 1.0);
+        p.constrain("c", vec![(x, 1.0), (y, 1.0)], Cmp::Le, 4.0);
+        let s = solve_lp(&p);
+        assert_opt(&s, 4.0, 1e-6);
+        assert!(s.x[0] <= 2.0 + 1e-9 && s.x[1] <= 3.0 + 1e-9);
+        assert_dense_parity(&p);
+    }
+
+    #[test]
+    fn ge_and_eq_constraints() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, f64::INFINITY, -1.0);
+        let y = p.cont("y", 0.0, f64::INFINITY, -1.0);
+        p.constrain("g", vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 3.0);
+        p.constrain("e", vec![(x, 1.0), (y, -1.0)], Cmp::Eq, 1.0);
+        let s = solve_lp(&p);
+        assert_opt(&s, -3.0, 1e-6);
+        assert!((s.x[0] - 2.0).abs() < 1e-6);
+        assert!((s.x[1] - 1.0).abs() < 1e-6);
+        assert_dense_parity(&p);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, 1.0, 1.0);
+        p.constrain("c", vec![(x, 1.0)], Cmp::Ge, 5.0);
+        assert_eq!(solve_lp(&p).status, Status::Infeasible);
+        assert_dense_parity(&p);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut p = Problem::new();
+        let _ = p.cont("x", 0.0, f64::INFINITY, 1.0);
+        assert_eq!(solve_lp(&p).status, Status::Unbounded);
+    }
+
+    #[test]
+    fn negative_lower_bounds() {
+        let mut p = Problem::new();
+        let x = p.cont("x", -5.0, -2.0, 1.0);
+        p.constrain("c", vec![(x, 1.0)], Cmp::Ge, -10.0);
+        let s = solve_lp(&p);
+        assert_opt(&s, -2.0, 1e-6);
+        assert_dense_parity(&p);
+    }
+
+    #[test]
+    fn degenerate_transportation() {
+        let mut p = Problem::new();
+        let x11 = p.cont("x11", 0.0, f64::INFINITY, -1.0);
+        let x12 = p.cont("x12", 0.0, f64::INFINITY, -4.0);
+        let x21 = p.cont("x21", 0.0, f64::INFINITY, -2.0);
+        let x22 = p.cont("x22", 0.0, f64::INFINITY, -1.0);
+        p.constrain("s1", vec![(x11, 1.0), (x12, 1.0)], Cmp::Eq, 3.0);
+        p.constrain("s2", vec![(x21, 1.0), (x22, 1.0)], Cmp::Eq, 2.0);
+        p.constrain("d1", vec![(x11, 1.0), (x21, 1.0)], Cmp::Eq, 2.0);
+        p.constrain("d2", vec![(x12, 1.0), (x22, 1.0)], Cmp::Eq, 3.0);
+        let s = solve_lp(&p);
+        assert_opt(&s, -8.0, 1e-6);
+        assert_dense_parity(&p);
+    }
+
+    #[test]
+    fn random_lps_dense_parity() {
+        use crate::rngx::Rng;
+        let mut rng = Rng::new(99);
+        for case in 0..60 {
+            let nv = 2 + rng.below(6);
+            let nc = 1 + rng.below(6);
+            let mut p = Problem::new();
+            let vars: Vec<_> = (0..nv)
+                .map(|i| {
+                    p.cont(&format!("v{i}"), 0.0, rng.uniform(0.5, 10.0), rng.uniform(-2.0, 3.0))
+                })
+                .collect();
+            for c in 0..nc {
+                let coeffs: Vec<_> =
+                    vars.iter().map(|&v| (v, rng.uniform(0.0, 2.0))).collect();
+                p.constrain(&format!("c{c}"), coeffs, Cmp::Le, rng.uniform(1.0, 20.0));
+            }
+            let s = solve_lp(&p);
+            assert_eq!(s.status, Status::Optimal, "case {case}");
+            assert!(p.is_feasible(&s.x, 1e-6), "case {case}: {:?}", s.x);
+            assert!(s.obj >= -1e-9, "case {case}: obj {}", s.obj);
+            assert_dense_parity(&p);
+        }
+    }
+
+    /// Random LPs with Ge/Eq rows: the zero-cost dual restore must reach
+    /// the same optimum the dense artificial-variable phase 1 does.
+    #[test]
+    fn random_mixed_rows_dense_parity() {
+        use crate::rngx::Rng;
+        let mut rng = Rng::new(7);
+        for case in 0..40 {
+            let nv = 2 + rng.below(4);
+            let mut p = Problem::new();
+            let vars: Vec<_> = (0..nv)
+                .map(|i| {
+                    p.cont(&format!("v{i}"), 0.0, rng.uniform(2.0, 8.0), rng.uniform(-2.0, 2.0))
+                })
+                .collect();
+            // One Le row keeping things bounded, one Ge row forcing work,
+            // and (half the time) one Eq row.
+            let le: Vec<_> = vars.iter().map(|&v| (v, rng.uniform(0.5, 2.0))).collect();
+            p.constrain("le", le, Cmp::Le, rng.uniform(4.0, 20.0));
+            let ge: Vec<_> = vars.iter().map(|&v| (v, rng.uniform(0.2, 1.0))).collect();
+            p.constrain("ge", ge, Cmp::Ge, rng.uniform(0.5, 2.0));
+            if case % 2 == 0 {
+                let eq = vec![(vars[0], 1.0), (vars[1 % nv], 1.0)];
+                p.constrain("eq", eq, Cmp::Eq, rng.uniform(0.5, 3.0));
+            }
+            assert_dense_parity(&p);
+        }
+    }
+
+    /// Warm restart after a bound tightening reaches the cold optimum in
+    /// (far) fewer pivots and at the same objective.
+    #[test]
+    fn warm_restart_matches_cold_after_bound_change() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, 10.0, 5.0);
+        let y = p.cont("y", 0.0, 10.0, 2.0);
+        let z = p.cont("z", 0.0, 10.0, 1.0);
+        p.constrain("c1", vec![(x, 1.0), (y, 1.0), (z, 1.0)], Cmp::Le, 9.0);
+        p.constrain("c2", vec![(x, 2.0), (y, 1.0)], Cmp::Le, 11.0);
+        let mut s = LpSolver::new(&p);
+        let root = s.solve(&p.lo, &p.up, None).expect("root solves");
+        assert_eq!(root.status, Status::Optimal);
+        let snap = root.basis.clone().expect("optimal basis");
+
+        // Tighten x (a branching-style change) and re-solve both ways.
+        let mut up2 = p.up.clone();
+        up2[0] = 2.0;
+        let warm = s.solve(&p.lo, &up2, Some(&snap)).expect("warm solves");
+        assert_eq!(warm.status, Status::Optimal);
+        assert!(warm.warm, "warm path must be taken");
+        let mut s2 = LpSolver::new(&p);
+        let cold = s2.solve(&p.lo, &up2, None).expect("cold solves");
+        assert_eq!(cold.status, Status::Optimal);
+        assert!(
+            (warm.obj - cold.obj).abs() < 1e-6,
+            "warm {} vs cold {}",
+            warm.obj,
+            cold.obj
+        );
+        assert!(
+            warm.pivots <= cold.pivots + 1,
+            "warm restart must not pivot materially more: {} vs {}",
+            warm.pivots,
+            cold.pivots
+        );
+    }
+
+    /// A bound change that makes the child infeasible must be certified
+    /// by the dual restart, exactly like a cold solve.
+    #[test]
+    fn warm_restart_detects_infeasible_child() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, 5.0, 1.0);
+        let y = p.cont("y", 0.0, 5.0, 1.0);
+        p.constrain("need", vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 6.0);
+        let mut s = LpSolver::new(&p);
+        let root = s.solve(&p.lo, &p.up, None).expect("root solves");
+        assert_eq!(root.status, Status::Optimal);
+        let snap = root.basis.clone().unwrap();
+        let mut up2 = p.up.clone();
+        up2[0] = 0.0; // now y alone cannot reach 6
+        let warm = s.solve(&p.lo, &up2, Some(&snap)).expect("warm completes");
+        assert_eq!(warm.status, Status::Infeasible);
+    }
+}

@@ -1,5 +1,12 @@
 //! Two-phase primal simplex with bounded variables (dense tableau).
 //!
+//! Since the sparse revised solver (`revised.rs`) became the production
+//! LP core this module is the *reference and fallback* implementation:
+//! `revised.rs` pins objective parity against it in unit and integration
+//! tests, numerical failures in the revised path fall back to it, and
+//! `milp-bench` uses it (via [`solve_lp_counted`]) as the dense pivot
+//! baseline the warm-start speedup is measured against.
+//!
 //! Bounded-variable simplex keeps `lo <= x <= up` implicit (nonbasic
 //! variables rest at either bound; the ratio test allows bound flips), so
 //! the Trident MILP's ~10^2 bound constraints never enter the tableau.
@@ -217,6 +224,13 @@ impl Tableau {
 
 /// Solve the LP relaxation of `p` (integrality ignored).
 pub fn solve_lp(p: &Problem) -> Solution {
+    solve_lp_counted(p).0
+}
+
+/// Like [`solve_lp`] but also reports the simplex iteration (pivot)
+/// count — the dense-baseline metric `milp-bench` compares the revised
+/// warm-started solver against.
+pub fn solve_lp_counted(p: &Problem) -> (Solution, usize) {
     let ns = p.n_vars();
     let m = p.rows.len();
 
@@ -323,10 +337,18 @@ pub fn solve_lp(p: &Problem) -> Solution {
         }
         let s = t.run(&c1);
         if s == Status::Unbounded {
-            return Solution { status: Status::Infeasible, obj: f64::NEG_INFINITY, x: vec![] };
+            let iters = t.iters;
+            return (
+                Solution { status: Status::Infeasible, obj: f64::NEG_INFINITY, x: vec![] },
+                iters,
+            );
         }
         if t.obj_val < -1e-6 {
-            return Solution { status: Status::Infeasible, obj: f64::NEG_INFINITY, x: vec![] };
+            let iters = t.iters;
+            return (
+                Solution { status: Status::Infeasible, obj: f64::NEG_INFINITY, x: vec![] },
+                iters,
+            );
         }
         // Pin artificials to zero so they never re-enter.
         for &j in &art_cols {
@@ -339,7 +361,8 @@ pub fn solve_lp(p: &Problem) -> Solution {
     c2[..ns].copy_from_slice(&p.obj);
     let s2 = t.run(&c2);
     if s2 == Status::Unbounded {
-        return Solution { status: Status::Unbounded, obj: f64::INFINITY, x: vec![] };
+        let iters = t.iters;
+        return (Solution { status: Status::Unbounded, obj: f64::INFINITY, x: vec![] }, iters);
     }
 
     // ---- Extract ----------------------------------------------------------
@@ -360,7 +383,7 @@ pub fn solve_lp(p: &Problem) -> Solution {
     }
     let obj = p.eval_obj(&x);
     let status = if s2 == Status::Limit { Status::Limit } else { Status::Optimal };
-    Solution { status, obj, x }
+    (Solution { status, obj, x }, t.iters)
 }
 
 #[cfg(test)]

@@ -1,0 +1,205 @@
+//! Solver-parity suite for the warm-started revised dual simplex: the
+//! rewrite is a *pure speed change*, so every path must agree with the
+//! dense two-phase reference —
+//!
+//! * dual-vs-primal LP parity: the revised solver (dual feasibility
+//!   restore + primal finish) and the dense primal tableau agree on
+//!   status, objective, and feasibility across random bounded LPs;
+//! * MILP parity: warm-started and cold (dense-backend) branch & bound
+//!   reach the same objective within the B&B pruning gap and feasible
+//!   points on randomized bounded MILPs;
+//! * scheduling parity: the two backends produce the same plan
+//!   (parallelism and transition vectors) for a scheduling MILP.
+
+use std::time::Duration;
+
+use trident::config::ClusterSpec;
+use trident::rngx::Rng;
+use trident::scheduling::{solve_with_options, BasisCache, MilpInput, OpSched};
+use trident::solver::{solve_lp, solve_milp_opts, Cmp, LpBackend, MilpOptions, Problem, Status};
+
+/// B&B prunes at this relative gap (`solver/milp.rs`); objective parity
+/// between backends holds to within twice that.
+const REL_GAP_TOL: f64 = 1e-4;
+
+fn random_lp(rng: &mut Rng, with_hard_rows: bool) -> Problem {
+    let nv = 2 + rng.below(5);
+    let mut p = Problem::new();
+    let vars: Vec<_> = (0..nv)
+        .map(|i| p.cont(&format!("v{i}"), 0.0, rng.uniform(1.0, 9.0), rng.uniform(-2.0, 3.0)))
+        .collect();
+    let le: Vec<_> = vars.iter().map(|&v| (v, rng.uniform(0.2, 2.0))).collect();
+    p.constrain("le", le, Cmp::Le, rng.uniform(3.0, 18.0));
+    if with_hard_rows {
+        let ge: Vec<_> = vars.iter().map(|&v| (v, rng.uniform(0.2, 1.0))).collect();
+        p.constrain("ge", ge, Cmp::Ge, rng.uniform(0.3, 2.0));
+        let eq = vec![(vars[0], 1.0), (vars[1], 1.0)];
+        p.constrain("eq", eq, Cmp::Eq, rng.uniform(0.5, 3.0));
+    }
+    p
+}
+
+/// Revised (dual-restore + primal) vs dense (two-phase primal) on random
+/// LPs: status, objective, and returned-point feasibility must match.
+#[test]
+fn lp_dual_vs_primal_parity_random() {
+    let mut rng = Rng::new(20260801);
+    for case in 0..80 {
+        let p = random_lp(&mut rng, case % 2 == 0);
+        let rev = solve_lp(&p);
+        let dense = trident::solver::simplex::solve_lp(&p);
+        assert_eq!(rev.status, dense.status, "case {case}: status parity");
+        if dense.status == Status::Optimal {
+            assert!(
+                (rev.obj - dense.obj).abs() < 1e-6 * (1.0 + dense.obj.abs()),
+                "case {case}: revised {} vs dense {}",
+                rev.obj,
+                dense.obj
+            );
+            assert!(p.is_feasible(&rev.x, 1e-6), "case {case}: revised point infeasible");
+        }
+    }
+}
+
+fn random_milp(rng: &mut Rng) -> Problem {
+    let nv = 2 + rng.below(4);
+    let nc = 1 + rng.below(3);
+    let mut p = Problem::new();
+    let vars: Vec<_> = (0..nv)
+        .map(|i| {
+            if i % 2 == 0 {
+                p.int(&format!("v{i}"), 0.0, 5.0, rng.uniform(-2.0, 4.0))
+            } else {
+                p.cont(&format!("v{i}"), 0.0, rng.uniform(2.0, 7.0), rng.uniform(-1.0, 3.0))
+            }
+        })
+        .collect();
+    for c in 0..nc {
+        let coeffs: Vec<_> = vars.iter().map(|&v| (v, rng.uniform(-0.5, 2.0))).collect();
+        p.constrain(&format!("c{c}"), coeffs, Cmp::Le, rng.uniform(2.0, 14.0));
+    }
+    if nv >= 3 {
+        let ge: Vec<_> = vars.iter().map(|&v| (v, rng.uniform(0.1, 1.0))).collect();
+        p.constrain("ge", ge, Cmp::Ge, rng.uniform(0.2, 1.0));
+    }
+    p
+}
+
+/// Property test (the ISSUE's solver-parity satellite): warm-started and
+/// cold solves reach the same objective within the pruning gap and a
+/// feasible point on randomized bounded MILPs.
+#[test]
+fn milp_warm_vs_cold_parity_random() {
+    let budget = Duration::from_secs(10);
+    let warm_opts = MilpOptions::default();
+    let cold_opts =
+        MilpOptions { backend: LpBackend::Dense, warm_basis: false, max_nodes: None };
+    let mut rng = Rng::new(777);
+    for case in 0..40 {
+        let p = random_milp(&mut rng);
+        let (sw, _, root) = solve_milp_opts(&p, budget, None, None, &warm_opts);
+        let (sc, _, _) = solve_milp_opts(&p, budget, None, None, &cold_opts);
+        assert_eq!(sw.status, sc.status, "case {case}: status parity");
+        if sw.status == Status::Optimal {
+            let tol = 1e-6 + 2.0 * REL_GAP_TOL * sc.obj.abs();
+            assert!(
+                (sw.obj - sc.obj).abs() <= tol,
+                "case {case}: warm {} vs cold {}",
+                sw.obj,
+                sc.obj
+            );
+            assert!(p.is_feasible(&sw.x, 1e-5), "case {case}: warm point infeasible");
+            // Re-solving from the cached root basis must not change the
+            // answer either (the cross-round reuse level).
+            if let Some(root) = root {
+                let (sw2, stw2, _) = solve_milp_opts(&p, budget, None, Some(&root), &warm_opts);
+                assert_eq!(sw2.status, Status::Optimal, "case {case}: re-solve status");
+                assert!(
+                    (sw2.obj - sw.obj).abs() <= tol,
+                    "case {case}: re-solve {} vs {}",
+                    sw2.obj,
+                    sw.obj
+                );
+                assert!(
+                    stw2.root_warm,
+                    "case {case}: cached root basis must warm start ({stw2:?})"
+                );
+            }
+        }
+    }
+}
+
+fn sched_input(k: usize) -> MilpInput {
+    let cluster = ClusterSpec::homogeneous(k, 64.0, 256.0, 4, 65536.0, 1250.0);
+    let op = |name: &str, ut: f64, cpu: f64, accels: u32| OpSched {
+        name: name.into(),
+        ut_cur: ut,
+        ut_cand: None,
+        n_new: 0,
+        n_old: 0,
+        cpu,
+        mem_gb: 2.0,
+        accels,
+        out_mb: 0.5,
+        d_i: 1.0,
+        h_start: 2.0,
+        h_stop: 1.0,
+        h_cold: 20.0,
+        cur_x: vec![0; k],
+    };
+    MilpInput {
+        ops: vec![
+            op("parse", 10.0, 2.0, 0),
+            op("llm", 2.0, 8.0, 1),
+            op("filter", 20.0, 1.0, 0),
+        ],
+        edges: vec![(0, 1), (1, 2)],
+        nodes: cluster.nodes,
+        d_o: 1.0,
+        tenants: Vec::new(),
+        op_tenant: Vec::new(),
+        t_sched: 30.0,
+        lambda1: 1e-4,
+        lambda2: 1e-6,
+        b_max: 2,
+        placement_aware: true,
+        join_colocate: false,
+        all_at_once: false,
+    }
+}
+
+/// The scheduling MILP decoded through both backends: equal predicted
+/// throughput (the "pure speed change" contract — exact vectors can
+/// differ across backends on degenerate optima within the B&B pruning
+/// gap) plus the structurally-forced part of the plan (the device-bound
+/// accelerator op saturates all 8 devices either way).
+#[test]
+fn scheduling_objectives_match_across_backends() {
+    let input = sched_input(2);
+    let budget = Duration::from_secs(20);
+    let warm = solve_with_options(
+        &input,
+        budget,
+        &mut BasisCache::new(),
+        &MilpOptions::default(),
+    );
+    let dense = solve_with_options(
+        &input,
+        budget,
+        &mut BasisCache::new(),
+        &MilpOptions { backend: LpBackend::Dense, warm_basis: false, max_nodes: None },
+    );
+    assert!(matches!(warm.status, Status::Optimal | Status::Limit));
+    assert!(matches!(dense.status, Status::Optimal | Status::Limit));
+    if warm.status == Status::Optimal && dense.status == Status::Optimal {
+        assert!(
+            (warm.t_pred - dense.t_pred).abs() <= 1e-3 * (1.0 + dense.t_pred.abs()),
+            "warm {} vs dense {}",
+            warm.t_pred,
+            dense.t_pred
+        );
+        // 8 shared devices, one accel op: both backends must saturate.
+        assert_eq!(warm.p[1], 8, "revised backend leaves devices idle: {:?}", warm.p);
+        assert_eq!(dense.p[1], 8, "dense backend leaves devices idle: {:?}", dense.p);
+    }
+}
