@@ -1,0 +1,158 @@
+//! RQ7 (repo extension): cluster dynamics — throughput dip depth and
+//! recovery time under node churn, per scheduling policy.
+//!
+//! The headline two-tenant pdf+speech deployment takes a scripted
+//! `NodeFail` mid-run and a `NodeRecover` later.  For each policy we
+//! report the pre-failure baseline, the dip floor while the node is down,
+//! time-to-replan after the failure (Trident's event-driven path fires
+//! within one metrics window; Static never re-plans), and the
+//! time-to-90%-of-baseline recovery once the node returns.  The static
+//! baseline's instances die with the node and are never re-placed, so its
+//! recovery column is the contrast the tentpole is about.
+
+#[path = "common.rs"]
+mod common;
+
+use trident::config::{Tenancy, TenantSpec};
+use trident::coordinator::{Coordinator, Policy, RunReport, Variant};
+use trident::dynamics::{ClusterEvent, DynamicsSpec, RecoveryPolicy, TimedEvent};
+use trident::harness::{self, Job};
+use trident::report::{f2, Table};
+use trident::workload::{pdf, speech, Trace};
+
+const FAIL_AT: f64 = 400.0;
+const RECOVER_AT: f64 = 900.0;
+const DURATION: f64 = 1800.0;
+const SEED: u64 = 11;
+
+/// Fail three of the eight nodes at once (a rack-level outage — deep
+/// enough that no policy can sit out the dip), recover them together.
+fn churn_spec() -> DynamicsSpec {
+    let mut events = Vec::new();
+    for node in [1usize, 2, 3] {
+        events.push(TimedEvent { at_s: FAIL_AT, event: ClusterEvent::NodeFail { node } });
+        events.push(TimedEvent { at_s: RECOVER_AT, event: ClusterEvent::NodeRecover { node } });
+    }
+    DynamicsSpec { events, mtbf_s: 0.0, mttr_s: 0.0, recovery: RecoveryPolicy::Requeue }
+}
+
+fn coordinator(variant: &Variant, seed: u64) -> Coordinator {
+    let tenancy = Tenancy {
+        tenants: vec![
+            TenantSpec { id: "pdf".into(), pipeline: pdf::pipeline(), weight: 1.0, source_rate: 0.0 },
+            TenantSpec {
+                id: "speech".into(),
+                pipeline: speech::pipeline(),
+                weight: 1.0,
+                source_rate: 0.0,
+            },
+        ],
+    };
+    let mut cfg = trident::config::TridentConfig::default();
+    cfg.native_gp = std::env::var("TRIDENT_NATIVE_GP").map(|v| v == "1").unwrap_or(false);
+    let mut coord = Coordinator::new_tenancy(
+        tenancy,
+        common::cluster(8),
+        vec![
+            Box::new(pdf::trace(500_000)) as Box<dyn Trace>,
+            Box::new(speech::trace(200_000)) as Box<dyn Trace>,
+        ],
+        cfg,
+        variant.clone(),
+        vec![pdf::src_attrs(), speech::src_attrs()],
+        seed,
+    )
+    .expect("two-tenant tenancy is valid");
+    coord.set_dynamics(churn_spec()).expect("valid churn spec");
+    coord
+}
+
+/// Min windowed throughput while the node is down, relative to the
+/// event's pre-failure baseline.
+fn dip_floor(r: &RunReport) -> f64 {
+    let base = r
+        .events
+        .iter()
+        .find(|e| e.label.starts_with("node_fail"))
+        .map(|e| e.baseline_thr)
+        .unwrap_or(0.0)
+        .max(1e-12);
+    r.series
+        .iter()
+        .filter(|&&(t, _)| t > FAIL_AT + 30.0 && t <= RECOVER_AT)
+        .map(|&(_, v)| v / base)
+        .fold(f64::INFINITY, f64::min)
+}
+
+fn main() {
+    let methods: Vec<(&str, Variant)> = vec![
+        ("Static", Variant::baseline(Policy::Static)),
+        ("Ray Data", Variant::baseline(Policy::RayData)),
+        ("DS2", Variant::baseline(Policy::Ds2)),
+        ("ContTune", Variant::baseline(Policy::ContTune)),
+        ("Trident", Variant::trident()),
+    ];
+    let jobs: Vec<Job> = methods
+        .iter()
+        .map(|(name, v)| Job::timed(*name, v.clone(), SEED, DURATION))
+        .collect();
+    let workers = std::env::var("TRIDENT_BENCH_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(harness::default_workers);
+    let reports = harness::run_grid(&jobs, workers, |_, job| coordinator(&job.variant, job.seed));
+
+    let mut table = Table::new(
+        &format!(
+            "RQ7: two-tenant pdf+speech churn (fail nodes 1-3 @{FAIL_AT}s, recover @{RECOVER_AT}s)"
+        ),
+        &["Method", "base items/s", "dip floor", "replan s", "recover(90%) s", "lost", "items/s"],
+    );
+    for ((name, _), r) in methods.iter().zip(&reports) {
+        let ev = r.events.iter().find(|e| e.label.starts_with("node_fail"));
+        let fmt_opt = |v: Option<f64>| match v {
+            Some(s) => format!("{s:.0}"),
+            None => "-".to_string(),
+        };
+        table.row(vec![
+            name.to_string(),
+            f2(ev.map(|e| e.baseline_thr).unwrap_or(0.0)),
+            format!("{:.2}", dip_floor(r)),
+            fmt_opt(ev.and_then(|e| e.replan_s)),
+            fmt_opt(ev.and_then(|e| e.recovered_s)),
+            format!("{}", r.lost_records),
+            f2(r.throughput),
+        ]);
+        eprintln!("done: {name}");
+    }
+    table.emit("rq7_dynamics");
+
+    // The acceptance bar, asserted here too so `cargo bench rq7_dynamics`
+    // fails loudly if the event-driven path regresses.
+    let trident = &reports[methods.len() - 1];
+    let statik = &reports[0];
+    let t_ev = trident
+        .events
+        .iter()
+        .find(|e| e.label.starts_with("node_fail"))
+        .expect("trident records the failure");
+    let replan = t_ev.replan_s.expect("trident re-plans after the failure");
+    assert!(
+        replan <= trident::config::TridentConfig::default().metrics_interval_s + 1e-9,
+        "event-driven re-plan took {replan}s (> one metrics interval)"
+    );
+    let t_rec = t_ev.recovered_s.expect("trident recovers to >= 90% of baseline");
+    let s_rec = statik
+        .events
+        .iter()
+        .find(|e| e.label.starts_with("node_fail"))
+        .and_then(|e| e.recovered_s);
+    if let Some(s) = s_rec {
+        assert!(t_rec < s, "trident must recover strictly faster: {t_rec} vs {s}");
+    }
+    println!(
+        "rq7 acceptance: trident replan {replan:.1}s, recover {t_rec:.0}s; static recover {}",
+        s_rec.map(|s| format!("{s:.0}s")).unwrap_or_else(|| "never".into())
+    );
+}

@@ -26,6 +26,21 @@ use crate::sim::OpMetrics;
 /// A placement decision: instances per (op, node).
 pub type Placement = Vec<Vec<u32>>;
 
+/// A copy of `cluster` with down nodes' capacity zeroed: the greedy
+/// packers then skip them naturally, so every baseline "survives" node
+/// churn by re-planning cold over the surviving set.
+pub fn masked_cluster(cluster: &ClusterSpec, node_up: &[bool]) -> ClusterSpec {
+    let mut c = cluster.clone();
+    for (nd, &up) in c.nodes.iter_mut().zip(node_up) {
+        if !up {
+            nd.cpu_cores = 0.0;
+            nd.mem_gb = 0.0;
+            nd.accels = 0;
+        }
+    }
+    c
+}
+
 /// Greedy capacity-respecting packer shared by the baselines: place
 /// `p[i]` instances of each op, accel ops first, round-robin across nodes.
 /// Returns the achieved placement (may be short if resources run out).
@@ -186,12 +201,33 @@ impl Default for Ds2 {
 }
 
 /// Classic greedy pack for one tenant, fair round-robin pack for many
-/// (see [`pack_fair`]).
+/// (see [`pack_fair`]).  Under cluster dynamics, down nodes are masked
+/// out and inactive (dormant/departed) tenants' ops get zero instances —
+/// the identity transformation on a fully live deployment.
 fn pack_for(ctx: &PolicyCtx<'_>, p: &[u32]) -> Placement {
-    if ctx.tenancy.n_tenants() > 1 {
-        pack_fair(ctx.spec, ctx.cluster, p)
+    let mut p = p.to_vec();
+    for (i, pi) in p.iter_mut().enumerate() {
+        if !ctx.op_active(i) {
+            *pi = 0;
+        } else if *pi == 0 {
+            // An op wiped out by a node failure: the reactive baselines
+            // size relative to the current count, so re-seed one instance
+            // or the op (and its whole DAG) would stay dead forever.
+            // Unreachable absent dynamics (counts never hit 0).
+            *pi = 1;
+        }
+    }
+    let masked;
+    let cluster = if ctx.node_up.iter().all(|&u| u) {
+        ctx.cluster
     } else {
-        pack(ctx.spec, ctx.cluster, p)
+        masked = masked_cluster(ctx.cluster, ctx.node_up);
+        &masked
+    };
+    if ctx.tenancy.n_tenants() > 1 {
+        pack_fair(ctx.spec, cluster, &p)
+    } else {
+        pack(ctx.spec, cluster, &p)
     }
 }
 

@@ -40,6 +40,7 @@ use std::collections::HashMap;
 
 use crate::adaptation::OperatorAdaptation;
 use crate::config::{ClusterSpec, PipelineSpec, Tenancy, TridentConfig};
+use crate::dynamics::{ClusterEvent, DynamicsSpec, EventReport, RecoveryPolicy, TimedEvent};
 use crate::observation::{CapacityEstimator, ObsConfig, UsefulTimeEstimator};
 use crate::runtime::GpBackend;
 use crate::scheduling::RollingState;
@@ -82,6 +83,24 @@ pub struct Coordinator {
     last_throughput: f64,
     /// Per-op wall of the last committed transition (anti-thrash cooldown).
     last_transition_t: Vec<f64>,
+    /// Seed the coordinator was built with (dynamics timeline sampling).
+    seed: u64,
+    /// Cluster-dynamics spec (`None` = static cluster and tenancy — the
+    /// classic pre-dynamics closed loop, bit-for-bit).
+    dynamics: Option<DynamicsSpec>,
+    /// The generated event timeline (built lazily on the first drive
+    /// call, when the horizon is known) and the cursor into it.
+    timeline: Vec<TimedEvent>,
+    timeline_built: bool,
+    next_event: usize,
+    /// A topology/tenancy event awaits its event-driven re-plan: the
+    /// next metrics window triggers an immediate scheduling round
+    /// instead of waiting out the periodic `t_sched_s` timer.
+    replan_pending: bool,
+    /// Per-event recovery metrics (reported in `RunReport::events`) and
+    /// the consecutive-recovered-window streak behind `recovered_s`.
+    event_reports: Vec<EventReport>,
+    recovery_streak: Vec<u32>,
 }
 
 /// Propagate a source item's mean attrs through the pipeline's child
@@ -270,16 +289,188 @@ impl Coordinator {
             last_metrics: None,
             last_throughput: 0.0,
             last_transition_t: vec![f64::NEG_INFINITY; n],
+            seed,
+            dynamics: None,
+            timeline: Vec::new(),
+            timeline_built: false,
+            next_event: 0,
+            replan_pending: false,
+            event_reports: Vec::new(),
+            recovery_streak: Vec::new(),
         })
+    }
+
+    /// Attach a cluster-dynamics spec before the run starts.  Validates
+    /// it against the deployment, holds `node_join` spares offline, and
+    /// puts arriving tenants to sleep until their arrival events fire.
+    pub fn set_dynamics(&mut self, spec: DynamicsSpec) -> Result<(), String> {
+        if !self.sim.instances.is_empty() {
+            return Err("set_dynamics must be called before the run starts".into());
+        }
+        spec.validate(self.sim.cluster.nodes.len(), &self.sim.tenancy.ids)?;
+        for node in spec.joining_nodes() {
+            // No instances exist yet: failing the empty node just holds
+            // it down until its node_join event.
+            self.sim.fail_node(node, true);
+        }
+        for id in spec.arriving_tenants() {
+            let t = self
+                .sim
+                .tenancy
+                .ids
+                .iter()
+                .position(|i| *i == id)
+                .expect("validated tenant id");
+            self.sim.set_tenant_active(t, false);
+        }
+        self.dynamics = Some(spec);
+        self.timeline_built = false;
+        self.next_event = 0;
+        Ok(())
+    }
+
+    /// Tenants the scheduler should still plan for: active ones, plus
+    /// departed ones that have admitted items in flight (their operators
+    /// are reclaimed only once they drain).  All-true absent dynamics.
+    fn tenant_live(&self) -> Vec<bool> {
+        (0..self.sim.tenancy.n_tenants())
+            .map(|t| self.sim.tenants_active()[t] || !self.sim.tenant_drained(t))
+            .collect()
+    }
+
+    /// Mean windowed throughput over the most recent metrics windows —
+    /// the pre-event reference level for recovery tracking.
+    fn recent_throughput(&self) -> f64 {
+        let n = self.series.len().min(6);
+        if n == 0 {
+            return 0.0;
+        }
+        self.series[self.series.len() - n..].iter().map(|&(_, v)| v).sum::<f64>() / n as f64
+    }
+
+    /// Apply one timeline event to the executor and control state: kill /
+    /// revive capacity, splice tenants, invalidate observation samples of
+    /// the affected operators (the paper's sample-invalidation rule
+    /// extended to topology changes), re-sync rolling books (failed
+    /// instances are already-stopped — no cold-start charge for capacity
+    /// that no longer exists), and arm the event-driven re-plan.
+    fn apply_event(&mut self, te: &TimedEvent) {
+        let requeue = self
+            .dynamics
+            .as_ref()
+            .map(|d| d.recovery == RecoveryPolicy::Requeue)
+            .unwrap_or(true);
+        let mut lost = 0u64;
+        let label = match &te.event {
+            ClusterEvent::NodeFail { node } => {
+                // Includes Draining instances (the crash kills those too,
+                // unlike placement()), so their ops are invalidated as
+                // well.
+                let affected = self.sim.ops_on_node(*node);
+                lost = self.sim.fail_node(*node, requeue);
+                for &i in &affected {
+                    self.estimators[i].invalidate();
+                    let live = self.sim.instances_of(i).len() as u32;
+                    self.rolling[i].on_capacity_loss(live);
+                }
+                format!("node_fail(node {node})")
+            }
+            ClusterEvent::NodeRecover { node } => {
+                self.sim.set_node_up(*node);
+                format!("node_recover(node {node})")
+            }
+            ClusterEvent::NodeJoin { node } => {
+                self.sim.set_node_up(*node);
+                format!("node_join(node {node})")
+            }
+            ClusterEvent::TenantArrive { tenant } => {
+                if let Some(t) = self.sim.tenancy.ids.iter().position(|i| i == tenant) {
+                    self.sim.set_tenant_active(t, true);
+                }
+                format!("tenant_arrive({tenant})")
+            }
+            ClusterEvent::TenantDepart { tenant } => {
+                if let Some(t) = self.sim.tenancy.ids.iter().position(|i| i == tenant) {
+                    self.sim.set_tenant_active(t, false);
+                }
+                format!("tenant_depart({tenant})")
+            }
+            ClusterEvent::BandwidthDegrade { node, factor } => {
+                self.sim.set_bandwidth_factor(*node, *factor);
+                // The node's egress feeds these ops' downstream windows;
+                // their samples are stale now.
+                for i in self.sim.ops_on_node(*node) {
+                    self.estimators[i].invalidate();
+                }
+                format!("bandwidth_degrade(node {node}, x{factor})")
+            }
+            ClusterEvent::BandwidthRestore { node } => {
+                self.sim.set_bandwidth_factor(*node, 1.0);
+                // Symmetric with the degrade arm: windows observed while
+                // the link was squeezed are just as stale now.
+                for i in self.sim.ops_on_node(*node) {
+                    self.estimators[i].invalidate();
+                }
+                format!("bandwidth_restore(node {node})")
+            }
+        };
+        self.event_reports.push(EventReport {
+            at_s: te.at_s,
+            label,
+            baseline_thr: self.recent_throughput(),
+            replan_s: None,
+            recovered_s: None,
+            lost_records: lost,
+        });
+        self.recovery_streak.push(0);
+        self.replan_pending = true;
+    }
+
+    /// Per-window recovery tracking: an event counts as recovered once
+    /// windowed throughput sustains >= 90% of its pre-event baseline for
+    /// two consecutive windows (one noisy window must not declare
+    /// victory).
+    fn track_recovery(&mut self, t: f64, thr: f64) {
+        for (ev, streak) in self.event_reports.iter_mut().zip(&mut self.recovery_streak) {
+            // No pre-event traffic ⇒ no baseline to recover to: leave
+            // recovered_s undefined instead of declaring instant victory
+            // against a zero threshold.
+            if ev.recovered_s.is_some() || t <= ev.at_s || ev.baseline_thr <= 0.0 {
+                continue;
+            }
+            if thr >= 0.9 * ev.baseline_thr {
+                *streak += 1;
+                if *streak >= 2 {
+                    ev.recovered_s = Some(t - ev.at_s);
+                }
+            } else {
+                *streak = 0;
+            }
+        }
+    }
+
+    /// Stamp time-to-replan on events whose re-plan just committed.
+    fn mark_replanned(&mut self, t: f64) {
+        for ev in &mut self.event_reports {
+            if ev.replan_s.is_none() {
+                ev.replan_s = Some((t - ev.at_s).max(0.0));
+            }
+        }
     }
 
     /// One scheduling round (Algorithm 2): estimate rates, forward
     /// adaptation recommendations into rolling state, ask the policy for a
-    /// plan, and apply it through the shared path ⑧.
-    fn schedule_round(&mut self, metrics: &[OpMetrics]) {
+    /// plan, and apply it through the shared path ⑧.  Returns whether the
+    /// policy actually produced a plan (placement/routes/transitions) —
+    /// a `Plan::keep` from Static is a round, not a re-plan.
+    fn schedule_round(&mut self, metrics: &[OpMetrics]) -> bool {
         let rates = self.current_rates(metrics);
         let adapt_on = self.forward_recommendations();
         let placement = self.sim.placement();
+        // A departed tenant stays schedulable until its admitted items
+        // drain; only then are its operators reclaimed (excluded from the
+        // plan, instances stopped).  Identity absent dynamics.
+        let tenant_live = self.tenant_live();
         // Note: includes draining instances (unlike `placement()`), matching
         // what the reactive baselines have always seen as "current p".
         let cur_p: Vec<u32> = (0..self.sim.spec.n_ops())
@@ -297,6 +488,8 @@ impl Coordinator {
                 placement: &placement,
                 rolling: &self.rolling,
                 tenancy: &self.sim.tenancy,
+                node_up: self.sim.nodes_up(),
+                tenant_active: &tenant_live,
                 last_throughput: self.last_throughput,
                 now: self.sim.now(),
             };
@@ -305,6 +498,9 @@ impl Coordinator {
         if let Some(ms) = plan.milp_ms {
             self.milp_ms.push(ms);
         }
+        let acted = plan.placement.is_some()
+            || plan.routes.is_some()
+            || plan.transitions != TransitionCmd::None;
         if let Some(x) = &plan.placement {
             self.apply_placement(x);
         }
@@ -337,6 +533,7 @@ impl Coordinator {
             .last()
             .map(|m| m.records_out as f64 / m.window_s)
             .unwrap_or(0.0);
+        acted
     }
 
     /// The closed drive loop shared by [`run`](Coordinator::run) and
@@ -349,9 +546,31 @@ impl Coordinator {
         }
         let mut t = self.sim.now();
         let end = t + max_s;
+        if !self.timeline_built {
+            if let Some(spec) = &self.dynamics {
+                self.timeline =
+                    spec.timeline(self.sim.cluster.nodes.len(), end, self.seed ^ 0x7472_6964);
+            }
+            self.timeline_built = true;
+        }
         let mut next_sched = t + self.cfg.t_sched_s;
-        while t < end && !(until_drained && self.sim.drained()) {
+        while t < end
+            && !(until_drained
+                && self.sim.drained()
+                && self.next_event >= self.timeline.len())
+        {
             t = (t + self.cfg.metrics_interval_s).min(end);
+            // Inject timeline events at their exact sim timestamps inside
+            // this window: advance the executor to the event time, apply,
+            // continue.
+            while self.next_event < self.timeline.len()
+                && self.timeline[self.next_event].at_s <= t
+            {
+                let te = self.timeline[self.next_event].clone();
+                self.next_event += 1;
+                self.sim.run_until(te.at_s);
+                self.apply_event(&te);
+            }
             self.sim.run_until(t);
             let (metrics, outs) = self.sim.flush_metrics();
             // Aggregate windowed throughput: per-tenant outputs scaled to
@@ -363,13 +582,26 @@ impl Coordinator {
                 .sum::<f64>()
                 / self.cfg.metrics_interval_s;
             self.series.push((t, thr));
+            self.track_recovery(t, thr);
             self.ingest_window(&metrics);
             self.last_metrics = Some(metrics);
-            if t >= next_sched && !(until_drained && self.sim.drained()) {
+            // Event-driven re-plan: a topology/tenancy event re-plans at
+            // the very next metrics window (within one
+            // `metrics_interval_s` of the event) instead of waiting out
+            // the periodic timer.
+            let due = t >= next_sched || self.replan_pending;
+            if due && !(until_drained && self.sim.drained()) {
                 next_sched = t + self.cfg.t_sched_s;
                 let m = self.last_metrics.take().unwrap();
-                self.schedule_round(&m);
+                let acted = self.schedule_round(&m);
                 self.last_metrics = Some(m);
+                if acted {
+                    // `replan_s` means "a plan was committed", not "a
+                    // round ran": Static's keep-everything rounds leave
+                    // its events unstamped (reported as never re-planned).
+                    self.mark_replanned(t);
+                }
+                self.replan_pending = false;
             }
         }
         let duration = if until_drained { self.sim.now() } else { max_s };

@@ -136,10 +136,29 @@ pub struct PolicyCtx<'a> {
     /// Tenant structure of the (merged) spec: op → tenant map, per-tenant
     /// weights and output amplification.  Trivial for one tenant.
     pub tenancy: &'a TenancyView,
+    /// Node availability (cluster dynamics): policies must not place on
+    /// a down node.  All-true absent a dynamics timeline.
+    pub node_up: &'a [bool],
+    /// Tenant activity (dynamic tenancy): dormant/departed tenants' ops
+    /// get no instances.  All-true absent a dynamics timeline.
+    pub tenant_active: &'a [bool],
     /// Pipeline throughput observed over the previous round.
     pub last_throughput: f64,
     /// Simulation clock, seconds.
     pub now: f64,
+}
+
+impl PolicyCtx<'_> {
+    /// True when the full cluster and tenancy are live (the classic,
+    /// dynamics-free case — every pre-dynamics code path).
+    pub fn all_active(&self) -> bool {
+        self.node_up.iter().all(|&u| u) && self.tenant_active.iter().all(|&a| a)
+    }
+
+    /// Whether op `i` belongs to an active tenant.
+    pub fn op_active(&self, i: usize) -> bool {
+        self.tenant_active[self.tenancy.op_tenant[i]]
+    }
 }
 
 /// How configuration transitions are applied this round.
@@ -206,7 +225,11 @@ pub struct TridentPolicy {
 
 impl SchedulingPolicy for TridentPolicy {
     fn plan(&mut self, ctx: &PolicyCtx<'_>) -> Plan {
-        let input = milp_input(ctx);
+        let (input, scope) = milp_input(ctx);
+        if input.ops.is_empty() || input.nodes.is_empty() {
+            // Every tenant departed or every node down: nothing to plan.
+            return Plan::keep();
+        }
         let t0 = Instant::now();
         let plan = scheduling::solve_cached(
             &input,
@@ -223,58 +246,206 @@ impl SchedulingPolicy for TridentPolicy {
                 "[{:.0}s] plan: T={:.2} p={:?} b={:?}",
                 ctx.now, plan.t_pred, plan.p, plan.b
             );
-            for (i, o) in input.ops.iter().enumerate() {
+            for (row, o) in input.ops.iter().enumerate() {
+                let i = scope.ops[row];
                 if o.ut_cand.is_some() || ctx.spec.operators[i].tunable {
                     eprintln!(
                         "    op{i} {}: ut_cur={:.2} ut_cand={:?} n_old={} n_new={} util={:.2}",
                         o.name, o.ut_cur, o.ut_cand, o.n_old, o.n_new,
-                        ctx.metrics[i].utilization
+                        ctx.metrics.get(i).map(|m| m.utilization).unwrap_or(0.0)
                     );
                 }
             }
         }
+        if scope.is_identity() {
+            // The classic full-cluster round: pass the plan through
+            // untouched (bit-identical to the pre-dynamics path).
+            return Plan {
+                placement: Some(plan.x),
+                routes: ctx.variant.placement_aware.then_some(plan.route),
+                transitions: TransitionCmd::Rolling(plan.b),
+                milp_ms: Some(ms),
+            };
+        }
         Plan {
-            placement: Some(plan.x),
-            routes: ctx.variant.placement_aware.then_some(plan.route),
-            transitions: TransitionCmd::Rolling(plan.b),
+            placement: Some(scope.expand_x(&plan.x)),
+            routes: ctx
+                .variant
+                .placement_aware
+                .then(|| scope.expand_routes(&plan.route)),
+            transitions: TransitionCmd::Rolling(scope.expand_b(&plan.b)),
             milp_ms: Some(ms),
         }
     }
 }
 
-/// Build the round's MILP input from the shared context.  Candidate rates
-/// enter only for operators mid-transition (single-transition invariant);
-/// the current placement seeds the movement-cost terms.
-pub fn milp_input(ctx: &PolicyCtx<'_>) -> MilpInput {
-    let (d_i, d_o) = ctx.spec.amplification();
-    MilpInput {
-        ops: ctx
-            .spec
-            .operators
+/// Which rows/columns of the full merged spec a round's MILP covers: the
+/// surviving node set and the active tenants' operators/edges.  Identity
+/// absent cluster dynamics.  The solved sub-plan is expanded back to the
+/// full shape the coordinator applies (excluded ops and down nodes get
+/// zero instances, so a departed tenant's instances drain and nothing is
+/// placed on a dead node).
+#[derive(Debug, Clone)]
+pub struct PlanScope {
+    /// Full-spec op index per MILP op row.
+    pub ops: Vec<usize>,
+    /// Full-cluster node index per MILP node column.
+    pub nodes: Vec<usize>,
+    /// Full-spec edge id per MILP edge.
+    pub edges: Vec<usize>,
+    pub n_ops: usize,
+    pub n_nodes: usize,
+    pub n_edges: usize,
+}
+
+impl PlanScope {
+    pub fn is_identity(&self) -> bool {
+        self.ops.len() == self.n_ops && self.nodes.len() == self.n_nodes
+    }
+
+    /// Expand a scoped placement to the full (op × node) shape.
+    pub fn expand_x(&self, x: &[Vec<u32>]) -> Vec<Vec<u32>> {
+        let mut full = vec![vec![0u32; self.n_nodes]; self.n_ops];
+        for (p, &i) in self.ops.iter().enumerate() {
+            for (q, &kk) in self.nodes.iter().enumerate() {
+                full[i][kk] = x[p][q];
+            }
+        }
+        full
+    }
+
+    /// Expand scoped rolling batches to the full op list (excluded ops
+    /// transition nothing).
+    pub fn expand_b(&self, b: &[u32]) -> Vec<u32> {
+        let mut full = vec![0u32; self.n_ops];
+        for (p, &i) in self.ops.iter().enumerate() {
+            full[i] = b[p];
+        }
+        full
+    }
+
+    /// Expand per-edge routing matrices to the full edge list and node
+    /// count.  Unscoped edges and down-node rows route locally (the
+    /// executor's least-occupied fallback then applies).
+    pub fn expand_routes(&self, route: &[Vec<Vec<f64>>]) -> Vec<Vec<Vec<f64>>> {
+        let mut by_edge: Vec<Option<&Vec<Vec<f64>>>> = vec![None; self.n_edges];
+        for (p, &e) in self.edges.iter().enumerate() {
+            if let Some(sub) = route.get(p) {
+                by_edge[e] = Some(sub);
+            }
+        }
+        (0..self.n_edges)
+            .map(|e| {
+                let mut m: Vec<Vec<f64>> = (0..self.n_nodes)
+                    .map(|kk| {
+                        let mut row = vec![0.0; self.n_nodes];
+                        row[kk] = 1.0;
+                        row
+                    })
+                    .collect();
+                if let Some(sub) = by_edge[e] {
+                    for (p, &from) in self.nodes.iter().enumerate() {
+                        let mut row = vec![0.0; self.n_nodes];
+                        for (q, &to) in self.nodes.iter().enumerate() {
+                            row[to] = sub[p][q];
+                        }
+                        m[from] = row;
+                    }
+                }
+                m
+            })
+            .collect()
+    }
+}
+
+/// Build the round's MILP input from the shared context, restricted to
+/// the surviving node/tenant set (the full problem absent dynamics).
+/// Candidate rates enter only for operators mid-transition
+/// (single-transition invariant); the current placement seeds the
+/// movement-cost terms.  Returns the input plus the [`PlanScope`] that
+/// maps the sub-plan back to full shape.
+pub fn milp_input(ctx: &PolicyCtx<'_>) -> (MilpInput, PlanScope) {
+    let (d_i, d_o_full) = ctx.spec.amplification();
+    let n = ctx.spec.n_ops();
+    let k = ctx.cluster.nodes.len();
+    let ops_sel: Vec<usize> = (0..n).filter(|&i| ctx.op_active(i)).collect();
+    let nodes_sel: Vec<usize> = (0..k).filter(|&kk| ctx.node_up[kk]).collect();
+    let mut op_pos = vec![usize::MAX; n];
+    for (p, &i) in ops_sel.iter().enumerate() {
+        op_pos[i] = p;
+    }
+    let edges_sel: Vec<usize> = (0..ctx.spec.n_edges())
+        .filter(|&e| {
+            let (u, v) = ctx.spec.edges[e];
+            op_pos[u] != usize::MAX && op_pos[v] != usize::MAX
+        })
+        .collect();
+    let active_tenants: Vec<usize> =
+        (0..ctx.tenancy.n_tenants()).filter(|&t| ctx.tenant_active[t]).collect();
+    let multi = active_tenants.len() > 1;
+    let tenants: Vec<MilpTenant> = if multi {
+        active_tenants
             .iter()
-            .enumerate()
-            .map(|(i, o)| OpSched {
-                name: o.name.clone(),
-                ut_cur: ctx.rates[i].max(1e-6),
-                ut_cand: ctx.rolling[i].in_transition().then(|| ctx.rolling[i].ut_cand),
-                n_new: ctx.rolling[i].n_new,
-                n_old: ctx.rolling[i].n_old,
-                cpu: o.cpu,
-                mem_gb: o.mem_gb,
-                accels: o.accels,
-                out_mb: o.out_mb,
-                d_i: d_i[i],
-                h_start: o.start_s,
-                h_stop: o.stop_s,
-                h_cold: o.cold_s,
-                cur_x: ctx.placement[i].clone(),
+            .map(|&t| MilpTenant {
+                name: ctx.tenancy.ids[t].clone(),
+                weight: ctx.tenancy.weights[t],
+                d_o: ctx.tenancy.d_o[t],
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let mut tpos = vec![0usize; ctx.tenancy.n_tenants()];
+    for (p, &t) in active_tenants.iter().enumerate() {
+        tpos[t] = p;
+    }
+    let op_tenant: Vec<usize> = if multi {
+        ops_sel.iter().map(|&i| tpos[ctx.tenancy.op_tenant[i]]).collect()
+    } else {
+        Vec::new()
+    };
+    // The classic scalar D_o: the sole active tenant's own amplification
+    // when exactly one tenant remains, the merged value otherwise (it is
+    // only consulted in the single-tenant formulation).
+    let d_o = if active_tenants.len() == 1 {
+        ctx.tenancy.d_o[active_tenants[0]]
+    } else {
+        d_o_full
+    };
+    let input = MilpInput {
+        ops: ops_sel
+            .iter()
+            .map(|&i| {
+                let o = &ctx.spec.operators[i];
+                OpSched {
+                    name: o.name.clone(),
+                    ut_cur: ctx.rates[i].max(1e-6),
+                    ut_cand: ctx.rolling[i].in_transition().then(|| ctx.rolling[i].ut_cand),
+                    n_new: ctx.rolling[i].n_new,
+                    n_old: ctx.rolling[i].n_old,
+                    cpu: o.cpu,
+                    mem_gb: o.mem_gb,
+                    accels: o.accels,
+                    out_mb: o.out_mb,
+                    d_i: d_i[i],
+                    h_start: o.start_s,
+                    h_stop: o.stop_s,
+                    h_cold: o.cold_s,
+                    cur_x: nodes_sel.iter().map(|&kk| ctx.placement[i][kk]).collect(),
+                }
             })
             .collect(),
-        edges: ctx.spec.edges.clone(),
-        nodes: ctx.cluster.nodes.clone(),
+        edges: edges_sel
+            .iter()
+            .map(|&e| {
+                let (u, v) = ctx.spec.edges[e];
+                (op_pos[u], op_pos[v])
+            })
+            .collect(),
+        nodes: nodes_sel.iter().map(|&kk| ctx.cluster.nodes[kk].clone()).collect(),
         d_o,
-        tenants: MilpTenant::from_view(ctx.tenancy),
-        op_tenant: ctx.tenancy.op_tenant.clone(),
+        tenants,
+        op_tenant,
         t_sched: ctx.cfg.t_sched_s,
         lambda1: ctx.cfg.lambda1,
         lambda2: ctx.cfg.lambda2,
@@ -282,5 +453,14 @@ pub fn milp_input(ctx: &PolicyCtx<'_>) -> MilpInput {
         placement_aware: ctx.variant.placement_aware,
         join_colocate: ctx.cfg.milp_join_colocation,
         all_at_once: !ctx.variant.rolling,
-    }
+    };
+    let scope = PlanScope {
+        ops: ops_sel,
+        nodes: nodes_sel,
+        edges: edges_sel,
+        n_ops: n,
+        n_nodes: k,
+        n_edges: ctx.spec.n_edges(),
+    };
+    (input, scope)
 }

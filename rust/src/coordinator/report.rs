@@ -18,6 +18,9 @@ pub struct TenantReport {
     pub items_processed: u64,
     /// Source items admitted for this tenant.
     pub items_admitted: u64,
+    /// Distinct lineages this tenant lost to node failures
+    /// (`RecoveryPolicy::Loss`; 0 under `Requeue` and absent dynamics).
+    pub items_lost: u64,
 }
 
 /// Run outcome for reports and benches.
@@ -46,6 +49,12 @@ pub struct RunReport {
     /// Clustering snapshots: per tunable op, (assignments, truth) samples.
     pub cluster_eval: Vec<(Vec<usize>, Vec<u8>)>,
     pub items_processed: u64,
+    /// Per-event recovery metrics (cluster dynamics): time-to-replan,
+    /// time-to-90%-throughput, records lost.  Empty absent a dynamics
+    /// timeline.
+    pub events: Vec<crate::dynamics::EventReport>,
+    /// Total records dropped by node failures across the run.
+    pub lost_records: u64,
 }
 
 impl Coordinator {
@@ -70,6 +79,7 @@ impl Coordinator {
                     throughput: self.sim.tenant_throughput(t),
                     items_processed: self.sim.out_records_t[t],
                     items_admitted: self.sim.items_emitted_t[t],
+                    items_lost: self.sim.lost_items_t[t],
                 })
                 .collect(),
             series: self.series.clone(),
@@ -86,6 +96,8 @@ impl Coordinator {
                 .collect(),
             cluster_eval: self.cluster_eval.clone(),
             items_processed: self.sim.out_records,
+            events: self.event_reports.clone(),
+            lost_records: self.sim.lost_records_total(),
         }
     }
 }

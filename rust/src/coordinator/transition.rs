@@ -33,12 +33,15 @@ impl Coordinator {
     }
 
     /// Initial deployment shared by every policy: one-shot MILP on nominal
-    /// rates (the "manually tuned" allocation).
+    /// rates (the "manually tuned" allocation), restricted to the live
+    /// node/tenant set (a `node_join` spare starts empty, an arriving
+    /// tenant starts dormant).
     pub fn deploy_initial(&mut self) {
         let rates = self.nominal_rates();
         let placement = self.sim.placement();
         let cur_p: Vec<u32> = placement.iter().map(|row| row.iter().sum()).collect();
-        let input = {
+        let tenant_live = self.tenant_live();
+        let (input, scope) = {
             let ctx = PolicyCtx {
                 spec: &self.sim.spec,
                 cluster: &self.sim.cluster,
@@ -50,34 +53,59 @@ impl Coordinator {
                 placement: &placement,
                 rolling: &self.rolling,
                 tenancy: &self.sim.tenancy,
+                node_up: self.sim.nodes_up(),
+                tenant_active: &tenant_live,
                 last_throughput: 0.0,
                 now: self.sim.now(),
             };
             policy::milp_input(&ctx)
         };
+        if input.ops.is_empty() || input.nodes.is_empty() {
+            return; // nothing live to deploy yet
+        }
         let plan = scheduling::solve(&input, Duration::from_millis(self.cfg.milp_time_budget_ms));
-        let x = if plan.t_pred > 0.0 {
-            plan.x
+        let identity = scope.is_identity();
+        let (x, route) = if plan.t_pred > 0.0 {
+            if identity {
+                (plan.x, plan.route)
+            } else {
+                (scope.expand_x(&plan.x), scope.expand_routes(&plan.route))
+            }
         } else {
             // Fallback: greedy pack of a (tenant-aware) waterfall plan;
             // multi-tenant packs fairly so no tenant's op is zeroed out.
-            let p = crate::baselines::waterfall_t(
+            // Inactive tenants get nothing and down nodes are masked out.
+            let mut p = crate::baselines::waterfall_t(
                 &self.sim.spec,
                 &self.sim.tenancy,
                 &self.sim.cluster,
                 &rates,
                 1.1,
             );
-            if self.sim.tenancy.n_tenants() > 1 {
-                crate::baselines::pack_fair(&self.sim.spec, &self.sim.cluster, &p)
-            } else {
-                pack(&self.sim.spec, &self.sim.cluster, &p)
+            for (i, pi) in p.iter_mut().enumerate() {
+                if !tenant_live[self.sim.tenancy.op_tenant[i]] {
+                    *pi = 0;
+                }
             }
+            let masked;
+            let cluster = if identity {
+                &self.sim.cluster
+            } else {
+                masked =
+                    crate::baselines::masked_cluster(&self.sim.cluster, self.sim.nodes_up());
+                &masked
+            };
+            let x = if self.sim.tenancy.n_tenants() > 1 {
+                crate::baselines::pack_fair(&self.sim.spec, cluster, &p)
+            } else {
+                pack(&self.sim.spec, cluster, &p)
+            };
+            (x, Vec::new())
         };
         self.apply_placement(&x);
         if self.variant.policy == Policy::Trident && self.variant.placement_aware {
             // One routing matrix per pipeline edge (DAG-aware).
-            for (edge, m) in plan.route.iter().enumerate() {
+            for (edge, m) in route.iter().enumerate() {
                 self.sim.set_route(edge, Some(m.clone()));
             }
         }

@@ -1,0 +1,483 @@
+//! Cluster dynamics: a deterministic, seed-driven timeline of node churn,
+//! tenant arrivals/departures, and bandwidth shifts injected into the sim
+//! clock — the fourth subsystem alongside observation / adaptation /
+//! scheduling.
+//!
+//! The paper's premise is that multimodal pipelines are *non-stationary*;
+//! this module makes the cluster and the tenancy non-stationary too.  A
+//! [`DynamicsSpec`] combines a scripted JSON event list with optional
+//! stochastic MTBF/MTTR node-churn processes (sampled through `rngx`, so
+//! the same seed + spec always yields the bit-identical timeline), and the
+//! coordinator applies the resulting [`TimedEvent`]s at their exact sim
+//! timestamps between metrics windows:
+//!
+//! * **NodeFail** — every instance on the node dies *immediately* (no
+//!   drain).  What happens to its in-flight records is governed by the
+//!   [`RecoveryPolicy`]: `Requeue` re-injects them at the operator they
+//!   were lost at (the lineage-re-execution shortcut — conservation stays
+//!   exact), `Loss` drops them and counts them in the per-op/per-tenant
+//!   loss ledgers (join groups are tombstoned so orphaned sibling
+//!   partials cannot wedge the DAG).
+//! * **NodeRecover / NodeJoin** — the node's capacity returns (join names
+//!   a node of the cluster spec that starts *offline* and comes up at the
+//!   event time).
+//! * **TenantArrive / TenantDepart** — the tenant's source is spliced
+//!   in/out mid-run; an arriving tenant starts dormant (no instances, no
+//!   load) and a departing tenant drains what it already admitted.
+//! * **BandwidthDegrade / BandwidthRestore** — the node's egress link
+//!   rate is scaled by a factor in (0, 1], then restored.
+//!
+//! Every event marks the coordinator's *event-driven re-plan* path: the
+//! next metrics window triggers an immediate scheduling round (instead of
+//! waiting for the periodic `t_sched_s` timer), observation samples of
+//! the affected operators are invalidated (the paper's path-⑨ rule
+//! extended to topology changes), and the MILP is rebuilt over the
+//! surviving node/tenant set, warm-started through the restricted basis
+//! repair in `scheduling::BasisCache`.
+
+use crate::config::Json;
+
+/// One cluster/tenancy event.  Nodes are named by cluster index, tenants
+/// by tenant id (resolved against the tenancy at `validate` time).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterEvent {
+    /// The node crashes: instances die instantly, in-flight work is
+    /// requeued or lost per the [`RecoveryPolicy`].
+    NodeFail { node: usize },
+    /// A previously failed node comes back (empty — instances must be
+    /// re-placed by the scheduler).
+    NodeRecover { node: usize },
+    /// A node that started offline joins the cluster.  The node must be
+    /// declared in the cluster spec; it is held down from t = 0 until
+    /// this event fires.
+    NodeJoin { node: usize },
+    /// The tenant's source starts offering load.  A tenant with an
+    /// arrival event starts dormant (no instances, no load).
+    TenantArrive { tenant: String },
+    /// The tenant stops offering load; already-admitted items drain and
+    /// the next re-plan reclaims its instances.
+    TenantDepart { tenant: String },
+    /// Scale the node's egress link rate by `factor` in (0, 1].
+    BandwidthDegrade { node: usize, factor: f64 },
+    /// Restore the node's egress link to its spec rate.
+    BandwidthRestore { node: usize },
+}
+
+impl ClusterEvent {
+    /// Short stable kind tag (reports, tests, JSON round-trips).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ClusterEvent::NodeFail { .. } => "node_fail",
+            ClusterEvent::NodeRecover { .. } => "node_recover",
+            ClusterEvent::NodeJoin { .. } => "node_join",
+            ClusterEvent::TenantArrive { .. } => "tenant_arrive",
+            ClusterEvent::TenantDepart { .. } => "tenant_depart",
+            ClusterEvent::BandwidthDegrade { .. } => "bandwidth_degrade",
+            ClusterEvent::BandwidthRestore { .. } => "bandwidth_restore",
+        }
+    }
+
+    /// The node the event touches, if any.
+    pub fn node(&self) -> Option<usize> {
+        match *self {
+            ClusterEvent::NodeFail { node }
+            | ClusterEvent::NodeRecover { node }
+            | ClusterEvent::NodeJoin { node }
+            | ClusterEvent::BandwidthDegrade { node, .. }
+            | ClusterEvent::BandwidthRestore { node } => Some(node),
+            _ => None,
+        }
+    }
+
+    /// The tenant id the event touches, if any.
+    pub fn tenant(&self) -> Option<&str> {
+        match self {
+            ClusterEvent::TenantArrive { tenant } | ClusterEvent::TenantDepart { tenant } => {
+                Some(tenant)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// An event pinned to an absolute sim timestamp.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimedEvent {
+    pub at_s: f64,
+    pub event: ClusterEvent,
+}
+
+/// What happens to a failed node's in-flight records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecoveryPolicy {
+    /// Re-inject surviving records at the operator they were lost at
+    /// (lineage re-execution shortcut): per-tenant conservation stays
+    /// exact and nothing is counted lost.
+    #[default]
+    Requeue,
+    /// Drop them: records are counted in the per-op loss ledger, killed
+    /// lineages once per tenant, and join groups are tombstoned so
+    /// orphaned sibling partials are dropped on arrival instead of
+    /// wedging the join.
+    Loss,
+}
+
+impl RecoveryPolicy {
+    pub fn parse(s: &str) -> Result<RecoveryPolicy, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "requeue" => Ok(RecoveryPolicy::Requeue),
+            "loss" => Ok(RecoveryPolicy::Loss),
+            other => Err(format!("unknown recovery policy '{other}' (expected requeue|loss)")),
+        }
+    }
+}
+
+/// The full dynamics specification: scripted events plus optional
+/// stochastic node churn.
+#[derive(Debug, Clone, Default)]
+pub struct DynamicsSpec {
+    /// Scripted events (need not be sorted; [`DynamicsSpec::timeline`]
+    /// orders them deterministically).
+    pub events: Vec<TimedEvent>,
+    /// Mean time between failures per node, seconds (0 = no stochastic
+    /// churn).  Each node's fail/recover process is sampled independently
+    /// from exponential inter-event times.
+    pub mtbf_s: f64,
+    /// Mean time to recovery, seconds (used only when `mtbf_s > 0`).
+    pub mttr_s: f64,
+    pub recovery: RecoveryPolicy,
+}
+
+impl DynamicsSpec {
+    /// True when no events can ever fire.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.mtbf_s <= 0.0
+    }
+
+    /// Strict JSON parse: unknown event kinds, missing/invalid timestamps,
+    /// and out-of-range factors are errors, never silently skipped.
+    ///
+    /// ```json
+    /// {"recovery": "requeue", "mtbf_s": 0, "mttr_s": 0,
+    ///  "events": [
+    ///    {"at": 300, "kind": "node_fail", "node": 1},
+    ///    {"at": 600, "kind": "node_recover", "node": 1},
+    ///    {"at": 900, "kind": "tenant_arrive", "tenant": "speech"},
+    ///    {"at": 420, "kind": "bandwidth_degrade", "node": 0, "factor": 0.25}
+    ///  ]}
+    /// ```
+    pub fn from_json(j: &Json) -> Result<DynamicsSpec, String> {
+        let recovery = match j.get("recovery").map(|r| r.as_str()) {
+            None => RecoveryPolicy::default(),
+            Some(Some(s)) => RecoveryPolicy::parse(s)?,
+            Some(None) => return Err("dynamics: 'recovery' must be a string".into()),
+        };
+        let num = |key: &str| -> Result<f64, String> {
+            match j.get(key) {
+                None => Ok(0.0),
+                Some(v) => v
+                    .as_f64()
+                    .filter(|x| x.is_finite() && *x >= 0.0)
+                    .ok_or_else(|| format!("dynamics: '{key}' must be a non-negative number")),
+            }
+        };
+        let mtbf_s = num("mtbf_s")?;
+        let mttr_s = num("mttr_s")?;
+        if mtbf_s > 0.0 && mttr_s <= 0.0 {
+            return Err("dynamics: mtbf_s > 0 requires mttr_s > 0".into());
+        }
+        let mut events = Vec::new();
+        if let Some(arr) = j.get("events") {
+            let arr = arr.as_arr().ok_or("dynamics: 'events' must be an array")?;
+            for (i, ej) in arr.iter().enumerate() {
+                events.push(Self::event_from_json(ej).map_err(|e| format!("event {i}: {e}"))?);
+            }
+        }
+        Ok(DynamicsSpec { events, mtbf_s, mttr_s, recovery })
+    }
+
+    fn event_from_json(ej: &Json) -> Result<TimedEvent, String> {
+        let at_s = ej
+            .get("at")
+            .and_then(Json::as_f64)
+            .filter(|t| t.is_finite() && *t >= 0.0)
+            .ok_or("missing or invalid 'at' timestamp (must be a finite number >= 0)")?;
+        let kind = ej
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("missing 'kind'")?;
+        let node = || -> Result<usize, String> {
+            // Strict: Json::as_usize would saturate -1 to 0 and truncate
+            // 1.9 to 1 — silently failing a different node than scripted.
+            ej.get("node")
+                .and_then(Json::as_f64)
+                .filter(|f| f.is_finite() && *f >= 0.0 && f.fract() == 0.0)
+                .map(|f| f as usize)
+                .ok_or_else(|| format!("'{kind}' needs a non-negative integer 'node'"))
+        };
+        let tenant = || -> Result<String, String> {
+            ej.get("tenant")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .filter(|t| !t.is_empty())
+                .ok_or_else(|| format!("'{kind}' needs a non-empty 'tenant' id"))
+        };
+        let event = match kind {
+            "node_fail" => ClusterEvent::NodeFail { node: node()? },
+            "node_recover" => ClusterEvent::NodeRecover { node: node()? },
+            "node_join" => ClusterEvent::NodeJoin { node: node()? },
+            "tenant_arrive" => ClusterEvent::TenantArrive { tenant: tenant()? },
+            "tenant_depart" => ClusterEvent::TenantDepart { tenant: tenant()? },
+            "bandwidth_degrade" => {
+                let factor = ej
+                    .get("factor")
+                    .and_then(Json::as_f64)
+                    .filter(|f| *f > 0.0 && *f <= 1.0)
+                    .ok_or("'bandwidth_degrade' needs a 'factor' in (0, 1]")?;
+                ClusterEvent::BandwidthDegrade { node: node()?, factor }
+            }
+            "bandwidth_restore" => ClusterEvent::BandwidthRestore { node: node()? },
+            other => {
+                return Err(format!(
+                    "unknown event kind '{other}' (expected node_fail|node_recover|node_join|\
+                     tenant_arrive|tenant_depart|bandwidth_degrade|bandwidth_restore)"
+                ))
+            }
+        };
+        Ok(TimedEvent { at_s, event })
+    }
+
+    /// Validate the scripted events against a concrete deployment: node
+    /// indices in range, tenant ids known, and a joining node not touched
+    /// before its join.
+    pub fn validate(&self, n_nodes: usize, tenant_ids: &[String]) -> Result<(), String> {
+        for (i, te) in self.events.iter().enumerate() {
+            if let Some(node) = te.event.node() {
+                if node >= n_nodes {
+                    return Err(format!(
+                        "event {i} ({}): node {node} out of range for {n_nodes} nodes",
+                        te.event.kind()
+                    ));
+                }
+            }
+            if let Some(t) = te.event.tenant() {
+                if !tenant_ids.iter().any(|id| id == t) {
+                    return Err(format!(
+                        "event {i} ({}): unknown tenant '{t}' (known: {})",
+                        te.event.kind(),
+                        tenant_ids.join(", ")
+                    ));
+                }
+            }
+        }
+        // A node with a NodeJoin starts offline; no earlier event may
+        // reference it (the script would be ambiguous about its state).
+        for node in self.joining_nodes() {
+            let join_t = self
+                .events
+                .iter()
+                .filter(|te| te.event == ClusterEvent::NodeJoin { node })
+                .map(|te| te.at_s)
+                .fold(f64::INFINITY, f64::min);
+            for te in &self.events {
+                if te.event.node() == Some(node)
+                    && te.event != (ClusterEvent::NodeJoin { node })
+                    && te.at_s < join_t
+                {
+                    return Err(format!(
+                        "node {node} is referenced at t={} before its node_join at t={join_t}",
+                        te.at_s
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Nodes that start offline (they have a `node_join` event).
+    pub fn joining_nodes(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for te in &self.events {
+            if let ClusterEvent::NodeJoin { node } = te.event {
+                if !out.contains(&node) {
+                    out.push(node);
+                }
+            }
+        }
+        out
+    }
+
+    /// Tenants that start dormant (they have a `tenant_arrive` event).
+    pub fn arriving_tenants(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for te in &self.events {
+            if let ClusterEvent::TenantArrive { tenant } = &te.event {
+                if !out.iter().any(|t| t == tenant) {
+                    out.push(tenant.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// The full event timeline over `[0, horizon_s)`: scripted events
+    /// merged with the sampled MTBF/MTTR churn processes, sorted by
+    /// timestamp with stable script order on ties.  Purely a function of
+    /// `(self, n_nodes, horizon_s, seed)` — same inputs, bit-identical
+    /// timeline.
+    pub fn timeline(&self, n_nodes: usize, horizon_s: f64, seed: u64) -> Vec<TimedEvent> {
+        let mut all: Vec<TimedEvent> = self.events.clone();
+        if self.mtbf_s > 0.0 && self.mttr_s > 0.0 {
+            let joining = self.joining_nodes();
+            for node in 0..n_nodes {
+                if joining.contains(&node) {
+                    // Churn starts only once the node has joined; keep the
+                    // sampled process off joining nodes for simplicity.
+                    continue;
+                }
+                let mut rng = crate::rngx::Rng::new(
+                    seed ^ 0x6479_6e61_6d69_6373 ^ ((node as u64) << 32),
+                );
+                let mut t = rng.exponential(1.0 / self.mtbf_s);
+                while t < horizon_s {
+                    all.push(TimedEvent { at_s: t, event: ClusterEvent::NodeFail { node } });
+                    t += rng.exponential(1.0 / self.mttr_s);
+                    if t >= horizon_s {
+                        break;
+                    }
+                    all.push(TimedEvent { at_s: t, event: ClusterEvent::NodeRecover { node } });
+                    t += rng.exponential(1.0 / self.mtbf_s);
+                }
+            }
+        }
+        // Stable: ties keep insertion order (scripted before sampled,
+        // lower node first), so the timeline is reproducible.
+        all.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+        all.retain(|te| te.at_s < horizon_s);
+        all
+    }
+}
+
+/// Per-event recovery metrics reported in `RunReport::events`.
+#[derive(Debug, Clone)]
+pub struct EventReport {
+    pub at_s: f64,
+    /// Stable kind tag plus the node/tenant it touched, e.g.
+    /// `node_fail(node 1)`.
+    pub label: String,
+    /// Mean windowed throughput over the windows preceding the event
+    /// (the recovery reference level).
+    pub baseline_thr: f64,
+    /// Seconds from the event to the next committed scheduling round
+    /// (event-driven re-plans make this at most one metrics interval).
+    pub replan_s: Option<f64>,
+    /// Seconds from the event until windowed throughput first sustains
+    /// >= 90% of `baseline_thr` for two consecutive windows.
+    pub recovered_s: Option<f64>,
+    /// Records dropped by this event (0 under `RecoveryPolicy::Requeue`).
+    pub lost_records: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<DynamicsSpec, String> {
+        DynamicsSpec::from_json(&Json::parse(s).expect("valid json"))
+    }
+
+    #[test]
+    fn parses_scripted_timeline() {
+        let spec = parse(
+            r#"{"recovery": "loss", "events": [
+                {"at": 300, "kind": "node_fail", "node": 1},
+                {"at": 600, "kind": "node_recover", "node": 1},
+                {"at": 100, "kind": "tenant_arrive", "tenant": "speech"},
+                {"at": 400, "kind": "bandwidth_degrade", "node": 0, "factor": 0.25},
+                {"at": 500, "kind": "bandwidth_restore", "node": 0},
+                {"at": 900, "kind": "tenant_depart", "tenant": "speech"},
+                {"at": 200, "kind": "node_join", "node": 2}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.events.len(), 7);
+        assert_eq!(spec.recovery, RecoveryPolicy::Loss);
+        assert_eq!(spec.joining_nodes(), vec![2]);
+        assert_eq!(spec.arriving_tenants(), vec!["speech".to_string()]);
+        let tl = spec.timeline(3, 1000.0, 7);
+        assert_eq!(tl.len(), 7);
+        assert!(tl.windows(2).all(|w| w[0].at_s <= w[1].at_s), "sorted");
+        assert_eq!(tl[0].event, ClusterEvent::TenantArrive { tenant: "speech".into() });
+    }
+
+    #[test]
+    fn rejects_unknown_kinds_and_bad_timestamps() {
+        let bad_kind = parse(r#"{"events": [{"at": 1, "kind": "node_explode", "node": 0}]}"#);
+        assert!(bad_kind.unwrap_err().contains("unknown event kind"));
+        let no_at = parse(r#"{"events": [{"kind": "node_fail", "node": 0}]}"#);
+        assert!(no_at.unwrap_err().contains("'at'"));
+        let neg_at = parse(r#"{"events": [{"at": -5, "kind": "node_fail", "node": 0}]}"#);
+        assert!(neg_at.unwrap_err().contains("'at'"));
+        let bad_factor =
+            parse(r#"{"events": [{"at": 1, "kind": "bandwidth_degrade", "node": 0, "factor": 1.5}]}"#);
+        assert!(bad_factor.unwrap_err().contains("factor"));
+        let no_tenant = parse(r#"{"events": [{"at": 1, "kind": "tenant_arrive"}]}"#);
+        assert!(no_tenant.unwrap_err().contains("tenant"));
+        let neg_node = parse(r#"{"events": [{"at": 1, "kind": "node_fail", "node": -1}]}"#);
+        assert!(neg_node.unwrap_err().contains("'node'"));
+        let frac_node = parse(r#"{"events": [{"at": 1, "kind": "node_fail", "node": 1.5}]}"#);
+        assert!(frac_node.unwrap_err().contains("'node'"));
+        let bad_recovery = parse(r#"{"recovery": "yolo", "events": []}"#);
+        assert!(bad_recovery.unwrap_err().contains("recovery"));
+        let bad_mtbf = parse(r#"{"mtbf_s": 100}"#);
+        assert!(bad_mtbf.unwrap_err().contains("mttr_s"));
+    }
+
+    #[test]
+    fn validates_against_deployment() {
+        let spec = parse(r#"{"events": [{"at": 1, "kind": "node_fail", "node": 9}]}"#).unwrap();
+        assert!(spec.validate(2, &["pdf".into()]).unwrap_err().contains("out of range"));
+        let spec =
+            parse(r#"{"events": [{"at": 1, "kind": "tenant_depart", "tenant": "ghost"}]}"#)
+                .unwrap();
+        assert!(spec.validate(2, &["pdf".into()]).unwrap_err().contains("unknown tenant"));
+        let spec = parse(
+            r#"{"events": [
+                {"at": 50, "kind": "node_fail", "node": 1},
+                {"at": 100, "kind": "node_join", "node": 1}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(spec.validate(2, &["pdf".into()]).unwrap_err().contains("before its node_join"));
+    }
+
+    #[test]
+    fn mtbf_timeline_is_deterministic_and_alternates() {
+        let spec = DynamicsSpec { mtbf_s: 400.0, mttr_s: 60.0, ..Default::default() };
+        let a = spec.timeline(4, 3600.0, 42);
+        let b = spec.timeline(4, 3600.0, 42);
+        assert_eq!(a, b, "same seed, bit-identical timeline");
+        let c = spec.timeline(4, 3600.0, 43);
+        assert_ne!(a, c, "seed perturbs the sampled churn");
+        assert!(!a.is_empty(), "an hour at 400s MTBF over 4 nodes churns");
+        // Per node: fail and recover strictly alternate, fail first.
+        for node in 0..4 {
+            let evs: Vec<&ClusterEvent> = a
+                .iter()
+                .filter(|te| te.event.node() == Some(node))
+                .map(|te| &te.event)
+                .collect();
+            for (i, ev) in evs.iter().enumerate() {
+                let want = if i % 2 == 0 { "node_fail" } else { "node_recover" };
+                assert_eq!(ev.kind(), want, "node {node} event {i}");
+            }
+        }
+        assert!(a.iter().all(|te| te.at_s < 3600.0));
+    }
+
+    #[test]
+    fn empty_spec_is_empty() {
+        assert!(DynamicsSpec::default().is_empty());
+        assert!(DynamicsSpec::default().timeline(8, 1e4, 0).is_empty());
+    }
+}

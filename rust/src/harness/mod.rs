@@ -279,6 +279,8 @@ mod tests {
             estimator_mape: Default::default(),
             cluster_eval: vec![],
             items_processed: 0,
+            events: vec![],
+            lost_records: 0,
         };
         let reports = vec![mk(1.0), mk(5.0), mk(3.0)];
         let s = summarize(&jobs, &reports);

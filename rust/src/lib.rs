@@ -30,6 +30,7 @@ pub mod adaptation;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
+pub mod dynamics;
 pub mod harness;
 pub mod linalg;
 pub mod observation;

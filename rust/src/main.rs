@@ -6,6 +6,8 @@
 //!               [--native-gp] [--config cfg.json]
 //! trident run   --pipelines pdf,speech [--weights 2,1]          # multi-tenant shared cluster
 //! trident run   --tenancy tenancy.json                          # full tenant control
+//! trident run   --pipelines pdf,speech --dynamics churn.json    # scripted cluster dynamics
+//! trident run   --pipeline pdf --mtbf 600 --mttr 60             # stochastic node churn
 //! trident compare --pipeline pdf [--duration 1800] [--jobs J]   # all policies, parallel
 //! trident compare --pipelines pdf,speech                        # multi-tenant comparison
 //! trident sweep --pipeline pdf --seeds 4 --jobs 4 [--policies static,trident]
@@ -22,6 +24,7 @@ use std::time::{Duration, Instant};
 
 use trident::config::{ClusterSpec, Json, Tenancy, TenantSpec, TridentConfig};
 use trident::coordinator::{Coordinator, Policy, Variant};
+use trident::dynamics::{DynamicsSpec, RecoveryPolicy};
 use trident::harness::{self, Job};
 use trident::report::{f2, Table};
 use trident::sim::ItemAttrs;
@@ -128,6 +131,57 @@ fn build_cfg(args: &Args) -> TridentConfig {
 /// True when the invocation names more than one tenant (either flag).
 fn multi_tenant(args: &Args) -> bool {
     args.map.contains_key("tenancy") || args.map.contains_key("pipelines")
+}
+
+/// Cluster-dynamics spec from the CLI: `--dynamics file.json` (scripted
+/// timeline) and/or `--mtbf S [--mttr S]` (stochastic node churn), with
+/// `--recovery requeue|loss`.  Strict, mirroring `--pipeline`: parse
+/// errors, unknown event kinds, and bad timestamps abort with exit
+/// code 2 rather than silently running a different scenario.
+fn dynamics_of(args: &Args) -> Option<DynamicsSpec> {
+    let mut spec = if let Some(path) = args.map.get("dynamics") {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("cannot read --dynamics file '{path}': {e}");
+            std::process::exit(2);
+        });
+        let j = Json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("cannot parse --dynamics json: {e}");
+            std::process::exit(2);
+        });
+        DynamicsSpec::from_json(&j).unwrap_or_else(|e| {
+            eprintln!("invalid --dynamics spec: {e}");
+            std::process::exit(2);
+        })
+    } else if args.map.contains_key("mtbf") || args.map.contains_key("mttr") {
+        DynamicsSpec::default()
+    } else {
+        return None;
+    };
+    if let Some(v) = args.map.get("mtbf") {
+        spec.mtbf_s = v.parse().unwrap_or_else(|_| {
+            eprintln!("invalid --mtbf '{v}' (expected seconds)");
+            std::process::exit(2);
+        });
+    }
+    if let Some(v) = args.map.get("mttr") {
+        spec.mttr_s = v.parse().unwrap_or_else(|_| {
+            eprintln!("invalid --mttr '{v}' (expected seconds)");
+            std::process::exit(2);
+        });
+    }
+    if spec.mtbf_s > 0.0 && spec.mttr_s <= 0.0 {
+        // Strict, matching the JSON path: never silently invent a repair
+        // time the user did not ask for.
+        eprintln!("--mtbf requires a positive --mttr (mean time to recovery, seconds)");
+        std::process::exit(2);
+    }
+    if let Some(v) = args.map.get("recovery") {
+        spec.recovery = RecoveryPolicy::parse(v).unwrap_or_else(|e| {
+            eprintln!("invalid --recovery: {e}");
+            std::process::exit(2);
+        });
+    }
+    Some(spec)
 }
 
 /// `--weights 2,1` parallel to `--pipelines` (strict: counts must match,
@@ -249,7 +303,7 @@ fn build_coordinator(args: &Args, variant: Variant, seed: u64) -> Coordinator {
     let nodes = args.f64("nodes", 8.0) as usize;
     let cluster = ClusterSpec::homogeneous(nodes, 256.0, 1024.0, 8, 65536.0, 12_500.0);
     let cfg = build_cfg(args);
-    if multi_tenant(args) {
+    let mut coord = if multi_tenant(args) {
         let (tenancy, traces, srcs) = tenancy_of(args);
         Coordinator::new_tenancy(tenancy, cluster, traces, cfg, variant, srcs, seed)
             .unwrap_or_else(|e| {
@@ -260,7 +314,14 @@ fn build_coordinator(args: &Args, variant: Variant, seed: u64) -> Coordinator {
         let items = args.f64("items", 50_000.0) as u64;
         let (pl, trace, src) = pipeline_of(&args.get("pipeline", "pdf"), items);
         Coordinator::new(pl, cluster, trace, cfg, variant, src, seed)
+    };
+    if let Some(spec) = dynamics_of(args) {
+        coord.set_dynamics(spec).unwrap_or_else(|e| {
+            eprintln!("invalid --dynamics spec: {e}");
+            std::process::exit(2);
+        });
     }
+    coord
 }
 
 fn run_one(args: &Args, policy: Policy) -> trident::coordinator::RunReport {
@@ -525,6 +586,27 @@ fn main() {
                 let mean = r.milp_ms.iter().sum::<f64>() / r.milp_ms.len() as f64;
                 println!("MILP solves: {} (mean {:.0} ms)", r.milp_ms.len(), mean);
             }
+            if !r.events.is_empty() {
+                println!(
+                    "dynamics: {} events, {} records lost",
+                    r.events.len(),
+                    r.lost_records
+                );
+                for ev in &r.events {
+                    let fmt_opt = |v: Option<f64>| match v {
+                        Some(s) => format!("{s:.0}s"),
+                        None => "-".to_string(),
+                    };
+                    println!(
+                        "  [{:.0}s] {}: replan {} recover(90%) {} lost {}",
+                        ev.at_s,
+                        ev.label,
+                        fmt_opt(ev.replan_s),
+                        fmt_opt(ev.recovered_s),
+                        ev.lost_records
+                    );
+                }
+            }
         }
         "compare" => {
             let duration = args.f64("duration", 1800.0);
@@ -640,6 +722,7 @@ fn main() {
                  [--pipelines pdf,speech [--weights 2,1]] [--tenancy file.json] [--policy ...] \
                  [--policies a,b,c] [--seeds N] [--jobs J] [--duration S] [--nodes N] [--seed S] \
                  [--native-gp] [--join-colocate] \
+                 [--dynamics file.json] [--mtbf S] [--mttr S] [--recovery requeue|loss] \
                  [--max-pivots N] [--assert-speedup S]   (milp-bench solver-perf gates)"
             );
         }

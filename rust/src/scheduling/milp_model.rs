@@ -200,29 +200,35 @@ pub struct SchedulePlan {
 /// variables and rows), so round r's optimal root basis is
 /// primal-feasible-or-near for round r+1 and the revised simplex
 /// converges in a few pivots instead of a full two-phase solve.
-/// Invalidation rule: **shape change ⇒ drop** — the cache is keyed by a
-/// structural hash of the problem (variable count, integrality,
-/// per-row comparison operators and coefficient sparsity pattern;
-/// coefficient *values* excluded, since tolerating their drift is the
-/// point), and a mismatched key simply cold-starts and re-caches.
+/// Invalidation rule: **same shape ⇒ reuse, changed shape ⇒ repair** —
+/// the cache is keyed by a structural hash of the problem (variable
+/// count, integrality, per-row comparison operators and coefficient
+/// sparsity pattern; coefficient *values* excluded, since tolerating
+/// their drift is the point).  A key match replays the basis verbatim.
+/// A mismatch — a topology event removed or restored a node, or spliced
+/// a tenant in/out — takes the *restricted-warm* path instead of going
+/// fully cold: variables and rows are named by stable op/node/tenant
+/// identity, so [`BasisSnapshot::remap_to`] can price out the removed
+/// node's columns (rows whose basic column vanished seat their logical)
+/// and keep everything that survived.  A repair that turns out singular
+/// is rejected by the LP layer and falls back to cold, so the path can
+/// only ever save pivots.
 #[derive(Debug, Default)]
 pub struct BasisCache {
     key: Option<u64>,
     basis: Option<BasisSnapshot>,
+    /// Variable / row names of the cached problem, for the name-based
+    /// repair across shape changes.
+    var_names: Vec<String>,
+    row_names: Vec<String>,
+    /// Shape-mismatch lookups salvaged by the restricted-warm repair
+    /// (diagnostics; asserted by the dynamics tests).
+    pub restricted_repairs: u64,
 }
 
 impl BasisCache {
     pub fn new() -> BasisCache {
         BasisCache::default()
-    }
-
-    /// True when a basis for `key` is available.
-    fn lookup(&self, key: u64) -> Option<&BasisSnapshot> {
-        if self.key == Some(key) {
-            self.basis.as_ref()
-        } else {
-            None
-        }
     }
 }
 
@@ -320,10 +326,22 @@ pub fn solve_with_options(
                 .fold(f64::INFINITY, f64::min)
         })
         .collect();
+    // Variables and rows are named by stable op/node/tenant IDENTITY
+    // (names, not positional indices): a topology event that removes a
+    // node or splices a tenant out shifts every position, and the
+    // restricted-warm basis repair (`BasisCache`) aligns the surviving
+    // columns/rows across rounds by these names.
     let (t_min, t_v): (Option<Var>, Vec<Var>) = if multi {
         let z = prob.cont("T_min", 0.0, f64::INFINITY, 1.0);
         let ts = (0..nt)
-            .map(|t| prob.cont(&format!("T_{t}"), 0.0, t_ub_t[t].max(1.0) * 2.0, 1e-6))
+            .map(|t| {
+                prob.cont(
+                    &format!("T_{}", input.tenants[t].name),
+                    0.0,
+                    t_ub_t[t].max(1.0) * 2.0,
+                    1e-6,
+                )
+            })
             .collect();
         (Some(z), ts)
     } else {
@@ -335,7 +353,7 @@ pub fn solve_with_options(
         for (t, tv) in t_v.iter().enumerate() {
             // T_min <= T_t / w_t  <=>  w_t * T_min - T_t <= 0.
             prob.constrain(
-                &format!("maxmin_{t}"),
+                &format!("maxmin_{}", input.tenants[t].name),
                 vec![(z, input.tenants[t].weight), (*tv, -1.0)],
                 Cmp::Le,
                 0.0,
@@ -351,12 +369,12 @@ pub fn solve_with_options(
     let mut x_v = vec![Vec::with_capacity(k); n];
     let mut b_v = Vec::with_capacity(n);
     for (i, o) in input.ops.iter().enumerate() {
-        let p = prob.int(&format!("p_{i}"), (o.n_new.max(1)) as f64, cap_i[i], 0.0);
+        let p = prob.int(&format!("p_{}", o.name), (o.n_new.max(1)) as f64, cap_i[i], 0.0);
         p_v.push(p);
         for kk in 0..k {
             let xmax = per_node_cap(o, &input.nodes[kk]);
             let x = prob.int(
-                &format!("x_{i}_{kk}"),
+                &format!("x_{}_{}", o.name, input.nodes[kk].name),
                 0.0,
                 xmax,
                 -eps_node * kk as f64,
@@ -373,15 +391,15 @@ pub fn solve_with_options(
         } else {
             0.0
         };
-        let b = prob.int(&format!("b_{i}"), 0.0, b_hi, 0.0);
+        let b = prob.int(&format!("b_{}", o.name), 0.0, b_hi, 0.0);
         if has_cand && input.all_at_once {
             // all-at-once ablation: switch everything or nothing; model as
             // b == n_old when the transition is profitable is nonlinear, so
             // we let the MILP choose via a binary-scaled variable: b in
             // {0, n_old} via auxiliary binary.
-            let z = prob.int(&format!("z_{i}"), 0.0, 1.0, 0.0);
+            let z = prob.int(&format!("z_{}", o.name), 0.0, 1.0, 0.0);
             prob.constrain(
-                &format!("allatonce_{i}"),
+                &format!("allatonce_{}", o.name),
                 vec![(b, 1.0), (z, -(o.n_old as f64))],
                 Cmp::Eq,
                 0.0,
@@ -400,7 +418,7 @@ pub fn solve_with_options(
         //    = g*UTcur*p + g*(UThat - UTcur)*b + g*n_new*(UTcand - UTcur)
         let rhs = g * o.n_new as f64 * (ut_cand - o.ut_cur);
         prob.constrain(
-            &format!("thr_{i}"),
+            &format!("thr_{}", o.name),
             vec![
                 (t_v[input.tenant_of(i)], 1.0),
                 (p_v[i], -g * o.ut_cur),
@@ -411,7 +429,7 @@ pub fn solve_with_options(
         );
         // p_stay >= 0 (Eq. 26): p - b >= n_new
         prob.constrain(
-            &format!("stay_{i}"),
+            &format!("stay_{}", o.name),
             vec![(p_v[i], 1.0), (b_v[i], -1.0)],
             Cmp::Ge,
             o.n_new as f64,
@@ -422,21 +440,21 @@ pub fn solve_with_options(
     for i in 0..n {
         let mut c: Vec<(Var, f64)> = x_v[i].iter().map(|&x| (x, 1.0)).collect();
         c.push((p_v[i], -1.0));
-        prob.constrain(&format!("place_{i}"), c, Cmp::Eq, 0.0);
+        prob.constrain(&format!("place_{}", input.ops[i].name), c, Cmp::Eq, 0.0);
     }
 
     // Node resource capacity (Eqs. 15–17).
     for (kk, node) in input.nodes.iter().enumerate() {
         let cpu: Vec<(Var, f64)> = (0..n).map(|i| (x_v[i][kk], input.ops[i].cpu)).collect();
-        prob.constrain(&format!("cpu_{kk}"), cpu, Cmp::Le, node.cpu_cores);
+        prob.constrain(&format!("cpu_{}", node.name), cpu, Cmp::Le, node.cpu_cores);
         let mem: Vec<(Var, f64)> = (0..n).map(|i| (x_v[i][kk], input.ops[i].mem_gb)).collect();
-        prob.constrain(&format!("mem_{kk}"), mem, Cmp::Le, node.mem_gb);
+        prob.constrain(&format!("mem_{}", node.name), mem, Cmp::Le, node.mem_gb);
         let acc: Vec<(Var, f64)> = (0..n)
             .filter(|&i| input.ops[i].accels > 0)
             .map(|i| (x_v[i][kk], input.ops[i].accels as f64))
             .collect();
         if !acc.is_empty() {
-            prob.constrain(&format!("acc_{kk}"), acc, Cmp::Le, node.accels as f64);
+            prob.constrain(&format!("acc_{}", node.name), acc, Cmp::Le, node.accels as f64);
         }
     }
 
@@ -454,6 +472,11 @@ pub fn solve_with_options(
     // e = exported, m = imported.  production_k = l+e, consumption_k = l+m.
     let mut flow_v: Vec<Vec<(Var, Var, Var)>> = Vec::new();
     if input.placement_aware && !input.edges.is_empty() {
+        // Edges are named by their endpoint ops ("u>v"), nodes by name.
+        let ename = |ei: usize| -> String {
+            let (u, v) = input.edges[ei];
+            format!("{}>{}", input.ops[u].name, input.ops[v].name)
+        };
         for (ei, &(u, v)) in input.edges.iter().enumerate() {
             // D_v is the per-edge volume for forks (replication) and joins
             // (aligned-group consumption) alike; see module docs.
@@ -466,19 +489,20 @@ pub fn solve_with_options(
             let dst_rate = rate_of(&input.ops[v]);
             let mut per_edge = Vec::with_capacity(k);
             for kk in 0..k {
-                let l = prob.cont(&format!("l_{ei}_{kk}"), 0.0, f64::INFINITY, 0.0);
-                let e = prob.cont(&format!("e_{ei}_{kk}"), 0.0, f64::INFINITY, 0.0);
-                let m = prob.cont(&format!("m_{ei}_{kk}"), 0.0, f64::INFINITY, 0.0);
+                let nn = &input.nodes[kk].name;
+                let l = prob.cont(&format!("l_{}_{nn}", ename(ei)), 0.0, f64::INFINITY, 0.0);
+                let e = prob.cont(&format!("e_{}_{nn}", ename(ei)), 0.0, f64::INFINITY, 0.0);
+                let m = prob.cont(&format!("m_{}_{nn}", ename(ei)), 0.0, f64::INFINITY, 0.0);
                 // production <= source capacity on k
                 prob.constrain(
-                    &format!("fsrc_{ei}_{kk}"),
+                    &format!("fsrc_{}_{nn}", ename(ei)),
                     vec![(l, 1.0), (e, 1.0), (x_v[u][kk], -src_rate)],
                     Cmp::Le,
                     0.0,
                 );
                 // consumption <= destination capacity on k
                 prob.constrain(
-                    &format!("fdst_{ei}_{kk}"),
+                    &format!("fdst_{}_{nn}", ename(ei)),
                     vec![(l, 1.0), (m, 1.0), (x_v[v][kk], -dst_rate)],
                     Cmp::Le,
                     0.0,
@@ -491,7 +515,7 @@ pub fn solve_with_options(
                 bal.push((e, 1.0));
                 bal.push((m, -1.0));
             }
-            prob.constrain(&format!("fbal_{ei}"), bal, Cmp::Eq, 0.0);
+            prob.constrain(&format!("fbal_{}", ename(ei)), bal, Cmp::Eq, 0.0);
             // Total consumption equals the rate this edge must carry:
             // sum_k (l+m) = T_t * D_v / D_o^t (the owning tenant's T).
             let mut tot: Vec<(Var, f64)> = Vec::with_capacity(2 * k + 1);
@@ -500,7 +524,7 @@ pub fn solve_with_options(
                 tot.push((m, 1.0));
             }
             tot.push((t_v[input.tenant_of(v)], -d_next / input.d_o_of(v)));
-            prob.constrain(&format!("ftot_{ei}"), tot, Cmp::Eq, 0.0);
+            prob.constrain(&format!("ftot_{}", ename(ei)), tot, Cmp::Eq, 0.0);
             flow_v.push(per_edge);
         }
         // Egress (Eq. 20): per node, exported bytes <= E_max.
@@ -511,7 +535,7 @@ pub fn solve_with_options(
                 c.push((per_edge[kk].1, input.ops[u].out_mb));
             }
             c.push((e_max, -1.0));
-            prob.constrain(&format!("egress_{kk}"), c, Cmp::Le, 0.0);
+            prob.constrain(&format!("egress_{}", input.nodes[kk].name), c, Cmp::Le, 0.0);
         }
         // Join co-location (flag): tie a join's in-edge consumption
         // together per node, so sibling partials of a group are consumed
@@ -532,7 +556,7 @@ pub fn solve_with_options(
                         let (l0, _, m0) = flow_v[e0][kk];
                         let (l1, _, m1) = flow_v[e][kk];
                         prob.constrain(
-                            &format!("jco_{v}_{e}_{kk}"),
+                            &format!("jco_{}_{}", ename(e), input.nodes[kk].name),
                             vec![(l0, 1.0), (m0, 1.0), (l1, -1.0), (m1, -1.0)],
                             Cmp::Eq,
                             0.0,
@@ -548,11 +572,30 @@ pub fn solve_with_options(
     let warm = warm_start(input, &prob, p_v.len(), &p_v, &x_v, &b_v, &flow_v, &t_v, t_min, e_max, j_mig);
 
     let key = shape_key(&prob);
+    let hit = cache.key == Some(key);
+    let mut repaired: Option<BasisSnapshot> = None;
+    if !hit {
+        if let Some(cached) = &cache.basis {
+            // Shape change (topology event): restricted-warm repair by
+            // stable variable/row names instead of a cold start.
+            repaired = cached.remap_to(&cache.var_names, &cache.row_names, &prob);
+            if repaired.is_some() {
+                cache.restricted_repairs += 1;
+            }
+        }
+    }
+    // Same shape ⇒ replay the cached basis by reference (no clone on the
+    // steady-state path); changed shape ⇒ use the repair, if any.
+    let warm_basis = if hit { cache.basis.as_ref() } else { repaired.as_ref() };
     let (sol, stats, root_basis) =
-        crate::solver::solve_milp_opts(&prob, budget, warm, cache.lookup(key), opts);
-    // Re-cache for the next round (shape change ⇒ the stale entry is
-    // overwritten here; a failed root solve drops the entry so a bad
-    // basis is never replayed).
+        crate::solver::solve_milp_opts(&prob, budget, warm, warm_basis, opts);
+    // Re-cache for the next round (a failed root solve drops the entry
+    // so a bad basis is never replayed).  Names only change with the
+    // shape, so the steady-state round skips the string clones too.
+    if !hit {
+        cache.var_names = prob.names.clone();
+        cache.row_names = prob.rows.iter().map(|r| r.name.clone()).collect();
+    }
     cache.key = Some(key);
     cache.basis = root_basis;
     decode(input, sol, stats, &t_v, &p_v, &x_v, &b_v, &flow_v)
@@ -815,10 +858,12 @@ fn warm_start(
             sol[x_v[i][kk].0] = x[i][kk] as f64;
         }
     }
-    // all-at-once auxiliary binaries (z_i): b is 0 or n_old by construction.
+    // all-at-once auxiliary binaries (z_<op>): b is 0 or n_old by
+    // construction (variables are named by op identity, so map the name
+    // back to its row).
     for (idx, name) in prob.names.iter().enumerate() {
         if let Some(rest) = name.strip_prefix("z_") {
-            let i: usize = rest.parse().ok()?;
+            let i = input.ops.iter().position(|o| o.name == rest)?;
             sol[idx] = if b_pick[i] > 0 { 1.0 } else { 0.0 };
         }
     }
@@ -1286,11 +1331,12 @@ mod tests {
         }
     }
 
-    /// Shape change ⇒ drop: a different topology must not reuse the
-    /// cached basis (it cold-starts and re-caches instead of panicking
-    /// or replaying a stale basis).
+    /// Shape change ⇒ repair, not replay: a different topology must not
+    /// reuse the cached basis verbatim — it goes through the name-based
+    /// restricted-warm repair (and never panics or replays stale
+    /// indices).  Results must match a cold solve either way.
     #[test]
-    fn cache_invalidates_on_shape_change() {
+    fn cache_repairs_on_shape_change() {
         let mut cache = BasisCache::new();
         let p1 = solve_cached(&base_input(2), Duration::from_secs(10), &mut cache);
         assert!(p1.t_pred > 0.0);
@@ -1299,11 +1345,59 @@ mod tests {
         input2.ops[0].ut_cur *= 1.01;
         let p2 = solve_cached(&input2, Duration::from_secs(10), &mut cache);
         assert!(p2.t_pred > 0.0, "{:?}", p2.status);
-        assert!(
-            !p2.stats.root_warm,
-            "shape change must not warm start the root: {:?}",
-            p2.stats
-        );
+        assert_eq!(cache.restricted_repairs, 1, "shape change takes the repair path");
+        let cold = solve(&input2, Duration::from_secs(10));
+        if p2.status == Status::Optimal && cold.status == Status::Optimal {
+            assert!(
+                (p2.t_pred - cold.t_pred).abs() <= 1e-3 * (1.0 + cold.t_pred.abs()),
+                "repaired {} vs cold {}",
+                p2.t_pred,
+                cold.t_pred
+            );
+        }
+    }
+
+    /// The headline restricted-warm case: a node FAILS between rounds, so
+    /// round 2's MILP covers one node fewer.  The cached basis is
+    /// repaired by pricing out the dead node's columns (stable names
+    /// align the survivors) and the plan must match a cold solve of the
+    /// restricted problem.
+    #[test]
+    fn cache_restricted_warm_survives_node_removal() {
+        let mut cache = BasisCache::new();
+        let p1 = solve_cached(&base_input(3), Duration::from_secs(10), &mut cache);
+        assert!(p1.t_pred > 0.0);
+        // Node 1 fails: the surviving problem keeps nodes {0, 2} with
+        // their original names, and drifted rates.
+        let mut input2 = base_input(3);
+        input2.nodes.remove(1);
+        for o in &mut input2.ops {
+            o.cur_x = vec![0; 2];
+            o.ut_cur *= 1.02;
+        }
+        let p2 = solve_cached(&input2, Duration::from_secs(10), &mut cache);
+        assert!(p2.t_pred > 0.0, "{:?}", p2.status);
+        assert_eq!(cache.restricted_repairs, 1, "node removal takes the repair path");
+        assert_eq!(p2.x[0].len(), 2, "plan covers the surviving node set");
+        let cold = solve(&input2, Duration::from_secs(10));
+        if p2.status == Status::Optimal && cold.status == Status::Optimal {
+            assert!(
+                (p2.t_pred - cold.t_pred).abs() <= 1e-3 * (1.0 + cold.t_pred.abs()),
+                "restricted-warm {} vs cold {}",
+                p2.t_pred,
+                cold.t_pred
+            );
+        }
+        // Round 3: same (restricted) shape again — the plain cached-basis
+        // path resumes.
+        let mut input3 = input2.clone();
+        for o in &mut input3.ops {
+            o.ut_cur *= 1.01;
+        }
+        let p3 = solve_cached(&input3, Duration::from_secs(10), &mut cache);
+        assert!(p3.t_pred > 0.0);
+        assert!(p3.stats.root_warm, "same-shape round must warm start: {:?}", p3.stats);
+        assert_eq!(cache.restricted_repairs, 1, "no further repair needed");
     }
 
     #[test]

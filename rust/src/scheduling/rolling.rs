@@ -90,6 +90,16 @@ impl RollingState {
         }
     }
 
+    /// A node failure removed instances with no drain: clamp the books to
+    /// what actually survived.  Failed instances are treated as
+    /// already-stopped — they owe no stop cost, and a dead candidate
+    /// instance no longer counts toward `n_new` (so the scheduler's
+    /// `p >= n_new` floor never demands capacity that no longer exists).
+    pub fn on_capacity_loss(&mut self, p_live: u32) {
+        self.n_new = self.n_new.min(p_live);
+        self.sync_count(p_live);
+    }
+
     /// Sync instance count without a transition round (plan with b=0).
     pub fn sync_count(&mut self, p: u32) {
         if self.candidate.is_none() {

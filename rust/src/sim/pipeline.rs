@@ -28,7 +28,7 @@
 //!   A linear chain is the path-shaped special case and reproduces the
 //!   pre-DAG executor event-for-event.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::config::{ClusterSpec, OperatorKind, PipelineSpec, TenancyView};
 use crate::rngx::Rng;
@@ -159,6 +159,32 @@ pub struct PipelineSim {
     /// here instead of dropped, and adopted by the next instance added,
     /// so in-flight sibling partials are never orphaned.
     parked_joins: Vec<BTreeMap<u64, Vec<Option<Item>>>>,
+    /// Non-join analogue of `parked_joins`: input records stranded while
+    /// their operator momentarily had no live instance (a node failure
+    /// under the requeue recovery policy), adopted by the operator's next
+    /// instance.  Always empty absent cluster dynamics.
+    parked_items: Vec<Vec<Item>>,
+    /// Node availability (cluster dynamics).  A down node accepts no
+    /// instances; all nodes are up absent a dynamics timeline.
+    node_up: Vec<bool>,
+    /// Egress-link rate multiplier per node
+    /// (`BandwidthDegrade`/`BandwidthRestore`; 1.0 = spec rate).
+    bw_factor: Vec<f64>,
+    /// Tenant activity (dynamic tenancy): a dormant or departed tenant's
+    /// source emits nothing.  All tenants are active absent dynamics.
+    tenant_active: Vec<bool>,
+    /// Records dropped by node failures, per op (`RecoveryPolicy::Loss`).
+    pub lost_records: Vec<u64>,
+    /// Distinct lineages killed by node failures, per tenant — the exact
+    /// per-tenant loss ledger (a lineage counts once however many of its
+    /// replicas/partials are dropped).
+    pub lost_items_t: Vec<u64>,
+    /// Lineage ids already counted in `lost_items_t`.
+    lost_ids: BTreeSet<u64>,
+    /// Tombstoned join-group ids per op: a killed lineage's trailing
+    /// sibling partials are dropped on arrival instead of opening a group
+    /// that can never complete (which would wedge the join forever).
+    dead_ids: Vec<BTreeSet<u64>>,
     /// Next lineage id handed to a source item or a freshly split child.
     next_item_id: u64,
     op_acc: Vec<OpWindowAcc>,
@@ -268,6 +294,14 @@ impl PipelineSim {
             edges_in,
             join_affinity: vec![BTreeMap::new(); n_ops],
             parked_joins: vec![BTreeMap::new(); n_ops],
+            parked_items: vec![Vec::new(); n_ops],
+            node_up: vec![true; cluster.nodes.len()],
+            bw_factor: vec![1.0; cluster.nodes.len()],
+            tenant_active: vec![true; n_tenants],
+            lost_records: vec![0; n_ops],
+            lost_items_t: vec![0; n_tenants],
+            lost_ids: BTreeSet::new(),
+            dead_ids: vec![BTreeSet::new(); n_ops],
             next_item_id: 0,
             op_acc: vec![OpWindowAcc::new(); n_ops],
             attr_ema: vec![None; n_ops],
@@ -333,6 +367,9 @@ impl PipelineSim {
     /// Launch an instance of `op` on `node` with config θ.  Fails if the
     /// node lacks accelerator capacity.
     pub fn add_instance(&mut self, op: usize, node: usize, theta: Vec<f64>) -> Result<usize, String> {
+        if !self.node_up[node] {
+            return Err(format!("node {node} is down"));
+        }
         let o = &self.spec.operators[op];
         let ns = &mut self.nodes[node];
         let nspec = &self.cluster.nodes[node];
@@ -369,6 +406,12 @@ impl PipelineSim {
             created_at: now,
         });
         self.by_op[op].push(id);
+        // Adopt input records stranded while the operator had no live
+        // instance (node failure under the requeue recovery policy).
+        if !self.parked_items[op].is_empty() {
+            let parked = std::mem::take(&mut self.parked_items[op]);
+            self.instances[id].queue.extend(parked);
+        }
         // Adopt any join groups parked while the operator had no live
         // instance; groups completed in the meantime collapse straight
         // into the queue (processed once this instance is ready).
@@ -450,7 +493,9 @@ impl PipelineSim {
         ns.cpu_booked -= o.cpu;
         ns.mem_booked -= o.mem_gb;
         ns.accel_booked -= o.accels;
-        // Redistribute any leftover queue items to peers.
+        // Redistribute any leftover queue items to peers; with no peer
+        // left (a failure emptied the op), park them for the next
+        // instance instead of dropping.
         let leftovers: Vec<Item> = self.instances[id].queue.drain(..).collect();
         let peers = self.instances_of(op);
         if !peers.is_empty() {
@@ -461,6 +506,8 @@ impl PipelineSim {
             for p in &peers {
                 self.try_start(*p);
             }
+        } else {
+            self.parked_items[op].extend(leftovers);
         }
         // Migrate buffered join groups (and their affinity) to a live
         // peer; without peers they are parked for the operator's next
@@ -562,20 +609,35 @@ impl PipelineSim {
         }
         // No live instance.  Join partials are parked (an in-flight
         // sibling may already be buffered; dropping would wedge the group
-        // forever); non-join items keep the legacy drop — unreachable
-        // under plans that hold p_i >= 1.
+        // forever); non-join items are parked too — reachable when a node
+        // failure momentarily leaves the operator with p = 0 — and
+        // adopted by the operator's next instance.
         let in_edges = &self.edges_in[op];
         if in_edges.len() > 1 {
-            let slot = in_edges
-                .iter()
-                .position(|&e| e == edge)
-                .expect("redelivered edge must enter the destination operator");
-            let n_slots = in_edges.len();
-            let group = self.parked_joins[op]
-                .entry(item.id)
-                .or_insert_with(|| vec![None; n_slots]);
-            group[slot] = Some(item);
+            self.park_join_partial(op, edge, item);
+        } else {
+            self.parked_items[op].push(item);
         }
+    }
+
+    /// Park a join partial for `op` (no live instance to buffer it):
+    /// slotted into the operator's parked group, dropped against the loss
+    /// ledger when its lineage is tombstoned.
+    fn park_join_partial(&mut self, op: usize, edge: usize, item: Item) {
+        if self.dead_ids[op].contains(&item.id) {
+            self.lost_records[op] += 1;
+            return;
+        }
+        let in_edges = &self.edges_in[op];
+        let slot = in_edges
+            .iter()
+            .position(|&e| e == edge)
+            .expect("parked edge must enter the destination operator");
+        let n_slots = in_edges.len();
+        let group = self.parked_joins[op]
+            .entry(item.id)
+            .or_insert_with(|| vec![None; n_slots]);
+        group[slot] = Some(item);
     }
 
     /// Hand an item arriving on `edge` to instance `id`: straight into the
@@ -595,6 +657,14 @@ impl PipelineSim {
             .expect("delivered edge must enter the destination operator");
         let n_slots = in_edges.len();
         let gid = item.id;
+        if self.dead_ids[op].contains(&gid) {
+            // Sibling of a lineage killed by a node failure (Loss
+            // recovery): buffering it would open a group that can never
+            // complete.  Drop and ledger it (the lineage itself was
+            // already counted once).
+            self.lost_records[op] += 1;
+            return;
+        }
         // Holder re-check at arrival time: a sibling partial may have
         // opened this id's group at another instance while we were in
         // flight (both branches dispatched before either landed).  All
@@ -644,7 +714,7 @@ impl PipelineSim {
     /// blocks (the offline paradigm); paced tenants emit one item per
     /// `1/source_rate` tick.
     fn try_source(&mut self, t: usize) {
-        if self.source_done[t] {
+        if self.source_done[t] || !self.tenant_active[t] {
             return;
         }
         let src_op = self.tenancy.sources[t];
@@ -797,6 +867,11 @@ impl PipelineSim {
     }
 
     fn on_batch_done(&mut self, id: usize) {
+        if self.instances[id].state == InstState::Stopped {
+            // The instance died (node failure) with this batch in flight;
+            // its items were already requeued or counted lost.
+            return;
+        }
         let op_idx = self.instances[id].op;
         // Hot path (runs once per finished batch): copy the four scalar
         // fields used below instead of cloning the whole OperatorSpec
@@ -1035,7 +1110,8 @@ impl PipelineSim {
     /// network cost.
     fn send(&mut self, from_node: usize, dest: usize, edge: usize, item: Item) {
         let now = self.engine.now();
-        let rate = self.cluster.nodes[from_node].egress_mbps.max(1.0);
+        let rate =
+            (self.cluster.nodes[from_node].egress_mbps * self.bw_factor[from_node]).max(1.0);
         let ns = &mut self.nodes[from_node];
         ns.egress_mb_window += item.size_mb;
         let start = ns.link_free.max(now);
@@ -1066,6 +1142,249 @@ impl PipelineSim {
                 } else {
                     self.try_start(w);
                 }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Cluster dynamics: node churn, dynamic tenancy, bandwidth shifts
+    // ------------------------------------------------------------------
+
+    /// Node availability map (true = up).
+    pub fn nodes_up(&self) -> &[bool] {
+        &self.node_up
+    }
+
+    /// Tenant activity map (true = source offers load).
+    pub fn tenants_active(&self) -> &[bool] {
+        &self.tenant_active
+    }
+
+    /// Total records dropped by node failures so far
+    /// (`RecoveryPolicy::Loss`; 0 under `Requeue`).
+    pub fn lost_records_total(&self) -> u64 {
+        self.lost_records.iter().sum()
+    }
+
+    /// Ops with any non-stopped instance (including Draining — a failure
+    /// kills those too) on `node`: the sample-invalidation set for
+    /// topology events on that node.
+    pub fn ops_on_node(&self, node: usize) -> Vec<usize> {
+        let mut seen = vec![false; self.spec.n_ops()];
+        for inst in &self.instances {
+            if inst.node == node && inst.state != InstState::Stopped {
+                seen[inst.op] = true;
+            }
+        }
+        (0..self.spec.n_ops()).filter(|&i| seen[i]).collect()
+    }
+
+    /// Bring a node (back) up.  Its capacity returns empty — the next
+    /// scheduling round re-places instances there.
+    pub fn set_node_up(&mut self, node: usize) {
+        self.node_up[node] = true;
+    }
+
+    /// Scale a node's egress-link rate (`BandwidthDegrade`/`Restore`).
+    pub fn set_bandwidth_factor(&mut self, node: usize, factor: f64) {
+        self.bw_factor[node] = factor;
+    }
+
+    /// Splice a tenant's source in or out mid-run.  Activation re-arms
+    /// the source immediately; deactivation stops new admissions while
+    /// already-admitted items keep draining.
+    pub fn set_tenant_active(&mut self, t: usize, active: bool) {
+        if self.tenant_active[t] == active {
+            return;
+        }
+        self.tenant_active[t] = active;
+        if active && !self.source_done[t] {
+            self.engine.after(0.0, Ev::SourceEmit(t as u32));
+        }
+    }
+
+    /// Crash a node: mark it down and kill every instance on it
+    /// *immediately* (no drain — unlike [`stop_instance`]).  What happens
+    /// to the in-flight records is the recovery policy's call:
+    ///
+    /// * `requeue = true` — surviving records re-enter the pipeline at
+    ///   the operator they were lost at (the lineage-re-execution
+    ///   shortcut; re-injection pays no network).  Join groups migrate to
+    ///   a live peer or park, exactly like a graceful stop.  Per-tenant
+    ///   conservation stays exact and nothing is counted lost.
+    /// * `requeue = false` (loss) — queue, batch, blocked outputs, and
+    ///   buffered join groups are dropped and ledgered per op
+    ///   ([`lost_records`](Self::lost_records)) and once per killed
+    ///   lineage per tenant ([`lost_items_t`](Self::lost_items_t));
+    ///   killed lineages are tombstoned at the tenant's joins so trailing
+    ///   sibling partials are dropped on arrival instead of wedging the
+    ///   join.
+    ///
+    /// Transfers already on the wire survive either way: they arrive at
+    /// the stopped instance and reroute to a live peer (or park).
+    /// Returns the records dropped by this event.
+    ///
+    /// [`stop_instance`]: Self::stop_instance
+    /// [`lost_records`]: Self::lost_records
+    /// [`lost_items_t`]: Self::lost_items_t
+    pub fn fail_node(&mut self, node: usize, requeue: bool) -> u64 {
+        self.node_up[node] = false;
+        let lost_before: u64 = self.lost_records.iter().sum();
+        let now = self.engine.now();
+        let victims: Vec<usize> = (0..self.instances.len())
+            .filter(|&i| {
+                self.instances[i].node == node && self.instances[i].state != InstState::Stopped
+            })
+            .collect();
+        for id in victims {
+            let op = self.instances[id].op;
+            // Strip the instance bare, then mark it stopped and release
+            // its bookings (the node is down, but the books must balance
+            // for when it recovers).
+            let (queue, batch, pending, joins) = {
+                let inst = &mut self.instances[id];
+                inst.reconfig = None;
+                if let Some(d) = inst.down_since.take() {
+                    inst.win.down_s += now - d.max(inst.win_start);
+                }
+                inst.state = InstState::Stopped;
+                (
+                    inst.queue.drain(..).collect::<Vec<Item>>(),
+                    std::mem::take(&mut inst.batch),
+                    inst.pending_out.drain(..).collect::<Vec<(usize, Item)>>(),
+                    std::mem::take(&mut inst.join_buf).into_iter().collect::<Vec<_>>(),
+                )
+            };
+            let o = &self.spec.operators[op];
+            let ns = &mut self.nodes[node];
+            ns.cpu_booked -= o.cpu;
+            ns.mem_booked -= o.mem_gb;
+            ns.accel_booked -= o.accels;
+            for (_, slots) in &joins {
+                let mb: f64 = slots.iter().flatten().map(|it| it.size_mb).sum();
+                ns.join_mb -= mb;
+            }
+            if requeue {
+                for item in queue.into_iter().chain(batch) {
+                    self.requeue_input(op, item);
+                }
+                for (edge, item) in pending {
+                    self.recover_in_flight(edge, item);
+                }
+                // Buffered join groups migrate to a live peer or park —
+                // the same never-orphan rule as a graceful stop.
+                let peers = self.instances_of(op);
+                let dest =
+                    peers.iter().copied().min_by_key(|&p| self.instances[p].occupancy());
+                for (gid, slots) in joins {
+                    match dest {
+                        Some(d) => {
+                            let mb: f64 =
+                                slots.iter().flatten().map(|it| it.size_mb).sum();
+                            self.nodes[self.instances[d].node].join_mb += mb;
+                            self.instances[d].join_buf.insert(gid, slots);
+                            self.join_affinity[op].insert(gid, d);
+                        }
+                        None => {
+                            self.join_affinity[op].remove(&gid);
+                            self.parked_joins[op].insert(gid, slots);
+                        }
+                    }
+                }
+            } else {
+                for item in queue.into_iter().chain(batch) {
+                    self.kill_record(op, &item);
+                }
+                for (_, item) in pending {
+                    self.kill_record(op, &item);
+                }
+                for (gid, slots) in joins {
+                    self.join_affinity[op].remove(&gid);
+                    self.lost_records[op] += slots.iter().flatten().count() as u64;
+                    self.kill_lineage(self.tenancy.op_tenant[op], gid);
+                }
+            }
+            self.wake_waiters(op);
+        }
+        self.lost_records.iter().sum::<u64>() - lost_before
+    }
+
+    /// Re-inject a recovered input record at `op`: the least-occupied
+    /// live instance takes it (admission caps waived for recovery — the
+    /// record already held queue space before the crash), or it parks for
+    /// the operator's next instance.
+    fn requeue_input(&mut self, op: usize, item: Item) {
+        let dest = self
+            .instances_of(op)
+            .into_iter()
+            .min_by_key(|&p| self.instances[p].occupancy());
+        match dest {
+            Some(d) => {
+                self.instances[d].queue.push_back(item);
+                self.try_start(d);
+            }
+            None => self.parked_items[op].push(item),
+        }
+    }
+
+    /// Re-inject a recovered blocked output along its pipeline edge:
+    /// join partials go to their group's holder, everything else to the
+    /// least-occupied live downstream instance, else parks.
+    fn recover_in_flight(&mut self, edge: usize, item: Item) {
+        let dst = self.spec.edges[edge].1;
+        if let Some(holder) = self.group_holder(dst, item.id) {
+            self.deliver(holder, edge, item);
+            return;
+        }
+        let dest = self
+            .instances_of(dst)
+            .into_iter()
+            .min_by_key(|&p| self.instances[p].occupancy());
+        match dest {
+            Some(d) => self.deliver(d, edge, item),
+            None => {
+                if self.edges_in[dst].len() > 1 {
+                    self.park_join_partial(dst, edge, item);
+                } else {
+                    self.parked_items[dst].push(item);
+                }
+            }
+        }
+    }
+
+    /// Ledger a record dropped at `op` and kill its lineage.
+    fn kill_record(&mut self, op: usize, item: &Item) {
+        self.lost_records[op] += 1;
+        self.kill_lineage(self.tenancy.op_tenant[op], item.id);
+    }
+
+    /// Kill a lineage: count it once for its tenant, tombstone the id at
+    /// every join of the tenant, and drop any sibling partials it
+    /// already buffered (a group missing a dead sibling could never
+    /// complete — it would pin memory and wedge the join forever).
+    /// Removing a group from a *live* holder frees join admission space,
+    /// so that join's blocked upstream producers are woken.
+    fn kill_lineage(&mut self, tenant: usize, id: u64) {
+        if self.lost_ids.insert(id) {
+            self.lost_items_t[tenant] += 1;
+        }
+        for j in 0..self.spec.n_ops() {
+            if self.tenancy.op_tenant[j] != tenant || self.edges_in[j].len() <= 1 {
+                continue;
+            }
+            self.dead_ids[j].insert(id);
+            if let Some(h) = self.join_affinity[j].remove(&id) {
+                if let Some(slots) = self.instances[h].join_buf.remove(&id) {
+                    let mb: f64 = slots.iter().flatten().map(|it| it.size_mb).sum();
+                    self.nodes[self.instances[h].node].join_mb -= mb;
+                    self.lost_records[j] += slots.iter().flatten().count() as u64;
+                    if self.instances[h].state != InstState::Stopped {
+                        self.wake_waiters(j);
+                    }
+                }
+            }
+            if let Some(slots) = self.parked_joins[j].remove(&id) {
+                self.lost_records[j] += slots.iter().flatten().count() as u64;
             }
         }
     }
@@ -1205,8 +1524,12 @@ impl PipelineSim {
     /// queues, batches, blocked outputs, buffered join partials, and
     /// records still crossing the network (`reserved` transfers).
     pub fn drained(&self) -> bool {
-        self.source_done.iter().all(|&d| d)
+        self.source_done
+            .iter()
+            .zip(&self.tenant_active)
+            .all(|(&d, &active)| d || !active)
             && self.parked_joins.iter().all(BTreeMap::is_empty)
+            && self.parked_items.iter().all(Vec::is_empty)
             && self.instances.iter().all(|i| {
                 i.reserved == 0
                     && (i.state == InstState::Stopped
@@ -1218,9 +1541,14 @@ impl PipelineSim {
     /// exhausted and none of *its* operators hold in-flight work (other
     /// tenants may still be running).
     pub fn tenant_drained(&self, t: usize) -> bool {
-        self.source_done[t]
+        (self.source_done[t] || !self.tenant_active[t])
             && self
                 .parked_joins
+                .iter()
+                .enumerate()
+                .all(|(op, p)| self.tenancy.op_tenant[op] != t || p.is_empty())
+            && self
+                .parked_items
                 .iter()
                 .enumerate()
                 .all(|(op, p)| self.tenancy.op_tenant[op] != t || p.is_empty())

@@ -60,6 +60,114 @@ pub struct BasisSnapshot {
     stat: Vec<u8>, // 0 = Lower, 1 = Upper, 2 = Basic
 }
 
+impl BasisSnapshot {
+    /// Map this snapshot onto a problem whose variable/row sets differ,
+    /// matching columns and rows **by name** — the *restricted warm
+    /// start* behind topology changes in the scheduling layer.  A node
+    /// failure removes that node's columns and rows from the MILP; the
+    /// cached basis is repaired instead of discarded: surviving basic
+    /// columns keep their rows, a row whose basic column vanished prices
+    /// it out and seats its own logical, fresh columns rest nonbasic on a
+    /// finite bound, and fresh rows start with a basic logical.  The
+    /// repaired basis is usually primal-infeasible; the dual simplex
+    /// restores feasibility in a few pivots — and if the restriction
+    /// turns out singular, `LpSolver::solve` rejects it and falls back to
+    /// a cold start, so a bad repair can never degrade results.
+    ///
+    /// Returns `None` when fewer than half of the new rows carry a
+    /// surviving basic column (the repair would be no better than cold).
+    pub fn remap_to(
+        &self,
+        old_vars: &[String],
+        old_rows: &[String],
+        p: &Problem,
+    ) -> Option<BasisSnapshot> {
+        use std::collections::HashMap;
+        let ns_old = old_vars.len();
+        let m_old = old_rows.len();
+        if self.basis.len() != m_old || self.stat.len() != ns_old + m_old {
+            return None;
+        }
+        let ns_new = p.n_vars();
+        let m_new = p.rows.len();
+        if m_new == 0 {
+            return None;
+        }
+        let new_var_idx: HashMap<&str, usize> =
+            p.names.iter().enumerate().map(|(j, n)| (n.as_str(), j)).collect();
+        let new_row_idx: HashMap<&str, usize> =
+            p.rows.iter().enumerate().map(|(i, r)| (r.name.as_str(), i)).collect();
+        let old_var_idx: HashMap<&str, usize> =
+            old_vars.iter().enumerate().map(|(j, n)| (n.as_str(), j)).collect();
+        let old_row_idx: HashMap<&str, usize> =
+            old_rows.iter().enumerate().map(|(i, n)| (n.as_str(), i)).collect();
+        // Old column (structural or logical) → new column, by name.
+        let old_to_new = |j: usize| -> Option<usize> {
+            if j < ns_old {
+                new_var_idx.get(old_vars[j].as_str()).copied()
+            } else {
+                new_row_idx.get(old_rows[j - ns_old].as_str()).map(|&i| ns_new + i)
+            }
+        };
+        // Nonbasic resting sides: carried structural columns keep their
+        // old side (validity-checked against the new bounds), fresh ones
+        // rest on a finite bound; logicals sit at 0 on the side their
+        // comparison admits.
+        let mut stat = vec![0u8; ns_new + m_new];
+        for (j, name) in p.names.iter().enumerate() {
+            let old_side = old_var_idx.get(name.as_str()).map(|&oj| self.stat[oj]);
+            stat[j] = match old_side {
+                Some(1) if p.up[j].is_finite() => 1,
+                Some(0) | Some(1) | Some(2) | None if p.lo[j].is_finite() => 0,
+                _ if p.up[j].is_finite() => 1,
+                _ => 0,
+            };
+        }
+        for (i, row) in p.rows.iter().enumerate() {
+            stat[ns_new + i] = match row.cmp {
+                Cmp::Ge => 1,
+                _ => 0,
+            };
+        }
+        // Seat basic columns: surviving old basics keep their (renamed)
+        // rows; everything else prices out to the row's own logical.
+        let mut basis: Vec<Option<usize>> = vec![None; m_new];
+        let mut used = vec![false; ns_new + m_new];
+        let mut matched = 0usize;
+        for (i, row) in p.rows.iter().enumerate() {
+            if let Some(&oi) = old_row_idx.get(row.name.as_str()) {
+                if let Some(nb) = old_to_new(self.basis[oi] as usize) {
+                    if !used[nb] {
+                        used[nb] = true;
+                        basis[i] = Some(nb);
+                        matched += 1;
+                    }
+                }
+            }
+        }
+        if matched * 2 < m_new {
+            return None;
+        }
+        for (i, b) in basis.iter_mut().enumerate() {
+            if b.is_none() {
+                let slack = ns_new + i;
+                if used[slack] {
+                    // A degenerate old basis seated this logical in a
+                    // different row; repairing that is not worth it.
+                    return None;
+                }
+                used[slack] = true;
+                *b = Some(slack);
+            }
+        }
+        let basis: Vec<u32> = basis.into_iter().map(|b| b.unwrap() as u32).collect();
+        for &b in &basis {
+            stat[b as usize] = 2;
+        }
+        Some(BasisSnapshot { basis, stat })
+    }
+}
+
 /// Result of one LP solve through [`LpSolver`].
 #[derive(Debug, Clone)]
 pub struct LpOutcome {

@@ -1,0 +1,340 @@
+//! Cluster-dynamics integration (the tentpole's contract):
+//!
+//! * same seed + same `DynamicsSpec` ⇒ bit-identical event timeline and
+//!   `RunReport`;
+//! * conservation under churn: a mid-run `NodeFail` on a join-holding
+//!   node keeps per-tenant item accounting exact on the speech DAG, for
+//!   both recovery policies;
+//! * the event-driven re-plan fires within one `metrics_interval_s` of an
+//!   injected `NodeFail`;
+//! * the two-tenant pdf+speech churn scenario recovers >= 90% of
+//!   pre-failure aggregate throughput strictly faster under Trident than
+//!   under the never-re-planning Static baseline.
+
+use trident::config::{ClusterSpec, Tenancy, TenantSpec, TridentConfig};
+use trident::coordinator::{Coordinator, Policy, RunReport, Variant};
+use trident::dynamics::{ClusterEvent, DynamicsSpec, RecoveryPolicy, TimedEvent};
+use trident::sim::PipelineSim;
+use trident::workload::{pdf, speech, Trace};
+
+fn mini_cfg() -> TridentConfig {
+    let mut cfg = TridentConfig::default();
+    cfg.native_gp = true;
+    // Generous budget: the mini 2-node MILP reaches Optimal, so Trident
+    // plans are deterministic under parallel test execution.
+    cfg.milp_time_budget_ms = 10_000;
+    cfg.tune_trigger = 32;
+    cfg.bo_budget = 8;
+    cfg.bo_init = 3;
+    cfg
+}
+
+fn cluster() -> ClusterSpec {
+    ClusterSpec::homogeneous(2, 128.0, 512.0, 4, 65536.0, 2500.0)
+}
+
+fn pdf_src() -> trident::sim::ItemAttrs {
+    trident::sim::ItemAttrs {
+        tokens_in: 36_000.0,
+        tokens_out: 7_200.0,
+        pixels_m: 12.0,
+        frames: 12.0,
+    }
+}
+
+/// Fail node 1 mid-run, recover it later (the headline churn scenario).
+fn churn_spec(recovery: RecoveryPolicy) -> DynamicsSpec {
+    DynamicsSpec {
+        events: vec![
+            TimedEvent { at_s: 150.0, event: ClusterEvent::NodeFail { node: 1 } },
+            TimedEvent { at_s: 400.0, event: ClusterEvent::NodeRecover { node: 1 } },
+        ],
+        mtbf_s: 0.0,
+        mttr_s: 0.0,
+        recovery,
+    }
+}
+
+/// Two-tenant pdf+speech coordinator with large traces (sources never
+/// exhaust inside the run) and an optional dynamics spec.
+fn two_tenant(variant: &Variant, seed: u64, dynamics: Option<DynamicsSpec>) -> Coordinator {
+    let tenancy = Tenancy {
+        tenants: vec![
+            TenantSpec { id: "pdf".into(), pipeline: pdf::pipeline(), weight: 1.0, source_rate: 0.0 },
+            TenantSpec {
+                id: "speech".into(),
+                pipeline: speech::pipeline(),
+                weight: 1.0,
+                source_rate: 0.0,
+            },
+        ],
+    };
+    let mut coord = Coordinator::new_tenancy(
+        tenancy,
+        cluster(),
+        vec![
+            Box::new(pdf::trace(50_000)) as Box<dyn Trace>,
+            Box::new(speech::trace(20_000)) as Box<dyn Trace>,
+        ],
+        mini_cfg(),
+        variant.clone(),
+        vec![pdf_src(), speech::src_attrs()],
+        seed,
+    )
+    .expect("two-tenant tenancy is valid");
+    if let Some(spec) = dynamics {
+        coord.set_dynamics(spec).expect("valid dynamics spec");
+    }
+    coord
+}
+
+fn key(r: &RunReport) -> (u64, u64, u32, u64, u64, u64) {
+    (
+        r.throughput.to_bits(),
+        r.items_processed,
+        r.oom_events,
+        r.config_transitions,
+        r.lost_records,
+        r.tenants.iter().map(|t| t.items_lost).sum(),
+    )
+}
+
+/// Same seed + same spec ⇒ bit-identical timeline and report, for a
+/// scripted fail/recover under the Loss policy.
+#[test]
+fn dynamics_runs_are_deterministic() {
+    let run = || {
+        two_tenant(&Variant::trident(), 7, Some(churn_spec(RecoveryPolicy::Loss))).run(600.0)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(key(&a), key(&b), "same seed + spec must be bit-identical");
+    assert_eq!(a.events.len(), b.events.len());
+    for (x, y) in a.events.iter().zip(&b.events) {
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.at_s.to_bits(), y.at_s.to_bits());
+        assert_eq!(x.lost_records, y.lost_records);
+        assert_eq!(x.replan_s.map(f64::to_bits), y.replan_s.map(f64::to_bits));
+        assert_eq!(x.recovered_s.map(f64::to_bits), y.recovered_s.map(f64::to_bits));
+    }
+    assert_eq!(a.events.len(), 2, "both scripted events fired");
+}
+
+/// Stochastic MTBF/MTTR churn is a pure function of the seed too.
+#[test]
+fn mtbf_runs_are_deterministic() {
+    let spec = || DynamicsSpec {
+        mtbf_s: 100.0,
+        mttr_s: 25.0,
+        recovery: RecoveryPolicy::Requeue,
+        ..Default::default()
+    };
+    let run = || two_tenant(&Variant::baseline(Policy::Ds2), 11, Some(spec())).run(500.0);
+    let a = run();
+    let b = run();
+    assert_eq!(key(&a), key(&b));
+    assert_eq!(a.events.len(), b.events.len());
+    assert!(!a.events.is_empty(), "an MTBF of 100s per node over 500s must churn");
+}
+
+/// Build the speech DAG at the sim level with explicit placement: every
+/// operator on node 0 except the join (`align_merge`) on node 1, so a
+/// node-1 failure hits exactly the join-holding instance.
+fn speech_sim_with_join_on_node1(seed: u64) -> PipelineSim {
+    let spec = speech::pipeline();
+    let cluster = ClusterSpec::homogeneous(2, 64.0, 256.0, 4, 65536.0, 2500.0);
+    let mut sim = PipelineSim::new(spec, cluster, Box::new(speech::trace(40)), seed);
+    let asr_theta = sim.spec.operators[2].config_space.default_config();
+    let cap_theta = sim.spec.operators[3].config_space.default_config();
+    sim.add_instance(0, 0, vec![]).unwrap(); // demux
+    sim.add_instance(1, 0, vec![]).unwrap(); // decode (fork)
+    sim.add_instance(2, 0, asr_theta).unwrap(); // asr branch
+    sim.add_instance(3, 0, cap_theta).unwrap(); // caption branch
+    sim.add_instance(4, 1, vec![]).unwrap(); // align_merge (join) — node 1
+    sim.add_instance(5, 0, vec![]).unwrap(); // quality_filter
+    sim
+}
+
+/// Run until the join instance holds incomplete groups at a quiescent
+/// point (empty queue/batch/pending), so a failure hits only buffered
+/// join state; returns how many groups it held.
+fn run_to_join_holding(sim: &mut PipelineSim, join_inst: usize) -> usize {
+    let mut t = 10.0;
+    sim.run_until(t);
+    while t < 600.0 {
+        let j = &sim.instances[join_inst];
+        if !j.join_buf.is_empty()
+            && j.queue.is_empty()
+            && j.batch.is_empty()
+            && j.pending_out.is_empty()
+        {
+            return j.join_buf.len();
+        }
+        t += 0.25;
+        sim.run_until(t);
+    }
+    panic!("join never reached a quiescent holding state");
+}
+
+/// Conservation under churn, Loss policy: killing the join-holding node
+/// drops exactly the buffered groups' lineages — every segment that
+/// entered the branches is either merged by the join or in the loss
+/// ledger, and the DAG still drains (tombstones keep orphaned siblings
+/// from wedging it).
+#[test]
+fn node_fail_on_join_holder_keeps_accounting_exact_loss() {
+    let mut sim = speech_sim_with_join_on_node1(21);
+    let held = run_to_join_holding(&mut sim, 4);
+    assert!(held > 0, "test setup: join must hold incomplete groups");
+    let dropped = sim.fail_node(1, false);
+    assert!(dropped > 0, "buffered partials must be ledgered");
+    assert_eq!(
+        sim.lost_items_t[0] as usize, held,
+        "one killed lineage per buffered group"
+    );
+    // Replacement join instance on the surviving node.
+    sim.add_instance(4, 0, vec![]).unwrap();
+    for _ in 0..400 {
+        sim.run_until(sim.now() + 10.0);
+        if sim.drained() {
+            break;
+        }
+    }
+    assert!(sim.drained(), "tombstoned siblings must not wedge the join");
+    // Fork replicates every segment onto both branches (edges 1 and 2).
+    assert_eq!(sim.edge_emitted[1], sim.edge_emitted[2]);
+    // Every segment is merged exactly once or lost exactly once.
+    assert_eq!(
+        sim.processed_total[4] + sim.lost_items_t[0],
+        sim.edge_emitted[1],
+        "segments in == merged + lost"
+    );
+    // Downstream of the join nothing else was lost.
+    assert_eq!(sim.processed_total[5], sim.processed_total[4]);
+    // Join memory fully released despite the crash.
+    for mb in sim.join_state_mb() {
+        assert!(mb.abs() < 1e-9, "join memory leaked: {mb} MB");
+    }
+}
+
+/// Conservation under churn, Requeue policy: the same failure loses
+/// nothing — buffered groups are parked/adopted and every segment is
+/// merged exactly once.
+#[test]
+fn node_fail_on_join_holder_conserves_under_requeue() {
+    let mut sim = speech_sim_with_join_on_node1(22);
+    let held = run_to_join_holding(&mut sim, 4);
+    assert!(held > 0);
+    let dropped = sim.fail_node(1, true);
+    assert_eq!(dropped, 0, "requeue loses nothing");
+    sim.add_instance(4, 0, vec![]).unwrap();
+    for _ in 0..400 {
+        sim.run_until(sim.now() + 10.0);
+        if sim.drained() {
+            break;
+        }
+    }
+    assert!(sim.drained(), "parked groups must be adopted, not wedged");
+    assert_eq!(sim.lost_items_t[0], 0);
+    assert_eq!(sim.lost_records_total(), 0);
+    assert_eq!(
+        sim.processed_total[4],
+        sim.edge_emitted[1],
+        "every segment merged exactly once"
+    );
+    assert_eq!(sim.processed_total[5], sim.processed_total[4]);
+    for mb in sim.join_state_mb() {
+        assert!(mb.abs() < 1e-9, "join memory leaked: {mb} MB");
+    }
+}
+
+/// The acceptance bar: the event-driven re-plan fires within one
+/// `metrics_interval_s` of the injected `NodeFail`, and Trident recovers
+/// >= 90% of pre-failure aggregate throughput strictly faster than the
+/// Static baseline (which never re-plans, so its dead instances stay
+/// dead even after the node returns).
+#[test]
+fn churn_recovery_trident_beats_static() {
+    let trident =
+        two_tenant(&Variant::trident(), 5, Some(churn_spec(RecoveryPolicy::Requeue))).run(900.0);
+    let statik = two_tenant(
+        &Variant::baseline(Policy::Static),
+        5,
+        Some(churn_spec(RecoveryPolicy::Requeue)),
+    )
+    .run(900.0);
+
+    let fail_ev = |r: &RunReport| {
+        r.events
+            .iter()
+            .find(|e| e.label.starts_with("node_fail"))
+            .expect("node_fail event recorded")
+            .clone()
+    };
+    let t_fail = fail_ev(&trident);
+    // Event-driven re-plan: within one metrics window of the failure.
+    let interval = mini_cfg().metrics_interval_s;
+    let replan = t_fail.replan_s.expect("trident re-plans after the failure");
+    assert!(
+        replan <= interval + 1e-9,
+        "event-driven re-plan must fire within one metrics interval, took {replan}s"
+    );
+    // Trident recovers to >= 90% of its pre-failure throughput once the
+    // node returns; Static (no re-planning: its dead instances are never
+    // re-placed) must be strictly slower, if it ever recovers at all.
+    let t_rec = t_fail
+        .recovered_s
+        .expect("trident must recover >= 90% of pre-failure throughput");
+    let s_rec = fail_ev(&statik).recovered_s;
+    match s_rec {
+        None => {}
+        Some(s) => assert!(
+            t_rec < s,
+            "trident must recover strictly faster: {t_rec}s vs {s}s"
+        ),
+    }
+    assert!(
+        trident.throughput > statik.throughput,
+        "churn-aware re-planning must out-run the static allocation: {} vs {}",
+        trident.throughput,
+        statik.throughput
+    );
+}
+
+/// Dynamic tenancy: the speech tenant arrives mid-run (dormant before),
+/// the pdf tenant departs later — both splices re-plan and both tenants
+/// make progress while active.
+#[test]
+fn tenants_splice_in_and_out_mid_run() {
+    let spec = DynamicsSpec {
+        events: vec![
+            TimedEvent {
+                at_s: 200.0,
+                event: ClusterEvent::TenantArrive { tenant: "speech".into() },
+            },
+            TimedEvent {
+                at_s: 500.0,
+                event: ClusterEvent::TenantDepart { tenant: "pdf".into() },
+            },
+        ],
+        ..Default::default()
+    };
+    let r = two_tenant(&Variant::trident(), 9, Some(spec)).run(700.0);
+    assert_eq!(r.events.len(), 2);
+    let speech = r.tenants.iter().find(|t| t.id == "speech").unwrap();
+    let pdf = r.tenants.iter().find(|t| t.id == "pdf").unwrap();
+    assert!(
+        speech.items_admitted > 0 && speech.items_processed > 0,
+        "arriving tenant must be spliced in and make progress: {speech:?}"
+    );
+    assert!(
+        pdf.items_processed > 0,
+        "departing tenant processed its admitted items: {pdf:?}"
+    );
+    for ev in &r.events {
+        assert!(
+            ev.replan_s.is_some(),
+            "tenancy events must trigger re-plans: {ev:?}"
+        );
+    }
+}

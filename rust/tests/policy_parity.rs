@@ -109,6 +109,26 @@ fn policy_semantics_preserved() {
     }
 }
 
+/// The dynamics subsystem at rest: attaching an EMPTY `DynamicsSpec`
+/// (no scripted events, no MTBF churn) engages the timeline machinery
+/// but must not perturb a single event — bit-identical to the classic
+/// closed loop for every policy.  This is the no-dynamics compatibility
+/// contract of the cluster-dynamics PR.
+#[test]
+fn empty_dynamics_is_bit_identical() {
+    for (name, variant) in all_policies() {
+        let base = mk_det(&variant, 5).run(300.0);
+        let mut coord = mk_det(&variant, 5);
+        coord
+            .set_dynamics(trident::dynamics::DynamicsSpec::default())
+            .expect("empty dynamics spec is valid");
+        let with = coord.run(300.0);
+        assert_eq!(key(&base), key(&with), "policy {name} perturbed by empty dynamics");
+        assert!(with.events.is_empty());
+        assert_eq!(with.lost_records, 0);
+    }
+}
+
 /// Same grid, different `--jobs`: reports and aggregates are identical.
 #[test]
 fn harness_invariant_to_worker_count() {
