@@ -693,6 +693,11 @@ pub struct TridentConfig {
     pub milp_join_colocation: bool,
     /// Use the native Rust GP instead of PJRT artifacts.
     pub native_gp: bool,
+    /// Debug/bench switch: route simulator cross-node transfers through
+    /// the legacy one-heap-event-per-record stream instead of the
+    /// batched link FIFOs.  Bit-identical results either way (the parity
+    /// suite pins this); the batched default is simply faster.
+    pub sim_seed_event_stream: bool,
 }
 
 impl Default for TridentConfig {
@@ -720,6 +725,7 @@ impl Default for TridentConfig {
             milp_time_budget_ms: 600,
             milp_join_colocation: false,
             native_gp: std::env::var("TRIDENT_NATIVE_GP").map(|v| v == "1").unwrap_or(false),
+            sim_seed_event_stream: false,
         }
     }
 }
@@ -806,6 +812,10 @@ impl TridentConfig {
                 .and_then(Json::as_bool)
                 .unwrap_or(d.milp_join_colocation),
             native_gp: j.get("native_gp").and_then(Json::as_bool).unwrap_or(d.native_gp),
+            sim_seed_event_stream: j
+                .get("sim_seed_event_stream")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.sim_seed_event_stream),
         }
     }
 }

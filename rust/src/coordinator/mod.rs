@@ -263,7 +263,8 @@ impl Coordinator {
             })
             .collect();
         let policy = variant.policy.build();
-        let sim = PipelineSim::new_tenancy(pipeline, view, cluster, traces, seed);
+        let mut sim = PipelineSim::new_tenancy(pipeline, view, cluster, traces, seed);
+        sim.set_seed_event_stream(cfg.sim_seed_event_stream);
         Ok(Coordinator {
             sim,
             cfg,

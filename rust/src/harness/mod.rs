@@ -61,6 +61,14 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Run `f` and return (result, wall milliseconds).  Shared by the bench
+/// subcommands so every trajectory number is timed the same way.
+pub fn stopwatch_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64() * 1e3)
+}
+
 /// Execute every job on a pool of `workers` OS threads.  `factory` builds
 /// the coordinator for a cell *inside* the worker thread (coordinators are
 /// not `Send` — they own the trace generator), keyed by the cell index and

@@ -14,6 +14,8 @@
 //!               [--duration 1800] [--seed 0]      # variant × seed grid, mean ± std
 //! trident milp-bench [--nodes 8|16]               # RQ6 solve times + cold-vs-warm pivots
 //!               [--max-pivots N] [--assert-speedup S]   # solver perf gates (CI)
+//! trident bench-perf [--windows 4] [--rungs two-tenant-96,...] [--out BENCH_6.json]
+//!               [--milp-budget-ms 10000] [--assert-speedup 2]  # RQ8 perf trajectory
 //! ```
 //!
 //! A tenancy JSON file:
@@ -560,6 +562,335 @@ fn milp_bench(args: &Args) {
     }
 }
 
+/// One rung of the `bench-perf` scale ladder (pinned: trajectory numbers
+/// are only comparable across PRs if the scenario never moves).
+struct Rung {
+    name: &'static str,
+    nodes: usize,
+    /// Simulated seconds per measured window.
+    window_s: f64,
+}
+
+const BENCH_RUNGS: &[Rung] = &[
+    Rung { name: "two-tenant-16", nodes: 16, window_s: 30.0 },
+    Rung { name: "two-tenant-96", nodes: 96, window_s: 10.0 },
+    Rung { name: "two-tenant-512", nodes: 512, window_s: 5.0 },
+    Rung { name: "stress-10k", nodes: 10_000, window_s: 2.0 },
+];
+
+/// Raw-speed measurement of one rung in one transfer mode.
+struct ModeStats {
+    wall_ms: Vec<f64>,
+    events: u64,
+    records: u64,
+    peak_heap: usize,
+    peak_in_flight: usize,
+}
+
+impl ModeStats {
+    fn wall_s(&self) -> f64 {
+        (self.wall_ms.iter().sum::<f64>() / 1e3).max(1e-9)
+    }
+
+    fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.wall_s()
+    }
+
+    fn records_per_sec(&self) -> f64 {
+        self.records as f64 / self.wall_s()
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("events", Json::num(self.events as f64)),
+            ("records", Json::num(self.records as f64)),
+            ("events_per_sec", Json::num(self.events_per_sec().round())),
+            ("records_per_sec", Json::num(self.records_per_sec().round())),
+            ("peak_heap_entries", Json::num(self.peak_heap as f64)),
+            ("peak_in_flight_transfers", Json::num(self.peak_in_flight as f64)),
+            (
+                "wall_ms_per_window",
+                Json::arr_f64(
+                    &self.wall_ms.iter().map(|m| (m * 10.0).round() / 10.0).collect::<Vec<f64>>(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Endless item mix for the synthetic stress rung: ~1 MB records so the
+/// 200 MB/s bench links, not the CPUs, are the scarce resource.
+fn stress_dist() -> trident::workload::ItemDist {
+    trident::workload::ItemDist {
+        tokens_in: (4.0, 0.3),
+        tokens_out: (3.0, 0.3),
+        pixels_m: (0.0, 0.1),
+        frames: (0.0, 0.0),
+        size_mb: (0.0, 0.25),
+    }
+}
+
+/// 4-op CPU chain for the 10k-node stress rung: no accelerators (placement
+/// can never fail for capacity) and every hop forced cross-node by the
+/// bench's round-robin placement.
+fn stress_spec() -> trident::config::PipelineSpec {
+    use trident::config::{
+        ConfigSpace, CostW, FeatureExtractor, OperatorKind, OperatorSpec, PipelineSpec,
+        ServiceModel,
+    };
+    let cpu = |name: &str| OperatorSpec {
+        name: name.into(),
+        kind: OperatorKind::CpuSync,
+        cpu: 1.0,
+        mem_gb: 1.0,
+        accels: 0,
+        fanout: 1.0,
+        out_mb: 1.0,
+        start_s: 0.5,
+        stop_s: 0.5,
+        cold_s: 2.0,
+        tunable: false,
+        config_space: ConfigSpace::default(),
+        service: ServiceModel::Cpu {
+            base_rate: 50.0,
+            ref_cost: 1.0,
+            cost: CostW { konst: 1.0, ..Default::default() },
+        },
+        features: FeatureExtractor::Cost,
+        child_scale: [1.0; 4],
+        queue_cap: 64,
+    };
+    PipelineSpec::chain("stress", vec![cpu("ingest"), cpu("decode"), cpu("transform"), cpu("sink")])
+}
+
+/// Static placement plan: instances of op `i` land on nodes
+/// `(i + k·n_ops) mod nodes`, so successive operators sit on different
+/// nodes and (nearly) every pipeline edge pays a real cross-node
+/// transfer — the transfer-heavy regime the overhaul targets.
+fn bench_placement(
+    spec: &trident::config::PipelineSpec,
+    nodes: usize,
+) -> Vec<(usize, usize, Vec<f64>)> {
+    let n_ops = spec.n_ops();
+    let per_op = (nodes / n_ops).max(1);
+    let mut plan = Vec::new();
+    for (i, o) in spec.operators.iter().enumerate() {
+        let theta = o.config_space.default_config();
+        for k in 0..per_op {
+            plan.push((i, (i + k * n_ops) % nodes, theta.clone()));
+        }
+    }
+    plan
+}
+
+/// Build the rung's simulator with static placement; `seed_stream` picks
+/// the legacy one-event-per-record transfer path (the measured baseline)
+/// or the batched link FIFOs.  Both modes get byte-identical inputs.
+fn bench_sim(rung: &Rung, seed_stream: bool) -> trident::sim::PipelineSim {
+    use trident::sim::PipelineSim;
+    // Low egress (vs the 12.5 GB/s production default) keeps the rungs
+    // link-bound: thousands of records serialize behind the links, which
+    // is exactly the population the two transfer modes store differently.
+    let cluster = ClusterSpec::homogeneous(rung.nodes, 256.0, 1024.0, 8, 65536.0, 200.0);
+    let (mut sim, plan) = if rung.name == "stress-10k" {
+        let spec = stress_spec();
+        let plan = bench_placement(&spec, rung.nodes);
+        let trace = Box::new(trident::workload::UniformTrace { dist: stress_dist(), regime: 0 });
+        (PipelineSim::new(spec, cluster, trace, 11), plan)
+    } else {
+        let tenancy = Tenancy {
+            tenants: vec![
+                TenantSpec { id: "pdf".into(), pipeline: pdf::pipeline(), weight: 1.0, source_rate: 0.0 },
+                TenantSpec { id: "speech".into(), pipeline: speech::pipeline(), weight: 1.0, source_rate: 0.0 },
+            ],
+        };
+        let (spec, view) = tenancy.merged().expect("pdf+speech tenancy is valid");
+        let plan = bench_placement(&spec, rung.nodes);
+        let traces: Vec<Box<dyn Trace>> =
+            vec![Box::new(pdf::trace(10_000_000)), Box::new(speech::trace(10_000_000))];
+        (PipelineSim::new_tenancy(spec, view, cluster, traces, 11), plan)
+    };
+    sim.set_seed_event_stream(seed_stream);
+    for (op, node, theta) in plan {
+        let placed = (0..rung.nodes)
+            .any(|probe| sim.add_instance(op, (node + probe) % rung.nodes, theta.clone()).is_ok());
+        assert!(placed, "bench placement failed for op {op} on rung {}", rung.name);
+    }
+    sim
+}
+
+/// Drive one simulator through `windows` windows, timing each.
+fn bench_run(rung: &Rung, seed_stream: bool, windows: usize) -> ModeStats {
+    let mut sim = bench_sim(rung, seed_stream);
+    let mut wall_ms = Vec::with_capacity(windows);
+    for w in 0..windows {
+        let t_end = (w + 1) as f64 * rung.window_s;
+        let (_, ms) = harness::stopwatch_ms(|| sim.run_until(t_end));
+        wall_ms.push(ms);
+    }
+    ModeStats {
+        wall_ms,
+        events: sim.engine.events_processed,
+        records: sim.processed_total.iter().sum(),
+        peak_heap: sim.peak_heap_entries(),
+        peak_in_flight: sim.peak_in_flight_transfers(),
+    }
+}
+
+/// The rung's MILP solve (solver cost is part of the trajectory: the
+/// scheduler must stay cheap as the sim gets fast).  Node count is capped
+/// at 512 — the stress rung's 10k-node MILP is not a thing the
+/// coordinator would ever solve whole (`milp.nodes` records the cap).
+fn bench_milp(rung: &Rung, budget: Duration) -> Json {
+    use trident::scheduling::{solve_with_options, BasisCache};
+    use trident::solver::MilpOptions;
+
+    let milp_nodes = rung.nodes.min(512);
+    let input = if rung.name == "stress-10k" {
+        let spec = stress_spec();
+        let src = ItemAttrs { tokens_in: 55.0, tokens_out: 20.0, pixels_m: 1.0, frames: 1.0 };
+        let nominal = trident::coordinator::nominal_attrs(&spec, src);
+        let (d_i, d_o) = spec.amplification();
+        let cluster = ClusterSpec::homogeneous(milp_nodes, 256.0, 1024.0, 8, 65536.0, 12_500.0);
+        trident::scheduling::MilpInput {
+            ops: bench_ops(&spec, &nominal, &d_i, milp_nodes, false),
+            edges: spec.edges.clone(),
+            nodes: cluster.nodes,
+            d_o,
+            tenants: Vec::new(),
+            op_tenant: Vec::new(),
+            t_sched: 30.0,
+            lambda1: 1e-4,
+            lambda2: 1e-6,
+            b_max: 2,
+            placement_aware: true,
+            join_colocate: false,
+            all_at_once: false,
+        }
+    } else {
+        two_tenant_input(milp_nodes, true)
+    };
+    let opts = MilpOptions { max_nodes: Some(96), ..MilpOptions::default() };
+    let (plan, ms) =
+        harness::stopwatch_ms(|| solve_with_options(&input, budget, &mut BasisCache::new(), &opts));
+    Json::obj(vec![
+        ("nodes", Json::num(milp_nodes as f64)),
+        ("solve_ms", Json::num((ms * 10.0).round() / 10.0)),
+        ("pivots", Json::num(plan.stats.pivots as f64)),
+        ("phase1_pivots", Json::num(plan.stats.phase1_pivots as f64)),
+        ("bnb_nodes", Json::num(plan.stats.nodes as f64)),
+        ("status", Json::str(&format!("{:?}", plan.status))),
+    ])
+}
+
+/// `trident bench-perf`: the pinned scale ladder behind `BENCH_6.json`.
+/// Each rung runs twice from byte-identical inputs — once through the
+/// legacy seed event stream (one heap event per record transfer), once
+/// through the batched link FIFOs — so the speedup is a same-binary
+/// wall-clock ratio, not a cross-commit guess, and the event/record
+/// totals double as a cross-mode parity check (they must match exactly;
+/// any drift fails the bench).  `--assert-speedup S` gates the
+/// 96-node two-tenant rung (CI's perf floor).
+fn bench_perf(args: &Args) {
+    let windows = (args.f64("windows", 4.0) as usize).max(1);
+    let budget = Duration::from_millis(args.f64("milp-budget-ms", 10_000.0) as u64);
+    let out_path = args.get("out", "BENCH_6.json");
+    let selected: Vec<&Rung> = match args.map.get("rungs") {
+        None => BENCH_RUNGS.iter().collect(),
+        Some(list) => list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|name| {
+                BENCH_RUNGS.iter().find(|r| r.name == name).unwrap_or_else(|| {
+                    eprintln!(
+                        "unknown bench rung '{name}' (expected one of {})",
+                        BENCH_RUNGS.iter().map(|r| r.name).collect::<Vec<_>>().join("|")
+                    );
+                    std::process::exit(2);
+                })
+            })
+            .collect(),
+    };
+
+    let mut table = Table::new(
+        "bench-perf scale ladder (seed event stream vs batched links)",
+        &["Rung", "nodes", "seed ev/s", "batched ev/s", "speedup", "peak heap", "MILP ms"],
+    );
+    let mut rung_jsons = Vec::new();
+    let mut gate_speedup: Option<f64> = None;
+    let mut failed = false;
+    for &rung in &selected {
+        eprintln!("rung {} ({} nodes): seed event stream...", rung.name, rung.nodes);
+        let seed = bench_run(rung, true, windows);
+        eprintln!("rung {}: batched transfers...", rung.name);
+        let batched = bench_run(rung, false, windows);
+        if seed.events != batched.events || seed.records != batched.records {
+            eprintln!(
+                "FAIL: rung {} diverged across transfer modes (events {} vs {}, records {} vs {})",
+                rung.name, seed.events, batched.events, seed.records, batched.records
+            );
+            failed = true;
+        }
+        let speedup = batched.events_per_sec() / seed.events_per_sec().max(1e-9);
+        if rung.name == "two-tenant-96" {
+            gate_speedup = Some(speedup);
+        }
+        let milp = bench_milp(rung, budget);
+        table.row(vec![
+            rung.name.to_string(),
+            rung.nodes.to_string(),
+            format!("{:.0}", seed.events_per_sec()),
+            format!("{:.0}", batched.events_per_sec()),
+            format!("{speedup:.2}x"),
+            format!("{} -> {}", seed.peak_heap, batched.peak_heap),
+            format!("{:.0}", milp.f64_or("solve_ms", -1.0)),
+        ]);
+        rung_jsons.push(Json::obj(vec![
+            ("name", Json::str(rung.name)),
+            ("nodes", Json::num(rung.nodes as f64)),
+            ("window_s", Json::num(rung.window_s)),
+            ("windows", Json::num(windows as f64)),
+            ("seed_event_stream", seed.json()),
+            ("batched", batched.json()),
+            ("events_per_sec", Json::num(batched.events_per_sec().round())),
+            ("records_per_sec", Json::num(batched.records_per_sec().round())),
+            ("speedup_events_per_sec", Json::num((speedup * 100.0).round() / 100.0)),
+            ("milp", milp),
+        ]));
+    }
+    table.emit("bench_perf");
+
+    let report = Json::obj(vec![
+        ("schema", Json::str("trident-bench-perf/v1")),
+        ("baseline_mode", Json::str("seed-event-stream")),
+        ("generated_by", Json::str("trident bench-perf")),
+        ("rungs", Json::Arr(rung_jsons)),
+    ]);
+    std::fs::write(&out_path, report.to_string_pretty() + "\n").unwrap_or_else(|e| {
+        eprintln!("cannot write {out_path}: {e}");
+        std::process::exit(2);
+    });
+    println!("wrote {out_path}");
+
+    if let Some(s) = args.map.get("assert-speedup").and_then(|v| v.parse::<f64>().ok()) {
+        match gate_speedup {
+            Some(got) if got < s => {
+                eprintln!("FAIL: two-tenant-96 events/sec speedup {got:.2}x below required {s}x");
+                failed = true;
+            }
+            Some(got) => println!("two-tenant-96 speedup {got:.2}x >= {s}x"),
+            None => {
+                eprintln!("--assert-speedup requires the two-tenant-96 rung in --rungs");
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
@@ -716,14 +1047,17 @@ fn main() {
             );
         }
         "milp-bench" => milp_bench(&args),
+        "bench-perf" => bench_perf(&args),
         _ => {
             println!(
-                "usage: trident <run|compare|sweep|milp-bench> [--pipeline pdf|video|speech] \
+                "usage: trident <run|compare|sweep|milp-bench|bench-perf> [--pipeline pdf|video|speech] \
                  [--pipelines pdf,speech [--weights 2,1]] [--tenancy file.json] [--policy ...] \
                  [--policies a,b,c] [--seeds N] [--jobs J] [--duration S] [--nodes N] [--seed S] \
                  [--native-gp] [--join-colocate] \
                  [--dynamics file.json] [--mtbf S] [--mttr S] [--recovery requeue|loss] \
-                 [--max-pivots N] [--assert-speedup S]   (milp-bench solver-perf gates)"
+                 [--max-pivots N] [--assert-speedup S]   (milp-bench solver-perf gates) \
+                 [--windows W] [--rungs a,b] [--out BENCH_6.json] [--milp-budget-ms MS] \
+                 [--assert-speedup S]   (bench-perf scale ladder -> BENCH_6.json)"
             );
         }
     }

@@ -1,15 +1,47 @@
-//! Discrete-event core: a monotonic f64 clock and a binary-heap event queue
-//! with deterministic FIFO tie-breaking.
+//! Discrete-event core: a monotonic f64 clock and a slab-backed pairing
+//! heap with deterministic FIFO tie-breaking.
+//!
+//! **Determinism contract** (unchanged from the original `BinaryHeap`
+//! implementation): events are consumed in ascending `(time, seq)` order —
+//! earlier time first, then FIFO by the sequence number allocated at
+//! scheduling time.  Since every `(time, seq)` key is unique (`seq` comes
+//! from one monotone counter), the pop order is a property of the keys
+//! alone and is independent of the heap's internal shape.
+//!
+//! **Storage.**  Heap nodes live in a slab (`Vec<Node>` + intrusive free
+//! list indexed by `u32`): no per-event allocation, no `Ord`-wrapper
+//! boxing, and the event payload is a 16-byte POD id bundle ([`Ev`]) —
+//! cross-node transfers reference their record by slot id into the
+//! pipeline's transfer slab instead of embedding the ~64-byte `Item`.
+//!
+//! The pipeline keeps in-flight link transfers *outside* this heap (in
+//! per-node FIFO queues) and merges the two stores by `(time, seq)` at pop
+//! time; [`Engine::alloc_seq`] hands those entries sequence numbers from
+//! the same counter so cross-store tie-breaks replay the one-store order,
+//! and [`Engine::deliver_external`] advances the clock/event counters for
+//! them exactly like a popped heap event.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
-
-/// Instance identifier (index into `PipelineSim::instances`).
+/// Instance identifier: a dense u32 index into `PipelineSim::instances`
+/// (instance counts never approach 2^32; ids are assigned densely).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct InstId(pub usize);
+pub struct InstId(pub u32);
 
-/// Typed simulator events.
-#[derive(Debug, Clone)]
+impl InstId {
+    #[inline]
+    pub fn of(i: usize) -> Self {
+        debug_assert!(i < u32::MAX as usize, "instance id overflows u32");
+        InstId(i as u32)
+    }
+
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Typed simulator events — plain ids only, no owned payloads, so every
+/// variant is `Copy` and heap entries stay small.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Ev {
     /// Tenant `t`'s source attempts to emit the next input item(s)
     /// (tenant 0 is the only tenant of a single-pipeline deployment).
@@ -20,48 +52,54 @@ pub enum Ev {
     InstanceReady(InstId),
     /// A cross-node transfer arrived at its destination instance along the
     /// given pipeline edge (joins need the edge to slot the partial).
-    TransferDone(InstId, usize, crate::sim::items::Item),
+    /// The record itself sits in the pipeline's transfer slab at `slot`.
+    TransferDone { dest: InstId, edge: u32, slot: u32 },
 }
 
-struct Entry {
+// The whole point of the POD refactor: an event is an id bundle, not a
+// record carrier.  Keep it that way.
+const _: () = assert!(std::mem::size_of::<Ev>() <= 16, "Ev must stay a POD id bundle");
+
+/// Slab slot of a pairing-heap node.  `sibling` doubles as the free-list
+/// link while the slot is unused.
+struct Node {
     t: f64,
     seq: u64,
     ev: Ev,
+    child: u32,
+    sibling: u32,
 }
 
-impl PartialEq for Entry {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl Eq for Entry {}
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Entry {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap: earlier time first, then FIFO by sequence number.
-        other
-            .t
-            .partial_cmp(&self.t)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
-    }
-}
+const NIL: u32 = u32::MAX;
 
 /// Event queue + clock.
 pub struct Engine {
     now: f64,
     seq: u64,
-    heap: BinaryHeap<Entry>,
+    nodes: Vec<Node>,
+    root: u32,
+    /// Head of the intrusive free list through `Node::sibling`.
+    free: u32,
+    len: usize,
+    peak: usize,
+    /// Reused two-pass merge scratch (cleared per pop, never shrunk).
+    scratch: Vec<u32>,
     pub events_processed: u64,
 }
 
 impl Engine {
     pub fn new() -> Self {
-        Engine { now: 0.0, seq: 0, heap: BinaryHeap::new(), events_processed: 0 }
+        Engine {
+            now: 0.0,
+            seq: 0,
+            nodes: Vec::new(),
+            root: NIL,
+            free: NIL,
+            len: 0,
+            peak: 0,
+            scratch: Vec::new(),
+            events_processed: 0,
+        }
     }
 
     #[inline]
@@ -69,11 +107,96 @@ impl Engine {
         self.now
     }
 
+    /// Strict `(t, seq)` order between two live nodes.  Keys are unique,
+    /// so this is a total order and the heap's pop sequence is fully
+    /// determined by it.
+    #[inline]
+    fn before(&self, a: u32, b: u32) -> bool {
+        let (na, nb) = (&self.nodes[a as usize], &self.nodes[b as usize]);
+        na.t < nb.t || (na.t == nb.t && na.seq < nb.seq)
+    }
+
+    /// Meld two heap roots; the earlier `(t, seq)` key wins.
+    #[inline]
+    fn meld(&mut self, a: u32, b: u32) -> u32 {
+        if a == NIL {
+            return b;
+        }
+        if b == NIL {
+            return a;
+        }
+        let (top, bot) = if self.before(b, a) { (b, a) } else { (a, b) };
+        self.nodes[bot as usize].sibling = self.nodes[top as usize].child;
+        self.nodes[top as usize].child = bot;
+        top
+    }
+
+    fn alloc_node(&mut self, t: f64, seq: u64, ev: Ev) -> u32 {
+        let idx = if self.free != NIL {
+            let idx = self.free;
+            self.free = self.nodes[idx as usize].sibling;
+            self.nodes[idx as usize] = Node { t, seq, ev, child: NIL, sibling: NIL };
+            idx
+        } else {
+            debug_assert!(self.nodes.len() < NIL as usize, "event slab overflows u32");
+            self.nodes.push(Node { t, seq, ev, child: NIL, sibling: NIL });
+            (self.nodes.len() - 1) as u32
+        };
+        self.len += 1;
+        self.peak = self.peak.max(self.len);
+        idx
+    }
+
+    /// Iterative two-pass pairing merge of a popped root's child list.
+    fn merge_pairs(&mut self, first: u32) -> u32 {
+        if first == NIL {
+            return NIL;
+        }
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        let mut cur = first;
+        while cur != NIL {
+            let a = cur;
+            let b = self.nodes[a as usize].sibling;
+            if b == NIL {
+                self.nodes[a as usize].sibling = NIL;
+                scratch.push(a);
+                break;
+            }
+            let next = self.nodes[b as usize].sibling;
+            self.nodes[a as usize].sibling = NIL;
+            self.nodes[b as usize].sibling = NIL;
+            scratch.push(self.meld(a, b));
+            cur = next;
+        }
+        let mut root = NIL;
+        while let Some(h) = scratch.pop() {
+            root = self.meld(root, h);
+        }
+        self.scratch = scratch;
+        root
+    }
+
+    /// Pop the root (caller guarantees non-empty) and recycle its slot.
+    fn pop_root(&mut self) -> (f64, Ev) {
+        let r = self.root;
+        let (t, ev, first_child) = {
+            let n = &self.nodes[r as usize];
+            (n.t, n.ev, n.child)
+        };
+        self.nodes[r as usize].sibling = self.free;
+        self.free = r;
+        self.len -= 1;
+        self.root = self.merge_pairs(first_child);
+        (t, ev)
+    }
+
     /// Schedule `ev` at absolute time `t` (clamped to now).
     pub fn at(&mut self, t: f64, ev: Ev) {
         let t = t.max(self.now);
         self.seq += 1;
-        self.heap.push(Entry { t, seq: self.seq, ev });
+        let n = self.alloc_node(t, self.seq, ev);
+        self.root = self.meld(self.root, n);
     }
 
     /// Schedule `ev` after `dt` seconds.
@@ -82,18 +205,49 @@ impl Engine {
         self.at(self.now + dt, ev);
     }
 
+    /// Allocate a sequence number for an event stored *outside* the heap
+    /// (the pipeline's per-node link queues of in-flight transfers).
+    /// Drawn from the same counter as [`Engine::at`], so `(time, seq)`
+    /// stays a strict total order across both stores and equal-time
+    /// tie-breaks are identical whichever store holds the entry.
+    #[inline]
+    pub fn alloc_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    /// The earliest pending `(time, seq)` key in the heap, if any.
+    #[inline]
+    pub fn peek_key(&self) -> Option<(f64, u64)> {
+        if self.root == NIL {
+            return None;
+        }
+        let n = &self.nodes[self.root as usize];
+        Some((n.t, n.seq))
+    }
+
     /// Pop the next event at or before `t_end`; advances the clock.
     pub fn next_before(&mut self, t_end: f64) -> Option<Ev> {
-        if let Some(e) = self.heap.peek() {
-            if e.t <= t_end {
-                let e = self.heap.pop().unwrap();
-                self.now = e.t;
+        if let Some((t, _)) = self.peek_key() {
+            if t <= t_end {
+                let (t, ev) = self.pop_root();
+                self.now = t;
                 self.events_processed += 1;
-                return Some(e.ev);
+                return Some(ev);
             }
         }
-        self.now = self.now.max(t_end.min(self.heap.peek().map(|e| e.t).unwrap_or(t_end)));
+        self.now = self.now.max(t_end.min(self.peek_key().map(|k| k.0).unwrap_or(t_end)));
         None
+    }
+
+    /// Consume an externally stored event (a link-queue transfer) at `t`:
+    /// advance the clock and count it exactly like a popped heap event,
+    /// so both transfer modes report identical event totals.
+    #[inline]
+    pub fn deliver_external(&mut self, t: f64) {
+        debug_assert!(t >= self.now, "external events are consumed in order");
+        self.now = self.now.max(t);
+        self.events_processed += 1;
     }
 
     /// Advance the clock to `t` without processing (used when idle).
@@ -101,8 +255,18 @@ impl Engine {
         self.now = self.now.max(t);
     }
 
+    /// Pending heap entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
+    }
+
+    /// High-water mark of simultaneously pending heap entries.
+    pub fn peak_entries(&self) -> usize {
+        self.peak
     }
 }
 
@@ -156,5 +320,111 @@ mod tests {
         e.at(1.0, Ev::SourceEmit(0)); // in the past -> fires at now
         assert!(e.next_before(10.0).is_some());
         assert_eq!(e.now(), 3.0);
+    }
+
+    /// Many events at one timestamp must drain in exact insertion order —
+    /// the FIFO half of the determinism contract, now a property of the
+    /// pairing heap instead of `BinaryHeap`'s comparator.
+    #[test]
+    fn equal_time_events_drain_in_insertion_order() {
+        let mut e = Engine::new();
+        for i in 0..64u32 {
+            e.at(7.0, Ev::SourceEmit(i));
+        }
+        // Interleave an earlier event to exercise meld paths.
+        e.at(6.5, Ev::BatchDone(InstId(99)));
+        assert!(matches!(e.next_before(100.0), Some(Ev::BatchDone(InstId(99)))));
+        for i in 0..64u32 {
+            match e.next_before(100.0).unwrap() {
+                Ev::SourceEmit(got) => assert_eq!(got, i, "FIFO violated at {i}"),
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(e.is_empty());
+    }
+
+    /// Randomized differential test against a sorted-model reference: the
+    /// pairing heap must pop the exact `(t, seq)`-minimal entry under an
+    /// adversarial mix of inserts, pops, and heavy timestamp ties.
+    #[test]
+    fn differential_vs_sorted_model() {
+        let mut lcg: u64 = 0x243F_6A88_85A3_08D3;
+        let mut next = move || {
+            lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            lcg >> 11
+        };
+        let mut e = Engine::new();
+        // Model entries: (t, seq, payload).  seq mirrors the engine's
+        // internal counter (we only ever schedule via `at`).
+        let mut model: Vec<(f64, u64, u32)> = Vec::new();
+        let mut seq = 0u64;
+        let mut peak = 0usize;
+        for _ in 0..4000 {
+            let r = next();
+            if r % 3 != 0 || model.is_empty() {
+                // Quantized offsets force many exact timestamp ties.
+                let t = e.now() + (next() % 8) as f64 * 0.25;
+                let payload = (next() % 1_000_000) as u32;
+                e.at(t, Ev::SourceEmit(payload));
+                seq += 1;
+                model.push((t, seq, payload));
+                peak = peak.max(model.len());
+            } else {
+                let min = model
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| {
+                        a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let (t, _, payload) = model.remove(min);
+                match e.next_before(f64::INFINITY) {
+                    Some(Ev::SourceEmit(got)) => {
+                        assert_eq!(got, payload, "pop order diverged from model");
+                        assert_eq!(e.now(), t, "clock diverged from model");
+                    }
+                    other => panic!("expected SourceEmit, got {other:?}"),
+                }
+            }
+        }
+        while !model.is_empty() {
+            let min = model
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)))
+                .map(|(i, _)| i)
+                .unwrap();
+            let (_, _, payload) = model.remove(min);
+            match e.next_before(f64::INFINITY) {
+                Some(Ev::SourceEmit(got)) => assert_eq!(got, payload),
+                other => panic!("expected SourceEmit, got {other:?}"),
+            }
+        }
+        assert!(e.next_before(f64::INFINITY).is_none());
+        assert!(e.is_empty());
+        assert!(e.peak_entries() >= peak, "peak high-water must cover the model's");
+    }
+
+    /// `alloc_seq` draws from the same counter as `at`, so an externally
+    /// stored entry scheduled between two heap inserts at the same time
+    /// slots between them in the total order.
+    #[test]
+    fn alloc_seq_shares_the_counter() {
+        let mut e = Engine::new();
+        e.at(5.0, Ev::SourceEmit(1));
+        let s = e.alloc_seq();
+        e.at(5.0, Ev::SourceEmit(2));
+        let (t1, q1) = e.peek_key().unwrap();
+        assert_eq!(t1, 5.0);
+        assert!(q1 < s, "first heap event precedes the external seq");
+        assert!(matches!(e.next_before(10.0), Some(Ev::SourceEmit(1))));
+        let (_, q2) = e.peek_key().unwrap();
+        assert!(s < q2, "external seq precedes the later heap event");
+        // Consuming the external entry counts like a heap pop.
+        let before = e.events_processed;
+        e.deliver_external(5.0);
+        assert_eq!(e.events_processed, before + 1);
+        assert_eq!(e.now(), 5.0);
     }
 }

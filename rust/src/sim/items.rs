@@ -60,6 +60,11 @@ impl ItemAttrs {
 }
 
 /// One record in flight.
+///
+/// Kept small and `Copy`: in-flight transfers park the payload in the
+/// [`TransferNet`](crate::sim::net::TransferNet) slab and move only POD
+/// slot ids through the event machinery, so `Item`'s footprint bounds
+/// the slab's bytes-per-record.
 #[derive(Debug, Clone, Copy)]
 pub struct Item {
     /// Lineage id assigned by the simulator.  Fork edges replicate an item
@@ -75,6 +80,9 @@ pub struct Item {
     /// invisible to the scheduler).
     pub regime: u8,
 }
+
+// Transfer-slab density guard: a record must stay within one cache line.
+const _: () = assert!(std::mem::size_of::<Item>() <= 64);
 
 #[cfg(test)]
 mod tests {

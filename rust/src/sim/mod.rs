@@ -5,13 +5,14 @@
 pub mod engine;
 pub mod items;
 pub mod metrics;
+pub mod net;
 pub mod pipeline;
 pub mod service;
 
 pub use engine::{Engine, Ev, InstId};
 pub use items::{Item, ItemAttrs};
 pub use metrics::{InstanceMetrics, OpMetrics};
-pub use pipeline::{InstState, PipelineSim};
+pub use pipeline::{InstState, PipelineSim, SimError};
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,195 @@
+//! In-flight cross-node record movement: a slab of transfer payloads keyed
+//! by POD slot ids, plus per-node egress-link FIFO queues.
+//!
+//! The egress link of a node serializes its outbound records, so the
+//! arrival times of the records queued behind one link are strictly
+//! increasing — each link's queue is already sorted by `(arrive, seq)` and
+//! a plain `VecDeque` holds a whole backlog ("batch") with no per-record
+//! heap traffic.  A small index min-heap over the current link *heads*
+//! locates the globally next arrival in `O(log links)`; the pipeline
+//! merges that key with the event heap's root at pop time, so deliveries
+//! happen at exactly the per-item instants and order the legacy
+//! one-event-per-record stream produced.
+//!
+//! Every entry carries its own `(arrive, seq)` key (seq from the engine's
+//! single counter — see [`Engine::alloc_seq`](crate::sim::Engine::alloc_seq)),
+//! which is what makes batched storage *bit-identical* to the seed event
+//! stream rather than merely approximately equivalent.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::sim::items::Item;
+
+/// One in-flight transfer: arrival key + destination ids + payload slot.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkEntry {
+    /// Arrival time at the destination (absolute seconds).
+    pub t: f64,
+    /// Tie-break sequence number from the engine's global counter.
+    pub seq: u64,
+    /// Destination instance (dense id).
+    pub dest: u32,
+    /// Pipeline edge the record travels on.
+    pub edge: u32,
+    /// Payload slot in the transfer slab.
+    pub slot: u32,
+}
+
+/// Slab of in-flight transfer payloads + per-node link FIFOs.
+pub struct TransferNet {
+    /// Payload slab; freed slots are recycled via `free`.
+    slab: Vec<Item>,
+    free: Vec<u32>,
+    in_flight: usize,
+    peak_in_flight: usize,
+    /// Per-node FIFO of transfers serialized behind that node's egress
+    /// link (batched mode only; the seed event stream bypasses these).
+    links: Vec<VecDeque<LinkEntry>>,
+    /// Min-heap over current link heads, keyed `(t.to_bits(), seq, node)`.
+    /// Arrival times are finite and non-negative, so the IEEE-754 bit
+    /// pattern orders exactly like the float.  Each transfer is pushed
+    /// here exactly once — when it reaches the head of its link's FIFO —
+    /// so entries are never stale and no lazy deletion is needed.
+    heads: BinaryHeap<Reverse<(u64, u64, u32)>>,
+    queued: usize,
+}
+
+impl TransferNet {
+    pub fn new(n_nodes: usize) -> Self {
+        TransferNet {
+            slab: Vec::new(),
+            free: Vec::new(),
+            in_flight: 0,
+            peak_in_flight: 0,
+            links: vec![VecDeque::new(); n_nodes],
+            heads: BinaryHeap::new(),
+            queued: 0,
+        }
+    }
+
+    /// Park a record in the slab; returns its slot id (recycled slots
+    /// first, so the slab's footprint tracks the in-flight high-water).
+    pub fn put_item(&mut self, item: Item) -> u32 {
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slab[s as usize] = item;
+                s
+            }
+            None => {
+                debug_assert!(self.slab.len() < u32::MAX as usize, "transfer slab overflows u32");
+                self.slab.push(item);
+                (self.slab.len() - 1) as u32
+            }
+        };
+        self.in_flight += 1;
+        self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
+        slot
+    }
+
+    /// Take a record out of the slab, freeing its slot.
+    pub fn take_item(&mut self, slot: u32) -> Item {
+        let item = self.slab[slot as usize];
+        self.free.push(slot);
+        self.in_flight -= 1;
+        item
+    }
+
+    /// Append a transfer to `node`'s link FIFO.  Arrival times behind one
+    /// link are strictly increasing (the link serializes), so the deque
+    /// stays sorted by construction.
+    pub fn enqueue(&mut self, node: usize, e: LinkEntry) {
+        debug_assert!(e.t.is_finite() && e.t >= 0.0, "arrival keys must bit-order");
+        debug_assert!(
+            self.links[node].back().map(|b| (b.t, b.seq) < (e.t, e.seq)).unwrap_or(true),
+            "link FIFO keys must be strictly increasing"
+        );
+        self.links[node].push_back(e);
+        self.queued += 1;
+        if self.links[node].len() == 1 {
+            self.heads.push(Reverse((e.t.to_bits(), e.seq, node as u32)));
+        }
+    }
+
+    /// The earliest pending `(arrive, seq)` key across all links, if any.
+    #[inline]
+    pub fn peek_min(&self) -> Option<(f64, u64)> {
+        self.heads.peek().map(|Reverse((tb, seq, _))| (f64::from_bits(*tb), *seq))
+    }
+
+    /// Pop the globally earliest transfer (caller guarantees non-empty)
+    /// and promote its link's next entry to the heads heap.
+    pub fn pop_min(&mut self) -> LinkEntry {
+        let Reverse((_, _, node)) = self.heads.pop().expect("pop_min on empty TransferNet");
+        let q = &mut self.links[node as usize];
+        let e = q.pop_front().expect("heads entry tracks a non-empty link");
+        self.queued -= 1;
+        if let Some(head) = q.front() {
+            self.heads.push(Reverse((head.t.to_bits(), head.seq, node)));
+        }
+        e
+    }
+
+    /// No transfers queued behind any link (slab occupancy may still be
+    /// non-zero in seed-event-stream mode, where payloads are slab-stored
+    /// but scheduled through the event heap).
+    pub fn is_idle(&self) -> bool {
+        self.queued == 0
+    }
+
+    /// Transfers currently in the slab (both modes).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// High-water mark of simultaneous in-flight transfers.
+    pub fn peak_in_flight(&self) -> usize {
+        self.peak_in_flight
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::items::ItemAttrs;
+
+    fn item(id: u64, mb: f64) -> Item {
+        Item {
+            id,
+            attrs: ItemAttrs { tokens_in: 1.0, tokens_out: 1.0, pixels_m: 1.0, frames: 1.0 },
+            size_mb: mb,
+            regime: 0,
+        }
+    }
+
+    #[test]
+    fn slab_recycles_slots_and_tracks_peak() {
+        let mut net = TransferNet::new(2);
+        let a = net.put_item(item(1, 0.5));
+        let b = net.put_item(item(2, 0.7));
+        assert_ne!(a, b);
+        assert_eq!(net.peak_in_flight(), 2);
+        assert_eq!(net.take_item(a).id, 1);
+        let c = net.put_item(item(3, 0.9));
+        assert_eq!(c, a, "freed slot is recycled");
+        assert_eq!(net.take_item(b).id, 2);
+        assert_eq!(net.take_item(c).id, 3);
+        assert_eq!(net.in_flight(), 0);
+        assert_eq!(net.peak_in_flight(), 2);
+    }
+
+    #[test]
+    fn pop_min_merges_links_by_time_then_seq() {
+        let mut net = TransferNet::new(3);
+        // Link 0 and link 2 interleave in time; equal times break by seq.
+        let mk = |t, seq, slot| LinkEntry { t, seq, dest: 0, edge: 0, slot };
+        net.enqueue(0, mk(1.0, 1, 10));
+        net.enqueue(0, mk(3.0, 5, 11));
+        net.enqueue(2, mk(1.0, 2, 20));
+        net.enqueue(2, mk(2.0, 3, 21));
+        let order: Vec<u32> = (0..4).map(|_| net.pop_min().slot).collect();
+        assert_eq!(order, vec![10, 20, 21, 11]);
+        assert!(net.is_idle());
+        assert!(net.peek_min().is_none());
+    }
+}

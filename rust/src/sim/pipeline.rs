@@ -29,14 +29,41 @@
 //!   pre-DAG executor event-for-event.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::fmt;
 
 use crate::config::{ClusterSpec, OperatorKind, PipelineSpec, TenancyView};
 use crate::rngx::Rng;
 use crate::sim::engine::{Engine, Ev, InstId};
 use crate::sim::items::{Item, ItemAttrs};
 use crate::sim::metrics::{InstWindow, InstanceMetrics, OpMetrics, OpWindowAcc};
+use crate::sim::net::{LinkEntry, TransferNet};
 use crate::sim::service;
 use crate::workload::Trace;
+
+/// Typed instance-launch failures (the executor's admission errors used
+/// to be stringly `Result<_, String>`; the rendered messages are
+/// unchanged, so CLI strict-mode output and exit codes are too).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// The target node is marked down by the dynamics layer.
+    NodeDown { node: usize },
+    /// The target node has no free accelerator slots for the operator.
+    OutOfAccelerators { node: usize, op: String, booked: u32, want: u32, cap: u32 },
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::NodeDown { node } => write!(f, "node {node} is down"),
+            SimError::OutOfAccelerators { node, op, booked, want, cap } => write!(
+                f,
+                "node {node} out of accelerators for {op} ({booked}+{want} > {cap})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InstState {
@@ -135,6 +162,16 @@ fn source_waiter(tenant: usize) -> usize {
 /// executor event-for-event.
 pub struct PipelineSim {
     pub engine: Engine,
+    /// In-flight cross-node transfers: payload slab + per-node link FIFOs
+    /// (batched mode stores entries here instead of the event heap; both
+    /// stores are consumed in global `(time, seq)` order by `run_until`).
+    net: TransferNet,
+    /// Route transfers through one heap event per record (the legacy
+    /// "seed event stream") instead of the batched link FIFOs.  Same
+    /// `(time, seq)` delivery schedule either way — this is the measured
+    /// baseline mode for `bench-perf` and the reference stream for the
+    /// parity tests.
+    seed_event_stream: bool,
     pub spec: PipelineSpec,
     pub cluster: ClusterSpec,
     /// Tenant structure of `spec` (trivial for [`PipelineSim::new`]).
@@ -282,6 +319,8 @@ impl PipelineSim {
         }
         PipelineSim {
             engine,
+            net: TransferNet::new(cluster.nodes.len()),
+            seed_event_stream: false,
             rng: Rng::new(seed),
             traces,
             tenancy: view,
@@ -366,18 +405,26 @@ impl PipelineSim {
 
     /// Launch an instance of `op` on `node` with config θ.  Fails if the
     /// node lacks accelerator capacity.
-    pub fn add_instance(&mut self, op: usize, node: usize, theta: Vec<f64>) -> Result<usize, String> {
+    pub fn add_instance(
+        &mut self,
+        op: usize,
+        node: usize,
+        theta: Vec<f64>,
+    ) -> Result<usize, SimError> {
         if !self.node_up[node] {
-            return Err(format!("node {node} is down"));
+            return Err(SimError::NodeDown { node });
         }
         let o = &self.spec.operators[op];
         let ns = &mut self.nodes[node];
         let nspec = &self.cluster.nodes[node];
         if o.accels > 0 && ns.accel_booked + o.accels > nspec.accels {
-            return Err(format!(
-                "node {node} out of accelerators for {} ({}+{} > {})",
-                o.name, ns.accel_booked, o.accels, nspec.accels
-            ));
+            return Err(SimError::OutOfAccelerators {
+                node,
+                op: o.name.clone(),
+                booked: ns.accel_booked,
+                want: o.accels,
+                cap: nspec.accels,
+            });
         }
         ns.cpu_booked += o.cpu;
         ns.mem_booked += o.mem_gb;
@@ -430,7 +477,7 @@ impl PipelineSim {
                 }
             }
         }
-        self.engine.after(o.start_s, Ev::InstanceReady(InstId(id)));
+        self.engine.after(o.start_s, Ev::InstanceReady(InstId::of(id)));
         Ok(id)
     }
 
@@ -473,7 +520,7 @@ impl PipelineSim {
             if inst.down_since.is_none() {
                 inst.down_since = Some(now);
             }
-            self.engine.after(cold, Ev::InstanceReady(InstId(id)));
+            self.engine.after(cold, Ev::InstanceReady(InstId::of(id)));
         }
     }
 
@@ -544,16 +591,56 @@ impl PipelineSim {
     // ------------------------------------------------------------------
 
     /// Run the simulation until `t_end` (absolute seconds).
+    ///
+    /// Two event stores feed this loop: the engine's heap and the
+    /// per-node link FIFOs in [`TransferNet`].  Both key entries by
+    /// `(time, seq)` drawn from the engine's single counter, so taking
+    /// the smaller key at each step replays exactly the total order the
+    /// legacy one-heap-event-per-record stream produced — delivery
+    /// instants, tie-breaks and all.
     pub fn run_until(&mut self, t_end: f64) {
-        while let Some(ev) = self.engine.next_before(t_end) {
-            match ev {
-                Ev::SourceEmit(t) => self.try_source(t as usize),
-                Ev::InstanceReady(InstId(id)) => self.on_ready(id),
-                Ev::BatchDone(InstId(id)) => self.on_batch_done(id),
-                Ev::TransferDone(InstId(id), edge, item) => self.on_transfer(id, edge, item),
+        loop {
+            let heap = self.engine.peek_key();
+            let link = self.net.peek_min();
+            let link_first = match (heap, link) {
+                (None, None) => break,
+                // `<=` matches the heap path's pop condition: events
+                // exactly at the horizon belong to this window in both
+                // transfer modes.
+                (None, Some(l)) => l.0 <= t_end,
+                (Some(_), None) => false,
+                // Keys are unique (one shared counter), so the tuple
+                // comparison is total despite the f64 component.  Beyond
+                // the horizon the heap path handles the clock clamp.
+                (Some(h), Some(l)) => l < h && l.0 <= t_end,
+            };
+            if link_first {
+                let e = self.net.pop_min();
+                self.engine.deliver_external(e.t);
+                let item = self.net.take_item(e.slot);
+                self.on_transfer(e.dest as usize, e.edge as usize, item);
+            } else {
+                match self.engine.next_before(t_end) {
+                    Some(ev) => self.handle(ev),
+                    None => break,
+                }
             }
         }
         self.engine.advance_to(t_end);
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::SourceEmit(t) => self.try_source(t as usize),
+            Ev::InstanceReady(id) => self.on_ready(id.idx()),
+            Ev::BatchDone(id) => self.on_batch_done(id.idx()),
+            // Seed-event-stream mode only: the payload still lives in
+            // the slab, the event carries its slot.
+            Ev::TransferDone { dest, edge, slot } => {
+                let item = self.net.take_item(slot);
+                self.on_transfer(dest.idx(), edge as usize, item);
+            }
+        }
     }
 
     fn on_ready(&mut self, id: usize) {
@@ -858,12 +945,12 @@ impl PipelineSim {
             inst.conservative = 4;
             self.oom_events_total[op_idx] += 1;
             self.oom_downtime_s[op_idx] += cold;
-            self.engine.after(cold, Ev::InstanceReady(InstId(id)));
+            self.engine.after(cold, Ev::InstanceReady(InstId::of(id)));
             return;
         }
         inst.batch = items;
         inst.batch_service_s = service_s;
-        self.engine.after(service_s, Ev::BatchDone(InstId(id)));
+        self.engine.after(service_s, Ev::BatchDone(InstId::of(id)));
     }
 
     fn on_batch_done(&mut self, id: usize) {
@@ -1118,7 +1205,23 @@ impl PipelineSim {
         let arrive = start + item.size_mb / rate + self.net_latency;
         ns.link_free = arrive;
         self.instances[dest].reserved += 1;
-        self.engine.at(arrive, Ev::TransferDone(InstId(dest), edge, item));
+        // The payload is parked in the slab either way; only the *key*
+        // travels.  Both branches draw the sequence number from the same
+        // counter at the same program point, so tie-breaks are identical
+        // across modes.
+        let slot = self.net.put_item(item);
+        if self.seed_event_stream {
+            self.engine.at(
+                arrive,
+                Ev::TransferDone { dest: InstId::of(dest), edge: edge as u32, slot },
+            );
+        } else {
+            let seq = self.engine.alloc_seq();
+            self.net.enqueue(
+                from_node,
+                LinkEntry { t: arrive, seq, dest: InstId::of(dest).0, edge: edge as u32, slot },
+            );
+        }
     }
 
     fn wake_waiters(&mut self, op: usize) {
@@ -1518,6 +1621,25 @@ impl PipelineSim {
             return 0.0;
         }
         (self.out_records_t[t] as f64 / self.tenancy.d_o[t]) / self.now()
+    }
+
+    /// Route future cross-node transfers through the legacy
+    /// one-heap-event-per-record stream instead of the batched link
+    /// FIFOs.  Used by the perf bench as the measured baseline and by
+    /// the parity tests as the reference; both modes draw `(time, seq)`
+    /// keys from the same counter and are bit-identical by construction.
+    pub fn set_seed_event_stream(&mut self, on: bool) {
+        self.seed_event_stream = on;
+    }
+
+    /// High-water mark of live entries in the event heap.
+    pub fn peak_heap_entries(&self) -> usize {
+        self.engine.peak_entries()
+    }
+
+    /// High-water mark of simultaneous in-flight cross-node transfers.
+    pub fn peak_in_flight_transfers(&self) -> usize {
+        self.net.peak_in_flight()
     }
 
     /// True when every trace is exhausted and no work remains in flight —

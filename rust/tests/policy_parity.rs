@@ -129,6 +129,26 @@ fn empty_dynamics_is_bit_identical() {
     }
 }
 
+/// The batched-transfer overhaul at rest: flipping the simulator back to
+/// the legacy seed event stream (`sim_seed_event_stream`) must not
+/// perturb a single event — the two transfer representations share one
+/// `(time, seq)` key space, so this is bit-identical, not approximate.
+/// The full six-policy sweep lives in `tests/sim_perf_parity.rs`; this
+/// pin keeps the contract visible next to the other parity invariants.
+#[test]
+fn seed_event_stream_is_bit_identical() {
+    for (name, variant) in
+        [("Static", Variant::baseline(Policy::Static)), ("Trident", Variant::trident())]
+    {
+        let batched = mk_det(&variant, 5).run(300.0);
+        let mut cfg = mini_cfg();
+        cfg.milp_time_budget_ms = 10_000;
+        cfg.sim_seed_event_stream = true;
+        let seeded = mk_with_cfg(&variant, 5, cfg).run(300.0);
+        assert_eq!(key(&batched), key(&seeded), "policy {name} diverged across transfer modes");
+    }
+}
+
 /// Same grid, different `--jobs`: reports and aggregates are identical.
 #[test]
 fn harness_invariant_to_worker_count() {
