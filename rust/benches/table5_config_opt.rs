@@ -25,13 +25,9 @@ fn main() {
     let mut cells: Vec<Vec<String>> = vec![Vec::new(); 5];
     for wname in ["PDF", "Video"] {
         let w = common::workload(wname);
-        let (idx, attrs) = if wname == "PDF" {
-            let i = w.pipeline.operators.iter().position(|o| o.name == "text_ocr").unwrap();
-            (i, nominal_attrs(&w.pipeline, w.src)[i])
-        } else {
-            let i = w.pipeline.operators.iter().position(|o| o.name == "caption").unwrap();
-            (i, nominal_attrs(&w.pipeline, w.src)[i])
-        };
+        let target = if wname == "PDF" { "text_ocr" } else { "caption" };
+        let idx = w.pipeline.interner().op(target).idx();
+        let attrs = nominal_attrs(&w.pipeline, w.src)[idx];
         let op = &w.pipeline.operators[idx];
         let default_ut =
             service::true_unit_rate(&op.service, &op.config_space.default_config(), &attrs);

@@ -4,6 +4,7 @@ pub mod spec;
 
 pub use json::Json;
 pub use spec::{
-    ClusterSpec, ConfigParam, ConfigSpace, CostW, FeatureExtractor, NodeSpec, OperatorKind,
-    OperatorSpec, PipelineSpec, ServiceModel, TenancyView, Tenancy, TenantSpec, TridentConfig,
+    ClusterSpec, ConfigParam, ConfigSpace, CostW, EdgeId, FeatureExtractor, NodeSpec, OpId,
+    OperatorKind, OperatorSpec, PipelineSpec, ServiceModel, SpecInterner, TenancyView, Tenancy,
+    TenantSpec, TridentConfig,
 };

@@ -5,7 +5,66 @@
 //! `ServiceModel` ground truth (which the scheduler never reads — it only
 //! sees metrics), and the scheduling stack reads the resource/flow fields.
 
+use std::collections::HashMap;
+
 use super::json::Json;
+
+/// Dense operator id: an index into `PipelineSpec::operators`, newtyped so
+/// name-resolved handles are visibly distinct from raw loop indices.
+///
+/// Everything reachable from `PipelineSim::run_until` already speaks dense
+/// `usize` ids; `OpId`/`EdgeId` plus [`SpecInterner`] are the *boundary*
+/// API — names are resolved exactly once, when a spec (or a test/bench
+/// harness) is built, and only ids cross into the hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OpId(pub u32);
+
+impl OpId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Dense edge id: an index into `PipelineSpec::edges`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EdgeId(pub u32);
+
+impl EdgeId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One-shot name → dense-id resolver, built from a spec by
+/// [`PipelineSpec::interner`].  Replaces the ad-hoc
+/// `operators.iter().position(|o| o.name == ...)` scans: O(1) lookups,
+/// built once, and the returned ids are plain indices thereafter.
+pub struct SpecInterner {
+    ops: HashMap<String, OpId>,
+    edges: HashMap<(u32, u32), EdgeId>,
+}
+
+impl SpecInterner {
+    /// Resolve an operator by name; panics with the offending name on a
+    /// miss (interner users are spec builders, where a bad name is a bug).
+    pub fn op(&self, name: &str) -> OpId {
+        *self.ops.get(name).unwrap_or_else(|| panic!("unknown operator '{name}'"))
+    }
+
+    pub fn try_op(&self, name: &str) -> Option<OpId> {
+        self.ops.get(name).copied()
+    }
+
+    /// Resolve the edge `from -> to`; panics if the spec has no such edge.
+    pub fn edge(&self, from: OpId, to: OpId) -> EdgeId {
+        *self
+            .edges
+            .get(&(from.0, to.0))
+            .unwrap_or_else(|| panic!("no edge {} -> {}", from.0, to.0))
+    }
+}
 
 /// One server in the fixed-resource cluster.
 #[derive(Debug, Clone)]
@@ -303,6 +362,26 @@ impl PipelineSpec {
 
     pub fn n_edges(&self) -> usize {
         self.edges.len()
+    }
+
+    /// Build the one-shot name → dense-id resolver for this spec.  On a
+    /// duplicate operator name the last occurrence wins (merged tenancy
+    /// specs namespace names per tenant, so collisions don't arise in
+    /// practice).
+    pub fn interner(&self) -> SpecInterner {
+        let ops = self
+            .operators
+            .iter()
+            .enumerate()
+            .map(|(i, o)| (o.name.clone(), OpId(i as u32)))
+            .collect();
+        let edges = self
+            .edges
+            .iter()
+            .enumerate()
+            .map(|(i, &(f, t))| ((f as u32, t as u32), EdgeId(i as u32)))
+            .collect();
+        SpecInterner { ops, edges }
     }
 
     /// Edge ids leaving `op`, in edge-list order.
@@ -698,6 +777,11 @@ pub struct TridentConfig {
     /// batched link FIFOs.  Bit-identical results either way (the parity
     /// suite pins this); the batched default is simply faster.
     pub sim_seed_event_stream: bool,
+    /// Shard count for the tenant-sharded parallel executor (`ShardedSim`):
+    /// tenant `t` is owned by shard `t % K`, each shard advances on its own
+    /// worker thread, and results are bit-identical to serial at any K
+    /// (clamped to the tenant count; 1 = serial on the caller's thread).
+    pub sim_shards: usize,
 }
 
 impl Default for TridentConfig {
@@ -726,6 +810,7 @@ impl Default for TridentConfig {
             milp_join_colocation: false,
             native_gp: std::env::var("TRIDENT_NATIVE_GP").map(|v| v == "1").unwrap_or(false),
             sim_seed_event_stream: false,
+            sim_shards: 1,
         }
     }
 }
@@ -816,6 +901,7 @@ impl TridentConfig {
                 .get("sim_seed_event_stream")
                 .and_then(Json::as_bool)
                 .unwrap_or(d.sim_seed_event_stream),
+            sim_shards: j.f64_or("sim_shards", d.sim_shards as f64) as usize,
         }
     }
 }

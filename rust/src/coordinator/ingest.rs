@@ -15,7 +15,7 @@ use std::time::Instant;
 
 use crate::config::TridentConfig;
 use crate::observation::{CapacityEstimator, ObsConfig, UsefulTimeEstimator};
-use crate::sim::{ItemAttrs, OpMetrics, PipelineSim};
+use crate::sim::{ItemAttrs, OpMetrics, ShardedSim};
 
 use super::{Coordinator, Policy};
 
@@ -106,10 +106,10 @@ impl Coordinator {
                     if oom {
                         // The probe crash costs a real instance restart.
                         if let Some(&victim) = self.sim.instances_of(i).first() {
-                            let cur = self.sim.instances[victim].theta.clone();
+                            let cur = self.sim.instance(victim).theta.clone();
                             self.sim.restart_with_config(victim, cur);
-                            self.sim.oom_events_total[i] += 1;
-                            self.sim.oom_downtime_s[i] += self.sim.spec.operators[i].cold_s;
+                            let cold = self.sim.spec.operators[i].cold_s;
+                            self.sim.note_oom(i, cold);
                         }
                     }
                 }
@@ -166,7 +166,7 @@ impl Coordinator {
 /// report after a sustained evaluation window at config θ (ground-truth
 /// service model + measurement noise; OOM when the noisy peak crosses the
 /// device limit).
-fn probe_measure(sim: &PipelineSim, op: usize, theta: &[f64]) -> (f64, f64, bool) {
+fn probe_measure(sim: &ShardedSim, op: usize, theta: &[f64]) -> (f64, f64, bool) {
     let attrs = sim.mean_attrs(op).unwrap_or(ItemAttrs {
         tokens_in: 512.0,
         tokens_out: 64.0,

@@ -44,14 +44,16 @@ use crate::dynamics::{ClusterEvent, DynamicsSpec, EventReport, RecoveryPolicy, T
 use crate::observation::{CapacityEstimator, ObsConfig, UsefulTimeEstimator};
 use crate::runtime::GpBackend;
 use crate::scheduling::RollingState;
-use crate::sim::{ItemAttrs, OpMetrics, PipelineSim};
+use crate::sim::{ItemAttrs, OpMetrics, ShardedSim};
 use crate::workload::Trace;
 
 use ingest::EstimatorBank;
 
 /// The coordinator.
 pub struct Coordinator {
-    pub sim: PipelineSim,
+    /// The executor: K tenant-shards behind the serial API, bit-identical
+    /// to the serial executor at any `cfg.sim_shards` (1 = serial path).
+    pub sim: ShardedSim,
     pub cfg: TridentConfig,
     pub variant: Variant,
     backend: GpBackend,
@@ -263,7 +265,8 @@ impl Coordinator {
             })
             .collect();
         let policy = variant.policy.build();
-        let mut sim = PipelineSim::new_tenancy(pipeline, view, cluster, traces, seed);
+        let mut sim =
+            ShardedSim::new_tenancy(pipeline, view, cluster, traces, seed, cfg.sim_shards);
         sim.set_seed_event_stream(cfg.sim_seed_event_stream);
         Ok(Coordinator {
             sim,
@@ -305,7 +308,7 @@ impl Coordinator {
     /// it against the deployment, holds `node_join` spares offline, and
     /// puts arriving tenants to sleep until their arrival events fire.
     pub fn set_dynamics(&mut self, spec: DynamicsSpec) -> Result<(), String> {
-        if !self.sim.instances.is_empty() {
+        if self.sim.has_instances() {
             return Err("set_dynamics must be called before the run starts".into());
         }
         spec.validate(self.sim.cluster.nodes.len(), &self.sim.tenancy.ids)?;
@@ -542,7 +545,7 @@ impl Coordinator {
     /// simulator one metrics window at a time, ingest, and re-schedule
     /// every `t_sched_s`.
     fn drive(&mut self, max_s: f64, until_drained: bool) -> RunReport {
-        if self.sim.instances.is_empty() {
+        if !self.sim.has_instances() {
             self.deploy_initial();
         }
         let mut t = self.sim.now();

@@ -77,14 +77,14 @@ impl Coordinator {
                     id: view.ids[t].clone(),
                     weight: view.weights[t],
                     throughput: self.sim.tenant_throughput(t),
-                    items_processed: self.sim.out_records_t[t],
-                    items_admitted: self.sim.items_emitted_t[t],
-                    items_lost: self.sim.lost_items_t[t],
+                    items_processed: self.sim.out_records_t(t),
+                    items_admitted: self.sim.items_emitted_t(t),
+                    items_lost: self.sim.lost_items_t(t),
                 })
                 .collect(),
             series: self.series.clone(),
-            oom_events: self.sim.oom_events_total.iter().sum(),
-            oom_downtime_s: self.sim.oom_downtime_s.iter().sum(),
+            oom_events: self.sim.oom_events_total(),
+            oom_downtime_s: self.sim.oom_downtime_s_total(),
             config_transitions: self.transitions,
             milp_ms: self.milp_ms.clone(),
             obs_overhead_ms: mean(&self.obs_ms),
@@ -95,7 +95,7 @@ impl Coordinator {
                 .map(|(&k, &(s, n))| (k, if n > 0 { s / n as f64 } else { 0.0 }))
                 .collect(),
             cluster_eval: self.cluster_eval.clone(),
-            items_processed: self.sim.out_records,
+            items_processed: self.sim.out_records(),
             events: self.event_reports.clone(),
             lost_records: self.sim.lost_records_total(),
         }

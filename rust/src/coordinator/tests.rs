@@ -144,7 +144,7 @@ fn nominal_attrs_propagate_scaling() {
         frames: 12.0,
     };
     let nom = nominal_attrs(&pl, src);
-    let ocr = pl.operators.iter().position(|o| o.name == "text_ocr").unwrap();
+    let ocr = pl.interner().op("text_ocr").idx();
     // per-block tokens at the OCR stage = 36000 / 120 = 300
     assert!((nom[ocr].tokens_in - 300.0).abs() < 1.0, "{}", nom[ocr].tokens_in);
 }

@@ -123,7 +123,7 @@ impl Coordinator {
                     .sim
                     .instances_of(op)
                     .into_iter()
-                    .filter(|&i| self.sim.instances[i].node == node)
+                    .filter(|&i| self.sim.instance(i).node == node)
                     .collect();
                 let want = x[op][node] as usize;
                 if have.len() < want {
@@ -140,7 +140,7 @@ impl Coordinator {
                     let mut surplus: Vec<usize> = have.clone();
                     surplus.sort_by_key(|&i| {
                         let is_cand =
-                            cand.as_deref() == Some(&self.sim.instances[i].theta[..]);
+                            cand.as_deref() == Some(&self.sim.instance(i).theta[..]);
                         (is_cand as u8, std::cmp::Reverse(i))
                     });
                     // stop non-candidate, newest-first
@@ -213,7 +213,7 @@ impl Coordinator {
             .sim
             .instances_of(i)
             .into_iter()
-            .filter(|&id| self.sim.instances[id].theta == self.rolling[i].current)
+            .filter(|&id| self.sim.instance(id).theta == self.rolling[i].current)
             .take(b as usize)
             .collect();
         for id in &old {

@@ -8,14 +8,16 @@
 //! trident run   --tenancy tenancy.json                          # full tenant control
 //! trident run   --pipelines pdf,speech --dynamics churn.json    # scripted cluster dynamics
 //! trident run   --pipeline pdf --mtbf 600 --mttr 60             # stochastic node churn
+//! trident run   --pipelines pdf,speech --shards 4               # sharded parallel sim tick
 //! trident compare --pipeline pdf [--duration 1800] [--jobs J]   # all policies, parallel
 //! trident compare --pipelines pdf,speech                        # multi-tenant comparison
 //! trident sweep --pipeline pdf --seeds 4 --jobs 4 [--policies static,trident]
 //!               [--duration 1800] [--seed 0]      # variant × seed grid, mean ± std
 //! trident milp-bench [--nodes 8|16]               # RQ6 solve times + cold-vs-warm pivots
 //!               [--max-pivots N] [--assert-speedup S]   # solver perf gates (CI)
-//! trident bench-perf [--windows 4] [--rungs two-tenant-96,...] [--out BENCH_6.json]
+//! trident bench-perf [--windows 4] [--rungs two-tenant-96,...] [--out BENCH_7.json]
 //!               [--milp-budget-ms 10000] [--assert-speedup 2]  # RQ8 perf trajectory
+//!               [--assert-shard-speedup 1.5]   # K=4 vs K=1 scaling gate (stress-512)
 //! ```
 //!
 //! A tenancy JSON file:
@@ -126,6 +128,16 @@ fn build_cfg(args: &Args) -> TridentConfig {
     }
     if args.flag("join-colocate") {
         cfg.milp_join_colocation = true;
+    }
+    if let Some(v) = args.map.get("shards") {
+        cfg.sim_shards = v.parse().unwrap_or_else(|_| {
+            eprintln!("invalid --shards '{v}' (expected a positive integer)");
+            std::process::exit(2);
+        });
+        if cfg.sim_shards == 0 {
+            eprintln!("--shards must be at least 1");
+            std::process::exit(2);
+        }
     }
     cfg
 }
@@ -569,13 +581,18 @@ struct Rung {
     nodes: usize,
     /// Simulated seconds per measured window.
     window_s: f64,
+    /// 0 = the pinned two-tenant pdf+speech scenario; >0 = that many
+    /// synthetic stress-chain tenants (the shard-scaling rungs: K shards
+    /// need ≥K tenants to spread over).
+    stress_tenants: usize,
 }
 
 const BENCH_RUNGS: &[Rung] = &[
-    Rung { name: "two-tenant-16", nodes: 16, window_s: 30.0 },
-    Rung { name: "two-tenant-96", nodes: 96, window_s: 10.0 },
-    Rung { name: "two-tenant-512", nodes: 512, window_s: 5.0 },
-    Rung { name: "stress-10k", nodes: 10_000, window_s: 2.0 },
+    Rung { name: "two-tenant-16", nodes: 16, window_s: 30.0, stress_tenants: 0 },
+    Rung { name: "two-tenant-96", nodes: 96, window_s: 10.0, stress_tenants: 0 },
+    Rung { name: "two-tenant-512", nodes: 512, window_s: 5.0, stress_tenants: 0 },
+    Rung { name: "stress-512", nodes: 512, window_s: 2.0, stress_tenants: 8 },
+    Rung { name: "stress-10k", nodes: 10_000, window_s: 2.0, stress_tenants: 100 },
 ];
 
 /// Raw-speed measurement of one rung in one transfer mode.
@@ -683,20 +700,34 @@ fn bench_placement(
     plan
 }
 
-/// Build the rung's simulator with static placement; `seed_stream` picks
-/// the legacy one-event-per-record transfer path (the measured baseline)
-/// or the batched link FIFOs.  Both modes get byte-identical inputs.
-fn bench_sim(rung: &Rung, seed_stream: bool) -> trident::sim::PipelineSim {
-    use trident::sim::PipelineSim;
-    // Low egress (vs the 12.5 GB/s production default) keeps the rungs
-    // link-bound: thousands of records serialize behind the links, which
-    // is exactly the population the two transfer modes store differently.
-    let cluster = ClusterSpec::homogeneous(rung.nodes, 256.0, 1024.0, 8, 65536.0, 200.0);
-    let (mut sim, plan) = if rung.name == "stress-10k" {
-        let spec = stress_spec();
-        let plan = bench_placement(&spec, rung.nodes);
-        let trace = Box::new(trident::workload::UniformTrace { dist: stress_dist(), regime: 0 });
-        (PipelineSim::new(spec, cluster, trace, 11), plan)
+/// `n` identical stress-chain tenants with one endless uniform trace
+/// each.  Ids are unique ("stress-00"…); `Tenancy::merged` namespaces the
+/// duplicated operator names per tenant, so the merged spec stays valid.
+fn stress_tenancy(n: usize) -> (Tenancy, Vec<Box<dyn Trace>>) {
+    let tenants = (0..n)
+        .map(|t| TenantSpec {
+            id: format!("stress-{t:02}"),
+            pipeline: stress_spec(),
+            weight: 1.0,
+            source_rate: 0.0,
+        })
+        .collect();
+    let traces = (0..n)
+        .map(|_| {
+            Box::new(trident::workload::UniformTrace { dist: stress_dist(), regime: 0 })
+                as Box<dyn Trace>
+        })
+        .collect();
+    (Tenancy { tenants }, traces)
+}
+
+/// The rung's merged scenario — byte-identical inputs for the serial and
+/// sharded builds (the drift check compares their event/record totals).
+fn bench_scenario(
+    rung: &Rung,
+) -> (trident::config::PipelineSpec, trident::config::TenancyView, Vec<Box<dyn Trace>>) {
+    let (tenancy, traces) = if rung.stress_tenants > 0 {
+        stress_tenancy(rung.stress_tenants)
     } else {
         let tenancy = Tenancy {
             tenants: vec![
@@ -704,13 +735,45 @@ fn bench_sim(rung: &Rung, seed_stream: bool) -> trident::sim::PipelineSim {
                 TenantSpec { id: "speech".into(), pipeline: speech::pipeline(), weight: 1.0, source_rate: 0.0 },
             ],
         };
-        let (spec, view) = tenancy.merged().expect("pdf+speech tenancy is valid");
-        let plan = bench_placement(&spec, rung.nodes);
         let traces: Vec<Box<dyn Trace>> =
             vec![Box::new(pdf::trace(10_000_000)), Box::new(speech::trace(10_000_000))];
-        (PipelineSim::new_tenancy(spec, view, cluster, traces, 11), plan)
+        (tenancy, traces)
     };
+    let (spec, view) = tenancy.merged().expect("bench tenancy is valid");
+    (spec, view, traces)
+}
+
+/// Low egress (vs the 12.5 GB/s production default) keeps the rungs
+/// link-bound: thousands of records serialize behind the links, which is
+/// exactly the population the two transfer modes store differently.
+fn bench_cluster(rung: &Rung) -> ClusterSpec {
+    ClusterSpec::homogeneous(rung.nodes, 256.0, 1024.0, 8, 65536.0, 200.0)
+}
+
+/// Build the rung's simulator with static placement; `seed_stream` picks
+/// the legacy one-event-per-record transfer path (the measured baseline)
+/// or the batched link FIFOs.  Both modes get byte-identical inputs.
+fn bench_sim(rung: &Rung, seed_stream: bool) -> trident::sim::PipelineSim {
+    let (spec, view, traces) = bench_scenario(rung);
+    let plan = bench_placement(&spec, rung.nodes);
+    let mut sim =
+        trident::sim::PipelineSim::new_tenancy(spec, view, bench_cluster(rung), traces, 11);
     sim.set_seed_event_stream(seed_stream);
+    for (op, node, theta) in plan {
+        let placed = (0..rung.nodes)
+            .any(|probe| sim.add_instance(op, (node + probe) % rung.nodes, theta.clone()).is_ok());
+        assert!(placed, "bench placement failed for op {op} on rung {}", rung.name);
+    }
+    sim
+}
+
+/// The same scenario partitioned over `shards` tenant shards (batched
+/// transfer mode — the sharded path has no seed-stream arm).
+fn bench_sim_sharded(rung: &Rung, shards: usize) -> trident::sim::ShardedSim {
+    let (spec, view, traces) = bench_scenario(rung);
+    let plan = bench_placement(&spec, rung.nodes);
+    let mut sim =
+        trident::sim::ShardedSim::new_tenancy(spec, view, bench_cluster(rung), traces, 11, shards);
     for (op, node, theta) in plan {
         let placed = (0..rung.nodes)
             .any(|probe| sim.add_instance(op, (node + probe) % rung.nodes, theta.clone()).is_ok());
@@ -737,6 +800,24 @@ fn bench_run(rung: &Rung, seed_stream: bool, windows: usize) -> ModeStats {
     }
 }
 
+/// Drive one sharded simulator through `windows` windows, timing each.
+fn bench_run_sharded(rung: &Rung, shards: usize, windows: usize) -> ModeStats {
+    let mut sim = bench_sim_sharded(rung, shards);
+    let mut wall_ms = Vec::with_capacity(windows);
+    for w in 0..windows {
+        let t_end = (w + 1) as f64 * rung.window_s;
+        let (_, ms) = harness::stopwatch_ms(|| sim.run_until(t_end));
+        wall_ms.push(ms);
+    }
+    ModeStats {
+        wall_ms,
+        events: sim.events_processed(),
+        records: (0..sim.spec.n_ops()).map(|op| sim.processed_total(op)).sum(),
+        peak_heap: sim.peak_heap_entries(),
+        peak_in_flight: sim.peak_in_flight_transfers(),
+    }
+}
+
 /// The rung's MILP solve (solver cost is part of the trajectory: the
 /// scheduler must stay cheap as the sim gets fast).  Node count is capped
 /// at 512 — the stress rung's 10k-node MILP is not a thing the
@@ -746,7 +827,10 @@ fn bench_milp(rung: &Rung, budget: Duration) -> Json {
     use trident::solver::MilpOptions;
 
     let milp_nodes = rung.nodes.min(512);
-    let input = if rung.name == "stress-10k" {
+    // Stress rungs solve the single 4-op chain (the scheduler sees one
+    // tenant's LP at a time there; the merged 4·N-op MILP is not a thing
+    // the coordinator would ever solve whole).
+    let input = if rung.stress_tenants > 0 {
         let spec = stress_spec();
         let src = ItemAttrs { tokens_in: 55.0, tokens_out: 20.0, pixels_m: 1.0, frames: 1.0 };
         let nominal = trident::coordinator::nominal_attrs(&spec, src);
@@ -783,18 +867,24 @@ fn bench_milp(rung: &Rung, budget: Duration) -> Json {
     ])
 }
 
-/// `trident bench-perf`: the pinned scale ladder behind `BENCH_6.json`.
+/// `trident bench-perf`: the pinned scale ladder behind `BENCH_7.json`.
 /// Each rung runs twice from byte-identical inputs — once through the
 /// legacy seed event stream (one heap event per record transfer), once
 /// through the batched link FIFOs — so the speedup is a same-binary
 /// wall-clock ratio, not a cross-commit guess, and the event/record
 /// totals double as a cross-mode parity check (they must match exactly;
-/// any drift fails the bench).  `--assert-speedup S` gates the
-/// 96-node two-tenant rung (CI's perf floor).
+/// any drift fails the bench).  On top of that every rung runs the
+/// sharded tick at K ∈ {1, 2, 4}; each K must reproduce the serial
+/// batched event/record totals exactly (tenant-sharding is a partition
+/// of the serial run, so any drift is a determinism bug and fails the
+/// bench).  `--assert-speedup S` gates the 96-node two-tenant rung and
+/// `--assert-shard-speedup S` gates stress-512's K=4-vs-K=1 events/sec
+/// ratio (the two-tenant rungs clamp K to 2 tenants and cannot scale
+/// past 2x by construction).
 fn bench_perf(args: &Args) {
     let windows = (args.f64("windows", 4.0) as usize).max(1);
     let budget = Duration::from_millis(args.f64("milp-budget-ms", 10_000.0) as u64);
-    let out_path = args.get("out", "BENCH_6.json");
+    let out_path = args.get("out", "BENCH_7.json");
     let selected: Vec<&Rung> = match args.map.get("rungs") {
         None => BENCH_RUNGS.iter().collect(),
         Some(list) => list
@@ -814,11 +904,12 @@ fn bench_perf(args: &Args) {
     };
 
     let mut table = Table::new(
-        "bench-perf scale ladder (seed event stream vs batched links)",
-        &["Rung", "nodes", "seed ev/s", "batched ev/s", "speedup", "peak heap", "MILP ms"],
+        "bench-perf scale ladder (seed stream vs batched links vs sharded tick)",
+        &["Rung", "nodes", "seed ev/s", "batched ev/s", "speedup", "K=4 ev/s", "K4/K1", "MILP ms"],
     );
     let mut rung_jsons = Vec::new();
     let mut gate_speedup: Option<f64> = None;
+    let mut gate_shard_speedup: Option<f64> = None;
     let mut failed = false;
     for &rung in &selected {
         eprintln!("rung {} ({} nodes): seed event stream...", rung.name, rung.nodes);
@@ -836,6 +927,35 @@ fn bench_perf(args: &Args) {
         if rung.name == "two-tenant-96" {
             gate_speedup = Some(speedup);
         }
+        // Sharded scaling curve: every K must land on the serial batched
+        // totals exactly (the sharded tick is a partition, not an
+        // approximation, of the serial run).
+        let n_tenants = if rung.stress_tenants > 0 { rung.stress_tenants } else { 2 };
+        let mut shard_jsons = Vec::new();
+        let mut eps_k: Vec<(usize, f64)> = Vec::new();
+        for k in [1usize, 2, 4] {
+            eprintln!("rung {}: sharded tick K={k}...", rung.name);
+            let sh = bench_run_sharded(rung, k, windows);
+            if sh.events != batched.events || sh.records != batched.records {
+                eprintln!(
+                    "FAIL: rung {} sharded K={k} drifted from serial (events {} vs {}, records {} vs {})",
+                    rung.name, sh.events, batched.events, sh.records, batched.records
+                );
+                failed = true;
+            }
+            eps_k.push((k, sh.events_per_sec()));
+            shard_jsons.push(Json::obj(vec![
+                ("shards", Json::num(k as f64)),
+                ("k_effective", Json::num(k.min(n_tenants) as f64)),
+                ("stats", sh.json()),
+            ]));
+        }
+        let eps1 = eps_k[0].1.max(1e-9);
+        let eps4 = eps_k[2].1;
+        let shard_speedup = eps4 / eps1;
+        if rung.name == "stress-512" {
+            gate_shard_speedup = Some(shard_speedup);
+        }
         let milp = bench_milp(rung, budget);
         table.row(vec![
             rung.name.to_string(),
@@ -843,19 +963,23 @@ fn bench_perf(args: &Args) {
             format!("{:.0}", seed.events_per_sec()),
             format!("{:.0}", batched.events_per_sec()),
             format!("{speedup:.2}x"),
-            format!("{} -> {}", seed.peak_heap, batched.peak_heap),
+            format!("{eps4:.0}"),
+            format!("{shard_speedup:.2}x"),
             format!("{:.0}", milp.f64_or("solve_ms", -1.0)),
         ]);
         rung_jsons.push(Json::obj(vec![
             ("name", Json::str(rung.name)),
             ("nodes", Json::num(rung.nodes as f64)),
+            ("tenants", Json::num(n_tenants as f64)),
             ("window_s", Json::num(rung.window_s)),
             ("windows", Json::num(windows as f64)),
             ("seed_event_stream", seed.json()),
             ("batched", batched.json()),
+            ("shard_scaling", Json::Arr(shard_jsons)),
             ("events_per_sec", Json::num(batched.events_per_sec().round())),
             ("records_per_sec", Json::num(batched.records_per_sec().round())),
             ("speedup_events_per_sec", Json::num((speedup * 100.0).round() / 100.0)),
+            ("shard_speedup_k4", Json::num((shard_speedup * 100.0).round() / 100.0)),
             ("milp", milp),
         ]));
     }
@@ -882,6 +1006,21 @@ fn bench_perf(args: &Args) {
             Some(got) => println!("two-tenant-96 speedup {got:.2}x >= {s}x"),
             None => {
                 eprintln!("--assert-speedup requires the two-tenant-96 rung in --rungs");
+                failed = true;
+            }
+        }
+    }
+    if let Some(s) = args.map.get("assert-shard-speedup").and_then(|v| v.parse::<f64>().ok()) {
+        match gate_shard_speedup {
+            Some(got) if got < s => {
+                eprintln!(
+                    "FAIL: stress-512 K=4 vs K=1 events/sec ratio {got:.2}x below required {s}x"
+                );
+                failed = true;
+            }
+            Some(got) => println!("stress-512 shard speedup {got:.2}x >= {s}x"),
+            None => {
+                eprintln!("--assert-shard-speedup requires the stress-512 rung in --rungs");
                 failed = true;
             }
         }
@@ -1053,11 +1192,11 @@ fn main() {
                 "usage: trident <run|compare|sweep|milp-bench|bench-perf> [--pipeline pdf|video|speech] \
                  [--pipelines pdf,speech [--weights 2,1]] [--tenancy file.json] [--policy ...] \
                  [--policies a,b,c] [--seeds N] [--jobs J] [--duration S] [--nodes N] [--seed S] \
-                 [--native-gp] [--join-colocate] \
+                 [--native-gp] [--join-colocate] [--shards K] \
                  [--dynamics file.json] [--mtbf S] [--mttr S] [--recovery requeue|loss] \
                  [--max-pivots N] [--assert-speedup S]   (milp-bench solver-perf gates) \
-                 [--windows W] [--rungs a,b] [--out BENCH_6.json] [--milp-budget-ms MS] \
-                 [--assert-speedup S]   (bench-perf scale ladder -> BENCH_6.json)"
+                 [--windows W] [--rungs a,b] [--out BENCH_7.json] [--milp-budget-ms MS] \
+                 [--assert-speedup S] [--assert-shard-speedup S]   (bench-perf -> BENCH_7.json)"
             );
         }
     }

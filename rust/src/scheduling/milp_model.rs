@@ -368,6 +368,8 @@ pub fn solve_with_options(
     let mut p_v = Vec::with_capacity(n);
     let mut x_v = vec![Vec::with_capacity(k); n];
     let mut b_v = Vec::with_capacity(n);
+    // (z var, op index) pairs so the warm start never re-resolves ops by name.
+    let mut z_v: Vec<(Var, usize)> = Vec::new();
     for (i, o) in input.ops.iter().enumerate() {
         let p = prob.int(&format!("p_{}", o.name), (o.n_new.max(1)) as f64, cap_i[i], 0.0);
         p_v.push(p);
@@ -398,6 +400,7 @@ pub fn solve_with_options(
             // we let the MILP choose via a binary-scaled variable: b in
             // {0, n_old} via auxiliary binary.
             let z = prob.int(&format!("z_{}", o.name), 0.0, 1.0, 0.0);
+            z_v.push((z, i));
             prob.constrain(
                 &format!("allatonce_{}", o.name),
                 vec![(b, 1.0), (z, -(o.n_old as f64))],
@@ -569,7 +572,8 @@ pub fn solve_with_options(
 
     // Greedy warm start: a feasible plan so branch & bound prunes from the
     // first node and Limit statuses still carry a usable incumbent.
-    let warm = warm_start(input, &prob, p_v.len(), &p_v, &x_v, &b_v, &flow_v, &t_v, t_min, e_max, j_mig);
+    let warm =
+        warm_start(input, &prob, p_v.len(), &p_v, &x_v, &b_v, &z_v, &flow_v, &t_v, t_min, e_max, j_mig);
 
     let key = shape_key(&prob);
     let hit = cache.key == Some(key);
@@ -697,6 +701,7 @@ fn warm_start(
     p_v: &[Var],
     x_v: &[Vec<Var>],
     b_v: &[Var],
+    z_v: &[(Var, usize)],
     flow_v: &[Vec<(Var, Var, Var)>],
     t_v: &[Var],
     t_min: Option<Var>,
@@ -859,13 +864,10 @@ fn warm_start(
         }
     }
     // all-at-once auxiliary binaries (z_<op>): b is 0 or n_old by
-    // construction (variables are named by op identity, so map the name
-    // back to its row).
-    for (idx, name) in prob.names.iter().enumerate() {
-        if let Some(rest) = name.strip_prefix("z_") {
-            let i = input.ops.iter().position(|o| o.name == rest)?;
-            sol[idx] = if b_pick[i] > 0 { 1.0 } else { 0.0 };
-        }
+    // construction; (var, op) pairs were recorded at creation, so no
+    // name scan.
+    for &(zv, i) in z_v {
+        sol[zv.0] = if b_pick[i] > 0 { 1.0 } else { 0.0 };
     }
     sol[j_mig.0] = 0.0;
 

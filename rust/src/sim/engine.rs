@@ -191,11 +191,36 @@ impl Engine {
         (t, ev)
     }
 
+    /// Bump the sequence counter with an explicit overflow check.  At the
+    /// 1M-records-in-flight bench scale a u64 counter cannot wrap in any
+    /// physical run (2^64 events at 10^9 ev/s is ~585 years), but the
+    /// counter is the determinism keystone — wrap-around would silently
+    /// reorder ties — so exhaustion is a hard error, not UB-by-assumption.
+    #[inline]
+    fn bump_seq(&mut self) -> u64 {
+        self.seq = self.seq.checked_add(1).expect("event sequence counter overflow");
+        self.seq
+    }
+
+    /// Fast-forward the sequence counter to `v` (no-op if already past).
+    /// Used by sharded runs to sub-allocate disjoint, globally consistent
+    /// sequence ranges to per-shard engines from one logical counter, and
+    /// by tests to exercise counter values past `u32::MAX` cheaply.
+    pub fn advance_seq_to(&mut self, v: u64) {
+        self.seq = self.seq.max(v);
+    }
+
+    /// Current value of the sequence counter (last allocated seq).
+    #[inline]
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
     /// Schedule `ev` at absolute time `t` (clamped to now).
     pub fn at(&mut self, t: f64, ev: Ev) {
         let t = t.max(self.now);
-        self.seq += 1;
-        let n = self.alloc_node(t, self.seq, ev);
+        let seq = self.bump_seq();
+        let n = self.alloc_node(t, seq, ev);
         self.root = self.meld(self.root, n);
     }
 
@@ -212,8 +237,7 @@ impl Engine {
     /// tie-breaks are identical whichever store holds the entry.
     #[inline]
     pub fn alloc_seq(&mut self) -> u64 {
-        self.seq += 1;
-        self.seq
+        self.bump_seq()
     }
 
     /// The earliest pending `(time, seq)` key in the heap, if any.
@@ -404,6 +428,82 @@ mod tests {
         assert!(e.next_before(f64::INFINITY).is_none());
         assert!(e.is_empty());
         assert!(e.peak_entries() >= peak, "peak high-water must cover the model's");
+    }
+
+    /// The sequence counter must keep ordering ties correctly past
+    /// `u32::MAX` — the regime the 1M-records-in-flight bench rungs push
+    /// toward.  `advance_seq_to` jumps the counter there cheaply instead
+    /// of scheduling four billion events.
+    #[test]
+    fn seq_counter_survives_u32_overflow() {
+        let mut e = Engine::new();
+        e.advance_seq_to(u32::MAX as u64 - 1);
+        assert_eq!(e.seq(), u32::MAX as u64 - 1);
+        // These three same-time events straddle the u32 boundary: their
+        // seqs are MAX-0, MAX, MAX+1.  A u32-truncating comparator would
+        // wrap the third to 0 and pop it first.
+        for i in 0..3u32 {
+            e.at(4.0, Ev::SourceEmit(i));
+        }
+        assert!(e.seq() > u32::MAX as u64);
+        for i in 0..3u32 {
+            match e.next_before(10.0).unwrap() {
+                Ev::SourceEmit(got) => assert_eq!(got, i, "FIFO violated across u32 boundary"),
+                other => panic!("{other:?}"),
+            }
+        }
+        // alloc_seq shares the guarded counter and keeps ascending.
+        let s1 = e.alloc_seq();
+        let s2 = e.alloc_seq();
+        assert!(s1 > u32::MAX as u64 && s2 == s1 + 1);
+        // advance_seq_to never moves backwards.
+        e.advance_seq_to(5);
+        assert_eq!(e.seq(), s2);
+    }
+
+    /// Sharded-merge determinism: split one randomized event stream across
+    /// M per-shard engines (seqs sub-allocated from one logical counter via
+    /// `advance_seq_to`), pop always from the shard whose `peek_key` is
+    /// `(t, seq)`-minimal, and the merged order must equal a single serial
+    /// engine fed the identical stream.
+    #[test]
+    fn shard_merged_pop_order_equals_serial() {
+        let mut lcg: u64 = 0x9E37_79B9_7F4A_7C15;
+        let mut next = move || {
+            lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            lcg >> 11
+        };
+        for shards in [1usize, 2, 3, 4] {
+            let mut serial = Engine::new();
+            let mut sharded: Vec<Engine> = (0..shards).map(|_| Engine::new()).collect();
+            for _ in 0..800 {
+                // Quantized times force heavy cross-shard ties; payload
+                // identifies the event for the order comparison.
+                let t = (next() % 16) as f64 * 0.5;
+                let payload = (next() % 1_000_000) as u32;
+                let shard = (next() % shards as u64) as usize;
+                serial.at(t, Ev::SourceEmit(payload));
+                // Sub-allocate the owning shard's seq from the logical
+                // global counter (the serial engine IS that counter here).
+                sharded[shard].advance_seq_to(serial.seq() - 1);
+                sharded[shard].at(t, Ev::SourceEmit(payload));
+                assert_eq!(sharded[shard].seq(), serial.seq(), "seq sub-allocation drifted");
+            }
+            loop {
+                // Deterministic merge: pop from the (t, seq)-minimal shard.
+                let min = sharded
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, e)| e.peek_key().map(|k| (i, k)))
+                    .min_by(|(_, a), (_, b)| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)))
+                    .map(|(i, _)| i);
+                let Some(i) = min else { break };
+                let got = sharded[i].next_before(f64::INFINITY).unwrap();
+                let want = serial.next_before(f64::INFINITY).unwrap();
+                assert_eq!(got, want, "merged pop order diverged at K={shards}");
+            }
+            assert!(serial.next_before(f64::INFINITY).is_none(), "shard merge dropped events");
+        }
     }
 
     /// `alloc_seq` draws from the same counter as `at`, so an externally

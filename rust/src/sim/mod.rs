@@ -8,11 +8,13 @@ pub mod metrics;
 pub mod net;
 pub mod pipeline;
 pub mod service;
+pub mod shard;
 
 pub use engine::{Engine, Ev, InstId};
 pub use items::{Item, ItemAttrs};
 pub use metrics::{InstanceMetrics, OpMetrics};
 pub use pipeline::{InstState, PipelineSim, SimError};
+pub use shard::ShardedSim;
 
 #[cfg(test)]
 mod tests {

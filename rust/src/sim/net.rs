@@ -1,14 +1,18 @@
 //! In-flight cross-node record movement: a slab of transfer payloads keyed
-//! by POD slot ids, plus per-node egress-link FIFO queues.
+//! by POD slot ids, plus per-link FIFO queues.
 //!
-//! The egress link of a node serializes its outbound records, so the
-//! arrival times of the records queued behind one link are strictly
-//! increasing — each link's queue is already sorted by `(arrive, seq)` and
-//! a plain `VecDeque` holds a whole backlog ("batch") with no per-record
-//! heap traffic.  A small index min-heap over the current link *heads*
-//! locates the globally next arrival in `O(log links)`; the pipeline
-//! merges that key with the event heap's root at pop time, so deliveries
-//! happen at exactly the per-item instants and order the legacy
+//! A *link* here is whatever unit serializes transfers so that the arrival
+//! times queued behind it are strictly increasing.  The pipeline keys links
+//! per `(node, tenant)`: each tenant owns a fixed WFQ share of its node's
+//! egress (see `PipelineSim::egress_share`), so one tenant's sub-link
+//! serializes its own records while tenants proceed independently — which
+//! is also what keeps the invariant intact when tenants are sharded across
+//! worker threads.  Each link's queue is already sorted by `(arrive, seq)`
+//! and a plain `VecDeque` holds a whole backlog ("batch") with no
+//! per-record heap traffic.  A small index min-heap over the current link
+//! *heads* locates the globally next arrival in `O(log links)`; the
+//! pipeline merges that key with the event heap's root at pop time, so
+//! deliveries happen at exactly the per-item instants and order the legacy
 //! one-event-per-record stream produced.
 //!
 //! Every entry carries its own `(arrive, seq)` key (seq from the engine's
@@ -36,17 +40,18 @@ pub struct LinkEntry {
     pub slot: u32,
 }
 
-/// Slab of in-flight transfer payloads + per-node link FIFOs.
+/// Slab of in-flight transfer payloads + per-link FIFOs.
 pub struct TransferNet {
     /// Payload slab; freed slots are recycled via `free`.
     slab: Vec<Item>,
     free: Vec<u32>,
     in_flight: usize,
     peak_in_flight: usize,
-    /// Per-node FIFO of transfers serialized behind that node's egress
-    /// link (batched mode only; the seed event stream bypasses these).
+    /// Per-link FIFO of transfers serialized behind that link (batched
+    /// mode only; the seed event stream bypasses these).  An unused link
+    /// is an empty `VecDeque` — no allocation.
     links: Vec<VecDeque<LinkEntry>>,
-    /// Min-heap over current link heads, keyed `(t.to_bits(), seq, node)`.
+    /// Min-heap over current link heads, keyed `(t.to_bits(), seq, link)`.
     /// Arrival times are finite and non-negative, so the IEEE-754 bit
     /// pattern orders exactly like the float.  Each transfer is pushed
     /// here exactly once — when it reaches the head of its link's FIFO —
@@ -56,13 +61,13 @@ pub struct TransferNet {
 }
 
 impl TransferNet {
-    pub fn new(n_nodes: usize) -> Self {
+    pub fn new(n_links: usize) -> Self {
         TransferNet {
             slab: Vec::new(),
             free: Vec::new(),
             in_flight: 0,
             peak_in_flight: 0,
-            links: vec![VecDeque::new(); n_nodes],
+            links: vec![VecDeque::new(); n_links],
             heads: BinaryHeap::new(),
             queued: 0,
         }
@@ -95,19 +100,19 @@ impl TransferNet {
         item
     }
 
-    /// Append a transfer to `node`'s link FIFO.  Arrival times behind one
+    /// Append a transfer to `link`'s FIFO.  Arrival times behind one
     /// link are strictly increasing (the link serializes), so the deque
     /// stays sorted by construction.
-    pub fn enqueue(&mut self, node: usize, e: LinkEntry) {
+    pub fn enqueue(&mut self, link: usize, e: LinkEntry) {
         debug_assert!(e.t.is_finite() && e.t >= 0.0, "arrival keys must bit-order");
         debug_assert!(
-            self.links[node].back().map(|b| (b.t, b.seq) < (e.t, e.seq)).unwrap_or(true),
+            self.links[link].back().map(|b| (b.t, b.seq) < (e.t, e.seq)).unwrap_or(true),
             "link FIFO keys must be strictly increasing"
         );
-        self.links[node].push_back(e);
+        self.links[link].push_back(e);
         self.queued += 1;
-        if self.links[node].len() == 1 {
-            self.heads.push(Reverse((e.t.to_bits(), e.seq, node as u32)));
+        if self.links[link].len() == 1 {
+            self.heads.push(Reverse((e.t.to_bits(), e.seq, link as u32)));
         }
     }
 
@@ -120,12 +125,12 @@ impl TransferNet {
     /// Pop the globally earliest transfer (caller guarantees non-empty)
     /// and promote its link's next entry to the heads heap.
     pub fn pop_min(&mut self) -> LinkEntry {
-        let Reverse((_, _, node)) = self.heads.pop().expect("pop_min on empty TransferNet");
-        let q = &mut self.links[node as usize];
+        let Reverse((_, _, link)) = self.heads.pop().expect("pop_min on empty TransferNet");
+        let q = &mut self.links[link as usize];
         let e = q.pop_front().expect("heads entry tracks a non-empty link");
         self.queued -= 1;
         if let Some(head) = q.front() {
-            self.heads.push(Reverse((head.t.to_bits(), head.seq, node)));
+            self.heads.push(Reverse((head.t.to_bits(), head.seq, link)));
         }
         e
     }

@@ -133,13 +133,20 @@ impl Instance {
     }
 }
 
-/// Per-node mutable state.
+/// Per-node mutable state.  CPU bookings and the egress-link horizon are
+/// kept *per tenant*: tenant `t`'s events only ever touch index `t`, which
+/// is what lets the sharded facade advance disjoint tenant sets on worker
+/// threads without cross-tenant reads.  Cross-tenant CPU contention is
+/// applied through the window-frozen [`PipelineSim`] snapshot instead
+/// (see `frozen_cpu`); the egress link is split into fixed WFQ sub-links
+/// (see `egress_share`).
 struct NodeState {
-    cpu_booked: f64,
+    /// CPU cores booked on this node, per tenant.
+    cpu_booked: Vec<f64>,
     mem_booked: f64,
     accel_booked: u32,
-    /// Egress link busy-until timestamp.
-    link_free: f64,
+    /// Egress sub-link busy-until timestamp, per tenant.
+    link_free: Vec<f64>,
     egress_mb_window: f64,
     /// Bytes of buffered join partials hosted on this node (the DAG
     /// join-state memory, charged where the group is buffered).
@@ -154,12 +161,30 @@ fn source_waiter(tenant: usize) -> usize {
     SOURCE - tenant
 }
 
+/// Lineage ids are namespaced per tenant so id minting never reads or
+/// writes cross-tenant state (a sharding requirement): tenant 0 uses the
+/// plain counter — single-tenant runs keep the legacy ids bit-for-bit —
+/// and tenant t > 0 tags the top 16 bits.  48 counter bits is ~2.8e14
+/// lineages per tenant, unreachable in simulation.
+fn encode_item_id(tenant: usize, ctr: u64) -> u64 {
+    debug_assert!(ctr < 1 << 48, "per-tenant lineage counter overflows 48 bits");
+    if tenant == 0 {
+        ctr
+    } else {
+        ((tenant as u64) << 48) | ctr
+    }
+}
+
 /// The discrete-event pipeline simulator.  Hosts the disjoint per-tenant
-/// DAGs of a [`TenancyView`] on shared nodes: memory, accelerator slots,
-/// CPU contention, and the per-node egress-link FIFO are contended across
-/// tenants, while records never cross tenant DAGs (edge lists are
-/// disjoint).  A single-tenant view reproduces the classic one-pipeline
-/// executor event-for-event.
+/// DAGs of a [`TenancyView`] on shared nodes: memory and accelerator
+/// slots are contended across tenants at admission, CPU contention is
+/// applied through a window-frozen per-node snapshot, and each node's
+/// egress link is split into fixed per-tenant WFQ sub-links — while
+/// records never cross tenant DAGs (edge lists are disjoint).  Within a
+/// window no event handler reads another tenant's mutable state, which is
+/// what makes the tenant-sharded facade ([`ShardedSim`](crate::sim::ShardedSim))
+/// bit-identical to this serial executor.  A single-tenant view
+/// reproduces the classic one-pipeline executor event-for-event.
 pub struct PipelineSim {
     pub engine: Engine,
     /// In-flight cross-node transfers: payload slab + per-node link FIFOs
@@ -176,7 +201,13 @@ pub struct PipelineSim {
     pub cluster: ClusterSpec,
     /// Tenant structure of `spec` (trivial for [`PipelineSim::new`]).
     pub tenancy: TenancyView,
-    rng: Rng,
+    /// One RNG stream per tenant: stream 0 is the legacy `Rng::new(seed)`
+    /// (single-tenant runs are bit-identical to the pre-sharding
+    /// executor); streams for t > 0 are forked from a seed-derived forker.
+    /// Every constructor builds the full vector regardless of which
+    /// tenants it owns, so a shard's stream for tenant `t` is identical
+    /// to the serial executor's.
+    rngs: Vec<Rng>,
     /// One input trace per tenant.
     traces: Vec<Box<dyn Trace>>,
     pub instances: Vec<Instance>,
@@ -222,8 +253,21 @@ pub struct PipelineSim {
     /// sibling partials are dropped on arrival instead of opening a group
     /// that can never complete (which would wedge the join forever).
     dead_ids: Vec<BTreeSet<u64>>,
-    /// Next lineage id handed to a source item or a freshly split child.
-    next_item_id: u64,
+    /// Next lineage id counter per tenant (ids are namespaced by tenant —
+    /// see [`encode_item_id`] — so id minting never crosses tenants).
+    next_item_id_t: Vec<u64>,
+    /// Fixed egress WFQ share per tenant (weights normalized at
+    /// construction; 1.0 for a single tenant).  Each tenant's transfers
+    /// serialize behind its own sub-link at `share * egress_mbps`.
+    egress_share: Vec<f64>,
+    /// Per-node CPU-contention denominator, frozen at `run_until` entry
+    /// (per-tenant bookings summed in ascending-tenant order, so the
+    /// float result is identical however tenants are sharded).
+    frozen_cpu: Vec<f64>,
+    /// Externally supplied contention snapshot for the next window (the
+    /// sharded facade gathers bookings across shards); `None` means
+    /// recompute from local bookings.
+    ext_frozen: Option<Vec<f64>>,
     op_acc: Vec<OpWindowAcc>,
     /// Lifetime EMA of processed item attrs per op (capacity-oracle input).
     attr_ema: Vec<Option<ItemAttrs>>,
@@ -269,7 +313,8 @@ impl PipelineSim {
             panic!("invalid pipeline spec '{}': {e}", spec.name);
         }
         let view = TenancyView::single_for(&spec);
-        Self::new_validated(spec, view, cluster, vec![trace], seed)
+        let owned = vec![true; 1];
+        Self::new_validated(spec, view, cluster, vec![trace], seed, &owned)
     }
 
     /// Multi-tenant constructor: host the merged spec's disjoint per-tenant
@@ -285,7 +330,30 @@ impl PipelineSim {
             panic!("invalid merged tenancy spec '{}': {e}", spec.name);
         }
         assert_eq!(traces.len(), view.n_tenants(), "one trace per tenant");
-        Self::new_validated(spec, view, cluster, traces, seed)
+        let owned = vec![true; view.n_tenants()];
+        Self::new_validated(spec, view, cluster, traces, seed, &owned)
+    }
+
+    /// Shard-member constructor ([`ShardedSim`](crate::sim::ShardedSim)):
+    /// identical to [`new_tenancy`](Self::new_tenancy) except that only
+    /// tenants with `owned[t] == true` get a source — the others never
+    /// emit, never schedule, and are excluded from drain accounting, so a
+    /// set of shards whose owned masks partition the tenants processes
+    /// exactly the serial executor's event set between them.
+    pub fn new_sharded(
+        spec: PipelineSpec,
+        view: TenancyView,
+        cluster: ClusterSpec,
+        traces: Vec<Box<dyn Trace>>,
+        seed: u64,
+        owned: &[bool],
+    ) -> Self {
+        if let Err(e) = spec.validate_with_sources(&view.sources) {
+            panic!("invalid merged tenancy spec '{}': {e}", spec.name);
+        }
+        assert_eq!(traces.len(), view.n_tenants(), "one trace per tenant");
+        assert_eq!(owned.len(), view.n_tenants(), "one owned flag per tenant");
+        Self::new_validated(spec, view, cluster, traces, seed, owned)
     }
 
     fn new_validated(
@@ -294,6 +362,7 @@ impl PipelineSim {
         cluster: ClusterSpec,
         traces: Vec<Box<dyn Trace>>,
         seed: u64,
+        owned: &[bool],
     ) -> Self {
         let n_tenants = view.n_tenants();
         let n_ops = spec.n_ops();
@@ -305,23 +374,45 @@ impl PipelineSim {
             .nodes
             .iter()
             .map(|_| NodeState {
-                cpu_booked: 0.0,
+                cpu_booked: vec![0.0; n_tenants],
                 mem_booked: 0.0,
                 accel_booked: 0,
-                link_free: 0.0,
+                link_free: vec![0.0; n_tenants],
                 egress_mb_window: 0.0,
                 join_mb: 0.0,
             })
             .collect();
         let mut engine = Engine::new();
         for t in 0..n_tenants {
-            engine.at(0.0, Ev::SourceEmit(t as u32));
+            if owned[t] {
+                engine.at(0.0, Ev::SourceEmit(t as u32));
+            }
         }
+        // Stream 0 is the legacy generator; t > 0 fork off a separate
+        // seed-derived forker so stream 0's state stays untouched.
+        let mut rngs = Vec::with_capacity(n_tenants);
+        rngs.push(Rng::new(seed));
+        let mut forker = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+        for t in 1..n_tenants {
+            rngs.push(forker.fork(t as u64));
+        }
+        // Fixed WFQ egress shares: tenant weight over total (1.0 single
+        // tenant, uniform when weights are degenerate).
+        let egress_share: Vec<f64> = if n_tenants <= 1 {
+            vec![1.0]
+        } else {
+            let tot: f64 = view.weights.iter().sum();
+            if tot > 0.0 {
+                view.weights.iter().map(|w| w / tot).collect()
+            } else {
+                vec![1.0 / n_tenants as f64; n_tenants]
+            }
+        };
         PipelineSim {
             engine,
-            net: TransferNet::new(cluster.nodes.len()),
+            net: TransferNet::new(cluster.nodes.len() * n_tenants.max(1)),
             seed_event_stream: false,
-            rng: Rng::new(seed),
+            rngs,
             traces,
             tenancy: view,
             instances: Vec::new(),
@@ -341,7 +432,10 @@ impl PipelineSim {
             lost_items_t: vec![0; n_tenants],
             lost_ids: BTreeSet::new(),
             dead_ids: vec![BTreeSet::new(); n_ops],
-            next_item_id: 0,
+            next_item_id_t: vec![0; n_tenants],
+            egress_share,
+            frozen_cpu: vec![0.0; cluster.nodes.len()],
+            ext_frozen: None,
             op_acc: vec![OpWindowAcc::new(); n_ops],
             attr_ema: vec![None; n_ops],
             d_i,
@@ -357,7 +451,9 @@ impl PipelineSim {
             oom_downtime_s: vec![0.0; n_ops],
             oom_events_total: vec![0; n_ops],
             net_latency: 1e-3,
-            source_done: vec![false; n_tenants],
+            // Non-owned tenants are "done" from birth: they never emit
+            // and drain accounting ignores them.
+            source_done: (0..n_tenants).map(|t| !owned[t]).collect(),
             prev_q_end: vec![0; n_ops],
             spec,
             cluster,
@@ -414,6 +510,7 @@ impl PipelineSim {
         if !self.node_up[node] {
             return Err(SimError::NodeDown { node });
         }
+        let tenant = self.tenancy.op_tenant[op];
         let o = &self.spec.operators[op];
         let ns = &mut self.nodes[node];
         let nspec = &self.cluster.nodes[node];
@@ -426,7 +523,7 @@ impl PipelineSim {
                 cap: nspec.accels,
             });
         }
-        ns.cpu_booked += o.cpu;
+        ns.cpu_booked[tenant] += o.cpu;
         ns.mem_booked += o.mem_gb;
         ns.accel_booked += o.accels;
         let now = self.engine.now();
@@ -535,9 +632,10 @@ impl PipelineSim {
             }
             inst.state = InstState::Stopped;
         }
+        let tenant = self.tenancy.op_tenant[op];
         let o = &self.spec.operators[op];
         let ns = &mut self.nodes[node];
-        ns.cpu_booked -= o.cpu;
+        ns.cpu_booked[tenant] -= o.cpu;
         ns.mem_booked -= o.mem_gb;
         ns.accel_booked -= o.accels;
         // Redistribute any leftover queue items to peers; with no peer
@@ -593,12 +691,23 @@ impl PipelineSim {
     /// Run the simulation until `t_end` (absolute seconds).
     ///
     /// Two event stores feed this loop: the engine's heap and the
-    /// per-node link FIFOs in [`TransferNet`].  Both key entries by
+    /// per-link FIFOs in [`TransferNet`].  Both key entries by
     /// `(time, seq)` drawn from the engine's single counter, so taking
     /// the smaller key at each step replays exactly the total order the
     /// legacy one-heap-event-per-record stream produced — delivery
     /// instants, tie-breaks and all.
+    ///
+    /// CPU contention is *window-frozen*: the per-node denominator is
+    /// snapshotted here (per-tenant bookings summed in ascending-tenant
+    /// order) and held for the whole window, so a shard that cannot see
+    /// other shards' mid-window bookings computes the exact same
+    /// contention the serial executor does.  The sharded facade installs
+    /// a cross-shard snapshot via [`set_frozen_cpu`](Self::set_frozen_cpu)
+    /// before each window; standalone runs recompute from local bookings.
     pub fn run_until(&mut self, t_end: f64) {
+        self.frozen_cpu = self.ext_frozen.take().unwrap_or_else(|| {
+            self.nodes.iter().map(|ns| ns.cpu_booked.iter().sum::<f64>()).collect()
+        });
         loop {
             let heap = self.engine.peek_key();
             let link = self.net.peek_min();
@@ -821,10 +930,10 @@ impl PipelineSim {
                 }
                 return;
             };
-            match self.traces[t].next_item(&mut self.rng) {
+            match self.traces[t].next_item(&mut self.rngs[t]) {
                 Some(mut item) => {
-                    item.id = self.next_item_id;
-                    self.next_item_id += 1;
+                    item.id = encode_item_id(t, self.next_item_id_t[t]);
+                    self.next_item_id_t[t] += 1;
                     self.items_emitted += 1;
                     self.items_emitted_t[t] += 1;
                     self.instances[dest].queue.push_back(item);
@@ -863,6 +972,7 @@ impl PipelineSim {
             return;
         }
         let op_idx = inst.op;
+        let tenant = self.tenancy.op_tenant[op_idx];
         let op = &self.spec.operators[op_idx];
 
         // Sample queue length for backlog signals.
@@ -904,24 +1014,36 @@ impl PipelineSim {
         let (service_s, oom, peak_mem) = match op.kind {
             OperatorKind::CpuSync => {
                 let contention = {
-                    let node = &self.nodes[inst.node];
                     let cores = self.cluster.nodes[inst.node].cpu_cores;
-                    (cores / node.cpu_booked.max(1e-9)).min(1.0)
+                    (cores / self.frozen_cpu[inst.node].max(1e-9)).min(1.0)
                 };
-                let t = service::cpu_record_time(&op.service, &items[0].attrs, &mut self.rng)
-                    / contention;
+                let t = service::cpu_record_time(
+                    &op.service,
+                    &items[0].attrs,
+                    &mut self.rngs[tenant],
+                ) / contention;
                 (t, false, None)
             }
             OperatorKind::AccelAsync => {
                 let stats = service::BatchStats::of(
                     &items.iter().map(|i| i.attrs).collect::<Vec<_>>(),
                 );
-                let mem = service::accel_batch_mem(&op.service, theta_eff, stats, &mut self.rng);
+                let mem = service::accel_batch_mem(
+                    &op.service,
+                    theta_eff,
+                    stats,
+                    &mut self.rngs[tenant],
+                );
                 if mem > cap_mem_mb {
                     (0.0, true, Some(mem))
                 } else {
                     (
-                        service::accel_batch_time(&op.service, theta_eff, stats, &mut self.rng),
+                        service::accel_batch_time(
+                            &op.service,
+                            theta_eff,
+                            stats,
+                            &mut self.rngs[tenant],
+                        ),
                         false,
                         Some(mem),
                     )
@@ -960,6 +1082,7 @@ impl PipelineSim {
             return;
         }
         let op_idx = self.instances[id].op;
+        let tenant = self.tenancy.op_tenant[op_idx];
         // Hot path (runs once per finished batch): copy the four scalar
         // fields used below instead of cloning the whole OperatorSpec
         // (name, config space, service model, …).
@@ -981,7 +1104,7 @@ impl PipelineSim {
         self.processed_total[op_idx] += items.len() as u64;
         self.op_acc[op_idx].records_in += items.len() as u64;
         for item in &items {
-            let mut r = self.rng.fork(7);
+            let mut r = self.rngs[tenant].fork(7);
             self.op_acc[op_idx].observe(item, features, &mut r);
             // Lifetime attr EMA (capacity-oracle input).
             let ema = &mut self.attr_ema[op_idx];
@@ -1010,7 +1133,11 @@ impl PipelineSim {
                 for c in 0..k {
                     let a = item.attrs;
                     let s = child_scale;
-                    let child_id = if k == 1 { item.id } else { self.next_item_id + c as u64 };
+                    let child_id = if k == 1 {
+                        item.id
+                    } else {
+                        encode_item_id(tenant, self.next_item_id_t[tenant] + c as u64)
+                    };
                     outputs.push(Item {
                         id: child_id,
                         attrs: ItemAttrs {
@@ -1019,18 +1146,17 @@ impl PipelineSim {
                             pixels_m: a.pixels_m * s[2],
                             frames: a.frames * s[3],
                         },
-                        size_mb: out_mb * self.rng.lognormal(0.0, 0.15),
+                        size_mb: out_mb * self.rngs[tenant].lognormal(0.0, 0.15),
                         regime: item.regime,
                     });
                 }
                 if k > 1 {
-                    self.next_item_id += k as u64;
+                    self.next_item_id_t[tenant] += k as u64;
                 }
             }
         }
 
         if is_sink {
-            let tenant = self.tenancy.op_tenant[op_idx];
             self.out_records += outputs.len() as u64;
             self.out_records_t[tenant] += outputs.len() as u64;
             self.out_window_t[tenant] += outputs.len() as u64;
@@ -1137,7 +1263,7 @@ impl PipelineSim {
         if let Some(w) = &self.route[edge] {
             let weights = &w[from_node];
             if weights.iter().sum::<f64>() > 1e-9 {
-                let l = self.rng.categorical(weights);
+                let l = self.rngs[self.tenancy.op_tenant[next]].categorical(weights);
                 // Least-occupied instance with space on the sampled node.
                 let best = self.by_op[next]
                     .iter()
@@ -1190,20 +1316,30 @@ impl PipelineSim {
         }
     }
 
-    /// Cross-node transfer: serialize behind `from_node`'s egress link and
-    /// reserve queue space at the destination.  Used both for planned
-    /// dispatches and for forwarding join partials to their group's
-    /// holding instance — a forward is a real transfer and pays the same
-    /// network cost.
+    /// Cross-node transfer: serialize behind the sending tenant's egress
+    /// sub-link on `from_node` and reserve queue space at the destination.
+    /// Used both for planned dispatches and for forwarding join partials
+    /// to their group's holding instance — a forward is a real transfer
+    /// and pays the same network cost.
+    ///
+    /// Each tenant owns a fixed WFQ share of the node's egress
+    /// (`egress_share`, 1.0 for a single tenant): its transfers serialize
+    /// behind its own sub-link at the scaled rate and never read another
+    /// tenant's link horizon — the decoupling that lets shards send
+    /// without synchronizing.  Non-work-conserving by design: an idle
+    /// tenant's share is not lent out (documented in DESIGN.md).
     fn send(&mut self, from_node: usize, dest: usize, edge: usize, item: Item) {
         let now = self.engine.now();
-        let rate =
-            (self.cluster.nodes[from_node].egress_mbps * self.bw_factor[from_node]).max(1.0);
+        let tenant = self.tenancy.op_tenant[self.spec.edges[edge].0];
+        let rate = (self.cluster.nodes[from_node].egress_mbps
+            * self.bw_factor[from_node]
+            * self.egress_share[tenant])
+            .max(1.0);
         let ns = &mut self.nodes[from_node];
         ns.egress_mb_window += item.size_mb;
-        let start = ns.link_free.max(now);
+        let start = ns.link_free[tenant].max(now);
         let arrive = start + item.size_mb / rate + self.net_latency;
-        ns.link_free = arrive;
+        ns.link_free[tenant] = arrive;
         self.instances[dest].reserved += 1;
         // The payload is parked in the slab either way; only the *key*
         // travels.  Both branches draw the sequence number from the same
@@ -1217,8 +1353,9 @@ impl PipelineSim {
             );
         } else {
             let seq = self.engine.alloc_seq();
+            let link = from_node * self.tenancy.n_tenants() + tenant;
             self.net.enqueue(
-                from_node,
+                link,
                 LinkEntry { t: arrive, seq, dest: InstId::of(dest).0, edge: edge as u32, slot },
             );
         }
@@ -1358,9 +1495,10 @@ impl PipelineSim {
                     std::mem::take(&mut inst.join_buf).into_iter().collect::<Vec<_>>(),
                 )
             };
+            let tenant = self.tenancy.op_tenant[op];
             let o = &self.spec.operators[op];
             let ns = &mut self.nodes[node];
-            ns.cpu_booked -= o.cpu;
+            ns.cpu_booked[tenant] -= o.cpu;
             ns.mem_booked -= o.mem_gb;
             ns.accel_booked -= o.accels;
             for (_, slots) in &joins {
@@ -1630,6 +1768,26 @@ impl PipelineSim {
     /// keys from the same counter and are bit-identical by construction.
     pub fn set_seed_event_stream(&mut self, on: bool) {
         self.seed_event_stream = on;
+    }
+
+    /// Install the CPU-contention snapshot for the *next* window (used by
+    /// the sharded facade, which gathers per-(node, tenant) bookings
+    /// across all shards and sums them in ascending-tenant order —
+    /// bit-identical to the serial executor's own snapshot).
+    pub fn set_frozen_cpu(&mut self, frozen: Vec<f64>) {
+        debug_assert_eq!(frozen.len(), self.nodes.len());
+        self.ext_frozen = Some(frozen);
+    }
+
+    /// Accelerator slots currently booked on `node` (facade admission).
+    pub fn node_accel_booked(&self, node: usize) -> u32 {
+        self.nodes[node].accel_booked
+    }
+
+    /// CPU cores booked by `tenant`'s instances on `node` (facade
+    /// contention gather).
+    pub fn node_cpu_booked(&self, node: usize, tenant: usize) -> f64 {
+        self.nodes[node].cpu_booked[tenant]
     }
 
     /// High-water mark of live entries in the event heap.

@@ -1,0 +1,520 @@
+//! Tenant-sharded parallel executor: K [`PipelineSim`] shards advanced by
+//! scoped worker threads, bit-identical to the serial executor at any K.
+//!
+//! ## Why tenants are the shard boundary
+//!
+//! Node-sharding (the obvious cut) cannot be made bit-identical: nodes
+//! share the global RNG draw order, synchronous occupancy reads, and
+//! cross-node wake cascades, so any node partition changes float values,
+//! not just event interleavings.  Tenant DAGs, by contrast, are disjoint
+//! by construction (records never cross tenants), and PR 7 removed the
+//! four remaining cross-tenant couplings from the serial executor itself:
+//!
+//! 1. **RNG** — one xoshiro stream per tenant (stream 0 is the legacy
+//!    generator, so single-tenant runs are unchanged bit-for-bit);
+//! 2. **lineage ids** — minted from per-tenant namespaced counters;
+//! 3. **egress** — each node's link is split into fixed per-tenant WFQ
+//!    sub-links (non-work-conserving: an idle tenant's share is not lent
+//!    out — a deliberate semantic, documented in DESIGN.md);
+//! 4. **CPU contention** — the per-node denominator is frozen at window
+//!    entry from per-tenant bookings summed in ascending-tenant order,
+//!    so every shard computes the identical float from the identical
+//!    gather this facade installs via `set_frozen_cpu`.
+//!
+//! With those gone, no event handler reads another tenant's mutable state
+//! within a window, so each shard — owning the full cluster spec but only
+//! its tenants' sources and instances — replays exactly the serial
+//! executor's event subsequence for those tenants: same `(time, seq)`-
+//! relative order, same float values, same counters.  The shards' event
+//! sets *partition* the serial executor's (the CI drift check asserts the
+//! totals), and the per-window barrier in [`ShardedSim::run_until`] is the
+//! degenerate conservative-PDES horizon: the window end, since no
+//! cross-shard messages exist at all.
+//!
+//! Merging is therefore selection, not arithmetic: per-op metrics are the
+//! owner shard's verbatim (instance ids remapped to the global space),
+//! per-tenant counters are the owner's, and cross-tenant aggregates are
+//! sums in fixed ascending order — the same operation sequence the serial
+//! executor performs.
+
+use crate::config::{ClusterSpec, PipelineSpec, TenancyView};
+use crate::rngx::Rng;
+use crate::sim::items::{Item, ItemAttrs};
+use crate::sim::metrics::OpMetrics;
+use crate::sim::pipeline::{Instance, PipelineSim, SimError};
+use crate::workload::Trace;
+
+/// Placeholder trace for tenants a shard does not own: never emits.
+/// (Non-owned tenants are born `source_done`, so this is never polled;
+/// it only fills the one-trace-per-tenant constructor contract.)
+struct NullTrace;
+
+impl Trace for NullTrace {
+    fn next_item(&mut self, _rng: &mut Rng) -> Option<Item> {
+        None
+    }
+    fn n_regimes(&self) -> usize {
+        0
+    }
+}
+
+/// K-way tenant-sharded facade over [`PipelineSim`] with the serial
+/// executor's exact API surface and bit-identical results at any K
+/// (pinned by `tests/sim_perf_parity.rs`).  Tenant `t` is owned by shard
+/// `t % K`; K is clamped to the tenant count, so K = 1 (or a single
+/// tenant) runs the serial code on the caller's thread.
+pub struct ShardedSim {
+    shards: Vec<PipelineSim>,
+    /// Owner shard of each tenant (`t % K`).
+    tenant_shard: Vec<usize>,
+    /// Global instance id → (shard, local id).  Global ids are assigned
+    /// in `add_instance` call order, exactly like the serial executor's.
+    inst_map: Vec<(usize, usize)>,
+    /// Per shard: local instance id → global id.
+    local2global: Vec<Vec<usize>>,
+    pub spec: PipelineSpec,
+    pub cluster: ClusterSpec,
+    pub tenancy: TenancyView,
+    /// Advance shards on scoped worker threads (`false` forces the
+    /// sequential loop — the degenerate-path oracle for tests).
+    threaded: bool,
+}
+
+impl ShardedSim {
+    /// Single-tenant constructor (mirrors [`PipelineSim::new`]).  With
+    /// one tenant K clamps to 1: the serial executor behind the facade.
+    pub fn new(
+        spec: PipelineSpec,
+        cluster: ClusterSpec,
+        trace: Box<dyn Trace>,
+        seed: u64,
+        shards: usize,
+    ) -> Self {
+        if let Err(e) = spec.validate() {
+            panic!("invalid pipeline spec '{}': {e}", spec.name);
+        }
+        let view = TenancyView::single_for(&spec);
+        Self::build(spec, view, cluster, vec![trace], seed, shards)
+    }
+
+    /// Multi-tenant constructor (mirrors [`PipelineSim::new_tenancy`]).
+    pub fn new_tenancy(
+        spec: PipelineSpec,
+        view: TenancyView,
+        cluster: ClusterSpec,
+        traces: Vec<Box<dyn Trace>>,
+        seed: u64,
+        shards: usize,
+    ) -> Self {
+        assert_eq!(traces.len(), view.n_tenants(), "one trace per tenant");
+        Self::build(spec, view, cluster, traces, seed, shards)
+    }
+
+    fn build(
+        spec: PipelineSpec,
+        view: TenancyView,
+        cluster: ClusterSpec,
+        traces: Vec<Box<dyn Trace>>,
+        seed: u64,
+        shards: usize,
+    ) -> Self {
+        let nt = view.n_tenants();
+        let k = shards.max(1).min(nt.max(1));
+        let tenant_shard: Vec<usize> = (0..nt).map(|t| t % k).collect();
+        let mut slots: Vec<Option<Box<dyn Trace>>> = traces.into_iter().map(Some).collect();
+        let mut pool = Vec::with_capacity(k);
+        for s in 0..k {
+            let tr: Vec<Box<dyn Trace>> = (0..nt)
+                .map(|t| {
+                    if tenant_shard[t] == s {
+                        slots[t].take().expect("each trace is owned by exactly one shard")
+                    } else {
+                        Box::new(NullTrace) as Box<dyn Trace>
+                    }
+                })
+                .collect();
+            let owned: Vec<bool> = (0..nt).map(|t| tenant_shard[t] == s).collect();
+            pool.push(PipelineSim::new_sharded(
+                spec.clone(),
+                view.clone(),
+                cluster.clone(),
+                tr,
+                seed,
+                &owned,
+            ));
+        }
+        ShardedSim {
+            shards: pool,
+            tenant_shard,
+            inst_map: Vec::new(),
+            local2global: vec![Vec::new(); k],
+            spec,
+            cluster,
+            tenancy: view,
+            threaded: true,
+        }
+    }
+
+    /// Number of shards actually running (after clamping to tenants).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Force the sequential shard loop (tests: pins that the threaded and
+    /// sequential drivers are the same code path modulo the thread pool).
+    pub fn set_threaded(&mut self, on: bool) {
+        self.threaded = on;
+    }
+
+    #[inline]
+    fn owner_of_op(&self, op: usize) -> usize {
+        self.tenant_shard[self.tenancy.op_tenant[op]]
+    }
+
+    // ------------------------------------------------------------------
+    // Instance lifecycle (global-id view over per-shard instance tables)
+    // ------------------------------------------------------------------
+
+    /// Launch an instance; same admission decisions and error strings as
+    /// the serial executor (accelerator occupancy is gathered across
+    /// shards, since every tenant's bookings count against the node).
+    pub fn add_instance(
+        &mut self,
+        op: usize,
+        node: usize,
+        theta: Vec<f64>,
+    ) -> Result<usize, SimError> {
+        let s = self.owner_of_op(op);
+        if !self.shards[s].nodes_up()[node] {
+            return Err(SimError::NodeDown { node });
+        }
+        let o = &self.spec.operators[op];
+        if o.accels > 0 {
+            let booked: u32 = self.shards.iter().map(|sh| sh.node_accel_booked(node)).sum();
+            let cap = self.cluster.nodes[node].accels;
+            if booked + o.accels > cap {
+                return Err(SimError::OutOfAccelerators {
+                    node,
+                    op: o.name.clone(),
+                    booked,
+                    want: o.accels,
+                    cap,
+                });
+            }
+        }
+        // The owner's local checks are implied by the global ones (its
+        // bookings are a subset), so this cannot fail; propagate anyway.
+        let local = self.shards[s].add_instance(op, node, theta)?;
+        let gid = self.inst_map.len();
+        self.inst_map.push((s, local));
+        debug_assert_eq!(self.local2global[s].len(), local);
+        self.local2global[s].push(gid);
+        Ok(gid)
+    }
+
+    /// The instance behind a global id (read-only; mirrors the serial
+    /// executor's `instances[id]` indexing).
+    pub fn instance(&self, id: usize) -> &Instance {
+        let (s, l) = self.inst_map[id];
+        &self.shards[s].instances[l]
+    }
+
+    /// Whether any instance was ever launched (the serial executor's
+    /// `instances.is_empty()` check).
+    pub fn has_instances(&self) -> bool {
+        !self.inst_map.is_empty()
+    }
+
+    pub fn stop_instance(&mut self, id: usize) {
+        let (s, l) = self.inst_map[id];
+        self.shards[s].stop_instance(l);
+    }
+
+    pub fn restart_with_config(&mut self, id: usize, theta: Vec<f64>) {
+        let (s, l) = self.inst_map[id];
+        self.shards[s].restart_with_config(l, theta);
+    }
+
+    /// Live instances of `op`, as global ids in launch order (identical
+    /// to the serial executor's list: all of an op's instances live on
+    /// its owner shard, where local launch order is global launch order).
+    pub fn instances_of(&self, op: usize) -> Vec<usize> {
+        let s = self.owner_of_op(op);
+        self.shards[s]
+            .instances_of(op)
+            .into_iter()
+            .map(|l| self.local2global[s][l])
+            .collect()
+    }
+
+    /// Live (non-draining) instance count per (op, node); each op counts
+    /// only on its owner shard, so the elementwise sum is exact.
+    pub fn placement(&self) -> Vec<Vec<u32>> {
+        let mut x = vec![vec![0u32; self.cluster.nodes.len()]; self.spec.n_ops()];
+        for sh in &self.shards {
+            for (op, row) in sh.placement().into_iter().enumerate() {
+                for (node, v) in row.into_iter().enumerate() {
+                    x[op][node] += v;
+                }
+            }
+        }
+        x
+    }
+
+    pub fn set_route(&mut self, edge: usize, fractions: Option<Vec<Vec<f64>>>) {
+        for sh in &mut self.shards {
+            sh.set_route(edge, fractions.clone());
+        }
+    }
+
+    pub fn n_routes_set(&self) -> usize {
+        self.shards[0].n_routes_set()
+    }
+
+    // ------------------------------------------------------------------
+    // Advancing time
+    // ------------------------------------------------------------------
+
+    /// Advance every shard to `t_end` — on scoped worker threads for
+    /// K > 1 (or the sequential loop; same code path either way).
+    ///
+    /// Before the window starts, the cross-shard CPU-contention snapshot
+    /// is gathered (per node: per-tenant bookings from owner shards,
+    /// summed in ascending-tenant order — the serial executor's exact
+    /// float sequence) and installed in every shard.  That is the only
+    /// cross-shard communication; the window end is the conservative
+    /// horizon, degenerate because tenants exchange no messages.
+    pub fn run_until(&mut self, t_end: f64) {
+        let n_nodes = self.cluster.nodes.len();
+        let nt = self.tenancy.n_tenants();
+        let mut frozen = vec![0.0; n_nodes];
+        for (node, f) in frozen.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for t in 0..nt {
+                acc += self.shards[self.tenant_shard[t]].node_cpu_booked(node, t);
+            }
+            *f = acc;
+        }
+        for sh in &mut self.shards {
+            sh.set_frozen_cpu(frozen.clone());
+        }
+        if self.shards.len() == 1 || !self.threaded {
+            for sh in &mut self.shards {
+                sh.run_until(t_end);
+            }
+        } else {
+            std::thread::scope(|sc| {
+                for sh in self.shards.iter_mut() {
+                    sc.spawn(move || sh.run_until(t_end));
+                }
+            });
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.shards[0].now()
+    }
+
+    // ------------------------------------------------------------------
+    // Metrics & counters (owner-selection merge)
+    // ------------------------------------------------------------------
+
+    /// Flush every shard's metrics window and merge: per-op snapshots are
+    /// the owner shard's verbatim (per-instance ids remapped to global),
+    /// per-tenant window outputs are the owners' (others are zero).
+    pub fn flush_metrics(&mut self) -> (Vec<OpMetrics>, Vec<u64>) {
+        let per_shard: Vec<(Vec<OpMetrics>, Vec<u64>)> =
+            self.shards.iter_mut().map(|sh| sh.flush_metrics()).collect();
+        let mut outs = vec![0u64; self.tenancy.n_tenants()];
+        for (_, w) in &per_shard {
+            for (t, &v) in w.iter().enumerate() {
+                outs[t] += v;
+            }
+        }
+        let mut metrics = Vec::with_capacity(self.spec.n_ops());
+        for op in 0..self.spec.n_ops() {
+            let s = self.owner_of_op(op);
+            let mut m = per_shard[s].0[op].clone();
+            for pi in &mut m.per_instance {
+                pi.inst = self.local2global[s][pi.inst];
+            }
+            metrics.push(m);
+        }
+        (metrics, outs)
+    }
+
+    pub fn avg_throughput(&self) -> f64 {
+        if self.now() <= 0.0 {
+            return 0.0;
+        }
+        (0..self.tenancy.n_tenants()).map(|t| self.tenant_throughput(t)).sum()
+    }
+
+    pub fn tenant_throughput(&self, t: usize) -> f64 {
+        self.shards[self.tenant_shard[t]].tenant_throughput(t)
+    }
+
+    pub fn out_records(&self) -> u64 {
+        self.shards.iter().map(|sh| sh.out_records).sum()
+    }
+
+    pub fn out_records_t(&self, t: usize) -> u64 {
+        self.shards[self.tenant_shard[t]].out_records_t[t]
+    }
+
+    pub fn items_emitted(&self) -> u64 {
+        self.shards.iter().map(|sh| sh.items_emitted).sum()
+    }
+
+    pub fn items_emitted_t(&self, t: usize) -> u64 {
+        self.shards[self.tenant_shard[t]].items_emitted_t[t]
+    }
+
+    pub fn lost_items_t(&self, t: usize) -> u64 {
+        self.shards[self.tenant_shard[t]].lost_items_t[t]
+    }
+
+    pub fn lost_records_total(&self) -> u64 {
+        self.shards.iter().map(|sh| sh.lost_records_total()).sum()
+    }
+
+    /// Sum of per-op OOM events (ascending op, owner shard's counter —
+    /// the serial executor's exact iteration).
+    pub fn oom_events_total(&self) -> u32 {
+        (0..self.spec.n_ops())
+            .map(|op| self.shards[self.owner_of_op(op)].oom_events_total[op])
+            .sum()
+    }
+
+    /// Sum of per-op OOM downtime (same ascending-op float sequence as
+    /// the serial executor's `iter().sum()`).
+    pub fn oom_downtime_s_total(&self) -> f64 {
+        (0..self.spec.n_ops())
+            .map(|op| self.shards[self.owner_of_op(op)].oom_downtime_s[op])
+            .sum()
+    }
+
+    /// Charge a probe-OOM to `op`'s ledger (the coordinator's ingest path
+    /// mutated the serial executor's counters directly).
+    pub fn note_oom(&mut self, op: usize, downtime_s: f64) {
+        let s = self.owner_of_op(op);
+        self.shards[s].oom_events_total[op] += 1;
+        self.shards[s].oom_downtime_s[op] += downtime_s;
+    }
+
+    /// Total events processed across all shards.  The shards' event sets
+    /// partition the serial executor's, so this equals the serial count
+    /// exactly at any K — the CI drift check.
+    pub fn events_processed(&self) -> u64 {
+        self.shards.iter().map(|sh| sh.engine.events_processed).sum()
+    }
+
+    /// Lifetime records processed by `op` (owner shard's ledger).
+    pub fn processed_total(&self, op: usize) -> u64 {
+        self.shards[self.owner_of_op(op)].processed_total[op]
+    }
+
+    /// Lifetime records dispatched onto `edge` (its source op's owner).
+    pub fn edge_emitted(&self, edge: usize) -> u64 {
+        let s = self.owner_of_op(self.spec.edges[edge].0);
+        self.shards[s].edge_emitted[edge]
+    }
+
+    /// Buffered join-state per node, MB, summed across shards (each
+    /// shard's buffers hold only its own tenants' partial groups).
+    pub fn join_state_mb(&self) -> Vec<f64> {
+        let mut mb = vec![0.0; self.cluster.nodes.len()];
+        for sh in &self.shards {
+            for (node, v) in sh.join_state_mb().into_iter().enumerate() {
+                mb[node] += v;
+            }
+        }
+        mb
+    }
+
+    pub fn true_unit_rate(&self, op: usize, theta: &[f64]) -> f64 {
+        self.shards[self.owner_of_op(op)].true_unit_rate(op, theta)
+    }
+
+    pub fn mean_attrs(&self, op: usize) -> Option<ItemAttrs> {
+        self.shards[self.owner_of_op(op)].mean_attrs(op)
+    }
+
+    /// Sum of per-shard event-heap high-water marks (aggregate storage
+    /// footprint; per-shard peaks need not be simultaneous).
+    pub fn peak_heap_entries(&self) -> usize {
+        self.shards.iter().map(|sh| sh.peak_heap_entries()).sum()
+    }
+
+    /// Sum of per-shard in-flight-transfer high-water marks (same
+    /// aggregate-footprint caveat as [`peak_heap_entries`](Self::peak_heap_entries)).
+    pub fn peak_in_flight_transfers(&self) -> usize {
+        self.shards.iter().map(|sh| sh.peak_in_flight_transfers()).sum()
+    }
+
+    pub fn set_seed_event_stream(&mut self, on: bool) {
+        for sh in &mut self.shards {
+            sh.set_seed_event_stream(on);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Cluster dynamics (broadcast; shards keep consistent availability)
+    // ------------------------------------------------------------------
+
+    pub fn nodes_up(&self) -> &[bool] {
+        self.shards[0].nodes_up()
+    }
+
+    pub fn tenants_active(&self) -> &[bool] {
+        self.shards[0].tenants_active()
+    }
+
+    /// Crash a node in every shard (each kills its own instances there);
+    /// returns the total records dropped, summed across shards.
+    pub fn fail_node(&mut self, node: usize, requeue: bool) -> u64 {
+        self.shards.iter_mut().map(|sh| sh.fail_node(node, requeue)).sum()
+    }
+
+    pub fn set_node_up(&mut self, node: usize) {
+        for sh in &mut self.shards {
+            sh.set_node_up(node);
+        }
+    }
+
+    pub fn set_bandwidth_factor(&mut self, node: usize, factor: f64) {
+        for sh in &mut self.shards {
+            sh.set_bandwidth_factor(node, factor);
+        }
+    }
+
+    /// Splice a tenant in or out; broadcast so every shard's activity map
+    /// stays consistent (only the owner re-arms a source — non-owners are
+    /// born `source_done` and their guard makes this a no-op).
+    pub fn set_tenant_active(&mut self, t: usize, active: bool) {
+        for sh in &mut self.shards {
+            sh.set_tenant_active(t, active);
+        }
+    }
+
+    /// Ops with any non-stopped instance on `node`, across all shards
+    /// (ascending, like the serial scan; per-op instance sets are
+    /// disjoint across shards so a plain merge is exact).
+    pub fn ops_on_node(&self, node: usize) -> Vec<usize> {
+        let mut seen = vec![false; self.spec.n_ops()];
+        for sh in &self.shards {
+            for op in sh.ops_on_node(node) {
+                seen[op] = true;
+            }
+        }
+        (0..self.spec.n_ops()).filter(|&i| seen[i]).collect()
+    }
+
+    pub fn drained(&self) -> bool {
+        self.shards.iter().all(|sh| sh.drained())
+    }
+
+    pub fn tenant_drained(&self, t: usize) -> bool {
+        self.shards[self.tenant_shard[t]].tenant_drained(t)
+    }
+}

@@ -15,7 +15,10 @@ use crate::rngx::Rng;
 use crate::sim::items::Item;
 
 /// A source of input items.  `None` ends the trace.
-pub trait Trace {
+///
+/// `Send` so a `PipelineSim` (which boxes its traces) can move into a
+/// scoped worker thread of the sharded facade; every trace is plain data.
+pub trait Trace: Send {
     fn next_item(&mut self, rng: &mut Rng) -> Option<Item>;
     /// Number of distinct ground-truth regimes (clustering evaluation).
     fn n_regimes(&self) -> usize;

@@ -180,9 +180,10 @@ mod tests {
         assert!(npu_ops.iter().all(|o| o.tunable));
         // ~120 content blocks per document at the OCR stages
         let (d, d_o) = p.amplification();
-        let ocr_idx = p.operators.iter().position(|o| o.name == "text_ocr").unwrap();
+        let ids = p.interner();
+        let ocr_idx = ids.op("text_ocr").idx();
         assert!((d[ocr_idx] - 66.0).abs() < 10.0, "blocks reaching OCR: {}", d[ocr_idx]);
-        let blocks_idx = p.operators.iter().position(|o| o.name == "classify_block").unwrap();
+        let blocks_idx = ids.op("classify_block").idx();
         assert!((d[blocks_idx] - 120.0).abs() < 1.0, "~120 blocks/doc: {}", d[blocks_idx]);
         assert!((d_o - 1.0).abs() < 0.15, "one output doc per input doc: {d_o}");
     }

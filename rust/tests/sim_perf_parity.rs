@@ -15,8 +15,8 @@ use trident::config::{
     PipelineSpec, ServiceModel, Tenancy, TenantSpec, TridentConfig,
 };
 use trident::coordinator::{Coordinator, Policy, RunReport, Variant};
-use trident::dynamics::DynamicsSpec;
-use trident::sim::{Engine, Ev, InstId, ItemAttrs, PipelineSim, SimError};
+use trident::dynamics::{DynamicsSpec, RecoveryPolicy};
+use trident::sim::{Engine, Ev, InstId, ItemAttrs, PipelineSim, ShardedSim, SimError};
 use trident::workload::{pdf, speech, ItemDist, Phase, PhasedTrace, Trace};
 
 fn mini_cfg(seed_stream: bool) -> TridentConfig {
@@ -321,4 +321,219 @@ fn event_queue_fifo_at_equal_timestamps() {
     }
     expected.push(Ev::SourceEmit(100));
     assert_eq!(order, expected, "equal-time events must drain in insertion order");
+}
+
+// ---------------------------------------------------------------------
+// Sharded parallel tick: tenant shards partition the serial run exactly
+// ---------------------------------------------------------------------
+
+fn shard_cfg(shards: usize) -> TridentConfig {
+    let mut cfg = mini_cfg(false);
+    cfg.sim_shards = shards;
+    cfg
+}
+
+fn single_sharded(variant: &Variant, seed: u64, shards: usize) -> Coordinator {
+    Coordinator::new(
+        pdf::pipeline(),
+        cluster(),
+        Box::new(pdf::trace(50_000)),
+        shard_cfg(shards),
+        variant.clone(),
+        pdf_src(),
+        seed,
+    )
+}
+
+fn two_tenant_sharded(variant: &Variant, seed: u64, shards: usize) -> Coordinator {
+    let tenancy = Tenancy {
+        tenants: vec![
+            TenantSpec { id: "pdf".into(), pipeline: pdf::pipeline(), weight: 1.0, source_rate: 0.0 },
+            TenantSpec {
+                id: "speech".into(),
+                pipeline: speech::pipeline(),
+                weight: 1.0,
+                source_rate: 0.0,
+            },
+        ],
+    };
+    Coordinator::new_tenancy(
+        tenancy,
+        cluster(),
+        vec![
+            Box::new(pdf::trace(300)) as Box<dyn Trace>,
+            Box::new(speech::trace(120)) as Box<dyn Trace>,
+        ],
+        shard_cfg(shards),
+        variant.clone(),
+        vec![pdf_src(), speech::src_attrs()],
+        seed,
+    )
+    .expect("two-tenant tenancy is valid")
+}
+
+/// A single tenant clamps every requested K to one shard: the degenerate
+/// path must reproduce K=1 bit-for-bit for all six policies.
+#[test]
+fn sharded_tick_bit_identical_single_tenant() {
+    for (name, variant) in all_policies() {
+        let base = single_sharded(&variant, 5, 1).run(300.0);
+        assert!(base.throughput > 0.0, "{name} must make progress");
+        for k in [2usize, 4] {
+            let r = single_sharded(&variant, 5, k).run(300.0);
+            assert_eq!(key(&base), key(&r), "policy {name} diverged at K={k} (single tenant)");
+        }
+    }
+}
+
+/// Two tenants sharded across real threads: every policy's aggregate and
+/// per-tenant outcomes land on the K=1 run bit-for-bit at K ∈ {2, 4}
+/// (K=4 clamps to the 2 tenants — the clamp itself is under test too).
+#[test]
+fn sharded_tick_bit_identical_two_tenant() {
+    for (name, variant) in all_policies() {
+        let base = two_tenant_sharded(&variant, 7, 1).run(300.0);
+        assert!(base.throughput > 0.0, "{name} must make progress");
+        for k in [2usize, 4] {
+            let r = two_tenant_sharded(&variant, 7, k).run(300.0);
+            assert_eq!(key(&base), key(&r), "policy {name} diverged at K={k} (two tenants)");
+            assert_eq!(base.tenants.len(), r.tenants.len());
+            for (ta, tb) in base.tenants.iter().zip(&r.tenants) {
+                assert_eq!(
+                    ta.throughput.to_bits(),
+                    tb.throughput.to_bits(),
+                    "{name} K={k}: tenant {}",
+                    ta.id
+                );
+                assert_eq!(ta.items_processed, tb.items_processed, "{name} K={k}: tenant {}", ta.id);
+                assert_eq!(ta.items_lost, tb.items_lost, "{name} K={k}: tenant {}", ta.id);
+            }
+        }
+    }
+}
+
+/// Scripted dynamics (node fail/recover + bandwidth dip) across shards:
+/// every policy × both recovery policies × K ∈ {1, 2, 4} replays the same
+/// event timeline and loss ledger bit-for-bit.
+#[test]
+fn sharded_tick_bit_identical_under_dynamics() {
+    let spec_json = r#"{"events": [
+        {"at": 60, "kind": "node_fail", "node": 1},
+        {"at": 90, "kind": "bandwidth_degrade", "node": 0, "factor": 0.5},
+        {"at": 120, "kind": "node_recover", "node": 1},
+        {"at": 150, "kind": "bandwidth_restore", "node": 0}
+    ]}"#;
+    for (name, variant) in all_policies() {
+        for recovery in [RecoveryPolicy::Requeue, RecoveryPolicy::Loss] {
+            let mk = |k: usize| {
+                let mut c = two_tenant_sharded(&variant, 9, k);
+                let mut d = DynamicsSpec::from_json(&Json::parse(spec_json).expect("valid json"))
+                    .expect("valid dynamics spec");
+                d.recovery = recovery;
+                c.set_dynamics(d).expect("valid dynamics spec");
+                c
+            };
+            let base = mk(1).run(240.0);
+            for k in [2usize, 4] {
+                let r = mk(k).run(240.0);
+                assert_eq!(
+                    key(&base),
+                    key(&r),
+                    "policy {name} ({recovery:?}) diverged at K={k} under dynamics"
+                );
+                assert_eq!(base.events.len(), r.events.len(), "{name} ({recovery:?}) K={k}");
+                for (ea, eb) in base.events.iter().zip(&r.events) {
+                    assert_eq!(ea.label, eb.label, "{name} ({recovery:?}) K={k}");
+                    assert_eq!(
+                        ea.lost_records, eb.lost_records,
+                        "{name} ({recovery:?}) K={k}: {}",
+                        ea.label
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Facade counters at the raw-sim level: the shards' ledgers partition
+/// the serial `PipelineSim` run exactly (event totals included), and the
+/// threaded tick matches the sequential shard loop.
+#[test]
+fn sharded_counters_partition_the_serial_run() {
+    let scenario = || {
+        let tenancy = Tenancy {
+            tenants: vec![
+                TenantSpec { id: "pdf".into(), pipeline: pdf::pipeline(), weight: 1.0, source_rate: 0.0 },
+                TenantSpec {
+                    id: "speech".into(),
+                    pipeline: speech::pipeline(),
+                    weight: 1.0,
+                    source_rate: 0.0,
+                },
+            ],
+        };
+        let (spec, view) = tenancy.merged().expect("valid tenancy");
+        let traces: Vec<Box<dyn Trace>> = vec![
+            Box::new(pdf::trace(200)) as Box<dyn Trace>,
+            Box::new(speech::trace(100)) as Box<dyn Trace>,
+        ];
+        (spec, view, traces)
+    };
+    let place = |add: &mut dyn FnMut(usize, usize, Vec<f64>) -> Result<usize, SimError>,
+                 spec: &PipelineSpec| {
+        for (op, o) in spec.operators.iter().enumerate() {
+            let theta = o.config_space.default_config();
+            let placed = (0..2).any(|probe| add(op, (op + probe) % 2, theta.clone()).is_ok());
+            assert!(placed, "placement failed for op {op}");
+        }
+    };
+
+    let (spec, view, traces) = scenario();
+    let serial_spec = spec.clone();
+    let mut serial = PipelineSim::new_tenancy(spec, view, cluster(), traces, 13);
+    place(&mut |op, node, theta| serial.add_instance(op, node, theta), &serial_spec);
+    serial.run_until(150.0);
+
+    for (k, threaded) in [(2usize, true), (2, false), (4, true)] {
+        let (spec, view, traces) = scenario();
+        let sh_spec = spec.clone();
+        let mut sh = ShardedSim::new_tenancy(spec, view, cluster(), traces, 13, k);
+        sh.set_threaded(threaded);
+        place(&mut |op, node, theta| sh.add_instance(op, node, theta), &sh_spec);
+        sh.run_until(150.0);
+
+        let tag = format!("K={k} threaded={threaded}");
+        assert_eq!(sh.events_processed(), serial.engine.events_processed, "{tag}: events");
+        assert_eq!(sh.items_emitted(), serial.items_emitted, "{tag}: emitted");
+        assert_eq!(sh.out_records(), serial.out_records, "{tag}: out records");
+        assert_eq!(sh.now().to_bits(), serial.now().to_bits(), "{tag}: clock");
+        for op in 0..serial.spec.n_ops() {
+            assert_eq!(
+                sh.processed_total(op),
+                serial.processed_total[op],
+                "{tag}: processed_total[{op}]"
+            );
+        }
+        for edge in 0..serial.spec.n_edges() {
+            assert_eq!(
+                sh.edge_emitted(edge),
+                serial.edge_emitted[edge],
+                "{tag}: edge_emitted[{edge}]"
+            );
+        }
+        for t in 0..2 {
+            assert_eq!(sh.items_emitted_t(t), serial.items_emitted_t[t], "{tag}: tenant {t}");
+            assert_eq!(sh.out_records_t(t), serial.out_records_t[t], "{tag}: tenant {t}");
+            assert_eq!(
+                sh.tenant_throughput(t).to_bits(),
+                serial.tenant_throughput(t).to_bits(),
+                "{tag}: tenant {t} throughput"
+            );
+        }
+        assert_eq!(
+            sh.avg_throughput().to_bits(),
+            serial.avg_throughput().to_bits(),
+            "{tag}: aggregate throughput"
+        );
+    }
 }

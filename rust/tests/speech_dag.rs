@@ -50,20 +50,20 @@ fn all_policies_complete_the_speech_dag_with_conservation() {
         assert!(
             c.sim.drained(),
             "{name}: speech DAG must drain (no fork/join deadlock), \
-             processed {:?} of {} emitted",
-            c.sim.processed_total,
-            c.sim.items_emitted
+             {} emitted",
+            c.sim.items_emitted()
         );
         assert!(r.throughput > 0.0, "{name} must make progress");
         // Edge ids follow speech::pipeline(): 0 demux->decode,
         // 1 decode->asr, 2 decode->caption, 3 asr->join, 4 caption->join,
         // 5 join->filter.
-        let e = &c.sim.edge_emitted;
+        let e: Vec<u64> = (0..c.sim.spec.n_edges()).map(|i| c.sim.edge_emitted(i)).collect();
         assert_eq!(e[1], e[2], "{name}: fork replicates onto both branches");
         assert_eq!(e[1], e[3], "{name}: ASR branch conserves records");
         assert_eq!(e[2], e[4], "{name}: caption branch conserves records");
         assert_eq!(
-            c.sim.processed_total[4], e[1],
+            c.sim.processed_total(4),
+            e[1],
             "{name}: join merges exactly one record per forked segment"
         );
         assert_eq!(

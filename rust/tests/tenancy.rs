@@ -147,11 +147,11 @@ fn two_tenant_run_conserves_per_tenant_and_reports() {
         assert!(c.sim.tenant_drained(0) && c.sim.tenant_drained(1), "{name}");
 
         // Per-tenant admission recorded.
-        assert_eq!(c.sim.items_emitted_t[0], 300, "{name}: pdf trace fully admitted");
-        assert_eq!(c.sim.items_emitted_t[1], 120, "{name}: speech trace fully admitted");
+        assert_eq!(c.sim.items_emitted_t(0), 300, "{name}: pdf trace fully admitted");
+        assert_eq!(c.sim.items_emitted_t(1), 120, "{name}: speech trace fully admitted");
         assert_eq!(
-            c.sim.items_emitted,
-            c.sim.items_emitted_t.iter().sum::<u64>(),
+            c.sim.items_emitted(),
+            (0..2).map(|t| c.sim.items_emitted_t(t)).sum::<u64>(),
             "{name}"
         );
 
@@ -159,12 +159,12 @@ fn two_tenant_run_conserves_per_tenant_and_reports() {
         // ids are offset by the pdf tenant's edge count in the merged DAG.
         let n_pdf_ops = pdf::pipeline().n_ops();
         let off = pdf::pipeline().n_edges();
-        let e = &c.sim.edge_emitted;
+        let e: Vec<u64> = (0..c.sim.spec.n_edges()).map(|i| c.sim.edge_emitted(i)).collect();
         assert_eq!(e[off + 1], e[off + 2], "{name}: fork replicates onto both branches");
         assert_eq!(e[off + 1], e[off + 3], "{name}: ASR branch conserves records");
         assert_eq!(e[off + 2], e[off + 4], "{name}: caption branch conserves records");
         assert_eq!(
-            c.sim.processed_total[n_pdf_ops + 4],
+            c.sim.processed_total(n_pdf_ops + 4),
             e[off + 1],
             "{name}: join merges one record per forked segment"
         );
@@ -174,16 +174,16 @@ fn two_tenant_run_conserves_per_tenant_and_reports() {
         // fanout carries leave at most a few records per instance).
         for t in 0..2 {
             let d_o = c.sim.tenancy.d_o[t];
-            let expect = c.sim.items_emitted_t[t] as f64 * d_o;
-            let got = c.sim.out_records_t[t] as f64;
+            let expect = c.sim.items_emitted_t(t) as f64 * d_o;
+            let got = c.sim.out_records_t(t) as f64;
             assert!(
                 (got - expect).abs() <= 0.05 * expect + 16.0,
                 "{name}: tenant {t} sink output {got} vs admitted*D_o {expect}"
             );
         }
         assert_eq!(
-            c.sim.out_records,
-            c.sim.out_records_t.iter().sum::<u64>(),
+            c.sim.out_records(),
+            (0..2).map(|t| c.sim.out_records_t(t)).sum::<u64>(),
             "{name}: tenant outputs partition the total"
         );
 
@@ -283,13 +283,13 @@ fn paced_source_rate_caps_admission() {
     // 400 s at 0.5 items/s -> ~200 admissions (exact pacing modulo the
     // t=0 tick), far below what the unpaced closed loop admits.
     assert!(
-        c.sim.items_emitted <= 202,
+        c.sim.items_emitted() <= 202,
         "paced source over-admitted: {}",
-        c.sim.items_emitted
+        c.sim.items_emitted()
     );
     assert!(
-        c.sim.items_emitted >= 150,
+        c.sim.items_emitted() >= 150,
         "paced source under-admitted: {}",
-        c.sim.items_emitted
+        c.sim.items_emitted()
     );
 }
