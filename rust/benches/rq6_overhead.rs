@@ -99,7 +99,7 @@ fn main() {
             // (2 s); report wall at budget plus the remaining B&B gap,
             // the total simplex pivots, and the in-tree warm-start hit
             // rate (children inheriting their parent's basis).
-            let mut times: Vec<(f64, f64, usize, f64)> = (0..3)
+            let mut times: Vec<(f64, f64, usize, f64, f64, f64, f64)> = (0..3)
                 .map(|_| {
                     let t0 = Instant::now();
                     let plan = solve(&input, Duration::from_secs(2));
@@ -109,6 +109,9 @@ fn main() {
                         plan.stats.gap * 100.0,
                         plan.stats.pivots,
                         plan.stats.warm_hit_rate() * 100.0,
+                        plan.stats.build_ms,
+                        plan.stats.root_lp_ms,
+                        plan.stats.bnb_ms,
                     )
                 })
                 .collect();
@@ -116,8 +119,10 @@ fn main() {
             table.row(vec![
                 format!("MILP solve, {wname} pipeline, {nodes} nodes (median)"),
                 format!(
-                    "{:.0} ms (gap {:.1}%, {} pivots, warm-start hit rate {:.1}%)",
-                    times[1].0, times[1].1, times[1].2, times[1].3
+                    "{:.0} ms (build {:.1} / root LP {:.1} / B&B {:.1} ms; gap {:.1}%, \
+                     {} pivots, warm-start hit rate {:.1}%)",
+                    times[1].0, times[1].4, times[1].5, times[1].6, times[1].1, times[1].2,
+                    times[1].3
                 ),
             ]);
             // Cross-round warm start on the multi-tenant instance: round
@@ -145,6 +150,34 @@ fn main() {
                         r2.stats.pivots,
                         r2.stats.root_warm,
                         r2.stats.warm_hit_rate() * 100.0
+                    ),
+                ]);
+                // The decomposed backend on the same joint instance:
+                // per-phase wall including the pricing rounds.
+                let mut tenant_caches = std::collections::HashMap::new();
+                let t0 = Instant::now();
+                let dec = trident::scheduling::solve_decomposed(
+                    &input,
+                    Duration::from_secs(2),
+                    &mut trident::scheduling::BasisCache::new(),
+                    &mut tenant_caches,
+                    &trident::solver::MilpOptions::default(),
+                    &trident::scheduling::DecompOptions::default(),
+                );
+                let dms = t0.elapsed().as_secs_f64() * 1e3;
+                assert!(dec.t_pred > 0.0);
+                table.row(vec![
+                    format!("MILP solve (decomposed), {wname}, {nodes} nodes"),
+                    format!(
+                        "{:.0} ms (build {:.1} / root LP {:.1} / B&B {:.1} / pricing {:.1} ms; \
+                         {} pricing rounds, {} columns)",
+                        dms,
+                        dec.stats.build_ms,
+                        dec.stats.root_lp_ms,
+                        dec.stats.bnb_ms,
+                        dec.stats.pricing_ms,
+                        dec.stats.pricing_rounds,
+                        dec.stats.columns
                     ),
                 ]);
             }

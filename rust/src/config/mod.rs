@@ -5,6 +5,6 @@ pub mod spec;
 pub use json::Json;
 pub use spec::{
     ClusterSpec, ConfigParam, ConfigSpace, CostW, EdgeId, FeatureExtractor, NodeSpec, OpId,
-    OperatorKind, OperatorSpec, PipelineSpec, ServiceModel, SpecInterner, TenancyView, Tenancy,
-    TenantSpec, TridentConfig,
+    OperatorKind, OperatorSpec, PipelineSpec, ServiceModel, SolverBackend, SpecInterner,
+    TenancyView, Tenancy, TenantSpec, TridentConfig,
 };

@@ -723,6 +723,34 @@ impl TenancyView {
     }
 }
 
+/// Which solve path backs the scheduling MILP each round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SolverBackend {
+    /// The union MILP over all tenants in one branch-and-bound tree
+    /// (the default; bit-identical to every release before the
+    /// decomposed path existed).
+    #[default]
+    Monolithic,
+    /// Dantzig–Wolfe price-and-branch: per-tenant pricing subproblems
+    /// against a restricted master LP over the shared capacity/egress
+    /// rows, falling back to `Monolithic` below a tenant-count threshold
+    /// or on any engine abort (see `scheduling/decomposed.rs`).
+    Decomposed,
+}
+
+impl SolverBackend {
+    /// Strict parse (CLI `--solver` / config `"solver"`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "monolithic" => Ok(SolverBackend::Monolithic),
+            "decomposed" => Ok(SolverBackend::Decomposed),
+            other => Err(format!(
+                "unknown solver '{other}' (expected monolithic|decomposed)"
+            )),
+        }
+    }
+}
+
 /// Controller hyper-parameters (paper defaults in parentheses).
 #[derive(Debug, Clone)]
 pub struct TridentConfig {
@@ -782,6 +810,12 @@ pub struct TridentConfig {
     /// worker thread, and results are bit-identical to serial at any K
     /// (clamped to the tenant count; 1 = serial on the caller's thread).
     pub sim_shards: usize,
+    /// Which solve path backs each scheduling round.  `Monolithic`
+    /// (default) is the classic union MILP and keeps historical runs
+    /// bit-identical; `Decomposed` prices per-tenant subproblems against
+    /// a restricted master LP (Dantzig–Wolfe) and falls back to
+    /// monolithic below two tenants or on any engine abort.
+    pub solver: SolverBackend,
 }
 
 impl Default for TridentConfig {
@@ -811,6 +845,7 @@ impl Default for TridentConfig {
             native_gp: std::env::var("TRIDENT_NATIVE_GP").map(|v| v == "1").unwrap_or(false),
             sim_seed_event_stream: false,
             sim_shards: 1,
+            solver: SolverBackend::Monolithic,
         }
     }
 }
@@ -902,6 +937,11 @@ impl TridentConfig {
                 .and_then(Json::as_bool)
                 .unwrap_or(d.sim_seed_event_stream),
             sim_shards: j.f64_or("sim_shards", d.sim_shards as f64) as usize,
+            solver: j
+                .get("solver")
+                .and_then(Json::as_str)
+                .and_then(|s| SolverBackend::parse(s).ok())
+                .unwrap_or(d.solver),
         }
     }
 }

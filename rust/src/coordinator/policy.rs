@@ -218,9 +218,15 @@ impl SchedulingPolicy for StaticPolicy {
 /// estimated coefficients drift), so the incumbent root basis warm-starts
 /// the next solve and online re-optimization stays cheap.  A shape change
 /// (tenant set, topology, or cluster size) drops the entry automatically.
+///
+/// Under [`SolverBackend::Decomposed`] each tenant additionally owns a
+/// per-name cache in `tenant_caches` that warm-starts its pricing
+/// subproblem across rounds; keying by tenant *name* (not index) keeps
+/// the warm starts valid across dynamic tenancy arrivals/departures.
 #[derive(Default)]
 pub struct TridentPolicy {
     cache: scheduling::BasisCache,
+    tenant_caches: std::collections::HashMap<String, scheduling::BasisCache>,
 }
 
 impl SchedulingPolicy for TridentPolicy {
@@ -231,11 +237,20 @@ impl SchedulingPolicy for TridentPolicy {
             return Plan::keep();
         }
         let t0 = Instant::now();
-        let plan = scheduling::solve_cached(
-            &input,
-            Duration::from_millis(ctx.cfg.milp_time_budget_ms),
-            &mut self.cache,
-        );
+        let budget = Duration::from_millis(ctx.cfg.milp_time_budget_ms);
+        let plan = match ctx.cfg.solver {
+            crate::config::SolverBackend::Monolithic => {
+                scheduling::solve_cached(&input, budget, &mut self.cache)
+            }
+            crate::config::SolverBackend::Decomposed => scheduling::solve_decomposed(
+                &input,
+                budget,
+                &mut self.cache,
+                &mut self.tenant_caches,
+                &Default::default(),
+                &scheduling::DecompOptions::default(),
+            ),
+        };
         let ms = t0.elapsed().as_secs_f64() * 1e3;
         if plan.t_pred <= 0.0 {
             // Keep the previous feasible plan (paper §7).

@@ -13,8 +13,10 @@
 //! trident compare --pipelines pdf,speech                        # multi-tenant comparison
 //! trident sweep --pipeline pdf --seeds 4 --jobs 4 [--policies static,trident]
 //!               [--duration 1800] [--seed 0]      # variant × seed grid, mean ± std
+//! trident run   --pipelines pdf,speech --solver decomposed        # Dantzig–Wolfe solve path
 //! trident milp-bench [--nodes 8|16]               # RQ6 solve times + cold-vs-warm pivots
 //!               [--max-pivots N] [--assert-speedup S]   # solver perf gates (CI)
+//!               [--decomp-tenants 64] [--assert-decomp-speedup S] # decomposition rung gate
 //! trident bench-perf [--windows 4] [--rungs two-tenant-96,...] [--out BENCH_7.json]
 //!               [--milp-budget-ms 10000] [--assert-speedup 2]  # RQ8 perf trajectory
 //!               [--assert-shard-speedup 1.5]   # K=4 vs K=1 scaling gate (stress-512)
@@ -138,6 +140,14 @@ fn build_cfg(args: &Args) -> TridentConfig {
             eprintln!("--shards must be at least 1");
             std::process::exit(2);
         }
+    }
+    if let Some(v) = args.map.get("solver") {
+        // Strict, mirroring --policy: a typo'd backend must not silently
+        // run the other solve path.
+        cfg.solver = trident::config::SolverBackend::parse(v.trim()).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
     }
     cfg
 }
@@ -435,6 +445,68 @@ fn round2d(v: &[f64]) -> Vec<f64> {
     v.iter().map(|t| (t * 100.0).round() / 100.0).collect()
 }
 
+/// `nt` heterogeneous stress-chain tenants sharing a small CPU cluster —
+/// the `milp-bench` decomposition rung.  Network-agnostic (no flow rows)
+/// so the union MILP is pure capacity coupling; per-tenant skews on rate,
+/// weight, and CPU footprint keep the weighted max-min LP relaxation
+/// fractional, so the monolithic branch-and-bound really has to branch
+/// across tenants while every per-tenant pricing block stays at 4 ops.
+fn decomp_stress_input(nt: usize, nodes: usize) -> trident::scheduling::MilpInput {
+    let spec = stress_spec();
+    let (d_i, d_o) = spec.amplification();
+    let cluster = ClusterSpec::homogeneous(nodes, 64.0, 512.0, 0, 0.0, 12_500.0);
+    let cpu_skew = [1.0, 1.3, 0.9, 1.1];
+    let mut ops = Vec::new();
+    let mut edges = Vec::new();
+    let mut op_tenant = Vec::new();
+    let mut tenants = Vec::new();
+    for t in 0..nt {
+        let base = ops.len();
+        for (i, o) in spec.operators.iter().enumerate() {
+            ops.push(trident::scheduling::OpSched {
+                name: format!("s{t:02}.{}", o.name),
+                ut_cur: 50.0 + (t as f64) * 0.7 + (i as f64) * 3.0,
+                ut_cand: None,
+                n_new: 0,
+                n_old: 0,
+                cpu: o.cpu * cpu_skew[(t + i) % cpu_skew.len()],
+                mem_gb: o.mem_gb,
+                accels: 0,
+                out_mb: o.out_mb,
+                d_i: d_i[i],
+                h_start: o.start_s,
+                h_stop: o.stop_s,
+                h_cold: o.cold_s,
+                cur_x: vec![0; nodes],
+            });
+            op_tenant.push(t);
+        }
+        for &(u, v) in &spec.edges {
+            edges.push((base + u, base + v));
+        }
+        tenants.push(trident::scheduling::MilpTenant {
+            name: format!("stress-{t:02}"),
+            weight: 1.0 + ((t % 7) as f64) * 0.25,
+            d_o,
+        });
+    }
+    trident::scheduling::MilpInput {
+        ops,
+        edges,
+        nodes: cluster.nodes,
+        d_o,
+        tenants,
+        op_tenant,
+        t_sched: 30.0,
+        lambda1: 1e-4,
+        lambda2: 1e-6,
+        b_max: 2,
+        placement_aware: false,
+        join_colocate: false,
+        all_at_once: false,
+    }
+}
+
 /// `trident milp-bench`: single-tenant solve times, then the two-tenant
 /// pdf+speech cold-vs-warm pivot comparison (the RQ6 overhead headline):
 /// the dense baseline and the warm-started revised backend solve the
@@ -548,7 +620,74 @@ fn milp_bench(args: &Args) {
          plans-identical={plans_identical} p/b-equal={pb_equal}"
     );
 
+    // ---- decomposition rung: 64 heterogeneous stress tenants ---------
+    // The union MILP couples tenants only through shared node capacity;
+    // monolithic pays O(m^2)-per-pivot on the union's ~600 rows and
+    // branches over every tenant's integer columns at once, while the
+    // decomposed path prices 64 four-op subproblems against a small
+    // master.  Identical `MilpInput` feeds both paths.
+    let dec_nt = args.f64("decomp-tenants", 64.0) as usize;
+    let dec_budget = Duration::from_secs(120);
+    let dinput = decomp_stress_input(dec_nt, 6);
+    let t0 = Instant::now();
+    let mono = solve_with_options(&dinput, dec_budget, &mut BasisCache::new(), &MilpOptions::default());
+    let mono_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mut tenant_caches = std::collections::HashMap::new();
+    let t0 = Instant::now();
+    let dec = trident::scheduling::solve_decomposed(
+        &dinput,
+        dec_budget,
+        &mut BasisCache::new(),
+        &mut tenant_caches,
+        &MilpOptions::default(),
+        &trident::scheduling::DecompOptions::default(),
+    );
+    let dec_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let decomp_speedup = mono_ms / dec_ms.max(1e-9);
+    // One-sided: the decomposed plan must be within 0.5% of monolithic
+    // (beating a budget-capped monolithic incumbent is fine).
+    let decomp_obj_ok = dec.obj >= mono.obj - 0.005 * mono.obj.abs();
+    println!("decomposition @ {dec_nt} stress tenants, 6 nodes:");
+    println!(
+        "  monolithic : {mono_ms:.0} ms, obj={:.6} status {:?} ({} B&B nodes, {} pivots, \
+         build {:.0} ms, root LP {:.0} ms, B&B {:.0} ms)",
+        mono.obj,
+        mono.status,
+        mono.stats.nodes,
+        mono.stats.pivots,
+        mono.stats.build_ms,
+        mono.stats.root_lp_ms,
+        mono.stats.bnb_ms,
+    );
+    println!(
+        "  decomposed : {dec_ms:.0} ms, obj={:.6} status {:?} (pricing rounds={} columns={} \
+         pricing {:.0} ms, {} pivots, warm-start hit rate {:.1}%)",
+        dec.obj,
+        dec.status,
+        dec.stats.pricing_rounds,
+        dec.stats.columns,
+        dec.stats.pricing_ms,
+        dec.stats.pivots,
+        dec.stats.warm_hit_rate() * 100.0,
+    );
+    println!(
+        "  decomp-speedup={decomp_speedup:.2}x objective-within-0.5%={decomp_obj_ok}"
+    );
+
     let mut failed = false;
+    if let Some(s) = args.map.get("assert-decomp-speedup").and_then(|v| v.parse::<f64>().ok()) {
+        if decomp_speedup < s {
+            eprintln!("FAIL: decomposition speedup {decomp_speedup:.2}x below required {s}x");
+            failed = true;
+        }
+        if !decomp_obj_ok {
+            eprintln!(
+                "FAIL: decomposed objective {:.6} below monolithic {:.6} - 0.5%",
+                dec.obj, mono.obj
+            );
+            failed = true;
+        }
+    }
     if let Some(maxp) = args.map.get("max-pivots").and_then(|v| v.parse::<usize>().ok()) {
         if warm.stats.pivots > maxp {
             eprintln!("FAIL: warm two-tenant pivots {} exceed budget {maxp}", warm.stats.pivots);
@@ -1192,9 +1331,10 @@ fn main() {
                 "usage: trident <run|compare|sweep|milp-bench|bench-perf> [--pipeline pdf|video|speech] \
                  [--pipelines pdf,speech [--weights 2,1]] [--tenancy file.json] [--policy ...] \
                  [--policies a,b,c] [--seeds N] [--jobs J] [--duration S] [--nodes N] [--seed S] \
-                 [--native-gp] [--join-colocate] [--shards K] \
+                 [--native-gp] [--join-colocate] [--shards K] [--solver monolithic|decomposed] \
                  [--dynamics file.json] [--mtbf S] [--mttr S] [--recovery requeue|loss] \
                  [--max-pivots N] [--assert-speedup S]   (milp-bench solver-perf gates) \
+                 [--decomp-tenants N] [--assert-decomp-speedup S]   (milp-bench decomposition gate) \
                  [--windows W] [--rungs a,b] [--out BENCH_7.json] [--milp-budget-ms MS] \
                  [--assert-speedup S] [--assert-shard-speedup S]   (bench-perf -> BENCH_7.json)"
             );

@@ -1,0 +1,333 @@
+//! Decomposed solve path for the multi-tenant scheduling MILP:
+//! Dantzig–Wolfe price-and-branch over per-tenant blocks.
+//!
+//! Tenants couple only through shared node-capacity and egress rows, so
+//! the union MILP splits into a small restricted master LP (one λ per
+//! generated per-tenant schedule, the shared capacity/egress rows, the
+//! weighted max-min epigraph) and independent per-tenant pricing
+//! subproblems — each the classic single-tenant MILP this crate already
+//! builds bit-identically ([`tenant_block`]), re-solved warm against the
+//! master's dual prices via the per-tenant [`BasisCache`] (the pricing
+//! rounds only mutate objective coefficients, so the cache's shape key
+//! never changes and every round after the first replays the previous
+//! basis).  Subproblems fan out across tenants with `std::thread::scope`
+//! and are collected in tenant order, so the result is bit-identical at
+//! any thread count.
+//!
+//! Fallback contract: any abort in the engine (master LP failure,
+//! infeasible integrality repair, artificial slack in the repaired
+//! solution) and every input below the tenant-count threshold routes to
+//! the monolithic [`solve_with_options`] — in particular a single-tenant
+//! input under the decomposed backend degenerates to the classic MILP
+//! **bit-identically**.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::solver::{
+    solve_dw, DwColumn, DwDuals, DwOptions, DwRow, DwStatic, MilpOptions, MilpStats,
+    PricedColumn, Status,
+};
+
+use super::milp_model::{
+    block_column, build_model, decode, set_pricing_objective, solve_model, solve_with_options,
+    tenant_block, BasisCache, MilpInput, Model, PricingDuals, SchedulePlan,
+};
+
+/// Which solve path backs the scheduling round.
+pub use crate::config::SolverBackend;
+
+/// Decomposition knobs (scheduling-level; engine knobs in
+/// [`DwOptions`]).
+#[derive(Debug, Clone)]
+pub struct DecompOptions {
+    /// Below this many tenants the monolithic MILP is used directly
+    /// (the master/pricing machinery cannot pay for itself, and the
+    /// single-tenant case must stay bit-identical).
+    pub min_tenants: usize,
+    /// Pricing fan-out threads (0 = available parallelism).
+    pub threads: usize,
+    /// Hard cap on pricing rounds.
+    pub max_rounds: usize,
+}
+
+impl Default for DecompOptions {
+    fn default() -> Self {
+        DecompOptions { min_tenants: 2, threads: 0, max_rounds: 25 }
+    }
+}
+
+/// Per-tenant state threaded through the engine's fan-out: the extracted
+/// block, its built model (objective mutated in place between rounds),
+/// the tenant's own warm-start cache, and every block solution generated
+/// so far (the column payloads; `DwColumn::tag` indexes this).
+struct TenantState {
+    name: String,
+    block: MilpInput,
+    model: Model,
+    cache: BasisCache,
+    op_map: Vec<usize>,
+    edge_map: Vec<usize>,
+    payloads: Vec<crate::solver::Solution>,
+}
+
+/// Solve the round's MILP through the decomposed path, falling back to
+/// the monolithic solve when decomposition does not apply or aborts.
+///
+/// `tenant_caches` is keyed by tenant name so caches survive tenant
+/// arrival/departure (dynamic tenancy reshuffles indices, not names);
+/// `mono_cache` serves the fallback path exactly as in the monolithic
+/// backend.
+pub fn solve_decomposed(
+    input: &MilpInput,
+    budget: Duration,
+    mono_cache: &mut BasisCache,
+    tenant_caches: &mut HashMap<String, BasisCache>,
+    opts: &MilpOptions,
+    dopts: &DecompOptions,
+) -> SchedulePlan {
+    let nt = input.tenants.len();
+    if nt <= 1 || nt < dopts.min_tenants.max(2) {
+        // Degenerate: the classic MILP, bit-identical (same build, same
+        // cache protocol, same solver options).
+        return solve_with_options(input, budget, mono_cache, opts);
+    }
+    let start = Instant::now();
+    let k = input.nodes.len();
+    let any_acc = input.ops.iter().any(|o| o.accels > 0);
+    let has_flows = input.placement_aware && !input.edges.is_empty();
+
+    // ---- per-tenant blocks -------------------------------------------
+    let mut states: Vec<TenantState> = Vec::with_capacity(nt);
+    for t in 0..nt {
+        let (block, op_map, edge_map) = tenant_block(input, t);
+        if block.ops.is_empty() {
+            return solve_with_options(input, budget, mono_cache, opts);
+        }
+        let name = input.tenants[t].name.clone();
+        let cache = tenant_caches.remove(&name).unwrap_or_default();
+        let model = build_model(&block);
+        states.push(TenantState {
+            name,
+            block,
+            model,
+            cache,
+            op_map,
+            edge_map,
+            payloads: Vec::new(),
+        });
+    }
+
+    // ---- master coupling rows ----------------------------------------
+    // Row layout (the dual-slicing contract with the pricing closure):
+    //   [0, nt)                      maxmin_t   w_t·T_min − Σ T_c·λ ≤ 0
+    //   [nt, nt+k)                   cpu_k      Σ cpu-usage·λ ≤ cap_k
+    //   [nt+k, nt+2k)                mem_k
+    //   [nt+2k, nt+3k)               acc_k      (only when any op has accels)
+    //   [.., ..+k)                   egress_k   Σ egress-MB·λ − E_max ≤ 0
+    let mut rows: Vec<DwRow> = Vec::new();
+    for t in 0..nt {
+        rows.push(DwRow {
+            name: format!("maxmin_{}", input.tenants[t].name),
+            cmp: crate::solver::Cmp::Le,
+            rhs: 0.0,
+        });
+    }
+    for node in &input.nodes {
+        rows.push(DwRow {
+            name: format!("cpu_{}", node.name),
+            cmp: crate::solver::Cmp::Le,
+            rhs: node.cpu_cores,
+        });
+    }
+    for node in &input.nodes {
+        rows.push(DwRow {
+            name: format!("mem_{}", node.name),
+            cmp: crate::solver::Cmp::Le,
+            rhs: node.mem_gb,
+        });
+    }
+    let acc_base = if any_acc {
+        for node in &input.nodes {
+            rows.push(DwRow {
+                name: format!("acc_{}", node.name),
+                cmp: crate::solver::Cmp::Le,
+                rhs: node.accels as f64,
+            });
+        }
+        Some(nt + 2 * k)
+    } else {
+        None
+    };
+    let eg_base = if has_flows {
+        let base = rows.len();
+        for node in &input.nodes {
+            rows.push(DwRow {
+                name: format!("egress_{}", node.name),
+                cmp: crate::solver::Cmp::Le,
+                rhs: 0.0,
+            });
+        }
+        Some(base)
+    } else {
+        None
+    };
+
+    let mut statics = vec![DwStatic {
+        name: "T_min".into(),
+        obj: 1.0,
+        lo: 0.0,
+        up: f64::INFINITY,
+        coeffs: (0..nt).map(|t| (t, input.tenants[t].weight)).collect(),
+    }];
+    if let Some(base) = eg_base {
+        statics.push(DwStatic {
+            name: "E_max".into(),
+            obj: -input.lambda1,
+            lo: 0.0,
+            up: f64::INFINITY,
+            coeffs: (0..k).map(|kk| (base + kk, -1.0)).collect(),
+        });
+    }
+
+    // ---- seed / pricing oracles --------------------------------------
+    let make_column = |st: &mut TenantState, sol: crate::solver::Solution, t: usize| -> DwColumn {
+        let bc = block_column(&st.model, &st.block, &sol);
+        let mut coeffs: Vec<(usize, f64)> = Vec::with_capacity(2 + 4 * k);
+        if bc.t_c != 0.0 {
+            coeffs.push((t, -bc.t_c));
+        }
+        for kk in 0..k {
+            if bc.cpu[kk] != 0.0 {
+                coeffs.push((nt + kk, bc.cpu[kk]));
+            }
+        }
+        for kk in 0..k {
+            if bc.mem[kk] != 0.0 {
+                coeffs.push((nt + k + kk, bc.mem[kk]));
+            }
+        }
+        if let Some(base) = acc_base {
+            for kk in 0..k {
+                if bc.acc[kk] != 0.0 {
+                    coeffs.push((base + kk, bc.acc[kk]));
+                }
+            }
+        }
+        if let Some(base) = eg_base {
+            for kk in 0..k {
+                if bc.egress[kk] != 0.0 {
+                    coeffs.push((base + kk, bc.egress[kk]));
+                }
+            }
+        }
+        let tag = st.payloads.len();
+        st.payloads.push(sol);
+        DwColumn { obj: bc.obj, coeffs, tag }
+    };
+
+    let seed = |t: usize, st: &mut TenantState| -> Option<Vec<PricedColumn>> {
+        // Standalone optimum under the block's natural objective: the
+        // classic single-tenant solve, warm from the tenant's own cache.
+        let (sol, stats) = solve_model(&st.block, &st.model, budget, &mut st.cache, opts);
+        if sol.x.is_empty() {
+            return None;
+        }
+        let col = make_column(st, sol, t);
+        Some(vec![PricedColumn { col, stats }])
+    };
+
+    let price = |t: usize, st: &mut TenantState, duals: &DwDuals| -> Option<PricedColumn> {
+        let pd = PricingDuals {
+            y_maxmin: duals.coupling[t],
+            y_cpu: &duals.coupling[nt..nt + k],
+            y_mem: &duals.coupling[nt + k..nt + 2 * k],
+            y_acc: acc_base.map(|b| &duals.coupling[b..b + k]),
+            y_eg: eg_base.map(|b| &duals.coupling[b..b + k]),
+        };
+        set_pricing_objective(&mut st.model, &st.block, &pd);
+        let (sol, stats) = solve_model(&st.block, &st.model, budget, &mut st.cache, opts);
+        if sol.x.is_empty() {
+            return None;
+        }
+        let col = make_column(st, sol, t);
+        Some(PricedColumn { col, stats })
+    };
+
+    let dw_opts = DwOptions {
+        max_rounds: dopts.max_rounds,
+        threads: dopts.threads,
+        repair_budget: budget,
+        ..DwOptions::default()
+    };
+    let outcome = solve_dw(&rows, &statics, &mut states, seed, price, &dw_opts);
+
+    // Hand the per-tenant caches back before any return path.
+    let give_back = |states: Vec<TenantState>, caches: &mut HashMap<String, BasisCache>| {
+        let mut plans = Vec::with_capacity(states.len());
+        for st in states {
+            caches.insert(st.name.clone(), st.cache);
+            plans.push((st.block, st.model, st.op_map, st.edge_map, st.payloads));
+        }
+        plans
+    };
+
+    let Some(dws) = outcome else {
+        give_back(states, tenant_caches);
+        return solve_with_options(input, budget, mono_cache, opts);
+    };
+    let parts = give_back(states, tenant_caches);
+
+    // ---- merge chosen columns into the union plan --------------------
+    let n = input.ops.len();
+    let mut p = vec![0u32; n];
+    let mut x = vec![Vec::new(); n];
+    let mut b = vec![0u32; n];
+    let mut route = if has_flows { vec![Vec::new(); input.edges.len()] } else { Vec::new() };
+    let mut edge_cons =
+        if has_flows { vec![Vec::new(); input.edges.len()] } else { Vec::new() };
+    let mut t_tenant = vec![0.0; nt];
+    let mut status = dws.status;
+    let mut stats = dws.stats;
+    for (t, (block, model, op_map, edge_map, payloads)) in parts.into_iter().enumerate() {
+        let sol = payloads[dws.chosen[t]].clone();
+        if sol.status != Status::Optimal {
+            status = Status::Limit;
+        }
+        let plan_t = decode(
+            &block,
+            sol,
+            MilpStats::default(),
+            &model.t_v,
+            &model.p_v,
+            &model.x_v,
+            &model.b_v,
+            &model.flow_v,
+        );
+        for (bi, &ui) in op_map.iter().enumerate() {
+            p[ui] = plan_t.p[bi];
+            x[ui] = plan_t.x[bi].clone();
+            b[ui] = plan_t.b[bi];
+        }
+        if has_flows {
+            for (bei, &uei) in edge_map.iter().enumerate() {
+                route[uei] = plan_t.route[bei].clone();
+                edge_cons[uei] = plan_t.edge_cons[bei].clone();
+            }
+        }
+        t_tenant[t] = plan_t.t_tenant[0];
+    }
+    stats.wall = start.elapsed();
+    SchedulePlan {
+        p,
+        x,
+        b,
+        route,
+        t_pred: t_tenant.iter().sum(),
+        t_tenant,
+        edge_cons,
+        obj: dws.obj,
+        status,
+        stats,
+    }
+}

@@ -54,6 +54,15 @@ use std::time::Duration;
 use crate::config::NodeSpec;
 use crate::solver::{BasisSnapshot, Cmp, MilpOptions, MilpStats, Problem, Status, Var};
 
+/// Infinitesimal per-tenant throughput bonus in the multi-tenant
+/// objective (so non-bottleneck tenants still take Pareto-dominant
+/// throughput).  The Dantzig–Wolfe master charges columns the same
+/// coefficient, keeping the decomposed objective comparable to the
+/// monolithic one term for term.
+pub(crate) const TENANT_BONUS: f64 = 1e-6;
+/// Symmetry-breaking preference for low-index nodes on placement vars.
+pub(crate) const EPS_NODE: f64 = 1e-9;
+
 /// Per-operator scheduler inputs for one round.
 #[derive(Debug, Clone)]
 pub struct OpSched {
@@ -146,7 +155,7 @@ pub struct MilpInput {
 
 impl MilpInput {
     /// Tenant of op `i` (0 when single-tenant).
-    fn tenant_of(&self, i: usize) -> usize {
+    pub(crate) fn tenant_of(&self, i: usize) -> usize {
         if self.tenants.len() > 1 {
             self.op_tenant[i]
         } else {
@@ -163,7 +172,7 @@ impl MilpInput {
         }
     }
 
-    fn n_tenants(&self) -> usize {
+    pub(crate) fn n_tenants(&self) -> usize {
         self.tenants.len().max(1)
     }
 }
@@ -189,6 +198,10 @@ pub struct SchedulePlan {
     /// empty when placement-unaware.  Diagnostics/tests: the join
     /// co-location constraint makes sibling in-edge rows equal.
     pub edge_cons: Vec<Vec<f64>>,
+    /// Solver objective of the returned plan (`NEG_INFINITY` when no
+    /// incumbent was found) — what the decomposed-vs-monolithic parity
+    /// gates compare.
+    pub obj: f64,
     pub status: Status,
     pub stats: MilpStats,
 }
@@ -286,6 +299,34 @@ pub fn solve_with_options(
     cache: &mut BasisCache,
     opts: &MilpOptions,
 ) -> SchedulePlan {
+    let build_t = std::time::Instant::now();
+    let model = build_model(input);
+    let built_ms = build_t.elapsed().as_secs_f64() * 1e3;
+    let (sol, mut stats) = solve_model(input, &model, budget, cache, opts);
+    stats.build_ms += built_ms;
+    decode(input, sol, stats, &model.t_v, &model.p_v, &model.x_v, &model.b_v, &model.flow_v)
+}
+
+/// The constructed scheduling MILP plus every variable handle the solve,
+/// decode, and Dantzig–Wolfe pricing paths need.  Building once and
+/// mutating `prob.obj` in place is what lets the decomposed path re-price
+/// a tenant's subproblem every round without re-assembling the rows (the
+/// shape — and therefore the [`BasisCache`] key — never changes).
+pub(crate) struct Model {
+    pub(crate) prob: Problem,
+    pub(crate) t_v: Vec<Var>,
+    t_min: Option<Var>,
+    e_max: Var,
+    j_mig: Var,
+    pub(crate) p_v: Vec<Var>,
+    pub(crate) x_v: Vec<Vec<Var>>,
+    pub(crate) b_v: Vec<Var>,
+    z_v: Vec<(Var, usize)>,
+    pub(crate) flow_v: Vec<Vec<(Var, Var, Var)>>,
+}
+
+/// Build the round's MILP (variables, rows — no solve).
+pub(crate) fn build_model(input: &MilpInput) -> Model {
     let n = input.ops.len();
     let k = input.nodes.len();
     let mut prob = Problem::new();
@@ -339,7 +380,7 @@ pub fn solve_with_options(
                     &format!("T_{}", input.tenants[t].name),
                     0.0,
                     t_ub_t[t].max(1.0) * 2.0,
-                    1e-6,
+                    TENANT_BONUS,
                 )
             })
             .collect();
@@ -362,7 +403,7 @@ pub fn solve_with_options(
     }
 
     // Symmetry breaking: infinitesimal preference for low-index nodes.
-    let eps_node = 1e-9;
+    let eps_node = EPS_NODE;
 
     // p_i, x_{i,k}, b_i
     let mut p_v = Vec::with_capacity(n);
@@ -570,19 +611,47 @@ pub fn solve_with_options(
         }
     }
 
-    // Greedy warm start: a feasible plan so branch & bound prunes from the
-    // first node and Limit statuses still carry a usable incumbent.
-    let warm =
-        warm_start(input, &prob, p_v.len(), &p_v, &x_v, &b_v, &z_v, &flow_v, &t_v, t_min, e_max, j_mig);
+    Model { prob, t_v, t_min, e_max, j_mig, p_v, x_v, b_v, z_v, flow_v }
+}
 
-    let key = shape_key(&prob);
+/// Solve a built model under the cross-round cache protocol, returning
+/// the raw solver outcome (the decomposed path re-solves the same model
+/// with mutated objectives and decodes columns itself).
+pub(crate) fn solve_model(
+    input: &MilpInput,
+    model: &Model,
+    budget: Duration,
+    cache: &mut BasisCache,
+    opts: &MilpOptions,
+) -> (crate::solver::Solution, MilpStats) {
+    let prob = &model.prob;
+    // Greedy warm start: a feasible plan so branch & bound prunes from the
+    // first node and Limit statuses still carry a usable incumbent.  The
+    // point is feasibility-only, so it stays valid when the pricing path
+    // has swapped the objective.
+    let warm = warm_start(
+        input,
+        prob,
+        model.p_v.len(),
+        &model.p_v,
+        &model.x_v,
+        &model.b_v,
+        &model.z_v,
+        &model.flow_v,
+        &model.t_v,
+        model.t_min,
+        model.e_max,
+        model.j_mig,
+    );
+
+    let key = shape_key(prob);
     let hit = cache.key == Some(key);
     let mut repaired: Option<BasisSnapshot> = None;
     if !hit {
         if let Some(cached) = &cache.basis {
             // Shape change (topology event): restricted-warm repair by
             // stable variable/row names instead of a cold start.
-            repaired = cached.remap_to(&cache.var_names, &cache.row_names, &prob);
+            repaired = cached.remap_to(&cache.var_names, &cache.row_names, prob);
             if repaired.is_some() {
                 cache.restricted_repairs += 1;
             }
@@ -592,7 +661,7 @@ pub fn solve_with_options(
     // steady-state path); changed shape ⇒ use the repair, if any.
     let warm_basis = if hit { cache.basis.as_ref() } else { repaired.as_ref() };
     let (sol, stats, root_basis) =
-        crate::solver::solve_milp_opts(&prob, budget, warm, warm_basis, opts);
+        crate::solver::solve_milp_opts(prob, budget, warm, warm_basis, opts);
     // Re-cache for the next round (a failed root solve drops the entry
     // so a bad basis is never replayed).  Names only change with the
     // shape, so the steady-state round skips the string clones too.
@@ -602,7 +671,151 @@ pub fn solve_with_options(
     }
     cache.key = Some(key);
     cache.basis = root_basis;
-    decode(input, sol, stats, &t_v, &p_v, &x_v, &b_v, &flow_v)
+    (sol, stats)
+}
+
+/// Extract tenant `t`'s block from a multi-tenant input: its ops and
+/// intra-tenant edges on the full cluster, as the classic single-tenant
+/// formulation (identical variables, names, and coefficients to solving
+/// that tenant alone — the Dantzig–Wolfe pricing subproblem).  Returns
+/// the block plus the union-index maps for its ops and edges, used to
+/// scatter a chosen column back into the union plan.
+pub fn tenant_block(input: &MilpInput, t: usize) -> (MilpInput, Vec<usize>, Vec<usize>) {
+    if input.tenants.len() <= 1 {
+        assert_eq!(t, 0, "single-tenant input has only block 0");
+        let ops = (0..input.ops.len()).collect();
+        let edges = (0..input.edges.len()).collect();
+        let mut block = input.clone();
+        block.tenants = Vec::new();
+        block.op_tenant = Vec::new();
+        return (block, ops, edges);
+    }
+    let op_map: Vec<usize> =
+        (0..input.ops.len()).filter(|&i| input.tenant_of(i) == t).collect();
+    let mut back = vec![usize::MAX; input.ops.len()];
+    for (bi, &ui) in op_map.iter().enumerate() {
+        back[ui] = bi;
+    }
+    let mut edges = Vec::new();
+    let mut edge_map = Vec::new();
+    for (ei, &(u, v)) in input.edges.iter().enumerate() {
+        if back[u] != usize::MAX && back[v] != usize::MAX {
+            edges.push((back[u], back[v]));
+            edge_map.push(ei);
+        } else {
+            debug_assert!(
+                back[u] == usize::MAX && back[v] == usize::MAX,
+                "pipeline edges never span tenants"
+            );
+        }
+    }
+    let block = MilpInput {
+        ops: op_map.iter().map(|&i| input.ops[i].clone()).collect(),
+        edges,
+        nodes: input.nodes.clone(),
+        d_o: input.tenants[t].d_o,
+        tenants: Vec::new(),
+        op_tenant: Vec::new(),
+        t_sched: input.t_sched,
+        lambda1: input.lambda1,
+        lambda2: input.lambda2,
+        b_max: input.b_max,
+        placement_aware: input.placement_aware,
+        join_colocate: input.join_colocate,
+        all_at_once: input.all_at_once,
+    };
+    (block, op_map, edge_map)
+}
+
+/// Dual prices charged to one tenant's pricing subproblem, already
+/// sliced out of the master's row duals (see `decomposed.rs` for the row
+/// layout).  `y_acc`/`y_eg` are `None` when the master has no such rows.
+pub(crate) struct PricingDuals<'a> {
+    pub y_maxmin: f64,
+    pub y_cpu: &'a [f64],
+    pub y_mem: &'a [f64],
+    pub y_acc: Option<&'a [f64]>,
+    pub y_eg: Option<&'a [f64]>,
+}
+
+/// Rewrite a block model's objective to the Dantzig–Wolfe reduced-cost
+/// form: the column's master objective contribution minus the dual price
+/// of its coupling-row usage, expressed on the block's own variables.
+/// The constraint matrix (and therefore the `BasisCache` shape key) is
+/// untouched, so per-tenant warm starts survive every pricing round.
+///
+/// Master contribution: `TENANT_BONUS·T − Σ EPS_NODE·k·x_{i,k}`; the
+/// maxmin row carries `−T`, capacity rows carry resource·x, egress rows
+/// carry out_mb·e.  The subproblem's own `E_max` is priced at 0: egress
+/// is charged through the master duals, not double-counted.
+pub(crate) fn set_pricing_objective(model: &mut Model, input: &MilpInput, d: &PricingDuals) {
+    let obj = &mut model.prob.obj;
+    obj.iter_mut().for_each(|c| *c = 0.0);
+    obj[model.t_v[0].0] = TENANT_BONUS + d.y_maxmin;
+    for (i, o) in input.ops.iter().enumerate() {
+        for (kk, &x) in model.x_v[i].iter().enumerate() {
+            let mut c = -EPS_NODE * kk as f64 - d.y_cpu[kk] * o.cpu - d.y_mem[kk] * o.mem_gb;
+            if o.accels > 0 {
+                if let Some(ya) = d.y_acc {
+                    c -= ya[kk] * o.accels as f64;
+                }
+            }
+            obj[x.0] = c;
+        }
+    }
+    if let Some(ye) = d.y_eg {
+        for (ei, per_edge) in model.flow_v.iter().enumerate() {
+            let (u, _) = input.edges[ei];
+            for (kk, &(_, e, _)) in per_edge.iter().enumerate() {
+                obj[e.0] = -ye[kk] * input.ops[u].out_mb;
+            }
+        }
+    }
+}
+
+/// A block solution projected onto the master's coupling rows: tenant
+/// throughput, master-objective contribution, and per-node resource /
+/// egress usage.
+pub(crate) struct BlockColumn {
+    pub t_c: f64,
+    pub obj: f64,
+    pub cpu: Vec<f64>,
+    pub mem: Vec<f64>,
+    pub acc: Vec<f64>,
+    pub egress: Vec<f64>,
+}
+
+pub(crate) fn block_column(
+    model: &Model,
+    input: &MilpInput,
+    sol: &crate::solver::Solution,
+) -> BlockColumn {
+    let k = input.nodes.len();
+    let t_c = sol.value(model.t_v[0]).max(0.0);
+    let mut obj = TENANT_BONUS * t_c;
+    let mut cpu = vec![0.0; k];
+    let mut mem = vec![0.0; k];
+    let mut acc = vec![0.0; k];
+    for (i, o) in input.ops.iter().enumerate() {
+        for (kk, &xv) in model.x_v[i].iter().enumerate() {
+            let x = sol.int_value(xv).max(0) as f64;
+            if x == 0.0 {
+                continue;
+            }
+            obj -= EPS_NODE * kk as f64 * x;
+            cpu[kk] += o.cpu * x;
+            mem[kk] += o.mem_gb * x;
+            acc[kk] += o.accels as f64 * x;
+        }
+    }
+    let mut egress = vec![0.0; k];
+    for (ei, per_edge) in model.flow_v.iter().enumerate() {
+        let (u, _) = input.edges[ei];
+        for (kk, &(_, e, _)) in per_edge.iter().enumerate() {
+            egress[kk] += sol.value(e).max(0.0) * input.ops[u].out_mb;
+        }
+    }
+    BlockColumn { t_c, obj, cpu, mem, acc, egress }
 }
 
 fn per_node_cap(o: &OpSched, node: &NodeSpec) -> f64 {
@@ -614,7 +827,7 @@ fn per_node_cap(o: &OpSched, node: &NodeSpec) -> f64 {
     cap.max(0.0)
 }
 
-fn decode(
+pub(crate) fn decode(
     input: &MilpInput,
     sol: crate::solver::Solution,
     stats: MilpStats,
@@ -636,6 +849,7 @@ fn decode(
             t_pred: 0.0,
             t_tenant: vec![0.0; t_v.len()],
             edge_cons: Vec::new(),
+            obj: f64::NEG_INFINITY,
             status: sol.status,
             stats,
         };
@@ -683,6 +897,7 @@ fn decode(
         t_pred: t_tenant.iter().sum(),
         t_tenant,
         edge_cons,
+        obj: sol.obj,
         status: sol.status,
         stats,
     }

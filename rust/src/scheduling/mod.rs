@@ -1,11 +1,13 @@
 //! Scheduling layer (paper §6): the joint parallelism / placement /
 //! configuration-transition MILP and the rolling-update state machine.
 
+pub mod decomposed;
 pub mod milp_model;
 pub mod rolling;
 
+pub use decomposed::{solve_decomposed, DecompOptions, SolverBackend};
 pub use milp_model::{
-    solve, solve_cached, solve_with_options, BasisCache, MilpInput, MilpTenant, OpSched,
-    SchedulePlan,
+    solve, solve_cached, solve_with_options, tenant_block, BasisCache, MilpInput, MilpTenant,
+    OpSched, SchedulePlan,
 };
 pub use rolling::RollingState;

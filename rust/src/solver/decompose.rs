@@ -1,0 +1,588 @@
+//! Dantzig–Wolfe decomposition: price-and-branch column generation for
+//! block-structured MILPs.
+//!
+//! The scheduling MILP couples tenants only through shared node-capacity
+//! and egress rows; everything else (throughput, placement, rolling
+//! batches, flow routing) is block-diagonal per tenant.  This module is
+//! the generic engine: a **restricted master LP** over per-block columns
+//! (one λ variable per generated block solution, a convexity row Σλ = 1
+//! per block, plus caller-supplied coupling rows and static variables),
+//! alternated with caller-priced **subproblems** that propose new columns
+//! against the master's dual prices.  Rounds terminate when no block can
+//! produce a column with positive reduced cost (maximization), after
+//! which an **integrality repair** pass re-solves the master with binary
+//! λ (price-and-branch on the fractional convexity rows) to pick exactly
+//! one column per block.
+//!
+//! Determinism contract: blocks are priced independently and collected in
+//! block order, so the engine is bit-identical at any thread count — the
+//! fan-out mirrors the sharded-sim harness (`std::thread::scope` over
+//! disjoint chunks of per-block state).
+//!
+//! The engine knows nothing about tenants or schedules: the scheduling
+//! layer supplies coupling rows, static variables, seed columns, and the
+//! pricing oracle (`scheduling::solve_decomposed`), and maps chosen
+//! columns back into a `SchedulePlan`.  Any failure path (numerical
+//! failure in the master LP, non-optimal master, infeasible repair,
+//! artificial usage in the repair solution) returns `None` and the caller
+//! falls back to the monolithic MILP, so the decomposed path can only
+//! ever *save* time, never change feasibility.
+
+use std::time::{Duration, Instant};
+
+use super::milp::{solve_milp_from, MilpStats};
+use super::model::{Cmp, Problem, Status, Var};
+use super::revised::LpSolver;
+
+/// One coupling row of the master (shared across blocks).
+#[derive(Debug, Clone)]
+pub struct DwRow {
+    pub name: String,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+/// A static (non-column) master variable, e.g. the max-min epigraph
+/// `T_min` or the egress budget `E_max`.  `coeffs` index coupling rows.
+#[derive(Debug, Clone)]
+pub struct DwStatic {
+    pub name: String,
+    pub obj: f64,
+    pub lo: f64,
+    pub up: f64,
+    pub coeffs: Vec<(usize, f64)>,
+}
+
+/// One generated column: a block solution projected onto the master.
+/// `coeffs` are the column's usage of each coupling row; `tag` is a
+/// caller-side payload id (the caller keeps the full block solution and
+/// maps the chosen tag back to it after the repair pass).
+#[derive(Debug, Clone)]
+pub struct DwColumn {
+    pub obj: f64,
+    pub coeffs: Vec<(usize, f64)>,
+    pub tag: usize,
+}
+
+/// A column plus the subproblem solve's counters, folded into the
+/// aggregate stats so pricing cost is visible in `MilpStats`.
+#[derive(Debug, Clone)]
+pub struct PricedColumn {
+    pub col: DwColumn,
+    pub stats: MilpStats,
+}
+
+/// Dual prices handed to the pricing oracle: one per coupling row (in
+/// `DwRow` order) and one per block (the convexity row).  A block's new
+/// column improves the master iff
+/// `obj − Σ y_coupling·a − σ_block > tol`.
+#[derive(Debug, Clone)]
+pub struct DwDuals {
+    pub coupling: Vec<f64>,
+    pub convexity: Vec<f64>,
+}
+
+/// Engine knobs.
+#[derive(Debug, Clone)]
+pub struct DwOptions {
+    /// Reduced-cost acceptance threshold (columns below it are noise).
+    pub tol: f64,
+    /// Hard cap on pricing rounds (termination is normally on
+    /// no-positive-reduced-cost; the cap bounds pathological tailing).
+    pub max_rounds: usize,
+    /// Worker threads for the pricing fan-out (0 = available parallelism).
+    pub threads: usize,
+    /// Wall budget for the integrality-repair MILP.
+    pub repair_budget: Duration,
+    /// Penalty on the artificial feasibility columns.  Must dominate any
+    /// attainable objective; artificial usage above `tol` in the repair
+    /// solution aborts the decomposed path.
+    pub big_m: f64,
+}
+
+impl Default for DwOptions {
+    fn default() -> Self {
+        DwOptions {
+            tol: 1e-7,
+            max_rounds: 25,
+            threads: 0,
+            repair_budget: Duration::from_secs(5),
+            big_m: 1e7,
+        }
+    }
+}
+
+/// Result of a successful decomposed solve.
+#[derive(Debug, Clone)]
+pub struct DwSolve {
+    pub status: Status,
+    /// Integer (repaired) master objective.
+    pub obj: f64,
+    /// LP master objective at termination (the Dantzig–Wolfe bound).
+    pub lp_obj: f64,
+    /// Chosen column tag per block.
+    pub chosen: Vec<usize>,
+    /// Columns accepted per pricing round (seed round excluded).
+    pub round_columns: Vec<usize>,
+    /// Aggregate counters: master + all subproblem solves, with
+    /// `pricing_rounds` / `columns` / `pricing_ms` filled in.
+    pub stats: MilpStats,
+}
+
+/// Variable layout of one master assembly.
+struct MasterLayout {
+    statics: Vec<Var>,
+    lambdas: Vec<Vec<Var>>,
+    arts: Vec<Var>,
+}
+
+/// Assemble the restricted master over the current column pool.  Row
+/// order is coupling rows then one convexity row per block — the dual
+/// vector is sliced on that contract.
+fn build_master(
+    coupling: &[DwRow],
+    statics: &[DwStatic],
+    columns: &[Vec<DwColumn>],
+    integer_lambda: bool,
+    big_m: f64,
+) -> (Problem, MasterLayout) {
+    let mut prob = Problem::new();
+    let s_v: Vec<Var> = statics
+        .iter()
+        .map(|s| prob.cont(&s.name, s.lo, s.up, s.obj))
+        .collect();
+    let mut l_v: Vec<Vec<Var>> = Vec::with_capacity(columns.len());
+    for (b, cols) in columns.iter().enumerate() {
+        let mut row = Vec::with_capacity(cols.len());
+        for (c, col) in cols.iter().enumerate() {
+            let name = format!("lam_{b}_{c}");
+            row.push(if integer_lambda {
+                prob.int(&name, 0.0, 1.0, col.obj)
+            } else {
+                prob.cont(&name, 0.0, 1.0, col.obj)
+            });
+        }
+        l_v.push(row);
+    }
+    // Artificial feasibility columns: one per inequality coupling row
+    // (sign chosen to relax it), a ± pair per equality row.
+    let mut arts: Vec<Var> = Vec::new();
+    let mut art_terms: Vec<Vec<(Var, f64)>> = vec![Vec::new(); coupling.len()];
+    for (r, row) in coupling.iter().enumerate() {
+        match row.cmp {
+            Cmp::Le => {
+                let a = prob.cont(&format!("art_{r}"), 0.0, f64::INFINITY, -big_m);
+                art_terms[r].push((a, -1.0));
+                arts.push(a);
+            }
+            Cmp::Ge => {
+                let a = prob.cont(&format!("art_{r}"), 0.0, f64::INFINITY, -big_m);
+                art_terms[r].push((a, 1.0));
+                arts.push(a);
+            }
+            Cmp::Eq => {
+                let ap = prob.cont(&format!("artp_{r}"), 0.0, f64::INFINITY, -big_m);
+                let am = prob.cont(&format!("artm_{r}"), 0.0, f64::INFINITY, -big_m);
+                art_terms[r].push((ap, 1.0));
+                art_terms[r].push((am, -1.0));
+                arts.push(ap);
+                arts.push(am);
+            }
+        }
+    }
+    for (r, row) in coupling.iter().enumerate() {
+        let mut terms: Vec<(Var, f64)> = Vec::new();
+        for (s, sv) in statics.iter().zip(&s_v) {
+            for &(sr, c) in &s.coeffs {
+                if sr == r {
+                    terms.push((*sv, c));
+                }
+            }
+        }
+        for (cols, lv) in columns.iter().zip(&l_v) {
+            for (col, &l) in cols.iter().zip(lv) {
+                for &(cr, c) in &col.coeffs {
+                    if cr == r {
+                        terms.push((l, c));
+                    }
+                }
+            }
+        }
+        terms.extend_from_slice(&art_terms[r]);
+        prob.constrain(&row.name, terms, row.cmp, row.rhs);
+    }
+    for (b, lv) in l_v.iter().enumerate() {
+        let terms: Vec<(Var, f64)> = lv.iter().map(|&l| (l, 1.0)).collect();
+        prob.constrain(&format!("convex_{b}"), terms, Cmp::Eq, 1.0);
+    }
+    (prob, MasterLayout { statics: s_v, lambdas: l_v, arts })
+}
+
+/// Deterministic parallel map over per-block mutable state: contiguous
+/// chunks across `threads` scoped workers, results collected in block
+/// order (bit-identical at any thread count — each block's computation
+/// is independent and deterministic).
+fn par_map_blocks<S, R, F>(states: &mut [S], threads: usize, f: F) -> Vec<R>
+where
+    S: Send,
+    R: Send,
+    F: Fn(usize, &mut S) -> R + Sync,
+{
+    let n = states.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+    .clamp(1, n);
+    if threads == 1 {
+        return states.iter_mut().enumerate().map(|(i, s)| f(i, s)).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let f = &f;
+        for (ci, (sc, oc)) in states.chunks_mut(chunk).zip(out.chunks_mut(chunk)).enumerate() {
+            scope.spawn(move || {
+                for (j, (s, o)) in sc.iter_mut().zip(oc.iter_mut()).enumerate() {
+                    *o = Some(f(ci * chunk + j, s));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("block result filled")).collect()
+}
+
+/// Reduced cost of a candidate column under the current duals.
+fn reduced_cost(col: &DwColumn, duals: &DwDuals, block: usize) -> f64 {
+    let mut rc = col.obj - duals.convexity[block];
+    for &(r, c) in &col.coeffs {
+        rc -= duals.coupling[r] * c;
+    }
+    rc
+}
+
+/// Structural duplicate test against a block's existing pool: an
+/// identical column cannot improve the master and re-adding it every
+/// round would stall termination.
+fn is_duplicate(col: &DwColumn, pool: &[DwColumn]) -> bool {
+    pool.iter().any(|p| {
+        (p.obj - col.obj).abs() <= 1e-9 * (1.0 + col.obj.abs())
+            && p.coeffs.len() == col.coeffs.len()
+            && p
+                .coeffs
+                .iter()
+                .zip(&col.coeffs)
+                .all(|(&(ra, ca), &(rb, cb))| ra == rb && (ca - cb).abs() <= 1e-9 * (1.0 + cb.abs()))
+    })
+}
+
+/// Run price-and-branch column generation.
+///
+/// * `seed(b, state)` returns the block's initial columns (at least one;
+///   `None` aborts to the monolithic fallback).
+/// * `price(b, state, duals)` returns the block's best candidate under
+///   the given duals, or `None` when the subproblem found nothing usable.
+///   The engine applies the reduced-cost and duplicate filters, so the
+///   oracle just returns its optimum.
+///
+/// `None` means the decomposed path could not produce a trustworthy
+/// integer solution; the caller must fall back to the monolithic solve.
+pub fn solve_dw<S, FSeed, FPrice>(
+    coupling: &[DwRow],
+    statics: &[DwStatic],
+    states: &mut [S],
+    seed: FSeed,
+    price: FPrice,
+    opts: &DwOptions,
+) -> Option<DwSolve>
+where
+    S: Send,
+    FSeed: Fn(usize, &mut S) -> Option<Vec<PricedColumn>> + Sync,
+    FPrice: Fn(usize, &mut S, &DwDuals) -> Option<PricedColumn> + Sync,
+{
+    let n_blocks = states.len();
+    if n_blocks == 0 {
+        return None;
+    }
+    let mut stats = MilpStats::default();
+    let mut columns: Vec<Vec<DwColumn>> = vec![Vec::new(); n_blocks];
+
+    // ---- seed: one standalone solve per block, in parallel ------------
+    let seed_t = Instant::now();
+    let seeded = par_map_blocks(states, opts.threads, |b, s| seed(b, s));
+    stats.pricing_ms += seed_t.elapsed().as_secs_f64() * 1e3;
+    for (b, got) in seeded.into_iter().enumerate() {
+        let cols = got?;
+        if cols.is_empty() {
+            return None;
+        }
+        for pc in cols {
+            stats.absorb(&pc.stats);
+            stats.columns += 1;
+            columns[b].push(pc.col);
+        }
+    }
+
+    // ---- pricing rounds ----------------------------------------------
+    let mut round_columns: Vec<usize> = Vec::new();
+    let mut last_lambda: Vec<Vec<f64>> = Vec::new();
+    let mut lp_obj = f64::NEG_INFINITY;
+    for _round in 0..opts.max_rounds {
+        let (prob, layout) = build_master(coupling, statics, &columns, false, opts.big_m);
+        let mut lp = LpSolver::new(&prob);
+        let out = lp.solve(&prob.lo, &prob.up, None)?;
+        if out.status != Status::Optimal {
+            return None;
+        }
+        stats.lp_solves += 1;
+        stats.pivots += out.pivots;
+        stats.phase1_pivots += out.phase1_pivots;
+        lp_obj = out.obj;
+        last_lambda = layout
+            .lambdas
+            .iter()
+            .map(|lv| lv.iter().map(|&l| out.x[l.0]).collect())
+            .collect();
+        let duals = DwDuals {
+            coupling: out.duals[..coupling.len()].to_vec(),
+            convexity: out.duals[coupling.len()..coupling.len() + n_blocks].to_vec(),
+        };
+
+        let price_t = Instant::now();
+        let candidates = par_map_blocks(states, opts.threads, |b, s| price(b, s, &duals));
+        stats.pricing_ms += price_t.elapsed().as_secs_f64() * 1e3;
+        stats.pricing_rounds += 1;
+
+        let mut added = 0usize;
+        for (b, cand) in candidates.into_iter().enumerate() {
+            let Some(pc) = cand else { continue };
+            stats.absorb(&pc.stats);
+            if reduced_cost(&pc.col, &duals, b) > opts.tol && !is_duplicate(&pc.col, &columns[b]) {
+                columns[b].push(pc.col);
+                stats.columns += 1;
+                added += 1;
+            }
+        }
+        round_columns.push(added);
+        if added == 0 {
+            break;
+        }
+    }
+
+    // ---- integrality repair: binary λ over the full column pool -------
+    let (prob, layout) = build_master(coupling, statics, &columns, true, opts.big_m);
+    // Warm incumbent: round the final LP's per-block argmax λ (ties to
+    // the lowest column index for determinism) and keep it only if the
+    // rounding is actually feasible.
+    let warm = repair_warm_point(&prob, &layout, statics, &columns, &last_lambda);
+    let (sol, rstats) = solve_milp_from(&prob, opts.repair_budget, warm);
+    stats.absorb(&rstats);
+    if sol.x.is_empty() {
+        return None;
+    }
+    if layout.arts.iter().any(|&a| sol.x[a.0] > 1e-6) {
+        // The chosen combination needed artificial slack: the column pool
+        // cannot cover the coupling rows integrally.
+        return None;
+    }
+    let mut chosen = Vec::with_capacity(n_blocks);
+    for (b, lv) in layout.lambdas.iter().enumerate() {
+        let c = lv
+            .iter()
+            .position(|&l| sol.x[l.0] > 0.5)?;
+        chosen.push(columns[b][c].tag);
+    }
+    Some(DwSolve {
+        status: sol.status,
+        obj: sol.obj,
+        lp_obj,
+        chosen,
+        round_columns,
+        stats,
+    })
+}
+
+/// Greedy rounding of the final LP master into a warm incumbent for the
+/// repair MILP: per block take the largest-λ column, set statics to the
+/// cheapest values consistent with the rounded columns, artificials to
+/// zero — and only return it when feasible.
+fn repair_warm_point(
+    prob: &Problem,
+    layout: &MasterLayout,
+    statics: &[DwStatic],
+    columns: &[Vec<DwColumn>],
+    last_lambda: &[Vec<f64>],
+) -> Option<Vec<f64>> {
+    if last_lambda.len() != columns.len() {
+        return None;
+    }
+    let mut x = vec![0.0; prob.n_vars()];
+    let mut picks: Vec<usize> = Vec::with_capacity(columns.len());
+    for (b, lam) in last_lambda.iter().enumerate() {
+        if lam.is_empty() || lam.len() != layout.lambdas[b].len() {
+            return None;
+        }
+        let mut best = 0usize;
+        for (c, &v) in lam.iter().enumerate() {
+            if v > lam[best] + 1e-12 {
+                best = c;
+            }
+        }
+        x[layout.lambdas[b][best].0] = 1.0;
+        picks.push(best);
+    }
+    // Usage of each coupling row by the rounded selection.
+    let mut usage = vec![0.0; statics.iter().flat_map(|s| &s.coeffs).map(|&(r, _)| r + 1).max().unwrap_or(0)];
+    for (b, &c) in picks.iter().enumerate() {
+        for &(r, v) in &columns[b][c].coeffs {
+            if r >= usage.len() {
+                usage.resize(r + 1, 0.0);
+            }
+            usage[r] += v;
+        }
+    }
+    // Statics: pick the bound that the objective prefers, then let the
+    // feasibility check below veto the point if a coupling row needs a
+    // different value.  For the scheduling master this resolves exactly:
+    // E_max (obj < 0) must cover the max egress row usage, T_min
+    // (obj > 0) is capped by the max-min rows.
+    for (s, &sv) in statics.iter().zip(&layout.statics) {
+        if s.obj < 0.0 {
+            // Minimized: smallest value covering its rows.  Coeff −1 on a
+            // ≤ row means the static must be ≥ the row's usage − rhs.
+            let mut need = s.lo.max(0.0);
+            for &(r, c) in &s.coeffs {
+                if c < 0.0 {
+                    let u = usage.get(r).copied().unwrap_or(0.0);
+                    need = need.max((u - row_rhs(prob, r)) / -c);
+                }
+            }
+            x[sv.0] = need;
+        } else {
+            // Maximized: largest value the Le rows allow.
+            let mut cap = f64::INFINITY;
+            for &(r, c) in &s.coeffs {
+                if c > 0.0 {
+                    let u = usage.get(r).copied().unwrap_or(0.0);
+                    cap = cap.min((row_rhs(prob, r) - u) / c);
+                }
+            }
+            x[sv.0] = if cap.is_finite() { cap.max(s.lo) } else { s.lo.max(0.0) };
+        }
+    }
+    prob.is_feasible(&x, 1e-6).then_some(x)
+}
+
+fn row_rhs(prob: &Problem, r: usize) -> f64 {
+    prob.rows[r].rhs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two blocks, one shared ≤-capacity row.  Block b's columns are
+    /// integer points v ∈ {0..4} with obj v and capacity usage v; the
+    /// shared capacity is 5, so the joint optimum is v0 + v1 = 5.
+    #[test]
+    fn two_block_capacity_split() {
+        let coupling = [DwRow { name: "cap".into(), cmp: Cmp::Le, rhs: 5.0 }];
+        let statics: [DwStatic; 0] = [];
+        // State: per-block list of generated values (for dedup/tags).
+        let mut states: Vec<Vec<f64>> = vec![Vec::new(), Vec::new()];
+        let seed = |_b: usize, s: &mut Vec<f64>| {
+            // Standalone optimum: take everything (v = 4).
+            s.push(4.0);
+            Some(vec![PricedColumn {
+                col: DwColumn { obj: 4.0, coeffs: vec![(0, 4.0)], tag: 0 },
+                stats: MilpStats::default(),
+            }])
+        };
+        let price = |_b: usize, s: &mut Vec<f64>, d: &DwDuals| {
+            // Subproblem: max (1 − y)·v over v ∈ {0..4}.
+            let y = d.coupling[0];
+            let v = if 1.0 - y > 0.0 { 4.0 } else { 0.0 };
+            let tag = s.len();
+            s.push(v);
+            Some(PricedColumn {
+                col: DwColumn { obj: v, coeffs: vec![(0, v)], tag },
+                stats: MilpStats::default(),
+            })
+        };
+        let out = solve_dw(
+            &coupling,
+            &statics,
+            &mut states,
+            seed,
+            price,
+            &DwOptions::default(),
+        )
+        .expect("decomposition solves");
+        assert_eq!(out.status, Status::Optimal);
+        let total: f64 = out
+            .chosen
+            .iter()
+            .zip(&states)
+            .map(|(&tag, s)| s[tag])
+            .sum();
+        assert!(total <= 5.0 + 1e-9, "capacity respected: {total}");
+        assert!((out.obj - total).abs() < 1e-9);
+        assert!(out.obj >= 4.0 - 1e-9, "at least one block takes its fill: {}", out.obj);
+        assert!(out.stats.columns >= 2);
+    }
+
+    /// A single block degenerates to picking its best seed column.
+    #[test]
+    fn single_block_picks_best_column() {
+        let coupling = [DwRow { name: "cap".into(), cmp: Cmp::Le, rhs: 10.0 }];
+        let statics: [DwStatic; 0] = [];
+        let mut states = vec![()];
+        let seed = |_b: usize, _s: &mut ()| {
+            Some(vec![
+                PricedColumn {
+                    col: DwColumn { obj: 1.0, coeffs: vec![(0, 1.0)], tag: 0 },
+                    stats: MilpStats::default(),
+                },
+                PricedColumn {
+                    col: DwColumn { obj: 3.0, coeffs: vec![(0, 3.0)], tag: 1 },
+                    stats: MilpStats::default(),
+                },
+            ])
+        };
+        let price = |_b: usize, _s: &mut (), _d: &DwDuals| None;
+        let out = solve_dw(
+            &coupling,
+            &statics,
+            &mut states,
+            seed,
+            price,
+            &DwOptions::default(),
+        )
+        .expect("solves");
+        assert_eq!(out.chosen, vec![1]);
+        assert!((out.obj - 3.0).abs() < 1e-9);
+    }
+
+    /// Jointly infeasible pools must abort (artificial usage), not
+    /// silently return a capacity-violating plan.
+    #[test]
+    fn infeasible_pool_falls_back() {
+        let coupling = [DwRow { name: "cap".into(), cmp: Cmp::Le, rhs: 1.0 }];
+        let statics: [DwStatic; 0] = [];
+        let mut states = vec![(), ()];
+        // Both blocks only ever offer a column using 2.0 of capacity 1.0.
+        let seed = |_b: usize, _s: &mut ()| {
+            Some(vec![PricedColumn {
+                col: DwColumn { obj: 1.0, coeffs: vec![(0, 2.0)], tag: 0 },
+                stats: MilpStats::default(),
+            }])
+        };
+        let price = |_b: usize, _s: &mut (), _d: &DwDuals| None;
+        let out = solve_dw(&coupling, &statics, &mut states, seed, price, &DwOptions::default());
+        assert!(out.is_none(), "must fall back on joint infeasibility");
+    }
+}

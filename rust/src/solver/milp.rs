@@ -107,6 +107,18 @@ pub struct MilpStats {
     /// Whether the *root* LP warm-started (the cross-round basis cache
     /// hit, as opposed to parent→child inheritance inside the tree).
     pub root_warm: bool,
+    /// Wall-clock per phase, in milliseconds: problem/column-store build,
+    /// the root LP relaxation, the rest of the B&B tree, and — on the
+    /// decomposed path only — the column-generation pricing rounds.
+    /// Phase timings turn the pivot-count proxies in RQ6 into real time.
+    pub build_ms: f64,
+    pub root_lp_ms: f64,
+    pub bnb_ms: f64,
+    pub pricing_ms: f64,
+    /// Dantzig–Wolfe pricing rounds run (0 on the monolithic path).
+    pub pricing_rounds: usize,
+    /// Columns generated across all pricing rounds (0 on monolithic).
+    pub columns: usize,
 }
 
 impl MilpStats {
@@ -118,6 +130,27 @@ impl MilpStats {
         } else {
             self.warm_solves as f64 / total as f64
         }
+    }
+
+    /// Fold a subproblem/child solve's counters into an aggregate (used by
+    /// the decomposed path to report totals across master + pricing
+    /// solves).  Wall and phase timings are summed; `root_warm` is OR-ed.
+    pub fn absorb(&mut self, other: &MilpStats) {
+        self.nodes += other.nodes;
+        self.lp_solves += other.lp_solves;
+        self.wall += other.wall;
+        self.pivots += other.pivots;
+        self.phase1_pivots += other.phase1_pivots;
+        self.warm_solves += other.warm_solves;
+        self.cold_solves += other.cold_solves;
+        self.dense_fallbacks += other.dense_fallbacks;
+        self.root_warm |= other.root_warm;
+        self.build_ms += other.build_ms;
+        self.root_lp_ms += other.root_lp_ms;
+        self.bnb_ms += other.bnb_ms;
+        self.pricing_ms += other.pricing_ms;
+        self.pricing_rounds += other.pricing_rounds;
+        self.columns += other.columns;
     }
 }
 
@@ -158,10 +191,12 @@ pub fn solve_milp_opts(
     let mut stats = MilpStats::default();
     let n = p.n_vars();
 
+    let build_t = Instant::now();
     let mut solver = match opts.backend {
         LpBackend::Revised => Some(LpSolver::new(p)),
         LpBackend::Dense => None,
     };
+    stats.build_ms = build_t.elapsed().as_secs_f64() * 1e3;
     let mut root_snapshot: Option<BasisSnapshot> = None;
 
     let mut incumbent: Option<Solution> = warm.and_then(|x| {
@@ -220,11 +255,13 @@ pub fn solve_milp_opts(
         stats.nodes += 1;
         let warm_basis = if opts.warm_basis { node.basis.as_deref() } else { None };
         let warm_before = stats.warm_solves;
+        let node_t = Instant::now();
         let (rel, rel_basis) =
             solve_node(p, &mut solver, &lo_buf, &up_buf, warm_basis, &mut stats);
         if node.depth == 0 {
             root_snapshot = rel_basis.clone();
             stats.root_warm = stats.warm_solves > warm_before;
+            stats.root_lp_ms = node_t.elapsed().as_secs_f64() * 1e3;
         }
         match rel.status {
             Status::Infeasible => continue,
@@ -312,6 +349,8 @@ pub fn solve_milp_opts(
     }
 
     stats.wall = start.elapsed();
+    stats.bnb_ms =
+        (stats.wall.as_secs_f64() * 1e3 - stats.build_ms - stats.root_lp_ms).max(0.0);
     match incumbent {
         Some(mut sol) => {
             let bound = heap.peek().map(|n| n.bound).unwrap_or(sol.obj).max(sol.obj);

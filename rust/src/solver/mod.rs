@@ -6,11 +6,15 @@
 //! small instances (≲2k vars) is what matters, and warm restarts keep
 //! online re-optimization cheap at multi-tenant scale.
 
+pub mod decompose;
 pub mod milp;
 pub mod model;
 pub mod revised;
 pub mod simplex;
 
+pub use decompose::{
+    solve_dw, DwColumn, DwDuals, DwOptions, DwRow, DwSolve, DwStatic, PricedColumn,
+};
 pub use milp::{solve_milp, solve_milp_from, solve_milp_opts, LpBackend, MilpOptions, MilpStats};
 pub use model::{Cmp, Problem, Solution, Status, Var};
 pub use revised::{solve_lp, BasisSnapshot, LpOutcome, LpSolver};

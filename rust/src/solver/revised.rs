@@ -182,6 +182,11 @@ pub struct LpOutcome {
     pub phase1_pivots: usize,
     /// True when the solve started from a caller-provided basis.
     pub warm: bool,
+    /// Row duals y = c_B B⁻¹ at the final basis (optimal solves only;
+    /// empty otherwise).  One entry per problem row, in row order — the
+    /// price the objective pays per unit of that row's RHS, which is what
+    /// Dantzig–Wolfe pricing charges subproblems for coupling-row usage.
+    pub duals: Vec<f64>,
 }
 
 /// Reusable solve context: the sparse column store is built once per
@@ -380,6 +385,7 @@ impl LpSolver {
                     pivots,
                     phase1_pivots: phase1,
                     warm,
+                    duals: Vec::new(),
                 });
             }
             // Reduced costs after a zero-cost restore are for the zero
@@ -398,6 +404,7 @@ impl LpSolver {
                 pivots,
                 phase1_pivots: phase1,
                 warm,
+                duals: Vec::new(),
             });
         }
 
@@ -426,6 +433,11 @@ impl LpSolver {
             .map(|(c, v)| c * v)
             .sum();
         let basis = (status == Status::Optimal).then(|| self.snapshot());
+        let duals = if status == Status::Optimal {
+            self.compute_duals()
+        } else {
+            Vec::new()
+        };
         Some(LpOutcome {
             status,
             obj,
@@ -434,7 +446,25 @@ impl LpSolver {
             pivots,
             phase1_pivots: phase1,
             warm,
+            duals,
         })
+    }
+
+    /// y = c_B B⁻¹ at the current basis — the same vector `price`
+    /// forms internally, exposed for column-generation callers.
+    fn compute_duals(&self) -> Vec<f64> {
+        let m = self.m;
+        let mut y = vec![0.0; m];
+        for r in 0..m {
+            let cb = self.obj[self.basis[r]];
+            if cb != 0.0 {
+                let row = &self.binv[r * m..(r + 1) * m];
+                for (yi, &bv) in y.iter_mut().zip(row) {
+                    *yi += cb * bv;
+                }
+            }
+        }
+        y
     }
 
     fn snapshot(&self) -> BasisSnapshot {

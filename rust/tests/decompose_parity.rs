@@ -1,0 +1,265 @@
+//! Decomposed-solver parity suite: the Dantzig–Wolfe price-and-branch
+//! path is a *speed* change for many-tenant rounds, never a semantic
+//! one —
+//!
+//! * random multi-tenant instances: decomposed and monolithic reach
+//!   objectives within tolerance, both give every tenant a feasible
+//!   schedule, and the merged decomposed plan respects every shared
+//!   node-capacity row (the coupling the master is responsible for);
+//! * the single-tenant degenerate case is **bit-identical** to the
+//!   classic MILP (the decomposed entry point routes straight to the
+//!   monolithic solve below the tenant threshold);
+//! * the pricing fan-out is deterministic: any thread count produces
+//!   the identical plan.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use trident::config::ClusterSpec;
+use trident::rngx::Rng;
+use trident::scheduling::{
+    solve_decomposed, solve_with_options, BasisCache, DecompOptions, MilpInput, MilpTenant,
+    OpSched,
+};
+use trident::solver::MilpOptions;
+
+/// Random instances tolerate 1% (column generation stops at the pruning
+/// gap per subproblem and the master omits the 1e-6-scale migration
+/// tiebreaker); the pinned scenarios below use the ISSUE's 0.5%.
+const RANDOM_TOL: f64 = 1e-2;
+const PINNED_TOL: f64 = 5e-3;
+
+fn op(name: &str, ut: f64, cpu: f64, mem: f64, nodes: usize) -> OpSched {
+    OpSched {
+        name: name.into(),
+        ut_cur: ut,
+        ut_cand: None,
+        n_new: 0,
+        n_old: 0,
+        cpu,
+        mem_gb: mem,
+        accels: 0,
+        out_mb: 0.5,
+        d_i: 1.0,
+        h_start: 0.5,
+        h_stop: 0.5,
+        h_cold: 2.0,
+        cur_x: vec![0; nodes],
+    }
+}
+
+/// `nt` chain tenants with randomized rates/footprints/weights on a
+/// shared cluster sized so capacity binds but stays feasible.
+fn random_multi_tenant(rng: &mut Rng, nt: usize, placement_aware: bool) -> MilpInput {
+    let nodes = 2 + rng.below(2);
+    let cluster = ClusterSpec::homogeneous(nodes, 24.0, 96.0, 0, 0.0, 12_500.0);
+    let mut ops = Vec::new();
+    let mut edges = Vec::new();
+    let mut op_tenant = Vec::new();
+    let mut tenants = Vec::new();
+    for t in 0..nt {
+        let base = ops.len();
+        let n_ops = 2 + rng.below(2);
+        for i in 0..n_ops {
+            ops.push(op(
+                &format!("t{t}op{i}"),
+                rng.uniform(8.0, 40.0),
+                rng.uniform(0.5, 2.0),
+                rng.uniform(0.5, 2.0),
+                nodes,
+            ));
+            op_tenant.push(t);
+            if i > 0 {
+                edges.push((base + i - 1, base + i));
+            }
+        }
+        tenants.push(MilpTenant {
+            name: format!("tenant-{t}"),
+            weight: rng.uniform(0.5, 2.0),
+            d_o: 1.0,
+        });
+    }
+    MilpInput {
+        ops,
+        edges,
+        nodes: cluster.nodes,
+        d_o: 1.0,
+        tenants,
+        op_tenant,
+        t_sched: 30.0,
+        lambda1: 1e-4,
+        lambda2: 1e-6,
+        b_max: 2,
+        placement_aware,
+        join_colocate: false,
+        all_at_once: false,
+    }
+}
+
+fn solve_both(input: &MilpInput, dopts: &DecompOptions) -> (f64, f64, Vec<f64>, Vec<f64>) {
+    let budget = Duration::from_secs(20);
+    let mono = solve_with_options(input, budget, &mut BasisCache::new(), &MilpOptions::default());
+    let mut tenant_caches = HashMap::new();
+    let dec = solve_decomposed(
+        input,
+        budget,
+        &mut BasisCache::new(),
+        &mut tenant_caches,
+        &MilpOptions::default(),
+        dopts,
+    );
+    // Shared capacity rows: the merged decomposed plan must respect the
+    // coupling the master is responsible for.
+    for (k, node) in input.nodes.iter().enumerate() {
+        let (mut cpu, mut mem) = (0.0, 0.0);
+        for (i, o) in input.ops.iter().enumerate() {
+            let inst = dec.x[i][k] as f64;
+            cpu += inst * o.cpu;
+            mem += inst * o.mem_gb;
+        }
+        assert!(cpu <= node.cpu_cores + 1e-6, "node {k}: cpu {cpu} > {}", node.cpu_cores);
+        assert!(mem <= node.mem_gb + 1e-6, "node {k}: mem {mem} > {}", node.mem_gb);
+    }
+    (mono.obj, dec.obj, mono.t_tenant.clone(), dec.t_tenant.clone())
+}
+
+/// Property test: random multi-tenant instances reach objectives within
+/// tolerance with identical per-tenant feasibility (a tenant schedulable
+/// under one path is schedulable under the other).
+#[test]
+fn decomposed_vs_monolithic_parity_random() {
+    let mut rng = Rng::new(20260808);
+    for case in 0..10 {
+        let nt = 2 + rng.below(3);
+        let input = random_multi_tenant(&mut rng, nt, case % 2 == 0);
+        let (mono_obj, dec_obj, mono_t, dec_t) = solve_both(&input, &DecompOptions::default());
+        assert!(
+            dec_obj >= mono_obj - RANDOM_TOL * (1.0 + mono_obj.abs()),
+            "case {case}: decomposed obj {dec_obj} vs monolithic {mono_obj}"
+        );
+        assert_eq!(mono_t.len(), dec_t.len(), "case {case}: tenant count");
+        for (t, (m, d)) in mono_t.iter().zip(&dec_t).enumerate() {
+            assert_eq!(
+                *m > 1e-9,
+                *d > 1e-9,
+                "case {case}: tenant {t} feasibility disagrees (mono {m}, dec {d})"
+            );
+        }
+    }
+}
+
+/// The pinned two-tenant scenario (the milp-bench shape at test scale):
+/// decomposed objective within 0.5% of monolithic.
+#[test]
+fn decomposed_two_tenant_objective_pinned() {
+    let mut rng = Rng::new(42);
+    let input = random_multi_tenant(&mut rng, 2, true);
+    let (mono_obj, dec_obj, _, _) = solve_both(&input, &DecompOptions::default());
+    assert!(
+        dec_obj >= mono_obj - PINNED_TOL * (1.0 + mono_obj.abs()),
+        "decomposed obj {dec_obj} vs monolithic {mono_obj}"
+    );
+}
+
+/// Single tenant under `--solver decomposed` degenerates to the classic
+/// MILP **bit-identically** — every plan field, not just the objective.
+#[test]
+fn single_tenant_degenerates_bit_identically() {
+    let nodes = 3;
+    let cluster = ClusterSpec::homogeneous(nodes, 24.0, 96.0, 0, 0.0, 12_500.0);
+    let input = MilpInput {
+        ops: vec![
+            op("parse", 10.0, 2.0, 2.0, nodes),
+            op("embed", 4.0, 3.0, 4.0, nodes),
+            op("sink", 25.0, 1.0, 1.0, nodes),
+        ],
+        edges: vec![(0, 1), (1, 2)],
+        nodes: cluster.nodes,
+        d_o: 1.0,
+        tenants: Vec::new(),
+        op_tenant: Vec::new(),
+        t_sched: 30.0,
+        lambda1: 1e-4,
+        lambda2: 1e-6,
+        b_max: 2,
+        placement_aware: true,
+        join_colocate: false,
+        all_at_once: false,
+    };
+    let budget = Duration::from_secs(20);
+    let mono = solve_with_options(&input, budget, &mut BasisCache::new(), &MilpOptions::default());
+    let mut tenant_caches = HashMap::new();
+    let dec = solve_decomposed(
+        &input,
+        budget,
+        &mut BasisCache::new(),
+        &mut tenant_caches,
+        &MilpOptions::default(),
+        &DecompOptions::default(),
+    );
+    assert_eq!(dec.p, mono.p);
+    assert_eq!(dec.x, mono.x);
+    assert_eq!(dec.b, mono.b);
+    assert_eq!(dec.route, mono.route);
+    assert_eq!(dec.edge_cons, mono.edge_cons);
+    assert_eq!(dec.t_tenant, mono.t_tenant);
+    assert_eq!(dec.t_pred, mono.t_pred);
+    assert_eq!(dec.obj, mono.obj);
+    assert_eq!(dec.status, mono.status);
+    assert!(tenant_caches.is_empty(), "degenerate path must not touch tenant caches");
+}
+
+/// The tenant-count threshold routes below-threshold inputs through the
+/// identical monolithic solve (same fallback as the single-tenant pin).
+#[test]
+fn below_threshold_falls_back_bit_identically() {
+    let mut rng = Rng::new(7);
+    let input = random_multi_tenant(&mut rng, 2, false);
+    let budget = Duration::from_secs(20);
+    let mono = solve_with_options(&input, budget, &mut BasisCache::new(), &MilpOptions::default());
+    let mut tenant_caches = HashMap::new();
+    let dec = solve_decomposed(
+        &input,
+        budget,
+        &mut BasisCache::new(),
+        &mut tenant_caches,
+        &MilpOptions::default(),
+        &DecompOptions { min_tenants: 3, ..DecompOptions::default() },
+    );
+    assert_eq!(dec.p, mono.p);
+    assert_eq!(dec.x, mono.x);
+    assert_eq!(dec.b, mono.b);
+    assert_eq!(dec.t_tenant, mono.t_tenant);
+    assert_eq!(dec.obj, mono.obj);
+    assert_eq!(dec.status, mono.status);
+}
+
+/// Determinism contract: the pricing fan-out collects per-tenant results
+/// in tenant order, so any thread count yields the identical plan.
+#[test]
+fn decomposed_is_deterministic_across_thread_counts() {
+    let mut rng = Rng::new(99);
+    let input = random_multi_tenant(&mut rng, 4, true);
+    let budget = Duration::from_secs(20);
+    let mut plans = Vec::new();
+    for threads in [1usize, 4] {
+        let mut tenant_caches = HashMap::new();
+        let dec = solve_decomposed(
+            &input,
+            budget,
+            &mut BasisCache::new(),
+            &mut tenant_caches,
+            &MilpOptions::default(),
+            &DecompOptions { threads, ..DecompOptions::default() },
+        );
+        plans.push(dec);
+    }
+    let (a, b) = (&plans[0], &plans[1]);
+    assert_eq!(a.p, b.p, "plans diverge across thread counts");
+    assert_eq!(a.x, b.x);
+    assert_eq!(a.b, b.b);
+    assert_eq!(a.route, b.route);
+    assert_eq!(a.t_tenant, b.t_tenant);
+    assert_eq!(a.obj, b.obj);
+    assert_eq!(a.status, b.status);
+}
