@@ -810,6 +810,11 @@ pub struct TridentConfig {
     /// worker thread, and results are bit-identical to serial at any K
     /// (clamped to the tenant count; 1 = serial on the caller's thread).
     pub sim_shards: usize,
+    /// Worker-thread count for the shard pool that advances the K shards
+    /// (work-stealing, persistent across windows).  0 = auto
+    /// (`cores − 1`); always clamped to [1, K].  Bit-identity holds at
+    /// any (K, W) — workers decide only *who* advances a shard.
+    pub sim_workers: usize,
     /// Which solve path backs each scheduling round.  `Monolithic`
     /// (default) is the classic union MILP and keeps historical runs
     /// bit-identical; `Decomposed` prices per-tenant subproblems against
@@ -845,6 +850,7 @@ impl Default for TridentConfig {
             native_gp: std::env::var("TRIDENT_NATIVE_GP").map(|v| v == "1").unwrap_or(false),
             sim_seed_event_stream: false,
             sim_shards: 1,
+            sim_workers: 0,
             solver: SolverBackend::Monolithic,
         }
     }
@@ -937,6 +943,7 @@ impl TridentConfig {
                 .and_then(Json::as_bool)
                 .unwrap_or(d.sim_seed_event_stream),
             sim_shards: j.f64_or("sim_shards", d.sim_shards as f64) as usize,
+            sim_workers: j.f64_or("sim_workers", d.sim_workers as f64) as usize,
             solver: j
                 .get("solver")
                 .and_then(Json::as_str)

@@ -267,6 +267,7 @@ impl Coordinator {
         let policy = variant.policy.build();
         let mut sim =
             ShardedSim::new_tenancy(pipeline, view, cluster, traces, seed, cfg.sim_shards);
+        sim.set_workers(cfg.sim_workers);
         sim.set_seed_event_stream(cfg.sim_seed_event_stream);
         Ok(Coordinator {
             sim,

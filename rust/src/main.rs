@@ -9,6 +9,7 @@
 //! trident run   --pipelines pdf,speech --dynamics churn.json    # scripted cluster dynamics
 //! trident run   --pipeline pdf --mtbf 600 --mttr 60             # stochastic node churn
 //! trident run   --pipelines pdf,speech --shards 4               # sharded parallel sim tick
+//! trident run   --pipelines pdf,speech --shards 4 --workers 2   # shard-pool worker threads
 //! trident compare --pipeline pdf [--duration 1800] [--jobs J]   # all policies, parallel
 //! trident compare --pipelines pdf,speech                        # multi-tenant comparison
 //! trident sweep --pipeline pdf --seeds 4 --jobs 4 [--policies static,trident]
@@ -17,9 +18,10 @@
 //! trident milp-bench [--nodes 8|16]               # RQ6 solve times + cold-vs-warm pivots
 //!               [--max-pivots N] [--assert-speedup S]   # solver perf gates (CI)
 //!               [--decomp-tenants 64] [--assert-decomp-speedup S] # decomposition rung gate
-//! trident bench-perf [--windows 4] [--rungs two-tenant-96,...] [--out BENCH_7.json]
+//! trident bench-perf [--windows 4] [--rungs two-tenant-96,...] [--out BENCH_9.json]
 //!               [--milp-budget-ms 10000] [--assert-speedup 2]  # RQ8 perf trajectory
 //!               [--assert-shard-speedup 1.5]   # K=4 vs K=1 scaling gate (stress-512)
+//!               [--assert-worker-speedup 1.3]  # W=4 vs W=1 gate (oversubscribed stress-10k)
 //! ```
 //!
 //! A tenancy JSON file:
@@ -138,6 +140,18 @@ fn build_cfg(args: &Args) -> TridentConfig {
         });
         if cfg.sim_shards == 0 {
             eprintln!("--shards must be at least 1");
+            std::process::exit(2);
+        }
+    }
+    if let Some(v) = args.map.get("workers") {
+        cfg.sim_workers = v.parse().unwrap_or_else(|_| {
+            eprintln!("invalid --workers '{v}' (expected a positive integer)");
+            std::process::exit(2);
+        });
+        if cfg.sim_workers == 0 {
+            // 0 (auto) is the config-file spelling; on the CLI the flag's
+            // absence already means auto, so an explicit 0 is a typo.
+            eprintln!("--workers must be at least 1 (omit the flag for auto)");
             std::process::exit(2);
         }
     }
@@ -906,13 +920,15 @@ fn bench_sim(rung: &Rung, seed_stream: bool) -> trident::sim::PipelineSim {
     sim
 }
 
-/// The same scenario partitioned over `shards` tenant shards (batched
-/// transfer mode — the sharded path has no seed-stream arm).
-fn bench_sim_sharded(rung: &Rung, shards: usize) -> trident::sim::ShardedSim {
+/// The same scenario partitioned over `shards` tenant shards advanced by
+/// `workers` pool threads (0 = auto; batched transfer mode — the sharded
+/// path has no seed-stream arm).
+fn bench_sim_sharded(rung: &Rung, shards: usize, workers: usize) -> trident::sim::ShardedSim {
     let (spec, view, traces) = bench_scenario(rung);
     let plan = bench_placement(&spec, rung.nodes);
     let mut sim =
         trident::sim::ShardedSim::new_tenancy(spec, view, bench_cluster(rung), traces, 11, shards);
+    sim.set_workers(workers);
     for (op, node, theta) in plan {
         let placed = (0..rung.nodes)
             .any(|probe| sim.add_instance(op, (node + probe) % rung.nodes, theta.clone()).is_ok());
@@ -940,21 +956,31 @@ fn bench_run(rung: &Rung, seed_stream: bool, windows: usize) -> ModeStats {
 }
 
 /// Drive one sharded simulator through `windows` windows, timing each.
-fn bench_run_sharded(rung: &Rung, shards: usize, windows: usize) -> ModeStats {
-    let mut sim = bench_sim_sharded(rung, shards);
+/// Returns the stats plus the clamps the sim actually ran with
+/// (`k_effective`, `workers_effective`) so clamped rungs are visible in
+/// the artifact instead of hidden.
+fn bench_run_sharded(
+    rung: &Rung,
+    shards: usize,
+    workers: usize,
+    windows: usize,
+) -> (ModeStats, usize, usize) {
+    let mut sim = bench_sim_sharded(rung, shards, workers);
+    let (k_eff, w_eff) = (sim.shard_count(), sim.workers_effective());
     let mut wall_ms = Vec::with_capacity(windows);
     for w in 0..windows {
         let t_end = (w + 1) as f64 * rung.window_s;
         let (_, ms) = harness::stopwatch_ms(|| sim.run_until(t_end));
         wall_ms.push(ms);
     }
-    ModeStats {
+    let stats = ModeStats {
         wall_ms,
         events: sim.events_processed(),
         records: (0..sim.spec.n_ops()).map(|op| sim.processed_total(op)).sum(),
         peak_heap: sim.peak_heap_entries(),
         peak_in_flight: sim.peak_in_flight_transfers(),
-    }
+    };
+    (stats, k_eff, w_eff)
 }
 
 /// The rung's MILP solve (solver cost is part of the trajectory: the
@@ -1006,24 +1032,31 @@ fn bench_milp(rung: &Rung, budget: Duration) -> Json {
     ])
 }
 
-/// `trident bench-perf`: the pinned scale ladder behind `BENCH_7.json`.
+/// `trident bench-perf`: the pinned scale ladder behind `BENCH_9.json`
+/// (schema `trident-bench-perf/v2`, superseding `BENCH_7.json`'s v1).
 /// Each rung runs twice from byte-identical inputs — once through the
 /// legacy seed event stream (one heap event per record transfer), once
 /// through the batched link FIFOs — so the speedup is a same-binary
 /// wall-clock ratio, not a cross-commit guess, and the event/record
 /// totals double as a cross-mode parity check (they must match exactly;
 /// any drift fails the bench).  On top of that every rung runs the
-/// sharded tick at K ∈ {1, 2, 4}; each K must reproduce the serial
-/// batched event/record totals exactly (tenant-sharding is a partition
-/// of the serial run, so any drift is a determinism bug and fails the
-/// bench).  `--assert-speedup S` gates the 96-node two-tenant rung and
-/// `--assert-shard-speedup S` gates stress-512's K=4-vs-K=1 events/sec
-/// ratio (the two-tenant rungs clamp K to 2 tenants and cannot scale
-/// past 2x by construction).
+/// sharded tick at K ∈ {1, 2, 4} with W = K workers (thread-per-shard —
+/// the historical PR 7 curve), then a worker-scaling sweep at the rung's
+/// full K (= tenant count) with W ∈ {1, 2, 4} plus W = auto (cores − 1)
+/// on the stress rungs — the oversubscribed K = 100 regime the pool
+/// exists for.  Every (K, W) cell must reproduce the serial batched
+/// event/record totals exactly (tenant-sharding is a partition of the
+/// serial run and workers only decide who advances a shard, so any
+/// drift is a determinism bug and fails the bench).  `--assert-speedup
+/// S` gates the 96-node two-tenant rung, `--assert-shard-speedup S`
+/// gates stress-512's K=4-vs-K=1 events/sec ratio (the two-tenant rungs
+/// clamp K to 2 tenants and cannot scale past 2x by construction), and
+/// `--assert-worker-speedup S` gates stress-10k's W=4-vs-W=1 ratio at
+/// K = 100.
 fn bench_perf(args: &Args) {
     let windows = (args.f64("windows", 4.0) as usize).max(1);
     let budget = Duration::from_millis(args.f64("milp-budget-ms", 10_000.0) as u64);
-    let out_path = args.get("out", "BENCH_7.json");
+    let out_path = args.get("out", "BENCH_9.json");
     let selected: Vec<&Rung> = match args.map.get("rungs") {
         None => BENCH_RUNGS.iter().collect(),
         Some(list) => list
@@ -1044,11 +1077,15 @@ fn bench_perf(args: &Args) {
 
     let mut table = Table::new(
         "bench-perf scale ladder (seed stream vs batched links vs sharded tick)",
-        &["Rung", "nodes", "seed ev/s", "batched ev/s", "speedup", "K=4 ev/s", "K4/K1", "MILP ms"],
+        &[
+            "Rung", "nodes", "seed ev/s", "batched ev/s", "speedup", "K=4 ev/s", "K4/K1",
+            "W=4 ev/s", "W4/W1", "MILP ms",
+        ],
     );
     let mut rung_jsons = Vec::new();
     let mut gate_speedup: Option<f64> = None;
     let mut gate_shard_speedup: Option<f64> = None;
+    let mut gate_worker_speedup: Option<f64> = None;
     let mut failed = false;
     for &rung in &selected {
         eprintln!("rung {} ({} nodes): seed event stream...", rung.name, rung.nodes);
@@ -1066,15 +1103,16 @@ fn bench_perf(args: &Args) {
         if rung.name == "two-tenant-96" {
             gate_speedup = Some(speedup);
         }
-        // Sharded scaling curve: every K must land on the serial batched
-        // totals exactly (the sharded tick is a partition, not an
-        // approximation, of the serial run).
+        // Sharded scaling curve at W = K (thread-per-shard, the PR 7
+        // semantics the historical curves were measured under): every K
+        // must land on the serial batched totals exactly (the sharded
+        // tick is a partition, not an approximation, of the serial run).
         let n_tenants = if rung.stress_tenants > 0 { rung.stress_tenants } else { 2 };
         let mut shard_jsons = Vec::new();
         let mut eps_k: Vec<(usize, f64)> = Vec::new();
         for k in [1usize, 2, 4] {
-            eprintln!("rung {}: sharded tick K={k}...", rung.name);
-            let sh = bench_run_sharded(rung, k, windows);
+            eprintln!("rung {}: sharded tick K={k} (W={k})...", rung.name);
+            let (sh, k_eff, w_eff) = bench_run_sharded(rung, k, k, windows);
             if sh.events != batched.events || sh.records != batched.records {
                 eprintln!(
                     "FAIL: rung {} sharded K={k} drifted from serial (events {} vs {}, records {} vs {})",
@@ -1085,7 +1123,9 @@ fn bench_perf(args: &Args) {
             eps_k.push((k, sh.events_per_sec()));
             shard_jsons.push(Json::obj(vec![
                 ("shards", Json::num(k as f64)),
-                ("k_effective", Json::num(k.min(n_tenants) as f64)),
+                ("k_effective", Json::num(k_eff as f64)),
+                ("workers", Json::num(k as f64)),
+                ("workers_effective", Json::num(w_eff as f64)),
                 ("stats", sh.json()),
             ]));
         }
@@ -1094,6 +1134,40 @@ fn bench_perf(args: &Args) {
         let shard_speedup = eps4 / eps1;
         if rung.name == "stress-512" {
             gate_shard_speedup = Some(shard_speedup);
+        }
+        // Worker-scaling sweep at the rung's full shard count (one shard
+        // per tenant): W varies while the partition — and therefore every
+        // float — stays fixed, so this isolates the pool's contribution.
+        // Stress rungs add W = auto (cores − 1): the oversubscribed
+        // K ≫ W regime the work-stealing pool exists for.
+        let worker_ws: &[usize] =
+            if rung.stress_tenants > 0 { &[1, 2, 4, 0] } else { &[1, 2, 4] };
+        let mut worker_jsons = Vec::new();
+        let mut eps_w: Vec<(usize, f64)> = Vec::new();
+        for &w in worker_ws {
+            eprintln!("rung {}: worker scaling K={n_tenants} W={w} (0=auto)...", rung.name);
+            let (sh, k_eff, w_eff) = bench_run_sharded(rung, n_tenants, w, windows);
+            if sh.events != batched.events || sh.records != batched.records {
+                eprintln!(
+                    "FAIL: rung {} K={n_tenants} W={w} drifted from serial (events {} vs {}, records {} vs {})",
+                    rung.name, sh.events, batched.events, sh.records, batched.records
+                );
+                failed = true;
+            }
+            eps_w.push((w, sh.events_per_sec()));
+            worker_jsons.push(Json::obj(vec![
+                ("shards", Json::num(n_tenants as f64)),
+                ("k_effective", Json::num(k_eff as f64)),
+                ("workers", Json::num(w as f64)),
+                ("workers_effective", Json::num(w_eff as f64)),
+                ("stats", sh.json()),
+            ]));
+        }
+        let eps_w1 = eps_w[0].1.max(1e-9);
+        let eps_w4 = eps_w[2].1;
+        let worker_speedup = eps_w4 / eps_w1;
+        if rung.name == "stress-10k" {
+            gate_worker_speedup = Some(worker_speedup);
         }
         let milp = bench_milp(rung, budget);
         table.row(vec![
@@ -1104,6 +1178,8 @@ fn bench_perf(args: &Args) {
             format!("{speedup:.2}x"),
             format!("{eps4:.0}"),
             format!("{shard_speedup:.2}x"),
+            format!("{eps_w4:.0}"),
+            format!("{worker_speedup:.2}x"),
             format!("{:.0}", milp.f64_or("solve_ms", -1.0)),
         ]);
         rung_jsons.push(Json::obj(vec![
@@ -1115,17 +1191,19 @@ fn bench_perf(args: &Args) {
             ("seed_event_stream", seed.json()),
             ("batched", batched.json()),
             ("shard_scaling", Json::Arr(shard_jsons)),
+            ("worker_scaling", Json::Arr(worker_jsons)),
             ("events_per_sec", Json::num(batched.events_per_sec().round())),
             ("records_per_sec", Json::num(batched.records_per_sec().round())),
             ("speedup_events_per_sec", Json::num((speedup * 100.0).round() / 100.0)),
             ("shard_speedup_k4", Json::num((shard_speedup * 100.0).round() / 100.0)),
+            ("worker_speedup_w4", Json::num((worker_speedup * 100.0).round() / 100.0)),
             ("milp", milp),
         ]));
     }
     table.emit("bench_perf");
 
     let report = Json::obj(vec![
-        ("schema", Json::str("trident-bench-perf/v1")),
+        ("schema", Json::str("trident-bench-perf/v2")),
         ("baseline_mode", Json::str("seed-event-stream")),
         ("generated_by", Json::str("trident bench-perf")),
         ("rungs", Json::Arr(rung_jsons)),
@@ -1160,6 +1238,21 @@ fn bench_perf(args: &Args) {
             Some(got) => println!("stress-512 shard speedup {got:.2}x >= {s}x"),
             None => {
                 eprintln!("--assert-shard-speedup requires the stress-512 rung in --rungs");
+                failed = true;
+            }
+        }
+    }
+    if let Some(s) = args.map.get("assert-worker-speedup").and_then(|v| v.parse::<f64>().ok()) {
+        match gate_worker_speedup {
+            Some(got) if got < s => {
+                eprintln!(
+                    "FAIL: stress-10k W=4 vs W=1 events/sec ratio {got:.2}x below required {s}x"
+                );
+                failed = true;
+            }
+            Some(got) => println!("stress-10k worker speedup {got:.2}x >= {s}x"),
+            None => {
+                eprintln!("--assert-worker-speedup requires the stress-10k rung in --rungs");
                 failed = true;
             }
         }
@@ -1331,12 +1424,14 @@ fn main() {
                 "usage: trident <run|compare|sweep|milp-bench|bench-perf> [--pipeline pdf|video|speech] \
                  [--pipelines pdf,speech [--weights 2,1]] [--tenancy file.json] [--policy ...] \
                  [--policies a,b,c] [--seeds N] [--jobs J] [--duration S] [--nodes N] [--seed S] \
-                 [--native-gp] [--join-colocate] [--shards K] [--solver monolithic|decomposed] \
+                 [--native-gp] [--join-colocate] [--shards K] [--workers W] \
+                 [--solver monolithic|decomposed] \
                  [--dynamics file.json] [--mtbf S] [--mttr S] [--recovery requeue|loss] \
                  [--max-pivots N] [--assert-speedup S]   (milp-bench solver-perf gates) \
                  [--decomp-tenants N] [--assert-decomp-speedup S]   (milp-bench decomposition gate) \
-                 [--windows W] [--rungs a,b] [--out BENCH_7.json] [--milp-budget-ms MS] \
-                 [--assert-speedup S] [--assert-shard-speedup S]   (bench-perf -> BENCH_7.json)"
+                 [--windows W] [--rungs a,b] [--out BENCH_9.json] [--milp-budget-ms MS] \
+                 [--assert-speedup S] [--assert-shard-speedup S] [--assert-worker-speedup S] \
+                 (bench-perf -> BENCH_9.json)"
             );
         }
     }

@@ -7,6 +7,7 @@ pub mod items;
 pub mod metrics;
 pub mod net;
 pub mod pipeline;
+pub mod pool;
 pub mod service;
 pub mod shard;
 
@@ -14,6 +15,7 @@ pub use engine::{Engine, Ev, InstId};
 pub use items::{Item, ItemAttrs};
 pub use metrics::{InstanceMetrics, OpMetrics};
 pub use pipeline::{InstState, PipelineSim, SimError};
+pub use pool::ShardPool;
 pub use shard::ShardedSim;
 
 #[cfg(test)]

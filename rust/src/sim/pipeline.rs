@@ -262,12 +262,14 @@ pub struct PipelineSim {
     egress_share: Vec<f64>,
     /// Per-node CPU-contention denominator, frozen at `run_until` entry
     /// (per-tenant bookings summed in ascending-tenant order, so the
-    /// float result is identical however tenants are sharded).
-    frozen_cpu: Vec<f64>,
+    /// float result is identical however tenants are sharded).  Shared
+    /// (`Arc`) so the sharded facade installs one snapshot in K shards
+    /// without K heap copies per window.
+    frozen_cpu: std::sync::Arc<[f64]>,
     /// Externally supplied contention snapshot for the next window (the
     /// sharded facade gathers bookings across shards); `None` means
     /// recompute from local bookings.
-    ext_frozen: Option<Vec<f64>>,
+    ext_frozen: Option<std::sync::Arc<[f64]>>,
     op_acc: Vec<OpWindowAcc>,
     /// Lifetime EMA of processed item attrs per op (capacity-oracle input).
     attr_ema: Vec<Option<ItemAttrs>>,
@@ -434,7 +436,7 @@ impl PipelineSim {
             dead_ids: vec![BTreeSet::new(); n_ops],
             next_item_id_t: vec![0; n_tenants],
             egress_share,
-            frozen_cpu: vec![0.0; cluster.nodes.len()],
+            frozen_cpu: vec![0.0; cluster.nodes.len()].into(),
             ext_frozen: None,
             op_acc: vec![OpWindowAcc::new(); n_ops],
             attr_ema: vec![None; n_ops],
@@ -1636,7 +1638,22 @@ impl PipelineSim {
 
     /// Flush the metrics window: per-operator snapshots + per-tenant
     /// output records this window.  Resets window accumulators.
+    /// Equivalent to [`window_metrics`](Self::window_metrics) followed by
+    /// [`close_window`](Self::close_window) — the sharded facade runs the
+    /// pure half inside each shard's tick task and only the reset half on
+    /// the merge path.
     pub fn flush_metrics(&mut self) -> (Vec<OpMetrics>, Vec<u64>) {
+        let snap = self.window_metrics();
+        self.close_window();
+        snap
+    }
+
+    /// The window's per-operator snapshots + per-tenant outputs *without*
+    /// closing the window — a pure read, so a shard can publish it from
+    /// its own tick task (overlapped with other shards' ticks) and the
+    /// facade can still fall back to a full [`flush_metrics`](Self::flush_metrics)
+    /// if the publish went stale.  Identical values either way.
+    pub fn window_metrics(&self) -> (Vec<OpMetrics>, Vec<u64>) {
         let now = self.engine.now();
         let window_s = (now - self.win_start).max(1e-9);
         let mut out = Vec::with_capacity(self.spec.n_ops());
@@ -1652,7 +1669,7 @@ impl PipelineSim {
             let mut n_active = 0usize;
             let mut per_instance = Vec::new();
             for &i in &self.by_op[op] {
-                let inst = &mut self.instances[i];
+                let inst = &self.instances[i];
                 if inst.state == InstState::Stopped {
                     continue;
                 }
@@ -1685,10 +1702,8 @@ impl PipelineSim {
                     queue_len: inst.queue.len() + inst.join_buf.len(),
                     config_gen: inst.config_gen,
                 });
-                inst.win.reset();
-                inst.win_start = now;
             }
-            let acc = &mut self.op_acc[op];
+            let acc = &self.op_acc[op];
             let (feat_mean, feat_std) = acc.mean_std();
             let q_begin = self
                 .prev_q_end
@@ -1710,19 +1725,45 @@ impl PipelineSim {
                 peak_mem_mb: peak_mem,
                 oom_events: ooms,
                 n_active,
-                cluster_samples: std::mem::take(&mut acc.reservoir),
+                cluster_samples: acc.reservoir.clone(),
                 per_instance,
             });
-            acc.reset();
+        }
+        (out, self.out_window_t.clone())
+    }
+
+    /// Close the metrics window: reset every window accumulator exactly
+    /// as the tail of the old monolithic flush did, without recomputing
+    /// the snapshot.  The facade pairs this with a shard's published
+    /// [`window_metrics`](Self::window_metrics) so the serial inter-window
+    /// work is O(reset), not O(recompute).
+    pub fn close_window(&mut self) {
+        let now = self.engine.now();
+        let mut q_ends = Vec::with_capacity(self.spec.n_ops());
+        for op in 0..self.spec.n_ops() {
+            // Queue-end recomputed from live state (identical to the
+            // snapshot's value: nothing ran between the two).
+            let mut q_end = 0usize;
+            for &i in &self.by_op[op] {
+                let inst = &mut self.instances[i];
+                if inst.state == InstState::Stopped {
+                    continue;
+                }
+                q_end += inst.queue.len() + inst.join_buf.len();
+                inst.win.reset();
+                inst.win_start = now;
+            }
+            q_ends.push(q_end);
+            // Clears the reservoir too (the old flush `take`d it).
+            self.op_acc[op].reset();
         }
         // Record queue-end as next window's queue-begin.
-        self.prev_q_end = out.iter().map(|m| m.queue_end).collect();
+        self.prev_q_end = q_ends;
         for ns in &mut self.nodes {
             ns.egress_mb_window = 0.0;
         }
-        let w = std::mem::replace(&mut self.out_window_t, vec![0; self.tenancy.n_tenants()]);
+        self.out_window_t = vec![0; self.tenancy.n_tenants()];
         self.win_start = now;
-        (out, w)
     }
 
     /// Ground-truth sustainable per-instance rate for `op` under config θ
@@ -1773,8 +1814,9 @@ impl PipelineSim {
     /// Install the CPU-contention snapshot for the *next* window (used by
     /// the sharded facade, which gathers per-(node, tenant) bookings
     /// across all shards and sums them in ascending-tenant order —
-    /// bit-identical to the serial executor's own snapshot).
-    pub fn set_frozen_cpu(&mut self, frozen: Vec<f64>) {
+    /// bit-identical to the serial executor's own snapshot).  One `Arc`
+    /// is shared by every shard.
+    pub fn set_frozen_cpu(&mut self, frozen: std::sync::Arc<[f64]>) {
         debug_assert_eq!(frozen.len(), self.nodes.len());
         self.ext_frozen = Some(frozen);
     }
@@ -1788,6 +1830,17 @@ impl PipelineSim {
     /// contention gather).
     pub fn node_cpu_booked(&self, node: usize, tenant: usize) -> f64 {
         self.nodes[node].cpu_booked[tenant]
+    }
+
+    /// Copy `tenant`'s per-node CPU bookings into `out` (len = node
+    /// count).  The sharded facade's tick tasks use this to publish a
+    /// dense row per owned tenant so the next window's frozen-CPU gather
+    /// is a fold over published buffers instead of a post-barrier pass.
+    pub fn copy_cpu_booked(&self, tenant: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.nodes.len());
+        for (slot, ns) in out.iter_mut().zip(&self.nodes) {
+            *slot = ns.cpu_booked[tenant];
+        }
     }
 
     /// High-water mark of live entries in the event heap.

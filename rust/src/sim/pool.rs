@@ -1,0 +1,280 @@
+//! Persistent std-only work-stealing worker pool for the sharded sim
+//! tick ([`crate::sim::ShardedSim`]).
+//!
+//! PR 7 spawned one `std::thread::scope` worker per shard per window,
+//! which (a) cannot run K ≫ cores rungs without K OS threads fighting
+//! the scheduler, and (b) pays thread spawn/join on every window of the
+//! coordinator's drive loop.  This pool keeps W long-lived workers
+//! alive across windows; each `run` epoch deals task indices round-robin
+//! into per-worker deques, workers pop their own deque from the front
+//! and steal from other deques' backs when they run dry.
+//!
+//! Stealing order is pure load balancing and can never leak into
+//! results: a task here is "advance one shard's event loop", shards
+//! share no mutable state during a window, and every index runs exactly
+//! once per epoch — *which worker* runs it is unobservable to the sim.
+//! The only protocol state is a mutex + two condvars; there are no
+//! atomics-based fast paths to get subtly wrong, and at K shard-ticks
+//! per window the lock traffic is noise next to the ticks themselves.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased pointer to the epoch's task closure.  Only dereferenced
+/// by workers for task indices counted in `remaining`, and [`ShardPool::run`]
+/// does not return until `remaining` hits zero — so the pointee (a
+/// closure on `run`'s caller frame) strictly outlives every use.
+struct Job(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointer crosses threads inside the mutex; the pointee is
+// `Sync` (bound on `run`) and kept alive by the epoch protocol above.
+unsafe impl Send for Job {}
+
+struct State {
+    /// Current epoch's closure; `None` between epochs.
+    job: Option<Job>,
+    /// Per-worker task deques: owner pops the front, thieves pop the back.
+    deques: Vec<VecDeque<usize>>,
+    /// Tasks of the current epoch not yet *finished* (not merely popped).
+    remaining: usize,
+    /// Lifetime count of tasks served from another worker's deque.
+    steals: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signals workers: a new epoch was posted (or shutdown).
+    work: Condvar,
+    /// Signals `run`: the epoch's last task finished.
+    done: Condvar,
+}
+
+/// Fixed-size persistent worker pool executing index-addressed task
+/// batches (`f(0..n)`) with work stealing.  Dropping the pool shuts the
+/// workers down and joins them.
+pub struct ShardPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    /// Spawn `workers` (min 1) long-lived worker threads.
+    pub fn new(workers: usize) -> Self {
+        let w = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                deques: vec![VecDeque::new(); w],
+                remaining: 0,
+                steals: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..w)
+            .map(|me| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("trident-shard-{me}"))
+                    .spawn(move || Self::worker(sh, me))
+                    .expect("spawn shard-pool worker")
+            })
+            .collect();
+        ShardPool { shared, handles }
+    }
+
+    /// Worker thread count (fixed at construction).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Lifetime count of tasks served from another worker's deque
+    /// (telemetry only — stealing order never affects results).
+    pub fn steals(&self) -> u64 {
+        self.shared.state.lock().expect("pool lock").steals
+    }
+
+    /// Next task for worker `me`: own deque front first, then other
+    /// deques back-first (classic stealing order: thieves take the work
+    /// the owner would reach last).
+    fn take(deques: &mut [VecDeque<usize>], me: usize) -> Option<(usize, bool)> {
+        if let Some(t) = deques[me].pop_front() {
+            return Some((t, false));
+        }
+        let w = deques.len();
+        for off in 1..w {
+            if let Some(t) = deques[(me + off) % w].pop_back() {
+                return Some((t, true));
+            }
+        }
+        None
+    }
+
+    fn worker(shared: Arc<Shared>, me: usize) {
+        let mut st = shared.state.lock().expect("pool lock");
+        loop {
+            if st.shutdown {
+                return;
+            }
+            if st.job.is_some() {
+                if let Some((task, stolen)) = Self::take(&mut st.deques, me) {
+                    if stolen {
+                        st.steals += 1;
+                    }
+                    let f = st.job.as_ref().expect("job present while tasks remain").0;
+                    drop(st);
+                    // SAFETY: `task` is counted in `remaining`, and `run`
+                    // keeps the closure alive until `remaining` is zero.
+                    unsafe { (*f)(task) };
+                    st = shared.state.lock().expect("pool lock");
+                    st.remaining -= 1;
+                    if st.remaining == 0 {
+                        shared.done.notify_all();
+                    }
+                    continue;
+                }
+            }
+            st = shared.work.wait(st).expect("pool lock");
+        }
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, each exactly once, across the
+    /// pool; blocks until all have finished.  Panics in `f` poison the
+    /// pool and propagate to the caller (matching the scoped-thread
+    /// behavior this pool replaces).
+    pub fn run<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        let obj: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: lifetime erasure only — this function does not return
+        // until every task has finished, so workers never dereference the
+        // pointer after `f` (still on this frame) is dropped.
+        let obj: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(obj)
+        };
+        let mut st = self.shared.state.lock().expect("pool lock");
+        debug_assert!(st.job.is_none() && st.remaining == 0, "epochs never overlap");
+        let w = st.deques.len();
+        for (i, dq) in st.deques.iter_mut().enumerate() {
+            dq.clear();
+            let mut t = i;
+            while t < n {
+                dq.push_back(t);
+                t += w;
+            }
+        }
+        st.remaining = n;
+        st.job = Some(Job(obj as *const _));
+        self.shared.work.notify_all();
+        while st.remaining > 0 {
+            st = self.shared.done.wait(st).expect("pool lock");
+        }
+        st.job = None;
+    }
+
+    /// Run `f(&mut items[i], i)` for every element across the pool.  The
+    /// `&mut` borrows are disjoint because `run` hands each index to
+    /// exactly one worker per epoch.
+    pub fn run_mut<T: Send, F: Fn(&mut T, usize) + Sync>(&self, items: &mut [T], f: F) {
+        struct Base<T>(*mut T);
+        // SAFETY: shared across workers, but each index is dereferenced
+        // by exactly one worker per epoch (disjoint `&mut`); T: Send
+        // lets that exclusive access hop threads.
+        unsafe impl<T: Send> Sync for Base<T> {}
+        let n = items.len();
+        let base = Base(items.as_mut_ptr());
+        self.run(n, move |i| {
+            // SAFETY: i < n, and no other task aliases index i.
+            let item = unsafe { &mut *base.0.add(i) };
+            f(item, i);
+        });
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        if let Ok(mut st) = self.shared.state.lock() {
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_every_index_exactly_once() {
+        let pool = ShardPool::new(3);
+        let mut hits = vec![0u32; 17];
+        pool.run_mut(&mut hits, |h, i| *h += i as u32 + 1);
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(*h, i as u32 + 1, "task {i} must run exactly once");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_epochs() {
+        let pool = ShardPool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(8, |i| {
+                total.fetch_add(i + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 50 * 36);
+    }
+
+    /// Task 0 blocks its worker until the other three tasks finish, so
+    /// whichever worker holds it, the *other* worker must cross a deque
+    /// boundary to drain the epoch — a steal is guaranteed, not timing-
+    /// dependent.
+    #[test]
+    fn idle_workers_steal_from_a_busy_owner() {
+        let pool = ShardPool::new(2);
+        let done = AtomicUsize::new(0);
+        pool.run(4, |i| {
+            if i == 0 {
+                while done.load(Ordering::SeqCst) < 3 {
+                    std::thread::yield_now();
+                }
+            }
+            done.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+        assert!(pool.steals() >= 1, "draining around the blocked task requires stealing");
+    }
+
+    #[test]
+    fn zero_tasks_is_a_no_op() {
+        let pool = ShardPool::new(4);
+        pool.run(0, |_| panic!("no tasks were posted"));
+        assert_eq!(pool.steals(), 0);
+    }
+
+    #[test]
+    fn single_worker_pool_drains_serially() {
+        let pool = ShardPool::new(1);
+        let mut v = vec![0usize; 5];
+        pool.run_mut(&mut v, |slot, i| *slot = i * i);
+        assert_eq!(v, vec![0, 1, 4, 9, 16]);
+        assert_eq!(pool.steals(), 0, "one worker has nobody to steal from");
+    }
+
+    #[test]
+    fn more_tasks_than_workers_all_complete() {
+        let pool = ShardPool::new(2);
+        let mut v = vec![0u8; 100];
+        pool.run_mut(&mut v, |slot, _| *slot = 1);
+        assert!(v.iter().all(|&b| b == 1), "oversubscribed epoch must drain fully");
+    }
+}

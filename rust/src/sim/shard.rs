@@ -1,5 +1,6 @@
 //! Tenant-sharded parallel executor: K [`PipelineSim`] shards advanced by
-//! scoped worker threads, bit-identical to the serial executor at any K.
+//! a persistent work-stealing pool ([`ShardPool`]) of W workers,
+//! bit-identical to the serial executor at any (K, W).
 //!
 //! ## Why tenants are the shard boundary
 //!
@@ -36,13 +37,36 @@
 //! per-tenant counters are the owner's, and cross-tenant aggregates are
 //! sums in fixed ascending order — the same operation sequence the serial
 //! executor performs.
+//!
+//! ## Work stealing and the overlapped gather
+//!
+//! Shard-tick tasks are indices into a per-window epoch on a persistent
+//! [`ShardPool`] of `workers_effective()` threads (default
+//! `min(K, cores − 1)`, `--workers` / `sim_workers` to override), so
+//! K ≫ cores runs no longer spawn K OS threads per window and stacks are
+//! reused across the whole `drive()` loop.  Stealing order decides only
+//! *which worker* advances a shard; shards share no mutable state within
+//! a window, so it is unobservable to the sim — bit-identity cannot
+//! depend on W.  As the last step of its own tick task each shard
+//! publishes (a) a dense per-owned-tenant row of per-node CPU bookings
+//! and (b) its pure [`PipelineSim::window_metrics`] snapshot, stamped
+//! with the shard clock.  The next window's frozen-CPU gather and the
+//! facade's `flush_metrics` merge then fold over those already-published
+//! buffers (ascending-tenant / ascending-op order preserved, so the
+//! float sequences are the serial executor's) instead of walking every
+//! shard's live state on the caller's thread after the barrier.  Any
+//! facade mutation between windows (dynamics, instance churn) clears the
+//! stamps and the folds fall back to the direct PR 7-style pass — same
+//! values either way, which is why the fast path cannot drift.
 
 use crate::config::{ClusterSpec, PipelineSpec, TenancyView};
 use crate::rngx::Rng;
 use crate::sim::items::{Item, ItemAttrs};
 use crate::sim::metrics::OpMetrics;
 use crate::sim::pipeline::{Instance, PipelineSim, SimError};
+use crate::sim::pool::ShardPool;
 use crate::workload::Trace;
+use std::sync::Arc;
 
 /// Placeholder trace for tenants a shard does not own: never emits.
 /// (Non-owned tenants are born `source_done`, so this is never polled;
@@ -58,11 +82,51 @@ impl Trace for NullTrace {
     }
 }
 
+/// Buffers a shard publishes as the last step of its own tick task, so
+/// the serial inter-window work (frozen-CPU gather, metrics merge) is a
+/// fold instead of a walk over live shard state.  Stamps are
+/// `f64::to_bits` of the shard clock at publish time; any facade
+/// mutation clears them (see `invalidate_published`), and a cleared or
+/// mismatched stamp sends the consumer down the direct fallback path.
+struct ShardPublish {
+    /// The tenants this shard owns, ascending (`s, s+K, s+2K, …`).
+    owned: Vec<usize>,
+    /// Node count (row stride of `cpu_rows`).
+    n_nodes: usize,
+    /// Row-major per-owned-tenant CPU bookings: `owned[i]`'s per-node
+    /// row at `i * n_nodes`.  Tenant `t`'s row index is `t / K`.
+    cpu_rows: Vec<f64>,
+    /// Shard clock (bits) when `cpu_rows` was filled; `None` = stale.
+    cpu_at: Option<u64>,
+    /// Pure [`PipelineSim::window_metrics`] snapshot, consumed at most
+    /// once by the facade flush (`take`), never reused.
+    metrics: Option<(Vec<OpMetrics>, Vec<u64>)>,
+    /// Shard clock (bits) when `metrics` was computed; `None` = stale.
+    metrics_at: Option<u64>,
+}
+
+/// One shard-tick task: advance the shard, then publish its CPU rows and
+/// window-metrics snapshot.  Both the pool workers and the sequential /
+/// W = 1 driver run exactly this function, so every (K, W) executes the
+/// same per-shard code.
+fn tick_shard(sh: &mut PipelineSim, pb: &mut ShardPublish, t_end: f64) {
+    sh.run_until(t_end);
+    let at = sh.now().to_bits();
+    for (i, &t) in pb.owned.iter().enumerate() {
+        sh.copy_cpu_booked(t, &mut pb.cpu_rows[i * pb.n_nodes..(i + 1) * pb.n_nodes]);
+    }
+    pb.cpu_at = Some(at);
+    pb.metrics = Some(sh.window_metrics());
+    pb.metrics_at = Some(at);
+}
+
 /// K-way tenant-sharded facade over [`PipelineSim`] with the serial
-/// executor's exact API surface and bit-identical results at any K
+/// executor's exact API surface and bit-identical results at any (K, W)
 /// (pinned by `tests/sim_perf_parity.rs`).  Tenant `t` is owned by shard
 /// `t % K`; K is clamped to the tenant count, so K = 1 (or a single
-/// tenant) runs the serial code on the caller's thread.
+/// tenant) runs the serial code on the caller's thread.  W workers
+/// (clamped to [1, K]) advance the shards; W = 1 also stays on the
+/// caller's thread.
 pub struct ShardedSim {
     shards: Vec<PipelineSim>,
     /// Owner shard of each tenant (`t % K`).
@@ -75,9 +139,16 @@ pub struct ShardedSim {
     pub spec: PipelineSpec,
     pub cluster: ClusterSpec,
     pub tenancy: TenancyView,
-    /// Advance shards on scoped worker threads (`false` forces the
+    /// Advance shards on pool worker threads (`false` forces the
     /// sequential loop — the degenerate-path oracle for tests).
     threaded: bool,
+    /// Per-shard published buffers (same index as `shards`).
+    published: Vec<ShardPublish>,
+    /// Lazily built when the threaded path first runs (and rebuilt if
+    /// the effective worker count changes); reused across windows.
+    pool: Option<ShardPool>,
+    /// Configured worker count; 0 = auto (`cores − 1`).
+    workers_cfg: usize,
 }
 
 impl ShardedSim {
@@ -143,6 +214,20 @@ impl ShardedSim {
                 &owned,
             ));
         }
+        let n_nodes = cluster.nodes.len();
+        let published = (0..k)
+            .map(|s| {
+                let owned: Vec<usize> = (0..nt).filter(|t| t % k == s).collect();
+                ShardPublish {
+                    cpu_rows: vec![0.0; owned.len() * n_nodes],
+                    owned,
+                    n_nodes,
+                    cpu_at: None,
+                    metrics: None,
+                    metrics_at: None,
+                }
+            })
+            .collect();
         ShardedSim {
             shards: pool,
             tenant_shard,
@@ -152,6 +237,9 @@ impl ShardedSim {
             cluster,
             tenancy: view,
             threaded: true,
+            published,
+            pool: None,
+            workers_cfg: 0,
         }
     }
 
@@ -164,6 +252,45 @@ impl ShardedSim {
     /// sequential drivers are the same code path modulo the thread pool).
     pub fn set_threaded(&mut self, on: bool) {
         self.threaded = on;
+    }
+
+    /// Configure the worker-thread count; 0 (the default) means auto
+    /// (`cores − 1`).  Clamped to [1, K] at use — see
+    /// [`workers_effective`](Self::workers_effective).
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers_cfg = workers;
+    }
+
+    /// The worker count the pool actually runs: the configured count (or
+    /// `available_parallelism − 1` when auto), clamped to [1, K] — more
+    /// workers than shards would only park on the condvar.
+    pub fn workers_effective(&self) -> usize {
+        let want = if self.workers_cfg == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get().saturating_sub(1))
+                .unwrap_or(1)
+        } else {
+            self.workers_cfg
+        };
+        want.clamp(1, self.shards.len().max(1))
+    }
+
+    /// Lifetime steal count of the current pool (telemetry; 0 when the
+    /// sequential path has been running).
+    pub fn pool_steals(&self) -> u64 {
+        self.pool.as_ref().map(|p| p.steals()).unwrap_or(0)
+    }
+
+    /// Drop every published buffer's validity stamp.  Called from every
+    /// facade mutator: between-window mutations (dynamics events,
+    /// instance churn, route changes) can change what a gather would
+    /// read, so the next gather/flush must take the direct path.
+    fn invalidate_published(&mut self) {
+        for pb in &mut self.published {
+            pb.cpu_at = None;
+            pb.metrics = None;
+            pb.metrics_at = None;
+        }
     }
 
     #[inline]
@@ -184,6 +311,7 @@ impl ShardedSim {
         node: usize,
         theta: Vec<f64>,
     ) -> Result<usize, SimError> {
+        self.invalidate_published();
         let s = self.owner_of_op(op);
         if !self.shards[s].nodes_up()[node] {
             return Err(SimError::NodeDown { node });
@@ -226,11 +354,13 @@ impl ShardedSim {
     }
 
     pub fn stop_instance(&mut self, id: usize) {
+        self.invalidate_published();
         let (s, l) = self.inst_map[id];
         self.shards[s].stop_instance(l);
     }
 
     pub fn restart_with_config(&mut self, id: usize, theta: Vec<f64>) {
+        self.invalidate_published();
         let (s, l) = self.inst_map[id];
         self.shards[s].restart_with_config(l, theta);
     }
@@ -262,6 +392,7 @@ impl ShardedSim {
     }
 
     pub fn set_route(&mut self, edge: usize, fractions: Option<Vec<Vec<f64>>>) {
+        self.invalidate_published();
         for sh in &mut self.shards {
             sh.set_route(edge, fractions.clone());
         }
@@ -275,39 +406,70 @@ impl ShardedSim {
     // Advancing time
     // ------------------------------------------------------------------
 
-    /// Advance every shard to `t_end` — on scoped worker threads for
-    /// K > 1 (or the sequential loop; same code path either way).
-    ///
-    /// Before the window starts, the cross-shard CPU-contention snapshot
-    /// is gathered (per node: per-tenant bookings from owner shards,
-    /// summed in ascending-tenant order — the serial executor's exact
-    /// float sequence) and installed in every shard.  That is the only
-    /// cross-shard communication; the window end is the conservative
-    /// horizon, degenerate because tenants exchange no messages.
-    pub fn run_until(&mut self, t_end: f64) {
+    /// The cross-shard CPU-contention snapshot for the next window: per
+    /// node, per-tenant bookings summed in ascending-tenant order — the
+    /// serial executor's exact float sequence.  Each tenant's term comes
+    /// from its owner shard's published row when the stamp is fresh
+    /// (published at the end of the shard's own tick task, in parallel)
+    /// and from a direct live read otherwise — identical values, so the
+    /// fold is bit-identical either way.
+    fn gather_frozen(&self) -> Arc<[f64]> {
         let n_nodes = self.cluster.nodes.len();
         let nt = self.tenancy.n_tenants();
+        let k = self.shards.len();
+        let fresh: Vec<bool> = self
+            .shards
+            .iter()
+            .zip(&self.published)
+            .map(|(sh, pb)| pb.cpu_at == Some(sh.now().to_bits()))
+            .collect();
         let mut frozen = vec![0.0; n_nodes];
         for (node, f) in frozen.iter_mut().enumerate() {
             let mut acc = 0.0;
             for t in 0..nt {
-                acc += self.shards[self.tenant_shard[t]].node_cpu_booked(node, t);
+                let s = self.tenant_shard[t];
+                acc += if fresh[s] {
+                    // Owned tenants are `s, s+K, s+2K, …`, so row `t / K`.
+                    self.published[s].cpu_rows[(t / k) * n_nodes + node]
+                } else {
+                    self.shards[s].node_cpu_booked(node, t)
+                };
             }
             *f = acc;
         }
+        frozen.into()
+    }
+
+    /// Advance every shard to `t_end` — shard-tick tasks on the
+    /// persistent work-stealing pool for K > 1 and W > 1, or the
+    /// sequential loop (both drivers run [`tick_shard`], so every (K, W)
+    /// executes the same per-shard code).
+    ///
+    /// Before the window starts, the cross-shard CPU-contention snapshot
+    /// from [`gather_frozen`](Self::gather_frozen) is installed in every
+    /// shard (one `Arc` shared by all K — no per-shard copies).  That is
+    /// the only cross-shard communication; the window end is the
+    /// conservative horizon, degenerate because tenants exchange no
+    /// messages.
+    pub fn run_until(&mut self, t_end: f64) {
+        let frozen = self.gather_frozen();
         for sh in &mut self.shards {
-            sh.set_frozen_cpu(frozen.clone());
+            sh.set_frozen_cpu(Arc::clone(&frozen));
         }
-        if self.shards.len() == 1 || !self.threaded {
-            for sh in &mut self.shards {
-                sh.run_until(t_end);
+        let k = self.shards.len();
+        let w = self.workers_effective();
+        if k == 1 || !self.threaded || w <= 1 {
+            for (sh, pb) in self.shards.iter_mut().zip(self.published.iter_mut()) {
+                tick_shard(sh, pb, t_end);
             }
         } else {
-            std::thread::scope(|sc| {
-                for sh in self.shards.iter_mut() {
-                    sc.spawn(move || sh.run_until(t_end));
-                }
-            });
+            if self.pool.as_ref().map(|p| p.workers()) != Some(w) {
+                self.pool = Some(ShardPool::new(w));
+            }
+            let pool = self.pool.as_ref().expect("pool built above");
+            let mut tasks: Vec<(&mut PipelineSim, &mut ShardPublish)> =
+                self.shards.iter_mut().zip(self.published.iter_mut()).collect();
+            pool.run_mut(&mut tasks, |task, _| tick_shard(task.0, task.1, t_end));
         }
     }
 
@@ -322,9 +484,29 @@ impl ShardedSim {
     /// Flush every shard's metrics window and merge: per-op snapshots are
     /// the owner shard's verbatim (per-instance ids remapped to global),
     /// per-tenant window outputs are the owners' (others are zero).
+    ///
+    /// When a shard's published [`PipelineSim::window_metrics`] snapshot
+    /// is still fresh (stamped at the end of its own tick task, nothing
+    /// mutated since), the snapshot is consumed and only the cheap
+    /// [`PipelineSim::close_window`] reset runs here; otherwise the full
+    /// recompute-and-reset flush runs.  Identical values either way.
     pub fn flush_metrics(&mut self) -> (Vec<OpMetrics>, Vec<u64>) {
-        let per_shard: Vec<(Vec<OpMetrics>, Vec<u64>)> =
-            self.shards.iter_mut().map(|sh| sh.flush_metrics()).collect();
+        let per_shard: Vec<(Vec<OpMetrics>, Vec<u64>)> = self
+            .shards
+            .iter_mut()
+            .zip(self.published.iter_mut())
+            .map(|(sh, pb)| {
+                let fresh = pb.metrics_at == Some(sh.now().to_bits());
+                pb.metrics_at = None;
+                match pb.metrics.take() {
+                    Some(snap) if fresh => {
+                        sh.close_window();
+                        snap
+                    }
+                    _ => sh.flush_metrics(),
+                }
+            })
+            .collect();
         let mut outs = vec![0u64; self.tenancy.n_tenants()];
         for (_, w) in &per_shard {
             for (t, &v) in w.iter().enumerate() {
@@ -397,6 +579,7 @@ impl ShardedSim {
     /// Charge a probe-OOM to `op`'s ledger (the coordinator's ingest path
     /// mutated the serial executor's counters directly).
     pub fn note_oom(&mut self, op: usize, downtime_s: f64) {
+        self.invalidate_published();
         let s = self.owner_of_op(op);
         self.shards[s].oom_events_total[op] += 1;
         self.shards[s].oom_downtime_s[op] += downtime_s;
@@ -453,6 +636,7 @@ impl ShardedSim {
     }
 
     pub fn set_seed_event_stream(&mut self, on: bool) {
+        self.invalidate_published();
         for sh in &mut self.shards {
             sh.set_seed_event_stream(on);
         }
@@ -473,16 +657,19 @@ impl ShardedSim {
     /// Crash a node in every shard (each kills its own instances there);
     /// returns the total records dropped, summed across shards.
     pub fn fail_node(&mut self, node: usize, requeue: bool) -> u64 {
+        self.invalidate_published();
         self.shards.iter_mut().map(|sh| sh.fail_node(node, requeue)).sum()
     }
 
     pub fn set_node_up(&mut self, node: usize) {
+        self.invalidate_published();
         for sh in &mut self.shards {
             sh.set_node_up(node);
         }
     }
 
     pub fn set_bandwidth_factor(&mut self, node: usize, factor: f64) {
+        self.invalidate_published();
         for sh in &mut self.shards {
             sh.set_bandwidth_factor(node, factor);
         }
@@ -492,6 +679,7 @@ impl ShardedSim {
     /// stays consistent (only the owner re-arms a source — non-owners are
     /// born `source_done` and their guard makes this a no-op).
     pub fn set_tenant_active(&mut self, t: usize, active: bool) {
+        self.invalidate_published();
         for sh in &mut self.shards {
             sh.set_tenant_active(t, active);
         }

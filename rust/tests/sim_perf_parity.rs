@@ -8,7 +8,11 @@
 //! * conservation counters match exactly across modes when a node is
 //!   killed with transfers mid-flight on the wire;
 //! * the event queue keeps the earlier-time-then-FIFO-seq contract at
-//!   equal timestamps.
+//!   equal timestamps;
+//! * the tenant-sharded tick with its work-stealing worker pool is a
+//!   partition of the serial run at every (K, W) — shard count and
+//!   worker count decide wall-clock only, never a single bit of output,
+//!   including oversubscribed K > W epochs where workers steal.
 
 use trident::config::{
     ClusterSpec, ConfigSpace, CostW, FeatureExtractor, Json, OperatorKind, OperatorSpec,
@@ -327,25 +331,36 @@ fn event_queue_fifo_at_equal_timestamps() {
 // Sharded parallel tick: tenant shards partition the serial run exactly
 // ---------------------------------------------------------------------
 
-fn shard_cfg(shards: usize) -> TridentConfig {
+fn shard_cfg(shards: usize, workers: usize) -> TridentConfig {
     let mut cfg = mini_cfg(false);
     cfg.sim_shards = shards;
+    cfg.sim_workers = workers;
     cfg
 }
 
-fn single_sharded(variant: &Variant, seed: u64, shards: usize) -> Coordinator {
+/// The (K, W) grid every sharded parity pin sweeps: shard counts below,
+/// at, and above the tenant count × worker counts below, at, and above
+/// the shard count — clamps, the sequential W = 1 driver, and
+/// oversubscribed stealing epochs all included.
+const KW_GRID: &[(usize, usize)] = &[
+    (1, 1), (1, 2), (1, 4),
+    (3, 1), (3, 2), (3, 4),
+    (8, 1), (8, 2), (8, 4),
+];
+
+fn single_sharded(variant: &Variant, seed: u64, shards: usize, workers: usize) -> Coordinator {
     Coordinator::new(
         pdf::pipeline(),
         cluster(),
         Box::new(pdf::trace(50_000)),
-        shard_cfg(shards),
+        shard_cfg(shards, workers),
         variant.clone(),
         pdf_src(),
         seed,
     )
 }
 
-fn two_tenant_sharded(variant: &Variant, seed: u64, shards: usize) -> Coordinator {
+fn two_tenant_sharded(variant: &Variant, seed: u64, shards: usize, workers: usize) -> Coordinator {
     let tenancy = Tenancy {
         tenants: vec![
             TenantSpec { id: "pdf".into(), pipeline: pdf::pipeline(), weight: 1.0, source_rate: 0.0 },
@@ -364,7 +379,7 @@ fn two_tenant_sharded(variant: &Variant, seed: u64, shards: usize) -> Coordinato
             Box::new(pdf::trace(300)) as Box<dyn Trace>,
             Box::new(speech::trace(120)) as Box<dyn Trace>,
         ],
-        shard_cfg(shards),
+        shard_cfg(shards, workers),
         variant.clone(),
         vec![pdf_src(), speech::src_attrs()],
         seed,
@@ -373,48 +388,66 @@ fn two_tenant_sharded(variant: &Variant, seed: u64, shards: usize) -> Coordinato
 }
 
 /// A single tenant clamps every requested K to one shard: the degenerate
-/// path must reproduce K=1 bit-for-bit for all six policies.
+/// path must reproduce (K=1, W=1) bit-for-bit for all six policies at
+/// every (K, W) grid point.
 #[test]
 fn sharded_tick_bit_identical_single_tenant() {
     for (name, variant) in all_policies() {
-        let base = single_sharded(&variant, 5, 1).run(300.0);
+        let base = single_sharded(&variant, 5, 1, 1).run(300.0);
         assert!(base.throughput > 0.0, "{name} must make progress");
-        for k in [2usize, 4] {
-            let r = single_sharded(&variant, 5, k).run(300.0);
-            assert_eq!(key(&base), key(&r), "policy {name} diverged at K={k} (single tenant)");
+        for &(k, w) in KW_GRID {
+            if (k, w) == (1, 1) {
+                continue;
+            }
+            let r = single_sharded(&variant, 5, k, w).run(300.0);
+            assert_eq!(
+                key(&base),
+                key(&r),
+                "policy {name} diverged at K={k} W={w} (single tenant)"
+            );
         }
     }
 }
 
 /// Two tenants sharded across real threads: every policy's aggregate and
-/// per-tenant outcomes land on the K=1 run bit-for-bit at K ∈ {2, 4}
-/// (K=4 clamps to the 2 tenants — the clamp itself is under test too).
+/// per-tenant outcomes land on the (K=1, W=1) run bit-for-bit at every
+/// (K, W) grid point (K ∈ {3, 8} clamps to the 2 tenants and W clamps to
+/// K — the clamps themselves are under test too).
 #[test]
 fn sharded_tick_bit_identical_two_tenant() {
     for (name, variant) in all_policies() {
-        let base = two_tenant_sharded(&variant, 7, 1).run(300.0);
+        let base = two_tenant_sharded(&variant, 7, 1, 1).run(300.0);
         assert!(base.throughput > 0.0, "{name} must make progress");
-        for k in [2usize, 4] {
-            let r = two_tenant_sharded(&variant, 7, k).run(300.0);
-            assert_eq!(key(&base), key(&r), "policy {name} diverged at K={k} (two tenants)");
+        for &(k, w) in KW_GRID {
+            if (k, w) == (1, 1) {
+                continue;
+            }
+            let r = two_tenant_sharded(&variant, 7, k, w).run(300.0);
+            assert_eq!(key(&base), key(&r), "policy {name} diverged at K={k} W={w} (two tenants)");
             assert_eq!(base.tenants.len(), r.tenants.len());
             for (ta, tb) in base.tenants.iter().zip(&r.tenants) {
                 assert_eq!(
                     ta.throughput.to_bits(),
                     tb.throughput.to_bits(),
-                    "{name} K={k}: tenant {}",
+                    "{name} K={k} W={w}: tenant {}",
                     ta.id
                 );
-                assert_eq!(ta.items_processed, tb.items_processed, "{name} K={k}: tenant {}", ta.id);
-                assert_eq!(ta.items_lost, tb.items_lost, "{name} K={k}: tenant {}", ta.id);
+                assert_eq!(
+                    ta.items_processed, tb.items_processed,
+                    "{name} K={k} W={w}: tenant {}",
+                    ta.id
+                );
+                assert_eq!(ta.items_lost, tb.items_lost, "{name} K={k} W={w}: tenant {}", ta.id);
             }
         }
     }
 }
 
 /// Scripted dynamics (node fail/recover + bandwidth dip) across shards:
-/// every policy × both recovery policies × K ∈ {1, 2, 4} replays the same
-/// event timeline and loss ledger bit-for-bit.
+/// every policy × both recovery policies × (K, W) ∈ {(2,1), (2,2), (4,4)}
+/// replays the (1,1) event timeline and loss ledger bit-for-bit —
+/// between-window mutations invalidate the shards' published buffers, so
+/// these runs exercise the direct-gather fallback path too.
 #[test]
 fn sharded_tick_bit_identical_under_dynamics() {
     let spec_json = r#"{"events": [
@@ -425,28 +458,28 @@ fn sharded_tick_bit_identical_under_dynamics() {
     ]}"#;
     for (name, variant) in all_policies() {
         for recovery in [RecoveryPolicy::Requeue, RecoveryPolicy::Loss] {
-            let mk = |k: usize| {
-                let mut c = two_tenant_sharded(&variant, 9, k);
+            let mk = |k: usize, w: usize| {
+                let mut c = two_tenant_sharded(&variant, 9, k, w);
                 let mut d = DynamicsSpec::from_json(&Json::parse(spec_json).expect("valid json"))
                     .expect("valid dynamics spec");
                 d.recovery = recovery;
                 c.set_dynamics(d).expect("valid dynamics spec");
                 c
             };
-            let base = mk(1).run(240.0);
-            for k in [2usize, 4] {
-                let r = mk(k).run(240.0);
+            let base = mk(1, 1).run(240.0);
+            for (k, w) in [(2usize, 1usize), (2, 2), (4, 4)] {
+                let r = mk(k, w).run(240.0);
                 assert_eq!(
                     key(&base),
                     key(&r),
-                    "policy {name} ({recovery:?}) diverged at K={k} under dynamics"
+                    "policy {name} ({recovery:?}) diverged at K={k} W={w} under dynamics"
                 );
-                assert_eq!(base.events.len(), r.events.len(), "{name} ({recovery:?}) K={k}");
+                assert_eq!(base.events.len(), r.events.len(), "{name} ({recovery:?}) K={k} W={w}");
                 for (ea, eb) in base.events.iter().zip(&r.events) {
-                    assert_eq!(ea.label, eb.label, "{name} ({recovery:?}) K={k}");
+                    assert_eq!(ea.label, eb.label, "{name} ({recovery:?}) K={k} W={w}");
                     assert_eq!(
                         ea.lost_records, eb.lost_records,
-                        "{name} ({recovery:?}) K={k}: {}",
+                        "{name} ({recovery:?}) K={k} W={w}: {}",
                         ea.label
                     );
                 }
@@ -494,15 +527,18 @@ fn sharded_counters_partition_the_serial_run() {
     place(&mut |op, node, theta| serial.add_instance(op, node, theta), &serial_spec);
     serial.run_until(150.0);
 
-    for (k, threaded) in [(2usize, true), (2, false), (4, true)] {
+    for (k, threaded, workers) in
+        [(2usize, true, 1usize), (2, true, 2), (2, false, 2), (4, true, 2), (4, true, 4)]
+    {
         let (spec, view, traces) = scenario();
         let sh_spec = spec.clone();
         let mut sh = ShardedSim::new_tenancy(spec, view, cluster(), traces, 13, k);
         sh.set_threaded(threaded);
+        sh.set_workers(workers);
         place(&mut |op, node, theta| sh.add_instance(op, node, theta), &sh_spec);
         sh.run_until(150.0);
 
-        let tag = format!("K={k} threaded={threaded}");
+        let tag = format!("K={k} threaded={threaded} W={workers}");
         assert_eq!(sh.events_processed(), serial.engine.events_processed, "{tag}: events");
         assert_eq!(sh.items_emitted(), serial.items_emitted, "{tag}: emitted");
         assert_eq!(sh.out_records(), serial.out_records, "{tag}: out records");
@@ -536,4 +572,189 @@ fn sharded_counters_partition_the_serial_run() {
             "{tag}: aggregate throughput"
         );
     }
+}
+
+// ---------------------------------------------------------------------
+// Oversubscribed worker pool: K > W with stealing, dynamics included
+// ---------------------------------------------------------------------
+
+fn four_node_cluster() -> ClusterSpec {
+    ClusterSpec::homogeneous(4, 64.0, 256.0, 2, 65536.0, 200.0)
+}
+
+/// 8 mini chain tenants — more shards than the small W values in the
+/// grid, so K > W epochs really queue several shard ticks per worker and
+/// steal across deques.
+fn eight_tenant_scenario(
+) -> (PipelineSpec, trident::config::TenancyView, Vec<Box<dyn Trace>>) {
+    let tenants = (0..8)
+        .map(|t| TenantSpec {
+            id: format!("mini-{t}"),
+            pipeline: PipelineSpec::chain(
+                "mini",
+                vec![
+                    chain_op("src", 40.0, 0.5),
+                    chain_op("mid", 6.0, 0.5),
+                    chain_op("sink", 30.0, 0.1),
+                ],
+            ),
+            weight: 1.0,
+            source_rate: 0.0,
+        })
+        .collect();
+    let tenancy = Tenancy { tenants };
+    let (spec, view) = tenancy.merged().expect("valid 8-tenant tenancy");
+    let traces = (0..8)
+        .map(|_| {
+            let dist = ItemDist {
+                tokens_in: (4.0, 0.2),
+                tokens_out: (3.0, 0.2),
+                pixels_m: (0.0, 0.1),
+                frames: (0.0, 0.0),
+                size_mb: (-1.0, 0.1),
+            };
+            Box::new(PhasedTrace::new(vec![Phase { regime: 0, count: 60, sampler: dist }]))
+                as Box<dyn Trace>
+        })
+        .collect();
+    (spec, view, traces)
+}
+
+fn place_mod4(
+    add: &mut dyn FnMut(usize, usize, Vec<f64>) -> Result<usize, SimError>,
+    spec: &PipelineSpec,
+) {
+    for (op, o) in spec.operators.iter().enumerate() {
+        let theta = o.config_space.default_config();
+        let placed = (0..4).any(|probe| add(op, (op + probe) % 4, theta.clone()).is_ok());
+        assert!(placed, "placement failed for op {op}");
+    }
+}
+
+/// The shared dynamics script for the oversubscription pins (a macro so
+/// the serial `PipelineSim` and the `ShardedSim` facade — same method
+/// names, no shared trait — run the identical call sequence): fail node 1
+/// mid-run, dip node 0's bandwidth, recover both, re-place the dead ops,
+/// then drive several more windows.  Every mutation lands between
+/// windows, exercising the published-buffer invalidation fallback.
+macro_rules! drive_dynamics {
+    ($sim:expr, $requeue:expr, $spec:expr) => {{
+        $sim.run_until(20.0);
+        let lost = $sim.fail_node(1, $requeue);
+        $sim.run_until(30.0);
+        $sim.set_bandwidth_factor(0, 0.5);
+        $sim.run_until(40.0);
+        $sim.set_node_up(1);
+        $sim.set_bandwidth_factor(0, 1.0);
+        for (op, o) in $spec.operators.iter().enumerate() {
+            if op % 4 == 1 {
+                $sim.add_instance(op, 1, o.config_space.default_config())
+                    .expect("node 1 is back up");
+            }
+        }
+        for w in 1..=8 {
+            $sim.run_until(40.0 + (w as f64) * 15.0);
+        }
+        lost
+    }};
+}
+
+/// The regime the pool exists for — more shards than workers — with
+/// scripted dynamics under both recovery policies: every (K, W) grid
+/// point, oversubscribed K > W included, partitions the serial run's
+/// ledgers exactly.
+#[test]
+fn sharded_oversubscribed_pool_partitions_serial_under_dynamics() {
+    for requeue in [true, false] {
+        let (spec, view, traces) = eight_tenant_scenario();
+        let serial_spec = spec.clone();
+        let mut serial = PipelineSim::new_tenancy(spec, view, four_node_cluster(), traces, 21);
+        place_mod4(&mut |op, node, theta| serial.add_instance(op, node, theta), &serial_spec);
+        let serial_lost = drive_dynamics!(serial, requeue, serial_spec);
+        let tenant_rows = |emitted: &dyn Fn(usize) -> u64,
+                           out: &dyn Fn(usize) -> u64,
+                           lost: &dyn Fn(usize) -> u64,
+                           thr: &dyn Fn(usize) -> u64| {
+            (0..8).map(|t| (emitted(t), out(t), lost(t), thr(t))).collect::<Vec<_>>()
+        };
+        let serial_key = (
+            serial.engine.events_processed,
+            serial.items_emitted,
+            serial.out_records,
+            serial.processed_total.clone(),
+            tenant_rows(
+                &|t| serial.items_emitted_t[t],
+                &|t| serial.out_records_t[t],
+                &|t| serial.lost_items_t[t],
+                &|t| serial.tenant_throughput(t).to_bits(),
+            ),
+            serial.now().to_bits(),
+            serial_lost,
+        );
+        assert!(serial_key.2 > 0, "pipeline must keep flowing after recovery");
+        for &(k, w) in KW_GRID {
+            let (spec, view, traces) = eight_tenant_scenario();
+            let sh_spec = spec.clone();
+            let mut sh = ShardedSim::new_tenancy(spec, view, four_node_cluster(), traces, 21, k);
+            sh.set_workers(w);
+            place_mod4(&mut |op, node, theta| sh.add_instance(op, node, theta), &sh_spec);
+            let lost = drive_dynamics!(sh, requeue, sh_spec);
+            let sharded_key = (
+                sh.events_processed(),
+                sh.items_emitted(),
+                sh.out_records(),
+                (0..sh.spec.n_ops()).map(|op| sh.processed_total(op)).collect::<Vec<_>>(),
+                tenant_rows(
+                    &|t| sh.items_emitted_t(t),
+                    &|t| sh.out_records_t(t),
+                    &|t| sh.lost_items_t(t),
+                    &|t| sh.tenant_throughput(t).to_bits(),
+                ),
+                sh.now().to_bits(),
+                lost,
+            );
+            assert_eq!(
+                serial_key, sharded_key,
+                "K={k} W={w} requeue={requeue} diverged from serial"
+            );
+        }
+    }
+}
+
+/// The two clamps the bench artifact records as `k_effective` /
+/// `workers_effective`: K clamps to the tenant count, and W clamps to
+/// [1, K] (including W requested above K, and W = 0 meaning auto).
+#[test]
+fn shard_and_worker_clamps() {
+    // 8 tenants, K = 3: W clamps against K, not the tenant count.
+    let (spec, view, traces) = eight_tenant_scenario();
+    let mut sh = ShardedSim::new_tenancy(spec, view, four_node_cluster(), traces, 3, 3);
+    assert_eq!(sh.shard_count(), 3);
+    sh.set_workers(16);
+    assert_eq!(sh.workers_effective(), 3, "W > K must clamp to K");
+    sh.set_workers(1);
+    assert_eq!(sh.workers_effective(), 1);
+    sh.set_workers(0);
+    let auto = sh.workers_effective();
+    assert!((1..=3).contains(&auto), "auto W must stay within [1, K], got {auto}");
+
+    // 2 tenants, K = 8: K clamps first, then W clamps to the clamped K.
+    let tenancy = Tenancy {
+        tenants: vec![
+            TenantSpec { id: "pdf".into(), pipeline: pdf::pipeline(), weight: 1.0, source_rate: 0.0 },
+            TenantSpec {
+                id: "speech".into(),
+                pipeline: speech::pipeline(),
+                weight: 1.0,
+                source_rate: 0.0,
+            },
+        ],
+    };
+    let (spec, view) = tenancy.merged().expect("valid tenancy");
+    let traces: Vec<Box<dyn Trace>> =
+        vec![Box::new(pdf::trace(10)), Box::new(speech::trace(10))];
+    let mut sh2 = ShardedSim::new_tenancy(spec, view, cluster(), traces, 1, 8);
+    assert_eq!(sh2.shard_count(), 2, "K = 8 must clamp to the 2 tenants");
+    sh2.set_workers(4);
+    assert_eq!(sh2.workers_effective(), 2, "W = 4 must clamp to the clamped K = 2");
 }
