@@ -240,6 +240,7 @@ impl SchedulingPolicy for Ds2 {
             routes: None,
             transitions: TransitionCmd::AllAtOnce,
             milp_ms: None,
+            stats: None,
         }
     }
 }
@@ -291,6 +292,7 @@ impl SchedulingPolicy for RayDataAutoscaler {
             routes: None,
             transitions: TransitionCmd::AllAtOnce,
             milp_ms: None,
+            stats: None,
         }
     }
 }
@@ -366,6 +368,7 @@ impl SchedulingPolicy for ContTune {
             routes: None,
             transitions: TransitionCmd::AllAtOnce,
             milp_ms: None,
+            stats: None,
         }
     }
 }

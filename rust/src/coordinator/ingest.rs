@@ -13,7 +13,7 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use crate::config::TridentConfig;
+use crate::config::{Json, TridentConfig};
 use crate::observation::{CapacityEstimator, ObsConfig, UsefulTimeEstimator};
 use crate::sim::{ItemAttrs, OpMetrics, ShardedSim};
 
@@ -110,6 +110,22 @@ impl Coordinator {
                             self.sim.restart_with_config(victim, cur);
                             let cold = self.sim.spec.operators[i].cold_s;
                             self.sim.note_oom(i, cold);
+                            // Probe OOMs bypass the executor's OOM path, so
+                            // the flight recorder logs them here — without
+                            // this the trace's kill count would undercount
+                            // the RunReport's.
+                            if let Some(ts) = self.trace.as_mut() {
+                                ts.sim_event(
+                                    self.sim.now(),
+                                    "oom",
+                                    vec![
+                                        ("op", Json::str(&self.sim.spec.operators[i].name)),
+                                        ("op_idx", Json::num(i as f64)),
+                                        ("inst", Json::num(victim as f64)),
+                                        ("probe", Json::Bool(true)),
+                                    ],
+                                );
+                            }
                         }
                     }
                 }

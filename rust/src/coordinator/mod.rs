@@ -39,12 +39,14 @@ pub use report::{RunReport, TenantReport};
 use std::collections::HashMap;
 
 use crate::adaptation::OperatorAdaptation;
-use crate::config::{ClusterSpec, PipelineSpec, Tenancy, TridentConfig};
+use crate::config::{ClusterSpec, Json, PipelineSpec, Tenancy, TridentConfig};
 use crate::dynamics::{ClusterEvent, DynamicsSpec, EventReport, RecoveryPolicy, TimedEvent};
 use crate::observation::{CapacityEstimator, ObsConfig, UsefulTimeEstimator};
 use crate::runtime::GpBackend;
 use crate::scheduling::RollingState;
 use crate::sim::{ItemAttrs, OpMetrics, ShardedSim};
+use crate::solver::MilpStats;
+use crate::trace::{TraceFormat, TraceSink};
 use crate::workload::Trace;
 
 use ingest::EstimatorBank;
@@ -103,6 +105,17 @@ pub struct Coordinator {
     /// the consecutive-recovered-window streak behind `recovered_s`.
     event_reports: Vec<EventReport>,
     recovery_streak: Vec<u32>,
+    /// Flight recorder (`None` = tracing off, the zero-overhead state:
+    /// the loop pays one `Option` check per site and allocates nothing).
+    trace: Option<Box<TraceSink>>,
+    /// Where to persist the trace when a drive finishes.
+    trace_out: Option<(String, TraceFormat)>,
+    /// Union of every committed plan's solver counters (RunReport's
+    /// per-phase solver breakdown).
+    milp_stats: MilpStats,
+    /// Scheduling rounds that committed a plan (placement / routes /
+    /// transitions) — a `Plan::keep` round is consulted, not committed.
+    plans_committed: u64,
 }
 
 /// Propagate a source item's mean attrs through the pipeline's child
@@ -302,6 +315,10 @@ impl Coordinator {
             replan_pending: false,
             event_reports: Vec::new(),
             recovery_streak: Vec::new(),
+            trace: None,
+            trace_out: None,
+            milp_stats: MilpStats::default(),
+            plans_committed: 0,
         })
     }
 
@@ -332,6 +349,29 @@ impl Coordinator {
         self.timeline_built = false;
         self.next_event = 0;
         Ok(())
+    }
+
+    /// Turn the flight recorder on (idempotent).  The contract that makes
+    /// this safe to leave on in experiments: recording consumes no RNG
+    /// draws, never re-orders executor events, and the parity suite pins
+    /// bit-identical [`RunReport`]s with tracing on vs off.
+    pub fn enable_trace(&mut self) {
+        if self.trace.is_none() {
+            self.trace = Some(Box::new(TraceSink::new()));
+        }
+        self.sim.set_trace_ooms(true);
+    }
+
+    /// Enable tracing and write the recording to `path` when the next
+    /// drive finishes (JSONL or Chrome trace-event JSON).
+    pub fn set_trace(&mut self, path: &str, format: TraceFormat) {
+        self.enable_trace();
+        self.trace_out = Some((path.to_string(), format));
+    }
+
+    /// Detach the recorded trace (e.g. to summarize in-process).
+    pub fn take_trace(&mut self) -> Option<Box<TraceSink>> {
+        self.trace.take()
     }
 
     /// Tenants the scheduler should still plan for: active ones, plus
@@ -366,6 +406,7 @@ impl Coordinator {
             .map(|d| d.recovery == RecoveryPolicy::Requeue)
             .unwrap_or(true);
         let mut lost = 0u64;
+        let mut invalidated_ops: Vec<usize> = Vec::new();
         let label = match &te.event {
             ClusterEvent::NodeFail { node } => {
                 // Includes Draining instances (the crash kills those too,
@@ -378,6 +419,7 @@ impl Coordinator {
                     let live = self.sim.instances_of(i).len() as u32;
                     self.rolling[i].on_capacity_loss(live);
                 }
+                invalidated_ops = affected;
                 format!("node_fail(node {node})")
             }
             ClusterEvent::NodeRecover { node } => {
@@ -406,6 +448,7 @@ impl Coordinator {
                 // their samples are stale now.
                 for i in self.sim.ops_on_node(*node) {
                     self.estimators[i].invalidate();
+                    invalidated_ops.push(i);
                 }
                 format!("bandwidth_degrade(node {node}, x{factor})")
             }
@@ -415,14 +458,37 @@ impl Coordinator {
                 // the link was squeezed are just as stale now.
                 for i in self.sim.ops_on_node(*node) {
                     self.estimators[i].invalidate();
+                    invalidated_ops.push(i);
                 }
                 format!("bandwidth_restore(node {node})")
             }
         };
+        let baseline_thr = self.recent_throughput();
+        if let Some(ts) = self.trace.as_mut() {
+            ts.sim_event(
+                te.at_s,
+                "dynamics",
+                vec![
+                    ("label", Json::str(&label)),
+                    ("lost", Json::num(lost as f64)),
+                    ("baseline_thr", Json::num(baseline_thr)),
+                ],
+            );
+            for &i in &invalidated_ops {
+                ts.sim_event(
+                    te.at_s,
+                    "invalidation",
+                    vec![
+                        ("op", Json::str(&self.sim.spec.operators[i].name)),
+                        ("reason", Json::str("topology")),
+                    ],
+                );
+            }
+        }
         self.event_reports.push(EventReport {
             at_s: te.at_s,
             label,
-            baseline_thr: self.recent_throughput(),
+            baseline_thr,
             replan_s: None,
             recovered_s: None,
             lost_records: lost,
@@ -436,6 +502,7 @@ impl Coordinator {
     /// two consecutive windows (one noisy window must not declare
     /// victory).
     fn track_recovery(&mut self, t: f64, thr: f64) {
+        let mut recovered: Vec<(String, f64)> = Vec::new();
         for (ev, streak) in self.event_reports.iter_mut().zip(&mut self.recovery_streak) {
             // No pre-event traffic ⇒ no baseline to recover to: leave
             // recovered_s undefined instead of declaring instant victory
@@ -447,19 +514,189 @@ impl Coordinator {
                 *streak += 1;
                 if *streak >= 2 {
                     ev.recovered_s = Some(t - ev.at_s);
+                    if self.trace.is_some() {
+                        recovered.push((ev.label.clone(), t - ev.at_s));
+                    }
                 }
             } else {
                 *streak = 0;
+            }
+        }
+        if let Some(ts) = self.trace.as_mut() {
+            for (label, latency) in recovered {
+                ts.sim_event(
+                    t,
+                    "recover",
+                    vec![("label", Json::str(&label)), ("latency_s", Json::num(latency))],
+                );
             }
         }
     }
 
     /// Stamp time-to-replan on events whose re-plan just committed.
     fn mark_replanned(&mut self, t: f64) {
+        let mut stamped: Vec<(String, f64)> = Vec::new();
         for ev in &mut self.event_reports {
             if ev.replan_s.is_none() {
-                ev.replan_s = Some((t - ev.at_s).max(0.0));
+                let latency = (t - ev.at_s).max(0.0);
+                ev.replan_s = Some(latency);
+                if self.trace.is_some() {
+                    stamped.push((ev.label.clone(), latency));
+                }
             }
+        }
+        if let Some(ts) = self.trace.as_mut() {
+            for (label, latency) in stamped {
+                ts.sim_event(
+                    t,
+                    "replan",
+                    vec![("label", Json::str(&label)), ("latency_s", Json::num(latency))],
+                );
+            }
+        }
+    }
+
+    /// Record one scheduling round's decision: a sim-lane `plan` record
+    /// (diff size vs the pre-application placement, transition shape) and
+    /// — when the policy ran the MILP — a wall-lane `solve` record with
+    /// the full per-phase solver breakdown.
+    fn emit_plan_records(&mut self, plan: &Plan, placement: &[Vec<u32>], acted: bool) {
+        let now = self.sim.now();
+        let placement_diff: u64 = plan
+            .placement
+            .as_ref()
+            .map(|x| {
+                x.iter()
+                    .zip(placement)
+                    .map(|(new_row, old_row)| {
+                        new_row
+                            .iter()
+                            .zip(old_row)
+                            .map(|(&n, &o)| (i64::from(n) - i64::from(o)).unsigned_abs())
+                            .sum::<u64>()
+                    })
+                    .sum()
+            })
+            .unwrap_or(0);
+        let (transition, b_sum) = match &plan.transitions {
+            TransitionCmd::None => ("none", 0u64),
+            TransitionCmd::AllAtOnce => ("all_at_once", 0),
+            TransitionCmd::Rolling(b) => ("rolling", b.iter().map(|&x| u64::from(x)).sum()),
+        };
+        let Some(ts) = self.trace.as_mut() else { return };
+        ts.sim_event(
+            now,
+            "plan",
+            vec![
+                ("acted", Json::Bool(acted)),
+                ("placement_diff", Json::num(placement_diff as f64)),
+                ("transition", Json::str(transition)),
+                ("b_sum", Json::num(b_sum as f64)),
+                ("routes", Json::Bool(plan.routes.is_some())),
+            ],
+        );
+        if let (Some(ms), Some(st)) = (plan.milp_ms, plan.stats.as_ref()) {
+            // Budget-bound solves leave machine-dependent counters, and the
+            // gap can be non-finite when no incumbent exists — everything
+            // here lives on the wall lane, sanitized for strict JSON.
+            let gap = if st.gap.is_finite() { st.gap } else { -1.0 };
+            ts.wall_event(
+                now,
+                "solve",
+                vec![
+                    ("milp_ms", Json::num(ms)),
+                    ("nodes", Json::num(st.nodes as f64)),
+                    ("lp_solves", Json::num(st.lp_solves as f64)),
+                    ("gap", Json::num(gap)),
+                    ("pivots", Json::num(st.pivots as f64)),
+                    ("phase1_pivots", Json::num(st.phase1_pivots as f64)),
+                    ("warm_solves", Json::num(st.warm_solves as f64)),
+                    ("cold_solves", Json::num(st.cold_solves as f64)),
+                    ("dense_fallbacks", Json::num(st.dense_fallbacks as f64)),
+                    ("root_warm", Json::Bool(st.root_warm)),
+                    ("warm_hit_rate", Json::num(st.warm_hit_rate())),
+                    ("build_ms", Json::num(st.build_ms)),
+                    ("root_lp_ms", Json::num(st.root_lp_ms)),
+                    ("bnb_ms", Json::num(st.bnb_ms)),
+                    ("pricing_ms", Json::num(st.pricing_ms)),
+                    ("pricing_rounds", Json::num(st.pricing_rounds as f64)),
+                    ("columns", Json::num(st.columns as f64)),
+                ],
+            );
+        }
+    }
+
+    /// Per-window flight-recorder drain: simulator OOM kills (buffered
+    /// during the window, merged K-invariantly), the window boundary, the
+    /// per-op window summaries, and a cumulative wall-lane pool snapshot.
+    fn emit_window_records(
+        &mut self,
+        t0: f64,
+        t1: f64,
+        thr: f64,
+        metrics: &[OpMetrics],
+        outs: &[u64],
+    ) {
+        let ooms = self.sim.take_trace_ooms();
+        let index = self.series.len().saturating_sub(1);
+        let pool = self.sim.pool_telemetry();
+        let Some(ts) = self.trace.as_mut() else { return };
+        for (t, op, gid) in ooms {
+            ts.sim_event(
+                t,
+                "oom",
+                vec![
+                    ("op", Json::str(&self.sim.spec.operators[op].name)),
+                    ("op_idx", Json::num(op as f64)),
+                    ("inst", Json::num(gid as f64)),
+                ],
+            );
+        }
+        ts.sim_event(
+            t1,
+            "window",
+            vec![
+                ("index", Json::num(index as f64)),
+                ("t0", Json::num(t0)),
+                ("t1", Json::num(t1)),
+                ("thr", Json::num(thr)),
+                ("outs", Json::Arr(outs.iter().map(|&o| Json::num(o as f64)).collect())),
+            ],
+        );
+        for m in metrics {
+            if m.records_in == 0 && m.records_out == 0 && m.oom_events == 0 {
+                continue; // idle op: keep the trace proportional to activity
+            }
+            ts.sim_event(
+                t1,
+                "op_window",
+                vec![
+                    ("op", Json::str(&self.sim.spec.operators[m.op].name)),
+                    ("records_in", Json::num(m.records_in as f64)),
+                    ("records_out", Json::num(m.records_out as f64)),
+                    ("rate_per_inst", Json::num(m.rate_per_inst)),
+                    ("utilization", Json::num(m.utilization)),
+                    ("queue_begin", Json::num(m.queue_begin as f64)),
+                    ("queue_end", Json::num(m.queue_end as f64)),
+                    ("queue_avg", Json::num(m.queue_avg)),
+                    ("peak_mem_mb", Json::num(m.peak_mem_mb)),
+                    ("oom_events", Json::num(f64::from(m.oom_events))),
+                    ("n_active", Json::num(m.n_active as f64)),
+                ],
+            );
+        }
+        if let Some(p) = pool {
+            ts.wall_event(
+                t1,
+                "pool",
+                vec![
+                    ("workers", Json::num(p.workers as f64)),
+                    ("steals", Json::num(p.steals as f64)),
+                    ("epochs", Json::num(p.epochs as f64)),
+                    ("wait_ms", Json::num(p.wait_ms)),
+                    ("tasks", Json::Arr(p.tasks.iter().map(|&x| Json::num(x as f64)).collect())),
+                ],
+            );
         }
     }
 
@@ -503,9 +740,18 @@ impl Coordinator {
         if let Some(ms) = plan.milp_ms {
             self.milp_ms.push(ms);
         }
+        if let Some(st) = plan.stats.as_ref() {
+            self.milp_stats.absorb(st);
+        }
         let acted = plan.placement.is_some()
             || plan.routes.is_some()
             || plan.transitions != TransitionCmd::None;
+        if acted {
+            self.plans_committed += 1;
+        }
+        if self.trace.is_some() {
+            self.emit_plan_records(&plan, &placement, acted);
+        }
         if let Some(x) = &plan.placement {
             self.apply_placement(x);
         }
@@ -558,12 +804,26 @@ impl Coordinator {
             }
             self.timeline_built = true;
         }
+        if self.trace.as_ref().is_some_and(|ts| ts.is_empty()) {
+            let fields = vec![
+                ("pipeline", Json::str(&self.sim.spec.name)),
+                ("policy", Json::str(self.variant.policy.name())),
+                ("seed", Json::num(self.seed as f64)),
+                ("shards", Json::num(self.sim.shard_count() as f64)),
+                ("workers", Json::num(self.sim.workers_effective() as f64)),
+                ("tenants", Json::num(self.sim.tenancy.n_tenants() as f64)),
+            ];
+            if let Some(ts) = self.trace.as_mut() {
+                ts.header(fields);
+            }
+        }
         let mut next_sched = t + self.cfg.t_sched_s;
         while t < end
             && !(until_drained
                 && self.sim.drained()
                 && self.next_event >= self.timeline.len())
         {
+            let wstart = t;
             t = (t + self.cfg.metrics_interval_s).min(end);
             // Inject timeline events at their exact sim timestamps inside
             // this window: advance the executor to the event time, apply,
@@ -589,6 +849,9 @@ impl Coordinator {
             self.series.push((t, thr));
             self.track_recovery(t, thr);
             self.ingest_window(&metrics);
+            if self.trace.is_some() {
+                self.emit_window_records(wstart, t, thr, &metrics, &outs);
+            }
             self.last_metrics = Some(metrics);
             // Event-driven re-plan: a topology/tenancy event re-plans at
             // the very next metrics window (within one
@@ -610,7 +873,61 @@ impl Coordinator {
             }
         }
         let duration = if until_drained { self.sim.now() } else { max_s };
-        self.report(duration)
+        let report = self.report(duration);
+        if self.trace.is_some() {
+            self.emit_run_summary(&report);
+        }
+        if let Some((path, fmt)) = self.trace_out.clone() {
+            if let Some(ts) = self.trace.as_ref() {
+                if let Err(e) = ts.write(&path, fmt) {
+                    eprintln!("trace: failed to write {path}: {e}");
+                }
+            }
+        }
+        report
+    }
+
+    /// Final sim-lane record: the producing run's own `RunReport` totals,
+    /// which `trace-summary --check` (and the analyzer's `check()`) diffs
+    /// against the aggregates recomputed from the records themselves.
+    fn emit_run_summary(&mut self, report: &RunReport) {
+        let t_end = self.sim.now();
+        let replans = report.events.iter().filter(|e| e.replan_s.is_some()).count();
+        let recovers = report.events.iter().filter(|e| e.recovered_s.is_some()).count();
+        let tenants: Vec<Json> = report
+            .tenants
+            .iter()
+            .map(|tr| {
+                Json::obj(vec![
+                    ("id", Json::str(&tr.id)),
+                    ("items", Json::num(tr.items_processed as f64)),
+                    ("throughput", Json::num(tr.throughput)),
+                ])
+            })
+            .collect();
+        let windows = self.series.len();
+        let plans_committed = self.plans_committed;
+        let Some(ts) = self.trace.as_mut() else { return };
+        ts.sim_event(
+            t_end,
+            "run_summary",
+            vec![
+                ("duration_s", Json::num(report.duration_s)),
+                ("throughput", Json::num(report.throughput)),
+                ("items", Json::num(report.items_processed as f64)),
+                ("oom_events", Json::num(f64::from(report.oom_events))),
+                ("oom_downtime_s", Json::num(report.oom_downtime_s)),
+                ("config_transitions", Json::num(report.config_transitions as f64)),
+                ("solves", Json::num(report.milp_ms.len() as f64)),
+                ("plans_committed", Json::num(plans_committed as f64)),
+                ("dynamics_events", Json::num(report.events.len() as f64)),
+                ("replans", Json::num(replans as f64)),
+                ("recovers", Json::num(recovers as f64)),
+                ("lost_records", Json::num(report.lost_records as f64)),
+                ("windows", Json::num(windows as f64)),
+                ("tenants", Json::Arr(tenants)),
+            ],
+        );
     }
 
     /// Drive the closed loop until the input trace is fully processed

@@ -185,12 +185,21 @@ pub struct Plan {
     pub transitions: TransitionCmd,
     /// Wall-clock of the MILP solve backing this plan, ms (RQ6).
     pub milp_ms: Option<f64>,
+    /// Full solver counters for the solve backing this plan (flight
+    /// recorder's wall lane + the RunReport solver breakdown).
+    pub stats: Option<crate::solver::MilpStats>,
 }
 
 impl Plan {
     /// Keep the current deployment as-is.
     pub fn keep() -> Plan {
-        Plan { placement: None, routes: None, transitions: TransitionCmd::None, milp_ms: None }
+        Plan {
+            placement: None,
+            routes: None,
+            transitions: TransitionCmd::None,
+            milp_ms: None,
+            stats: None,
+        }
     }
 }
 
@@ -252,9 +261,10 @@ impl SchedulingPolicy for TridentPolicy {
             ),
         };
         let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let stats = plan.stats.clone();
         if plan.t_pred <= 0.0 {
             // Keep the previous feasible plan (paper §7).
-            return Plan { milp_ms: Some(ms), ..Plan::keep() };
+            return Plan { milp_ms: Some(ms), stats: Some(stats), ..Plan::keep() };
         }
         if std::env::var("TRIDENT_DEBUG").is_ok() {
             eprintln!(
@@ -280,6 +290,7 @@ impl SchedulingPolicy for TridentPolicy {
                 routes: ctx.variant.placement_aware.then_some(plan.route),
                 transitions: TransitionCmd::Rolling(plan.b),
                 milp_ms: Some(ms),
+                stats: Some(stats),
             };
         }
         Plan {
@@ -290,6 +301,7 @@ impl SchedulingPolicy for TridentPolicy {
                 .then(|| scope.expand_routes(&plan.route)),
             transitions: TransitionCmd::Rolling(scope.expand_b(&plan.b)),
             milp_ms: Some(ms),
+            stats: Some(stats),
         }
     }
 }

@@ -41,6 +41,30 @@ pub struct RunReport {
     pub config_transitions: u64,
     /// Wall-clock of each MILP solve, ms.
     pub milp_ms: Vec<f64>,
+    /// Scheduling rounds that committed a plan (placement / routes /
+    /// transitions); a keep-everything round is consulted, not committed.
+    pub plans_committed: u64,
+    /// Simplex pivots across every solve (run-lifetime union of
+    /// [`MilpStats`](crate::solver::MilpStats)).
+    pub milp_pivots: u64,
+    /// Branch-and-bound nodes expanded across every solve.
+    pub milp_bnb_nodes: u64,
+    /// Dantzig-Wolfe pricing rounds / columns generated across solves.
+    pub milp_pricing_rounds: u64,
+    pub milp_columns: u64,
+    /// Warm-start hit rate over all LP solves (0 when nothing solved).
+    pub milp_warm_hit_rate: f64,
+    /// Solver wall per phase, ms: build / root-LP / B&B / pricing.
+    pub milp_phase_ms: [f64; 4],
+    /// Shard-pool telemetry (zeros on the sequential K=1 / W=1 path).
+    pub pool_steals: u64,
+    pub pool_epochs: u64,
+    /// Wall-clock the drive loop spent blocked on pool epoch drains, ms.
+    pub pool_wait_ms: f64,
+    /// Lifetime tasks finished per pool worker.
+    pub pool_tasks: Vec<u64>,
+    /// Worker threads the sharded executor actually runs.
+    pub workers_effective: usize,
     /// Mean per-invocation overhead of obs / adaptation layers, ms.
     pub obs_overhead_ms: f64,
     pub adapt_overhead_ms: f64,
@@ -67,6 +91,7 @@ impl Coordinator {
             }
         };
         let view = &self.sim.tenancy;
+        let pool = self.sim.pool_telemetry().unwrap_or_default();
         RunReport {
             pipeline: self.sim.spec.name.clone(),
             variant: self.variant.policy.name().to_string(),
@@ -87,6 +112,23 @@ impl Coordinator {
             oom_downtime_s: self.sim.oom_downtime_s_total(),
             config_transitions: self.transitions,
             milp_ms: self.milp_ms.clone(),
+            plans_committed: self.plans_committed,
+            milp_pivots: self.milp_stats.pivots as u64,
+            milp_bnb_nodes: self.milp_stats.nodes as u64,
+            milp_pricing_rounds: self.milp_stats.pricing_rounds as u64,
+            milp_columns: self.milp_stats.columns as u64,
+            milp_warm_hit_rate: self.milp_stats.warm_hit_rate(),
+            milp_phase_ms: [
+                self.milp_stats.build_ms,
+                self.milp_stats.root_lp_ms,
+                self.milp_stats.bnb_ms,
+                self.milp_stats.pricing_ms,
+            ],
+            pool_steals: pool.steals,
+            pool_epochs: pool.epochs,
+            pool_wait_ms: pool.wait_ms,
+            pool_tasks: pool.tasks,
+            workers_effective: self.sim.workers_effective(),
             obs_overhead_ms: mean(&self.obs_ms),
             adapt_overhead_ms: mean(&self.adapt_ms),
             estimator_mape: self

@@ -7,6 +7,7 @@
 use std::time::Duration;
 
 use crate::baselines::pack;
+use crate::config::Json;
 use crate::scheduling::{self, RollingState};
 use crate::sim::OpMetrics;
 
@@ -129,9 +130,22 @@ impl Coordinator {
                 if have.len() < want {
                     let theta = self.launch_config(op);
                     for _ in have.len()..want {
-                        // Capacity races can reject; skip silently (the next
-                        // round repairs).
-                        let _ = self.sim.add_instance(op, node, theta.clone());
+                        // Capacity races can reject; the next round repairs,
+                        // but the flight recorder keeps the rejection.
+                        if let Err(e) = self.sim.add_instance(op, node, theta.clone()) {
+                            if let Some(ts) = self.trace.as_mut() {
+                                let err = e.to_string();
+                                ts.sim_event(
+                                    self.sim.now(),
+                                    "admission_error",
+                                    vec![
+                                        ("op", Json::str(&self.sim.spec.operators[op].name)),
+                                        ("node", Json::num(node as f64)),
+                                        ("error", Json::str(&err)),
+                                    ],
+                                );
+                            }
+                        }
                     }
                 } else if have.len() > want {
                     // Drain the newest instances, but never the candidate-
@@ -219,12 +233,35 @@ impl Coordinator {
         for id in &old {
             self.sim.restart_with_config(*id, cand.clone());
         }
+        if !old.is_empty() {
+            if let Some(ts) = self.trace.as_mut() {
+                ts.sim_event(
+                    self.sim.now(),
+                    "rolling_wave",
+                    vec![
+                        ("op", Json::str(&self.sim.spec.operators[i].name)),
+                        ("batch", Json::num(old.len() as f64)),
+                        ("cold_s", Json::num(self.sim.spec.operators[i].cold_s)),
+                    ],
+                );
+            }
+        }
         if !old.is_empty() && !self.invalidated[i] {
             self.estimators[i].invalidate();
             self.invalidate_downstream_joins(i);
             self.invalidated[i] = true;
             self.transitions += 1;
             self.last_transition_t[i] = self.sim.now();
+            if let Some(ts) = self.trace.as_mut() {
+                ts.sim_event(
+                    self.sim.now(),
+                    "invalidation",
+                    vec![
+                        ("op", Json::str(&self.sim.spec.operators[i].name)),
+                        ("reason", Json::str("transition")),
+                    ],
+                );
+            }
         }
         if !self.rolling[i].in_transition() {
             self.invalidated[i] = false;
@@ -269,6 +306,26 @@ impl Coordinator {
                 self.invalidate_downstream_joins(i);
                 self.transitions += 1;
                 self.last_transition_t[i] = self.sim.now();
+                if let Some(ts) = self.trace.as_mut() {
+                    let now = self.sim.now();
+                    ts.sim_event(
+                        now,
+                        "rolling_wave",
+                        vec![
+                            ("op", Json::str(&self.sim.spec.operators[i].name)),
+                            ("batch", Json::num(f64::from(n_inst))),
+                            ("cold_s", Json::num(self.sim.spec.operators[i].cold_s)),
+                        ],
+                    );
+                    ts.sim_event(
+                        now,
+                        "invalidation",
+                        vec![
+                            ("op", Json::str(&self.sim.spec.operators[i].name)),
+                            ("reason", Json::str("transition")),
+                        ],
+                    );
+                }
             }
         }
     }
@@ -288,6 +345,16 @@ impl Coordinator {
                         RollingState::new(default, self.sim.instances_of(i).len() as u32);
                     self.estimators[i].invalidate();
                     self.recent_ooms[i] = 0;
+                    if let Some(ts) = self.trace.as_mut() {
+                        ts.sim_event(
+                            self.sim.now(),
+                            "invalidation",
+                            vec![
+                                ("op", Json::str(&self.sim.spec.operators[i].name)),
+                                ("reason", Json::str("oom_fallback")),
+                            ],
+                        );
+                    }
                 }
             }
         }

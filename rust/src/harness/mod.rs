@@ -282,6 +282,18 @@ mod tests {
             oom_downtime_s: 0.0,
             config_transitions: 0,
             milp_ms: vec![],
+            plans_committed: 0,
+            milp_pivots: 0,
+            milp_bnb_nodes: 0,
+            milp_pricing_rounds: 0,
+            milp_columns: 0,
+            milp_warm_hit_rate: 0.0,
+            milp_phase_ms: [0.0; 4],
+            pool_steals: 0,
+            pool_epochs: 0,
+            pool_wait_ms: 0.0,
+            pool_tasks: vec![],
+            workers_effective: 0,
             obs_overhead_ms: 0.0,
             adapt_overhead_ms: 0.0,
             estimator_mape: Default::default(),

@@ -41,4 +41,5 @@ pub mod scheduling;
 pub mod sim;
 pub mod solver;
 pub mod testutil;
+pub mod trace;
 pub mod workload;

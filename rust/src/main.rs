@@ -22,6 +22,10 @@
 //!               [--milp-budget-ms 10000] [--assert-speedup 2]  # RQ8 perf trajectory
 //!               [--assert-shard-speedup 1.5]   # K=4 vs K=1 scaling gate (stress-512)
 //!               [--assert-worker-speedup 1.3]  # W=4 vs W=1 gate (oversubscribed stress-10k)
+//!               [--assert-trace-overhead 5]    # flight-recorder overhead gate (two-tenant-96)
+//! trident run   --pipeline pdf --trace run.jsonl [--trace-format jsonl|chrome]
+//!                                                 # flight-recorder trace (also compare|sweep)
+//! trident trace-summary run.jsonl                 # bottleneck attribution + RunReport cross-check
 //! ```
 //!
 //! A tenancy JSON file:
@@ -36,6 +40,7 @@ use trident::dynamics::{DynamicsSpec, RecoveryPolicy};
 use trident::harness::{self, Job};
 use trident::report::{f2, Table};
 use trident::sim::ItemAttrs;
+use trident::trace::TraceFormat;
 use trident::workload::{pdf, speech, video, Trace};
 
 struct Args {
@@ -362,9 +367,41 @@ fn build_coordinator(args: &Args, variant: Variant, seed: u64) -> Coordinator {
     coord
 }
 
+/// `--trace <path>` (optionally `--trace-format jsonl|chrome`).  Strict:
+/// a bare `--trace`, a `--trace-format` without `--trace`, or an unknown
+/// format all abort with exit 2 instead of silently running untraced.
+fn trace_of(args: &Args) -> Option<(String, TraceFormat)> {
+    if args.flag("trace") {
+        eprintln!("--trace needs a file path");
+        std::process::exit(2);
+    }
+    if args.flag("trace-format") {
+        eprintln!("--trace-format needs a value (jsonl|chrome)");
+        std::process::exit(2);
+    }
+    let path = args.map.get("trace").cloned();
+    let fmt_s = args.map.get("trace-format").cloned();
+    if path.is_none() && fmt_s.is_some() {
+        eprintln!("--trace-format requires --trace <path>");
+        std::process::exit(2);
+    }
+    let path = path?;
+    let fmt = match fmt_s.as_deref() {
+        None => TraceFormat::Jsonl,
+        Some(s) => TraceFormat::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown --trace-format {s:?} (expected jsonl or chrome)");
+            std::process::exit(2);
+        }),
+    };
+    Some((path, fmt))
+}
+
 fn run_one(args: &Args, policy: Policy) -> trident::coordinator::RunReport {
     let variant = variant_of(args, policy);
     let mut coord = build_coordinator(args, variant, args.f64("seed", 0.0) as u64);
+    if let Some((path, fmt)) = trace_of(args) {
+        coord.set_trace(&path, fmt);
+    }
     coord.run(args.f64("duration", 1800.0))
 }
 
@@ -983,6 +1020,79 @@ fn bench_run_sharded(
     (stats, k_eff, w_eff)
 }
 
+/// One arm of the trace-overhead pair: drive the rung's sharded sim one
+/// window at a time with a per-window metrics flush (the coordinator
+/// always pays that), and — when `traced` — the flight recorder's OOM
+/// buffer plus the per-window record emission into an in-memory sink.
+/// The untraced arm flushes metrics too, so the traced/untraced wall
+/// ratio isolates what recording itself costs.  Returns (total wall ms,
+/// records emitted).
+fn bench_trace_arm(rung: &Rung, shards: usize, windows: usize, traced: bool) -> (f64, usize) {
+    let mut sim = bench_sim_sharded(rung, shards, shards);
+    let mut ts = trident::trace::TraceSink::new();
+    if traced {
+        sim.set_trace_ooms(true);
+        ts.header(vec![
+            ("pipeline", Json::str(&sim.spec.name)),
+            ("policy", Json::str("bench")),
+            ("seed", Json::num(11.0)),
+            ("shards", Json::num(sim.shard_count() as f64)),
+            ("workers", Json::num(sim.workers_effective() as f64)),
+        ]);
+    }
+    let mut total_ms = 0.0;
+    for w in 0..windows {
+        let t_end = (w + 1) as f64 * rung.window_s;
+        let (_, ms) = harness::stopwatch_ms(|| {
+            sim.run_until(t_end);
+            let (metrics, outs) = sim.flush_metrics();
+            if !traced {
+                return;
+            }
+            for (t, op, gid) in sim.take_trace_ooms() {
+                ts.sim_event(
+                    t,
+                    "oom",
+                    vec![
+                        ("op", Json::str(&sim.spec.operators[op].name)),
+                        ("op_idx", Json::num(op as f64)),
+                        ("inst", Json::num(gid as f64)),
+                    ],
+                );
+            }
+            ts.sim_event(
+                t_end,
+                "window",
+                vec![
+                    ("index", Json::num(w as f64)),
+                    ("t0", Json::num(w as f64 * rung.window_s)),
+                    ("t1", Json::num(t_end)),
+                    ("outs", Json::Arr(outs.iter().map(|&o| Json::num(o as f64)).collect())),
+                ],
+            );
+            for m in &metrics {
+                if m.records_in == 0 && m.records_out == 0 && m.oom_events == 0 {
+                    continue;
+                }
+                ts.sim_event(
+                    t_end,
+                    "op_window",
+                    vec![
+                        ("op", Json::str(&sim.spec.operators[m.op].name)),
+                        ("records_in", Json::num(m.records_in as f64)),
+                        ("records_out", Json::num(m.records_out as f64)),
+                        ("utilization", Json::num(m.utilization)),
+                        ("queue_avg", Json::num(m.queue_avg)),
+                        ("oom_events", Json::num(f64::from(m.oom_events))),
+                    ],
+                );
+            }
+        });
+        total_ms += ms;
+    }
+    (total_ms, ts.len())
+}
+
 /// The rung's MILP solve (solver cost is part of the trajectory: the
 /// scheduler must stay cheap as the sim gets fast).  Node count is capped
 /// at 512 — the stress rung's 10k-node MILP is not a thing the
@@ -1086,6 +1196,7 @@ fn bench_perf(args: &Args) {
     let mut gate_speedup: Option<f64> = None;
     let mut gate_shard_speedup: Option<f64> = None;
     let mut gate_worker_speedup: Option<f64> = None;
+    let mut gate_trace_overhead: Option<f64> = None;
     let mut failed = false;
     for &rung in &selected {
         eprintln!("rung {} ({} nodes): seed event stream...", rung.name, rung.nodes);
@@ -1169,6 +1280,23 @@ fn bench_perf(args: &Args) {
         if rung.name == "stress-10k" {
             gate_worker_speedup = Some(worker_speedup);
         }
+        // Trace-overhead arm (headline rung only): same windowed drive,
+        // metrics flushed either way, flight recorder on vs off.
+        let mut trace_json: Option<Json> = None;
+        if rung.name == "two-tenant-96" {
+            eprintln!("rung {}: trace-overhead arm (untraced)...", rung.name);
+            let (off_ms, _) = bench_trace_arm(rung, n_tenants, windows, false);
+            eprintln!("rung {}: trace-overhead arm (traced)...", rung.name);
+            let (on_ms, recs) = bench_trace_arm(rung, n_tenants, windows, true);
+            let pct = (on_ms / off_ms.max(1e-9) - 1.0) * 100.0;
+            gate_trace_overhead = Some(pct);
+            trace_json = Some(Json::obj(vec![
+                ("untraced_ms", Json::num((off_ms * 10.0).round() / 10.0)),
+                ("traced_ms", Json::num((on_ms * 10.0).round() / 10.0)),
+                ("records", Json::num(recs as f64)),
+                ("overhead_pct", Json::num((pct * 100.0).round() / 100.0)),
+            ]));
+        }
         let milp = bench_milp(rung, budget);
         table.row(vec![
             rung.name.to_string(),
@@ -1182,7 +1310,7 @@ fn bench_perf(args: &Args) {
             format!("{worker_speedup:.2}x"),
             format!("{:.0}", milp.f64_or("solve_ms", -1.0)),
         ]);
-        rung_jsons.push(Json::obj(vec![
+        let mut rung_fields = vec![
             ("name", Json::str(rung.name)),
             ("nodes", Json::num(rung.nodes as f64)),
             ("tenants", Json::num(n_tenants as f64)),
@@ -1198,7 +1326,11 @@ fn bench_perf(args: &Args) {
             ("shard_speedup_k4", Json::num((shard_speedup * 100.0).round() / 100.0)),
             ("worker_speedup_w4", Json::num((worker_speedup * 100.0).round() / 100.0)),
             ("milp", milp),
-        ]));
+        ];
+        if let Some(tj) = trace_json {
+            rung_fields.push(("trace_overhead", tj));
+        }
+        rung_jsons.push(Json::obj(rung_fields));
     }
     table.emit("bench_perf");
 
@@ -1257,6 +1389,19 @@ fn bench_perf(args: &Args) {
             }
         }
     }
+    if let Some(s) = args.map.get("assert-trace-overhead").and_then(|v| v.parse::<f64>().ok()) {
+        match gate_trace_overhead {
+            Some(got) if got > s => {
+                eprintln!("FAIL: two-tenant-96 trace overhead {got:.2}% above allowed {s}%");
+                failed = true;
+            }
+            Some(got) => println!("two-tenant-96 trace overhead {got:.2}% <= {s}%"),
+            None => {
+                eprintln!("--assert-trace-overhead requires the two-tenant-96 rung in --rungs");
+                failed = true;
+            }
+        }
+    }
     if failed {
         std::process::exit(1);
     }
@@ -1287,6 +1432,31 @@ fn main() {
             if !r.milp_ms.is_empty() {
                 let mean = r.milp_ms.iter().sum::<f64>() / r.milp_ms.len() as f64;
                 println!("MILP solves: {} (mean {:.0} ms)", r.milp_ms.len(), mean);
+                println!(
+                    "  solver: {} pivots, {} B&B nodes, {} pricing rounds ({} columns), warm-hit {:.0}%",
+                    r.milp_pivots,
+                    r.milp_bnb_nodes,
+                    r.milp_pricing_rounds,
+                    r.milp_columns,
+                    r.milp_warm_hit_rate * 100.0
+                );
+                println!(
+                    "  phases (ms): build {:.0} / root-LP {:.0} / B&B {:.0} / pricing {:.0} · {} plans committed",
+                    r.milp_phase_ms[0],
+                    r.milp_phase_ms[1],
+                    r.milp_phase_ms[2],
+                    r.milp_phase_ms[3],
+                    r.plans_committed
+                );
+            }
+            if r.pool_epochs > 0 {
+                println!(
+                    "shard pool: {} workers, {} epochs, {} steals, {:.0} ms waiting",
+                    r.workers_effective, r.pool_epochs, r.pool_steals, r.pool_wait_ms
+                );
+            }
+            if let Some(path) = args.map.get("trace") {
+                println!("trace: {path}");
             }
             if !r.events.is_empty() {
                 println!(
@@ -1325,9 +1495,15 @@ fn main() {
                 .iter()
                 .map(|&p| Job::timed(p.name(), variant_of(&args, p), seed, duration))
                 .collect();
+            let trace_cfg = trace_of(&args);
             let reports =
                 harness::run_grid(&jobs, workers, |_, job| {
-                    build_coordinator(&args, job.variant.clone(), job.seed)
+                    let mut coord = build_coordinator(&args, job.variant.clone(), job.seed);
+                    if let Some((path, fmt)) = &trace_cfg {
+                        // One trace file per grid cell, suffixed by label+seed.
+                        coord.set_trace(&format!("{path}.{}-{}", job.label, job.seed), *fmt);
+                    }
+                    coord
                 });
             let mut table = Table::new(
                 "End-to-end throughput (items/s, speedup vs Static)",
@@ -1376,8 +1552,14 @@ fn main() {
                 })
                 .collect();
             let t0 = Instant::now();
+            let trace_cfg = trace_of(&args);
             let reports = harness::run_grid(&jobs, workers, |_, job| {
-                build_coordinator(&args, job.variant.clone(), job.seed)
+                let mut coord = build_coordinator(&args, job.variant.clone(), job.seed);
+                if let Some((path, fmt)) = &trace_cfg {
+                    // One trace file per grid cell, suffixed by label+seed.
+                    coord.set_trace(&format!("{path}.{}-{}", job.label, job.seed), *fmt);
+                }
+                coord
             });
             let wall = t0.elapsed().as_secs_f64();
             let summaries = harness::summarize(&jobs, &reports);
@@ -1417,11 +1599,39 @@ fn main() {
                 wall
             );
         }
+        "trace-summary" => {
+            let path = argv
+                .get(1)
+                .filter(|s| !s.starts_with("--"))
+                .cloned()
+                .or_else(|| args.map.get("input").cloned())
+                .unwrap_or_else(|| {
+                    eprintln!("usage: trident trace-summary <trace.jsonl>");
+                    std::process::exit(2);
+                });
+            let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+                eprintln!("trace-summary: cannot read {path}: {e}");
+                std::process::exit(2);
+            });
+            let summary = trident::trace::summarize_jsonl(&text).unwrap_or_else(|e| {
+                eprintln!("trace-summary: {path}: {e}");
+                std::process::exit(2);
+            });
+            print!("{}", summary.render());
+            let errs = summary.check();
+            if !errs.is_empty() {
+                for e in &errs {
+                    eprintln!("cross-check FAIL: {e}");
+                }
+                std::process::exit(1);
+            }
+            println!("cross-check OK: aggregates match the embedded run_summary");
+        }
         "milp-bench" => milp_bench(&args),
         "bench-perf" => bench_perf(&args),
         _ => {
             println!(
-                "usage: trident <run|compare|sweep|milp-bench|bench-perf> [--pipeline pdf|video|speech] \
+                "usage: trident <run|compare|sweep|milp-bench|bench-perf|trace-summary> [--pipeline pdf|video|speech] \
                  [--pipelines pdf,speech [--weights 2,1]] [--tenancy file.json] [--policy ...] \
                  [--policies a,b,c] [--seeds N] [--jobs J] [--duration S] [--nodes N] [--seed S] \
                  [--native-gp] [--join-colocate] [--shards K] [--workers W] \
@@ -1431,7 +1641,9 @@ fn main() {
                  [--decomp-tenants N] [--assert-decomp-speedup S]   (milp-bench decomposition gate) \
                  [--windows W] [--rungs a,b] [--out BENCH_9.json] [--milp-budget-ms MS] \
                  [--assert-speedup S] [--assert-shard-speedup S] [--assert-worker-speedup S] \
-                 (bench-perf -> BENCH_9.json)"
+                 [--assert-trace-overhead PCT] (bench-perf -> BENCH_9.json) \
+                 [--trace out.jsonl [--trace-format jsonl|chrome]]   (run|compare|sweep) \
+                 trace-summary <trace.jsonl>   (bottleneck attribution + RunReport cross-check)"
             );
         }
     }

@@ -15,7 +15,7 @@ pub use engine::{Engine, Ev, InstId};
 pub use items::{Item, ItemAttrs};
 pub use metrics::{InstanceMetrics, OpMetrics};
 pub use pipeline::{InstState, PipelineSim, SimError};
-pub use pool::ShardPool;
+pub use pool::{PoolTelemetry, ShardPool};
 pub use shard::ShardedSim;
 
 #[cfg(test)]

@@ -299,6 +299,10 @@ pub struct PipelineSim {
     source_done: Vec<bool>,
     /// Previous window's queue-end per op (queue-trend signal).
     prev_q_end: Vec<usize>,
+    /// Flight-recorder OOM buffer: `(sim time, op, local instance id)`
+    /// per OOM kill, drained by the coordinator each window.  `None`
+    /// (tracing off) keeps the hot path to one branch and no allocation.
+    trace_ooms: Option<Vec<(f64, u32, u32)>>,
 }
 
 impl PipelineSim {
@@ -457,9 +461,21 @@ impl PipelineSim {
             // and drain accounting ignores them.
             source_done: (0..n_tenants).map(|t| !owned[t]).collect(),
             prev_q_end: vec![0; n_ops],
+            trace_ooms: None,
             spec,
             cluster,
         }
+    }
+
+    /// Toggle the flight-recorder OOM buffer (no effect on results: the
+    /// buffer is push-only and consumes no RNG).
+    pub fn set_trace_ooms(&mut self, on: bool) {
+        self.trace_ooms = if on { Some(Vec::new()) } else { None };
+    }
+
+    /// Drain buffered `(t, op, local instance id)` OOM kills.
+    pub fn take_trace_ooms(&mut self) -> Vec<(f64, u32, u32)> {
+        self.trace_ooms.as_mut().map(std::mem::take).unwrap_or_default()
     }
 
     pub fn now(&self) -> f64 {
@@ -1070,6 +1086,9 @@ impl PipelineSim {
             self.oom_events_total[op_idx] += 1;
             self.oom_downtime_s[op_idx] += cold;
             self.engine.after(cold, Ev::InstanceReady(InstId::of(id)));
+            if let Some(buf) = self.trace_ooms.as_mut() {
+                buf.push((now, op_idx as u32, id as u32));
+            }
             return;
         }
         inst.batch = items;

@@ -40,6 +40,13 @@ struct State {
     remaining: usize,
     /// Lifetime count of tasks served from another worker's deque.
     steals: u64,
+    /// Lifetime tasks finished per worker (telemetry only).
+    tasks: Vec<u64>,
+    /// Lifetime `run` epochs posted (telemetry only).
+    epochs: u64,
+    /// Lifetime nanoseconds `run` spent blocked on epoch drains
+    /// (wall-clock telemetry — never read on the deterministic sim lane).
+    wait_ns: u64,
     shutdown: bool,
 }
 
@@ -49,6 +56,20 @@ struct Shared {
     work: Condvar,
     /// Signals `run`: the epoch's last task finished.
     done: Condvar,
+}
+
+/// Snapshot of the pool's lifetime counters (flight recorder wall lane
+/// and the RunReport pool section).  `wait_ms` is host wall clock;
+/// `tasks`/`steals`/`epochs` depend on OS scheduling — none of it ever
+/// feeds back into sim results.
+#[derive(Debug, Clone, Default)]
+pub struct PoolTelemetry {
+    pub workers: usize,
+    pub steals: u64,
+    pub epochs: u64,
+    pub wait_ms: f64,
+    /// Lifetime tasks finished per worker.
+    pub tasks: Vec<u64>,
 }
 
 /// Fixed-size persistent worker pool executing index-addressed task
@@ -69,6 +90,9 @@ impl ShardPool {
                 deques: vec![VecDeque::new(); w],
                 remaining: 0,
                 steals: 0,
+                tasks: vec![0; w],
+                epochs: 0,
+                wait_ns: 0,
                 shutdown: false,
             }),
             work: Condvar::new(),
@@ -95,6 +119,18 @@ impl ShardPool {
     /// (telemetry only — stealing order never affects results).
     pub fn steals(&self) -> u64 {
         self.shared.state.lock().expect("pool lock").steals
+    }
+
+    /// One-lock snapshot of every lifetime counter.
+    pub fn telemetry(&self) -> PoolTelemetry {
+        let st = self.shared.state.lock().expect("pool lock");
+        PoolTelemetry {
+            workers: st.deques.len(),
+            steals: st.steals,
+            epochs: st.epochs,
+            wait_ms: st.wait_ns as f64 / 1e6,
+            tasks: st.tasks.clone(),
+        }
     }
 
     /// Next task for worker `me`: own deque front first, then other
@@ -131,6 +167,7 @@ impl ShardPool {
                     unsafe { (*f)(task) };
                     st = shared.state.lock().expect("pool lock");
                     st.remaining -= 1;
+                    st.tasks[me] += 1;
                     if st.remaining == 0 {
                         shared.done.notify_all();
                     }
@@ -169,10 +206,13 @@ impl ShardPool {
         }
         st.remaining = n;
         st.job = Some(Job(obj as *const _));
+        st.epochs += 1;
         self.shared.work.notify_all();
+        let t0 = std::time::Instant::now();
         while st.remaining > 0 {
             st = self.shared.done.wait(st).expect("pool lock");
         }
+        st.wait_ns += t0.elapsed().as_nanos() as u64;
         st.job = None;
     }
 
@@ -252,6 +292,19 @@ mod tests {
         });
         assert_eq!(done.load(Ordering::SeqCst), 4);
         assert!(pool.steals() >= 1, "draining around the blocked task requires stealing");
+    }
+
+    #[test]
+    fn telemetry_counts_epochs_and_tasks() {
+        let pool = ShardPool::new(2);
+        for _ in 0..10 {
+            pool.run(8, |_| {});
+        }
+        let t = pool.telemetry();
+        assert_eq!(t.workers, 2);
+        assert_eq!(t.epochs, 10);
+        assert_eq!(t.tasks.iter().sum::<u64>(), 80, "every finished task is attributed");
+        assert_eq!(t.steals, pool.steals());
     }
 
     #[test]

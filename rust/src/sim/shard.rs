@@ -64,7 +64,7 @@ use crate::rngx::Rng;
 use crate::sim::items::{Item, ItemAttrs};
 use crate::sim::metrics::OpMetrics;
 use crate::sim::pipeline::{Instance, PipelineSim, SimError};
-use crate::sim::pool::ShardPool;
+use crate::sim::pool::{PoolTelemetry, ShardPool};
 use crate::workload::Trace;
 use std::sync::Arc;
 
@@ -279,6 +279,37 @@ impl ShardedSim {
     /// sequential path has been running).
     pub fn pool_steals(&self) -> u64 {
         self.pool.as_ref().map(|p| p.steals()).unwrap_or(0)
+    }
+
+    /// Full pool telemetry snapshot (`None` while the sequential path has
+    /// been running — K = 1, W = 1, or `set_threaded(false)`).
+    pub fn pool_telemetry(&self) -> Option<PoolTelemetry> {
+        self.pool.as_ref().map(|p| p.telemetry())
+    }
+
+    /// Toggle the flight-recorder OOM buffer in every shard.  Pure
+    /// telemetry: buffers are push-only and consume no RNG, so the
+    /// published gather/flush stamps stay valid.
+    pub fn set_trace_ooms(&mut self, on: bool) {
+        for sh in &mut self.shards {
+            sh.set_trace_ooms(on);
+        }
+    }
+
+    /// Drain every shard's OOM buffer into one K-invariant stream:
+    /// local instance ids map to global, and the merge orders by
+    /// `(time-bits, op, global id)` — times are non-negative, so the
+    /// bit order is the numeric order, and an op's kills all live on its
+    /// owner shard, so the result is identical at any (K, W).
+    pub fn take_trace_ooms(&mut self) -> Vec<(f64, usize, usize)> {
+        let mut all = Vec::new();
+        for s in 0..self.shards.len() {
+            for (t, op, local) in self.shards[s].take_trace_ooms() {
+                all.push((t, op as usize, self.local2global[s][local as usize]));
+            }
+        }
+        all.sort_by_key(|&(t, op, gid)| (t.to_bits(), op, gid));
+        all
     }
 
     /// Drop every published buffer's validity stamp.  Called from every

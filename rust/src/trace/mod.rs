@@ -1,0 +1,756 @@
+//! Flight-recorder trace layer: deterministic, structured events from the
+//! closed observation→adaptation→scheduling loop.
+//!
+//! The sink records two *lanes*:
+//!
+//! * **sim** — values derived only from simulated time and deterministic
+//!   counters: window boundaries, per-op window summaries, OOM and
+//!   admission errors, plan decisions (diff sizes, rolling batch sums),
+//!   rolling-update waves, path-⑨/topology invalidations, dynamics
+//!   events with time-to-replan / time-to-recover milestones, and the
+//!   final run summary.  Two runs at the same seed produce byte-identical
+//!   sim-lane JSONL.
+//! * **wall** — host-dependent measurements: MILP solve wall clock with
+//!   the full per-phase [`MilpStats`](crate::solver::MilpStats)
+//!   breakdown, and shard-pool telemetry (per-worker task counts, steals,
+//!   epoch waits).  Wall-lane *payloads* vary across hosts; the record
+//!   *count and order* stay deterministic.
+//!
+//! The determinism contract that makes this a subsystem rather than a
+//! bolt-on: tracing consumes no RNG, allocates nothing on the sim hot
+//! path when disabled (a single `Option` check guards the one
+//! instrumented simulator site), and never perturbs event order — the
+//! parity suite pins bit-identical `RunReport`s with tracing on vs off
+//! across every policy and the (K, W) shard/worker grid.
+//!
+//! Output formats: versioned JSONL (`trident-trace/v1`, one record per
+//! line, first record is the header, last is `run_summary`) and the
+//! Chrome trace-event JSON that Perfetto / `chrome://tracing` load
+//! directly ("X" duration events for windows and solves, "i" instants
+//! for everything else, sim seconds mapped to microseconds).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::config::Json;
+
+/// Version tag carried by the header record of every trace.
+pub const TRACE_SCHEMA: &str = "trident-trace/v1";
+
+/// On-disk trace encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// One JSON record per line; the `trace-summary` input format.
+    Jsonl,
+    /// Chrome trace-event JSON (Perfetto-loadable).
+    Chrome,
+}
+
+impl TraceFormat {
+    pub fn parse(s: &str) -> Option<TraceFormat> {
+        match s {
+            "jsonl" => Some(TraceFormat::Jsonl),
+            "chrome" => Some(TraceFormat::Chrome),
+            _ => None,
+        }
+    }
+}
+
+/// In-memory recorder for one run.  Held as `Option<TraceSink>` by the
+/// coordinator; `None` is the zero-overhead off state.
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    records: Vec<Json>,
+    seq_sim: u64,
+    seq_wall: u64,
+}
+
+impl TraceSink {
+    pub fn new() -> TraceSink {
+        TraceSink::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn records(&self) -> &[Json] {
+        &self.records
+    }
+
+    /// First record of every trace: schema version plus run identity.
+    pub fn header(&mut self, fields: Vec<(&str, Json)>) {
+        let mut all = vec![("schema", Json::str(TRACE_SCHEMA))];
+        all.extend(fields);
+        self.sim_event(0.0, "header", all);
+    }
+
+    /// Record a deterministic event on the sim lane at sim time `t`.
+    pub fn sim_event(&mut self, t: f64, kind: &str, fields: Vec<(&str, Json)>) {
+        let seq = self.seq_sim;
+        self.seq_sim += 1;
+        self.push(t, kind, "sim", seq, fields);
+    }
+
+    /// Record a host-dependent measurement on the wall lane.  `t` is the
+    /// (deterministic) sim time the measurement was taken at; only the
+    /// payload varies across hosts.
+    pub fn wall_event(&mut self, t: f64, kind: &str, fields: Vec<(&str, Json)>) {
+        let seq = self.seq_wall;
+        self.seq_wall += 1;
+        self.push(t, kind, "wall", seq, fields);
+    }
+
+    fn push(&mut self, t: f64, kind: &str, lane: &str, seq: u64, fields: Vec<(&str, Json)>) {
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), Json::str(kind));
+        m.insert("lane".to_string(), Json::str(lane));
+        m.insert("seq".to_string(), Json::num(seq as f64));
+        m.insert("t".to_string(), Json::num(t));
+        for (k, v) in fields {
+            m.insert(k.to_string(), v);
+        }
+        self.records.push(Json::Obj(m));
+    }
+
+    /// Versioned JSONL: one compact record per line (BTreeMap keys give a
+    /// stable field order, so same-seed runs serialize byte-identically
+    /// on the sim lane).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for rec in &self.records {
+            out.push_str(&rec.to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome trace-event JSON.  Windows and MILP solves become "X"
+    /// duration events; everything else is an "i" instant.  Sim seconds
+    /// map to trace microseconds; the wall lane lands on tid 1.
+    pub fn to_chrome(&self) -> String {
+        let mut evs = Vec::new();
+        for rec in &self.records {
+            let kind = rec.str_or("kind", "?").to_string();
+            let lane = rec.str_or("lane", "sim").to_string();
+            let t = rec.f64_or("t", 0.0);
+            let tid = if lane == "wall" { 1.0 } else { 0.0 };
+            let mut e = vec![
+                ("name", Json::str(&kind)),
+                ("cat", Json::str(&lane)),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(tid)),
+                ("args", rec.clone()),
+            ];
+            match kind.as_str() {
+                "window" => {
+                    let t0 = rec.f64_or("t0", t);
+                    let t1 = rec.f64_or("t1", t0);
+                    e.push(("ph", Json::str("X")));
+                    e.push(("ts", Json::num(t0 * 1e6)));
+                    e.push(("dur", Json::num((t1 - t0).max(0.0) * 1e6)));
+                }
+                "solve" => {
+                    let ms = rec.f64_or("milp_ms", 0.0);
+                    e.push(("ph", Json::str("X")));
+                    e.push(("ts", Json::num(t * 1e6)));
+                    e.push(("dur", Json::num(ms.max(0.0) * 1e3)));
+                }
+                _ => {
+                    e.push(("ph", Json::str("i")));
+                    e.push(("ts", Json::num(t * 1e6)));
+                    e.push(("s", Json::str("t")));
+                }
+            }
+            evs.push(Json::obj(e));
+        }
+        let top = Json::obj(vec![
+            ("traceEvents", Json::Arr(evs)),
+            ("displayTimeUnit", Json::str("ms")),
+        ]);
+        let mut s = top.to_string_compact();
+        s.push('\n');
+        s
+    }
+
+    pub fn write(&self, path: &str, fmt: TraceFormat) -> std::io::Result<()> {
+        let body = match fmt {
+            TraceFormat::Jsonl => self.to_jsonl(),
+            TraceFormat::Chrome => self.to_chrome(),
+        };
+        std::fs::write(path, body)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Analyzer: trace-summary
+// ---------------------------------------------------------------------
+
+/// Per-operator aggregates over all window summaries.
+#[derive(Debug, Default, Clone)]
+pub struct OpAgg {
+    pub windows: usize,
+    pub util_sum: f64,
+    pub queue_avg_sum: f64,
+    pub records_in: u64,
+    pub records_out: u64,
+    pub oom_events: u64,
+    pub peak_mem_mb: f64,
+}
+
+impl OpAgg {
+    pub fn mean_util(&self) -> f64 {
+        if self.windows == 0 {
+            0.0
+        } else {
+            self.util_sum / self.windows as f64
+        }
+    }
+
+    pub fn mean_queue(&self) -> f64 {
+        if self.windows == 0 {
+            0.0
+        } else {
+            self.queue_avg_sum / self.windows as f64
+        }
+    }
+}
+
+/// Aggregates recomputed from a JSONL trace, cross-checkable against the
+/// embedded `run_summary` record (which the producing coordinator filled
+/// from its own `RunReport`).
+#[derive(Debug, Default)]
+pub struct TraceSummary {
+    pub schema: String,
+    pub lines: usize,
+    pub sim_records: usize,
+    pub wall_records: usize,
+    pub windows: usize,
+    pub duration_s: f64,
+    /// Per-tenant record totals summed from window records.
+    pub tenant_out: Vec<u64>,
+    /// Instant `oom` records (one per simulator OOM kill).
+    pub ooms: u64,
+    pub admission_errors: usize,
+    pub dynamics_events: usize,
+    /// `invalidation` records with `reason == "transition"` (path ⑨).
+    pub transitions: u64,
+    pub invalidations: usize,
+    pub waves: usize,
+    pub plans: usize,
+    pub plans_committed: u64,
+    pub solves: usize,
+    pub milp_ms_sum: f64,
+    pub pivots: u64,
+    pub bnb_nodes: u64,
+    pub pricing_rounds: u64,
+    pub columns: u64,
+    /// build / root-LP / B&B / pricing wall sums, milliseconds.
+    pub phase_ms: [f64; 4],
+    pub pool_steals: u64,
+    pub pool_epochs: u64,
+    pub pool_wait_ms: f64,
+    pub replan_latencies: Vec<f64>,
+    pub recover_latencies: Vec<f64>,
+    pub lost_records: u64,
+    pub ops: BTreeMap<String, OpAgg>,
+    pub header: Option<Json>,
+    pub run_summary: Option<Json>,
+}
+
+/// Parse and validate a JSONL trace: every line must parse, the first
+/// record must be a `header` with the supported schema, and per-lane
+/// `seq` counters must be gapless from 0.
+pub fn summarize_jsonl(text: &str) -> Result<TraceSummary, String> {
+    let mut s = TraceSummary::default();
+    let mut next_sim = 0u64;
+    let mut next_wall = 0u64;
+    for (i, line) in text.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let rec = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        s.lines += 1;
+        let kind = rec.str_or("kind", "").to_string();
+        if kind.is_empty() {
+            return Err(format!("line {}: record has no kind", i + 1));
+        }
+        let lane = rec.str_or("lane", "").to_string();
+        let seq = rec.f64_or("seq", -1.0);
+        match lane.as_str() {
+            "sim" => {
+                if seq != next_sim as f64 {
+                    return Err(format!("line {}: sim seq {seq}, expected {next_sim}", i + 1));
+                }
+                next_sim += 1;
+                s.sim_records += 1;
+            }
+            "wall" => {
+                if seq != next_wall as f64 {
+                    return Err(format!("line {}: wall seq {seq}, expected {next_wall}", i + 1));
+                }
+                next_wall += 1;
+                s.wall_records += 1;
+            }
+            other => return Err(format!("line {}: unknown lane {other:?}", i + 1)),
+        }
+        if s.lines == 1 {
+            if kind != "header" {
+                return Err(format!("first record is {kind:?}, expected header"));
+            }
+            let schema = rec.str_or("schema", "");
+            if schema != TRACE_SCHEMA {
+                return Err(format!(
+                    "unsupported schema {schema:?} (this build reads {TRACE_SCHEMA})"
+                ));
+            }
+            s.schema = schema.to_string();
+            s.header = Some(rec);
+            continue;
+        }
+        ingest(&mut s, &kind, &rec);
+    }
+    if s.lines == 0 {
+        return Err("empty trace".to_string());
+    }
+    Ok(s)
+}
+
+fn ingest(s: &mut TraceSummary, kind: &str, rec: &Json) {
+    match kind {
+        "window" => {
+            s.windows += 1;
+            s.duration_s = s.duration_s.max(rec.f64_or("t1", 0.0));
+            if let Some(outs) = rec.get("outs").and_then(Json::as_arr) {
+                if s.tenant_out.len() < outs.len() {
+                    s.tenant_out.resize(outs.len(), 0);
+                }
+                for (i, o) in outs.iter().enumerate() {
+                    s.tenant_out[i] += o.as_f64().unwrap_or(0.0) as u64;
+                }
+            }
+        }
+        "op_window" => {
+            let name = rec.str_or("op", "?").to_string();
+            let agg = s.ops.entry(name).or_default();
+            agg.windows += 1;
+            agg.util_sum += rec.f64_or("utilization", 0.0);
+            agg.queue_avg_sum += rec.f64_or("queue_avg", 0.0);
+            agg.records_in += rec.f64_or("records_in", 0.0) as u64;
+            agg.records_out += rec.f64_or("records_out", 0.0) as u64;
+            agg.oom_events += rec.f64_or("oom_events", 0.0) as u64;
+            agg.peak_mem_mb = agg.peak_mem_mb.max(rec.f64_or("peak_mem_mb", 0.0));
+        }
+        "oom" => s.ooms += 1,
+        "admission_error" => s.admission_errors += 1,
+        "dynamics" => {
+            s.dynamics_events += 1;
+            s.lost_records += rec.f64_or("lost", 0.0) as u64;
+        }
+        "invalidation" => {
+            s.invalidations += 1;
+            if rec.str_or("reason", "") == "transition" {
+                s.transitions += 1;
+            }
+        }
+        "rolling_wave" => s.waves += 1,
+        "plan" => {
+            s.plans += 1;
+            if rec.get("acted").and_then(Json::as_bool) == Some(true) {
+                s.plans_committed += 1;
+            }
+        }
+        "solve" => {
+            s.solves += 1;
+            s.milp_ms_sum += rec.f64_or("milp_ms", 0.0);
+            s.pivots += rec.f64_or("pivots", 0.0) as u64;
+            s.bnb_nodes += rec.f64_or("nodes", 0.0) as u64;
+            s.pricing_rounds += rec.f64_or("pricing_rounds", 0.0) as u64;
+            s.columns += rec.f64_or("columns", 0.0) as u64;
+            s.phase_ms[0] += rec.f64_or("build_ms", 0.0);
+            s.phase_ms[1] += rec.f64_or("root_lp_ms", 0.0);
+            s.phase_ms[2] += rec.f64_or("bnb_ms", 0.0);
+            s.phase_ms[3] += rec.f64_or("pricing_ms", 0.0);
+        }
+        "pool" => {
+            // Counters are cumulative; the last record carries the totals.
+            s.pool_steals = rec.f64_or("steals", 0.0) as u64;
+            s.pool_epochs = rec.f64_or("epochs", 0.0) as u64;
+            s.pool_wait_ms = rec.f64_or("wait_ms", 0.0);
+        }
+        "replan" => s.replan_latencies.push(rec.f64_or("latency_s", 0.0)),
+        "recover" => s.recover_latencies.push(rec.f64_or("latency_s", 0.0)),
+        "run_summary" => s.run_summary = Some(rec.clone()),
+        _ => {}
+    }
+}
+
+fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+impl TraceSummary {
+    pub fn total_items(&self) -> u64 {
+        self.tenant_out.iter().sum()
+    }
+
+    /// Diff the recomputed aggregates against the embedded `run_summary`
+    /// record.  Returns one line per mismatch; empty means the trace is
+    /// internally consistent with the producing run's `RunReport`.
+    pub fn check(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        let Some(rs) = self.run_summary.as_ref() else {
+            errs.push("trace has no run_summary record (truncated?)".to_string());
+            return errs;
+        };
+        let mut chk = |name: &str, got: f64| match rs.get(name).and_then(Json::as_f64) {
+            None => errs.push(format!("run_summary is missing {name:?}")),
+            Some(want) if want != got => {
+                errs.push(format!("{name}: trace says {got}, run_summary says {want}"))
+            }
+            _ => {}
+        };
+        chk("items", self.total_items() as f64);
+        chk("oom_events", self.ooms as f64);
+        chk("config_transitions", self.transitions as f64);
+        chk("dynamics_events", self.dynamics_events as f64);
+        chk("plans_committed", self.plans_committed as f64);
+        chk("solves", self.solves as f64);
+        chk("replans", self.replan_latencies.len() as f64);
+        chk("recovers", self.recover_latencies.len() as f64);
+        chk("lost_records", self.lost_records as f64);
+        chk("windows", self.windows as f64);
+        drop(chk);
+        if let Some(rows) = rs.get("tenants").and_then(Json::as_arr) {
+            if rows.len() != self.tenant_out.len() && !self.tenant_out.is_empty() {
+                errs.push(format!(
+                    "tenant count: trace windows carry {}, run_summary has {}",
+                    self.tenant_out.len(),
+                    rows.len()
+                ));
+            }
+            for (i, row) in rows.iter().enumerate() {
+                let want = row.f64_or("items", -1.0);
+                let got = self.tenant_out.get(i).copied().unwrap_or(0) as f64;
+                if want != got {
+                    let id = row.str_or("id", "?");
+                    errs.push(format!(
+                        "tenant {id}: trace windows sum {got} records, run_summary says {want}"
+                    ));
+                }
+            }
+        } else {
+            errs.push("run_summary is missing \"tenants\"".to_string());
+        }
+        errs
+    }
+
+    /// Human-readable bottleneck attribution.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "trace {} · {} records ({} sim + {} wall) · {} windows over {:.0}s",
+            self.schema, self.lines, self.sim_records, self.wall_records, self.windows,
+            self.duration_s
+        );
+        if let Some(h) = self.header.as_ref() {
+            let _ = writeln!(
+                out,
+                "run: pipeline {} · policy {} · seed {} · shards {} · workers {}",
+                h.str_or("pipeline", "?"),
+                h.str_or("policy", "?"),
+                h.f64_or("seed", 0.0),
+                h.f64_or("shards", 1.0),
+                h.f64_or("workers", 1.0)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "records out: {} total across {} tenants",
+            self.total_items(),
+            self.tenant_out.len()
+        );
+        if !self.ops.is_empty() {
+            let _ = writeln!(out, "per-op utilization (window means):");
+            let mut hot: Option<(&String, f64)> = None;
+            for (name, agg) in &self.ops {
+                let util = agg.mean_util();
+                let _ = writeln!(
+                    out,
+                    "  {name:<16} util {util:>6.3}  queue~{:>8.2}  in {:>8} out {:>8}  ooms {}",
+                    agg.mean_queue(),
+                    agg.records_in,
+                    agg.records_out,
+                    agg.oom_events
+                );
+                if hot.is_none_or(|(_, u)| util > u) {
+                    hot = Some((name, util));
+                }
+            }
+            if let Some((name, util)) = hot {
+                let _ = writeln!(out, "bottleneck: {name} (mean utilization {util:.3})");
+            }
+        }
+        let _ = writeln!(
+            out,
+            "plans: {} consulted, {} committed · solves: {} ({:.1} ms total)",
+            self.plans, self.plans_committed, self.solves, self.milp_ms_sum
+        );
+        if self.solves > 0 {
+            let _ = writeln!(
+                out,
+                "solve phases (ms): build {:.1} / root-LP {:.1} / B&B {:.1} / pricing {:.1} \
+                 · {} pivots · {} nodes · {} pricing rounds ({} columns)",
+                self.phase_ms[0],
+                self.phase_ms[1],
+                self.phase_ms[2],
+                self.phase_ms[3],
+                self.pivots,
+                self.bnb_nodes,
+                self.pricing_rounds,
+                self.columns
+            );
+        }
+        let _ = writeln!(
+            out,
+            "dynamics: {} events · {} lost records · replans {} (mean {:.1}s) · \
+             recoveries {} (mean {:.1}s)",
+            self.dynamics_events,
+            self.lost_records,
+            self.replan_latencies.len(),
+            mean(&self.replan_latencies),
+            self.recover_latencies.len(),
+            mean(&self.recover_latencies)
+        );
+        let _ = writeln!(
+            out,
+            "sim health: {} OOM kills · {} admission errors · {} invalidations \
+             ({} transitions) · {} rolling waves",
+            self.ooms, self.admission_errors, self.invalidations, self.transitions, self.waves
+        );
+        if self.pool_epochs > 0 {
+            let _ = writeln!(
+                out,
+                "shard pool: {} epochs · {} steals · {:.1} ms waiting",
+                self.pool_epochs, self.pool_steals, self.pool_wait_ms
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_sink() -> TraceSink {
+        let mut ts = TraceSink::new();
+        ts.header(vec![
+            ("pipeline", Json::str("pdf")),
+            ("policy", Json::str("Trident")),
+            ("seed", Json::num(7.0)),
+            ("shards", Json::num(1.0)),
+            ("workers", Json::num(1.0)),
+        ]);
+        ts.sim_event(
+            30.0,
+            "window",
+            vec![
+                ("index", Json::num(0.0)),
+                ("t0", Json::num(0.0)),
+                ("t1", Json::num(30.0)),
+                ("thr", Json::num(4.0)),
+                ("outs", Json::Arr(vec![Json::num(120.0)])),
+            ],
+        );
+        ts.sim_event(
+            30.0,
+            "op_window",
+            vec![
+                ("op", Json::str("decode")),
+                ("records_in", Json::num(120.0)),
+                ("records_out", Json::num(120.0)),
+                ("utilization", Json::num(0.9)),
+                ("queue_avg", Json::num(2.0)),
+                ("oom_events", Json::num(0.0)),
+            ],
+        );
+        ts.sim_event(
+            30.0,
+            "plan",
+            vec![("acted", Json::Bool(true)), ("placement_diff", Json::num(2.0))],
+        );
+        ts.wall_event(
+            30.0,
+            "solve",
+            vec![
+                ("milp_ms", Json::num(12.5)),
+                ("pivots", Json::num(40.0)),
+                ("nodes", Json::num(3.0)),
+                ("build_ms", Json::num(1.0)),
+                ("root_lp_ms", Json::num(4.0)),
+                ("bnb_ms", Json::num(7.0)),
+                ("pricing_ms", Json::num(0.0)),
+                ("pricing_rounds", Json::num(0.0)),
+                ("columns", Json::num(0.0)),
+            ],
+        );
+        ts.sim_event(
+            60.0,
+            "run_summary",
+            vec![
+                ("items", Json::num(120.0)),
+                ("oom_events", Json::num(0.0)),
+                ("config_transitions", Json::num(0.0)),
+                ("dynamics_events", Json::num(0.0)),
+                ("plans_committed", Json::num(1.0)),
+                ("solves", Json::num(1.0)),
+                ("replans", Json::num(0.0)),
+                ("recovers", Json::num(0.0)),
+                ("lost_records", Json::num(0.0)),
+                ("windows", Json::num(1.0)),
+                (
+                    "tenants",
+                    Json::Arr(vec![Json::obj(vec![
+                        ("id", Json::str("pdf")),
+                        ("items", Json::num(120.0)),
+                        ("throughput", Json::num(2.0)),
+                    ])]),
+                ),
+            ],
+        );
+        ts
+    }
+
+    #[test]
+    fn jsonl_roundtrips_and_cross_checks_clean() {
+        let ts = mini_sink();
+        let text = ts.to_jsonl();
+        let s = summarize_jsonl(&text).expect("valid trace");
+        assert_eq!(s.schema, TRACE_SCHEMA);
+        assert_eq!(s.windows, 1);
+        assert_eq!(s.total_items(), 120);
+        assert_eq!(s.solves, 1);
+        assert_eq!(s.pivots, 40);
+        assert_eq!(s.plans_committed, 1);
+        let errs = s.check();
+        assert!(errs.is_empty(), "unexpected mismatches: {errs:?}");
+        let rendered = s.render();
+        assert!(rendered.contains("bottleneck: decode"));
+    }
+
+    #[test]
+    fn cross_check_flags_mismatches() {
+        let mut ts = mini_sink();
+        // Tamper: claim one more item than the windows carried.
+        ts.sim_event(
+            61.0,
+            "run_summary",
+            vec![
+                ("items", Json::num(121.0)),
+                ("oom_events", Json::num(0.0)),
+                ("config_transitions", Json::num(0.0)),
+                ("dynamics_events", Json::num(0.0)),
+                ("plans_committed", Json::num(1.0)),
+                ("solves", Json::num(1.0)),
+                ("replans", Json::num(0.0)),
+                ("recovers", Json::num(0.0)),
+                ("lost_records", Json::num(0.0)),
+                ("windows", Json::num(1.0)),
+                ("tenants", Json::Arr(vec![])),
+            ],
+        );
+        let s = summarize_jsonl(&ts.to_jsonl()).expect("valid trace");
+        assert!(s.check().iter().any(|e| e.starts_with("items:")));
+    }
+
+    #[test]
+    fn rejects_bad_lines_schema_and_seq_gaps() {
+        assert!(summarize_jsonl("").is_err());
+        assert!(summarize_jsonl("not json\n").is_err());
+        let mut ts = TraceSink::new();
+        ts.sim_event(0.0, "window", vec![]);
+        // First record is not a header.
+        assert!(summarize_jsonl(&ts.to_jsonl()).is_err());
+        let ts = mini_sink();
+        let jsonl = ts.to_jsonl();
+        let mut lines: Vec<&str> = jsonl.lines().collect();
+        let dropped = lines.remove(1); // open a sim-lane seq gap
+        assert!(dropped.contains("\"lane\":\"sim\""));
+        let text = lines.join("\n");
+        assert!(summarize_jsonl(&text).is_err());
+        let bad = ts.to_jsonl().replace(TRACE_SCHEMA, "trident-trace/v999");
+        assert!(summarize_jsonl(&bad).is_err());
+    }
+
+    #[test]
+    fn sim_lane_is_stable_under_wall_payload_changes() {
+        let keep_sim = |s: &str| -> String {
+            s.lines().filter(|l| !l.contains("\"lane\":\"wall\"")).collect::<Vec<_>>().join("\n")
+        };
+        let a = mini_sink();
+        let mut b = TraceSink::new();
+        // Same sim events, different wall payloads (a faster host).
+        for rec in a.records() {
+            let kind = rec.str_or("kind", "?").to_string();
+            let t = rec.f64_or("t", 0.0);
+            if rec.str_or("lane", "sim") == "wall" {
+                b.wall_event(t, &kind, vec![("milp_ms", Json::num(1.0))]);
+            } else if kind == "header" {
+                let mut fields = Vec::new();
+                if let Json::Obj(m) = rec {
+                    for (k, v) in m {
+                        if !matches!(k.as_str(), "kind" | "lane" | "seq" | "t" | "schema") {
+                            fields.push((k.as_str(), v.clone()));
+                        }
+                    }
+                }
+                b.header(fields);
+            } else {
+                let mut fields = Vec::new();
+                if let Json::Obj(m) = rec {
+                    for (k, v) in m {
+                        if !matches!(k.as_str(), "kind" | "lane" | "seq" | "t") {
+                            fields.push((k.as_str(), v.clone()));
+                        }
+                    }
+                }
+                b.sim_event(t, &kind, fields);
+            }
+        }
+        assert_eq!(keep_sim(&a.to_jsonl()), keep_sim(&b.to_jsonl()));
+        assert_ne!(a.to_jsonl(), b.to_jsonl());
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_duration_events() {
+        let ts = mini_sink();
+        let j = Json::parse(ts.to_chrome().trim_end()).expect("chrome export parses");
+        let evs = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        assert_eq!(evs.len(), ts.len());
+        let window = evs.iter().find(|e| e.str_or("name", "") == "window").unwrap();
+        assert_eq!(window.str_or("ph", ""), "X");
+        assert_eq!(window.f64_or("dur", -1.0), 30.0 * 1e6);
+        let solve = evs.iter().find(|e| e.str_or("name", "") == "solve").unwrap();
+        assert_eq!(solve.str_or("ph", ""), "X");
+        assert_eq!(solve.str_or("cat", ""), "wall");
+        assert_eq!(solve.f64_or("tid", -1.0), 1.0);
+    }
+
+    #[test]
+    fn format_parse_is_strict() {
+        assert_eq!(TraceFormat::parse("jsonl"), Some(TraceFormat::Jsonl));
+        assert_eq!(TraceFormat::parse("chrome"), Some(TraceFormat::Chrome));
+        assert_eq!(TraceFormat::parse("chrme"), None);
+        assert_eq!(TraceFormat::parse(""), None);
+    }
+}

@@ -758,3 +758,80 @@ fn shard_and_worker_clamps() {
     sh2.set_workers(4);
     assert_eq!(sh2.workers_effective(), 2, "W = 4 must clamp to the clamped K = 2");
 }
+
+// ---------------------------------------------------------------------
+// Flight recorder: tracing must never perturb the run
+// ---------------------------------------------------------------------
+
+/// Tracing on vs off is bit-identical for every policy across the
+/// (K, W) grid: the recorder only *observes* the run (no RNG draws, no
+/// event-order perturbation), so enabling it cannot move a single bit of
+/// the RunReport — aggregate, per-tenant, or windowed series.
+#[test]
+fn tracing_off_bit_identity_all_policies() {
+    for (name, variant) in all_policies() {
+        for (ki, &k) in [1usize, 3, 8].iter().enumerate() {
+            // Alternate W to cover both the sequential driver and the pool
+            // without squaring the grid.
+            let w = if ki % 2 == 0 { 1 } else { 4 };
+            let plain = two_tenant_sharded(&variant, 7, k, w).run(300.0);
+            let mut traced_coord = two_tenant_sharded(&variant, 7, k, w);
+            traced_coord.enable_trace();
+            let traced = traced_coord.run(300.0);
+            assert_eq!(
+                key(&plain),
+                key(&traced),
+                "policy {name} K={k} W={w}: tracing perturbed the run"
+            );
+            assert_eq!(plain.series.len(), traced.series.len(), "{name} K={k} W={w}");
+            for ((ta, va), (tb, vb)) in plain.series.iter().zip(&traced.series) {
+                assert_eq!(ta.to_bits(), tb.to_bits(), "{name} K={k} W={w}: series time");
+                assert_eq!(va.to_bits(), vb.to_bits(), "{name} K={k} W={w}: series value");
+            }
+            for (pa, pb) in plain.tenants.iter().zip(&traced.tenants) {
+                assert_eq!(
+                    pa.throughput.to_bits(),
+                    pb.throughput.to_bits(),
+                    "{name} K={k} W={w}: tenant {}",
+                    pa.id
+                );
+                assert_eq!(
+                    pa.items_processed, pb.items_processed,
+                    "{name} K={k} W={w}: tenant {}",
+                    pa.id
+                );
+            }
+            let sink = traced_coord.take_trace().expect("trace sink present after run");
+            assert!(!sink.is_empty(), "{name} K={k} W={w}: trace must record events");
+        }
+    }
+}
+
+/// Same seed ⇒ byte-identical JSONL on the sim lane.  Wall-lane records
+/// (solver/pool wall clocks) are host-dependent by design, so they are
+/// the only lines allowed to differ between two identical runs.
+#[test]
+fn trace_jsonl_deterministic_modulo_wall_lane() {
+    let sim_lines = |k: usize, w: usize| {
+        let mut coord = two_tenant_sharded(&Variant::trident(), 11, k, w);
+        coord.enable_trace();
+        coord.run(300.0);
+        let sink = coord.take_trace().expect("trace sink present after run");
+        sink.to_jsonl()
+            .lines()
+            .filter(|l| !l.contains("\"lane\":\"wall\""))
+            .map(|l| l.to_string())
+            .collect::<Vec<String>>()
+    };
+    let a = sim_lines(3, 4);
+    let b = sim_lines(3, 4);
+    assert!(!a.is_empty(), "trace must have sim-lane records");
+    assert_eq!(a, b, "same-seed sim-lane JSONL must be byte-identical");
+    // And the sim lane is (K, W)-invariant too: sharding is a wall-clock
+    // optimization, never a semantic one.  Only the header may differ —
+    // it records the run's shard/worker configuration by design.
+    let c = sim_lines(1, 1);
+    assert_eq!(a.len(), c.len(), "sim-lane record count must not depend on (K, W)");
+    assert_ne!(a[0], c[0], "header must record the actual (K, W)");
+    assert_eq!(a[1..], c[1..], "sim-lane JSONL beyond the header must not depend on (K, W)");
+}

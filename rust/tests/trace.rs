@@ -1,0 +1,146 @@
+//! End-to-end flight-recorder pins: a real closed-loop run produces a
+//! parseable, internally consistent trace whose recomputed aggregates
+//! match the `RunReport` the same run returned — the analyzer's
+//! cross-check is the contract that the trace is a faithful record, not
+//! a best-effort log.
+
+use trident::config::{ClusterSpec, Json, Tenancy, TenantSpec, TridentConfig};
+use trident::coordinator::{Coordinator, RunReport, Variant};
+use trident::dynamics::DynamicsSpec;
+use trident::sim::ItemAttrs;
+use trident::trace::{summarize_jsonl, TraceFormat, TraceSink, TraceSummary, TRACE_SCHEMA};
+use trident::workload::{pdf, speech, Trace};
+
+fn mini_cfg() -> TridentConfig {
+    let mut cfg = TridentConfig::default();
+    cfg.native_gp = true;
+    cfg.milp_time_budget_ms = 10_000;
+    cfg.tune_trigger = 32;
+    cfg.bo_budget = 8;
+    cfg.bo_init = 3;
+    cfg
+}
+
+fn pdf_src() -> ItemAttrs {
+    ItemAttrs { tokens_in: 36_000.0, tokens_out: 7_200.0, pixels_m: 12.0, frames: 12.0 }
+}
+
+fn two_tenant(seed: u64) -> Coordinator {
+    let tenancy = Tenancy {
+        tenants: vec![
+            TenantSpec { id: "pdf".into(), pipeline: pdf::pipeline(), weight: 1.0, source_rate: 0.0 },
+            TenantSpec {
+                id: "speech".into(),
+                pipeline: speech::pipeline(),
+                weight: 1.0,
+                source_rate: 0.0,
+            },
+        ],
+    };
+    Coordinator::new_tenancy(
+        tenancy,
+        ClusterSpec::homogeneous(2, 128.0, 512.0, 4, 65536.0, 2500.0),
+        vec![
+            Box::new(pdf::trace(300)) as Box<dyn Trace>,
+            Box::new(speech::trace(120)) as Box<dyn Trace>,
+        ],
+        mini_cfg(),
+        Variant::trident(),
+        vec![pdf_src(), speech::src_attrs()],
+        seed,
+    )
+    .expect("two-tenant tenancy is valid")
+}
+
+fn traced_run(seed: u64, dynamics: bool) -> (RunReport, Box<TraceSink>) {
+    let mut coord = two_tenant(seed);
+    if dynamics {
+        let spec_json = r#"{"events": [
+            {"at": 60, "kind": "node_fail", "node": 1},
+            {"at": 120, "kind": "node_recover", "node": 1}
+        ]}"#;
+        let spec = DynamicsSpec::from_json(&Json::parse(spec_json).expect("valid json"))
+            .expect("valid dynamics spec");
+        coord.set_dynamics(spec).expect("valid dynamics spec");
+    }
+    coord.enable_trace();
+    let report = coord.run(300.0);
+    let sink = coord.take_trace().expect("trace sink present after run");
+    (report, sink)
+}
+
+fn assert_matches_report(s: &TraceSummary, r: &RunReport) {
+    let errs = s.check();
+    assert!(errs.is_empty(), "trace/run_summary cross-check failed: {errs:?}");
+    assert_eq!(s.schema, TRACE_SCHEMA);
+    assert_eq!(s.windows, r.series.len(), "one window record per series point");
+    assert_eq!(s.total_items(), r.items_processed, "window outs must sum to the run total");
+    assert_eq!(s.solves, r.milp_ms.len(), "one solve record per MILP solve");
+    assert_eq!(s.ooms, u64::from(r.oom_events), "one oom record per OOM kill");
+    assert_eq!(s.transitions, r.config_transitions, "transition invalidations");
+    assert_eq!(s.plans_committed, r.plans_committed, "committed plans");
+    assert_eq!(s.dynamics_events, r.events.len(), "one dynamics record per event");
+    assert_eq!(s.lost_records, r.lost_records, "loss ledger");
+    assert_eq!(s.tenant_out.len(), r.tenants.len(), "per-tenant outs in every window");
+    for (i, t) in r.tenants.iter().enumerate() {
+        assert_eq!(s.tenant_out[i], t.items_processed, "tenant {}", t.id);
+    }
+    let replans = r.events.iter().filter(|e| e.replan_s.is_some()).count();
+    let recovers = r.events.iter().filter(|e| e.recovered_s.is_some()).count();
+    assert_eq!(s.replan_latencies.len(), replans, "replan milestones");
+    assert_eq!(s.recover_latencies.len(), recovers, "recovery milestones");
+}
+
+/// The headline pin: run Trident end to end with the recorder on, feed
+/// the JSONL back through the analyzer, and require every recomputed
+/// aggregate to equal the `RunReport` the run itself returned.
+#[test]
+fn trace_aggregates_match_runreport() {
+    let (report, sink) = traced_run(5, false);
+    assert!(report.throughput > 0.0, "run must make progress");
+    let s = summarize_jsonl(&sink.to_jsonl()).expect("trace parses");
+    assert_matches_report(&s, &report);
+    assert!(s.solves > 0, "Trident must have solved at least once");
+    assert!(!s.ops.is_empty(), "op_window records must cover the pipeline");
+    let rendered = s.render();
+    assert!(rendered.contains("bottleneck:"), "attribution line present:\n{rendered}");
+}
+
+/// Same contract under scripted dynamics: the dynamics / replan /
+/// recover / loss records reconcile with the event reports too.
+#[test]
+fn trace_aggregates_match_runreport_under_dynamics() {
+    let (report, sink) = traced_run(9, true);
+    assert!(!report.events.is_empty(), "dynamics timeline must fire");
+    let s = summarize_jsonl(&sink.to_jsonl()).expect("trace parses");
+    assert_matches_report(&s, &report);
+    assert_eq!(s.dynamics_events, 2, "node_fail + node_recover");
+}
+
+/// The Chrome export is one valid JSON document with a traceEvents entry
+/// per record, so Perfetto loads whatever the JSONL lane recorded.
+#[test]
+fn chrome_export_covers_every_record() {
+    let (_, sink) = traced_run(5, false);
+    let chrome = sink.to_chrome();
+    let j = Json::parse(chrome.trim_end()).expect("chrome export is valid JSON");
+    let evs = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert_eq!(evs.len(), sink.len(), "one trace event per record");
+    assert!(evs.iter().any(|e| e.str_or("ph", "") == "X"), "duration events present");
+}
+
+/// `set_trace` writes the file at the end of `run` — the CLI contract —
+/// and the on-disk bytes are what the in-memory sink would serialize.
+#[test]
+fn set_trace_writes_parseable_file() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("trident-trace-test-{}.jsonl", std::process::id()));
+    let path_s = path.to_str().expect("utf-8 temp path").to_string();
+    let mut coord = two_tenant(5);
+    coord.set_trace(&path_s, TraceFormat::Jsonl);
+    let report = coord.run(300.0);
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    std::fs::remove_file(&path).ok();
+    let s = summarize_jsonl(&text).expect("on-disk trace parses");
+    assert_matches_report(&s, &report);
+}
